@@ -1,0 +1,34 @@
+//! All-reduce algorithm comparison: naive vs tree vs ring across worker
+//! counts and gradient sizes (the DP substrate ablation in DESIGN.md).
+//!
+//! Writes results/bench_allreduce.csv.
+
+use prelora::dp::{reduce_mean, Algorithm};
+use prelora::tensor::Pcg64;
+use prelora::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Pcg64::new(3);
+    // gradient sizes: vit-small base (0.8M) and vit-base-sim (6.4M)
+    for &len in &[811_664usize, 6_355_744] {
+        for &workers in &[2usize, 4, 8] {
+            let proto: Vec<Vec<f32>> = (0..workers)
+                .map(|_| (0..len).map(|_| rng.next_f32()).collect())
+                .collect();
+            for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+                let mut bufs = proto.clone();
+                b.run_units(
+                    &format!("{alg:?}/w{workers}/n{len}"),
+                    (len * workers) as f64,
+                    || {
+                        // reduce in place; buffers drift but stay finite and
+                        // the arithmetic per iteration is identical
+                        reduce_mean(alg, &mut bufs);
+                    },
+                );
+            }
+        }
+    }
+    b.write_csv("results/bench_allreduce.csv").unwrap();
+}

@@ -1,0 +1,92 @@
+//! Coordinator hot-path microbenches: everything the L3 does per step or
+//! per epoch besides executing the artifact. Targets (DESIGN.md §Perf):
+//! the coordinator must stay well under 10% of step time.
+//!
+//! Writes results/bench_controller.csv.
+
+use std::collections::BTreeMap;
+
+use prelora::config::{PreLoraConfig, TrainConfig};
+use prelora::convergence::{ConvergenceStrategy, WelchTTest, WindowedThreshold};
+use prelora::manifest::Manifest;
+use prelora::optim;
+use prelora::rank::assign_ranks;
+use prelora::telemetry::{NormHistory, NormSnapshot};
+use prelora::tensor::{clip_by_global_norm, Pcg64};
+use prelora::util::bench::Bench;
+
+fn synthetic_history(modules: &[&str], layers: usize, epochs: usize) -> NormHistory {
+    let mut h = NormHistory::new();
+    for e in 0..epochs {
+        let mut by_module = BTreeMap::new();
+        for m in modules {
+            by_module.insert(
+                m.to_string(),
+                (0..layers).map(|l| 10.0 + 0.01 * e as f64 + l as f64).collect(),
+            );
+        }
+        h.push(NormSnapshot { epoch: e, by_module }, 2.0 - 0.001 * e as f64);
+    }
+    h
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let modules = ["query", "key", "value", "output", "dense"];
+
+    // Algorithm 1 check over realistic history sizes
+    let h = synthetic_history(&modules, 24, 300);
+    let strat =
+        WindowedThreshold::new(3, 3, 0.5, 2.5, modules.iter().map(|s| s.to_string()).collect());
+    b.run("alg1_convergence_check_300ep", || {
+        std::hint::black_box(strat.check(&h, 300));
+    });
+    let ttest = WelchTTest::new(3, 3, 0.05);
+    b.run("welch_ttest_check_300ep", || {
+        std::hint::black_box(ttest.check(&h, 300));
+    });
+
+    // Algorithm 2 over ViT-Large-like module/layer counts (5 x 24)
+    let mut deltas = BTreeMap::new();
+    let mut rng = Pcg64::new(1);
+    for m in modules {
+        deltas.insert(m.to_string(), (0..24).map(|_| rng.next_f64()).collect());
+    }
+    b.run("alg2_rank_assignment_5x24", || {
+        std::hint::black_box(assign_ranks(&deltas, 8, 64));
+    });
+
+    // weight-norm snapshot on real manifests
+    for name in ["vit-micro", "vit-small", "vit-base-sim"] {
+        let dir = std::path::Path::new("artifacts").join(name);
+        if let Ok(m) = Manifest::load(&dir) {
+            let base = m.load_init_base().unwrap();
+            b.run(&format!("norm_snapshot/{name}"), || {
+                std::hint::black_box(NormSnapshot::measure(&m, 0, &base));
+            });
+        }
+    }
+
+    // optimizer + clipping on model-scale vectors
+    for n in [800_000usize, 6_400_000] {
+        let cfg = TrainConfig::default();
+        let mut opt = optim::build(&cfg, n);
+        let mut params = vec![0.1f32; n];
+        let mut grads = vec![0.01f32; n];
+        Pcg64::new(2).fill_normal(&mut grads, 0.01);
+        b.run_units(&format!("adamw_step/{n}"), n as f64, || {
+            opt.step(&mut params, &grads, 1e-3);
+        });
+        b.run_units(&format!("grad_clip/{n}"), n as f64, || {
+            std::hint::black_box(clip_by_global_norm(&mut grads, 1.0));
+        });
+    }
+
+    // controller-config plumbing (should be ~free)
+    let pcfg = PreLoraConfig::default();
+    b.run("prelora_config_validate", || {
+        std::hint::black_box(pcfg.validate().is_ok());
+    });
+
+    b.write_csv("results/bench_controller.csv").unwrap();
+}

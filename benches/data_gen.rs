@@ -1,0 +1,35 @@
+//! Data-pipeline throughput: synthetic generation and batch gathering
+//! must never bottleneck the step loop (DESIGN.md §Perf: coordinator
+//! overhead < 10% of step time).
+//!
+//! Writes results/bench_data_gen.csv.
+
+use prelora::data::{Dataset, EpochLoader, SynthSpec};
+use prelora::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    for (name, size, n) in [("16px", 16usize, 512usize), ("32px", 32, 512)] {
+        let spec = SynthSpec {
+            samples: n,
+            image_size: size,
+            channels: 3,
+            num_classes: 16,
+            noise: 0.35,
+            phase_jitter: true,
+            seed: 5,
+        };
+        b.run_units(&format!("generate/{name}/{n}"), n as f64, || {
+            std::hint::black_box(Dataset::generate(&spec));
+        });
+        let data = Dataset::generate(&spec);
+        let loader = EpochLoader::new(16, 2, 0);
+        let steps = loader.steps_per_epoch(&data);
+        b.run_units(&format!("gather_epoch/{name}/{n}"), n as f64, || {
+            for s in 0..steps {
+                std::hint::black_box(loader.step_batches(&data, 1, s));
+            }
+        });
+    }
+    b.write_csv("results/bench_data_gen.csv").unwrap();
+}

@@ -1,0 +1,97 @@
+//! Figure-regeneration bench: miniature versions of every paper table and
+//! figure on vit-micro, fast enough for `cargo bench`. The full-size
+//! harnesses live in `examples/` (fig1_baseline, fig4_strictness,
+//! fig5_warmup, fig7_resources); this bench proves the same machinery end
+//! to end and prints the figure-shaped rows the paper reports.
+//!
+//! Writes results/bench_figures.csv.
+
+use prelora::config::{RunConfig, StrictnessPreset};
+use prelora::trainer::Trainer;
+use prelora::util::bench::Bench;
+
+fn micro_cfg(name: &str, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "vit-micro".into();
+    cfg.run_name = name.into();
+    cfg.train.epochs = epochs;
+    cfg.train.data.train_samples = 192;
+    cfg.train.data.val_samples = 64;
+    cfg.train.eval_every = epochs; // eval once at the end
+    cfg.prelora.windows = 2;
+    cfg.prelora.window_epochs = 2;
+    cfg.prelora.warmup_epochs = 2;
+    cfg.prelora.tau = 6.0;
+    cfg.prelora.zeta = 25.0;
+    cfg
+}
+
+fn main() {
+    let mut b = Bench::heavy();
+    let epochs = 10;
+
+    // Fig 1/3: baseline telemetry epoch (norm snapshots + loss tracking)
+    {
+        let mut cfg = micro_cfg("fig1", epochs);
+        cfg.prelora.enabled = false;
+        let mut t = Trainer::new(cfg).unwrap();
+        b.run("fig1_baseline_epoch", || {
+            t.run_epoch().unwrap();
+        });
+        let h = t.history();
+        println!(
+            "fig1 series: {} epochs, query norm {:.3} -> {:.3}, loss {:.3} -> {:.3}",
+            h.epochs(),
+            h.snapshot(0).module_mean("query").unwrap(),
+            h.last().unwrap().module_mean("query").unwrap(),
+            h.losses()[0],
+            h.losses()[h.epochs() - 1],
+        );
+    }
+
+    // Table 1 / Fig 4: one miniature cycle per strictness preset
+    for preset in StrictnessPreset::all() {
+        let label = format!("{preset:?}").to_lowercase();
+        let mut cfg = micro_cfg(&label, epochs);
+        let (tau, zeta) = preset.thresholds();
+        cfg.prelora.tau = tau * 12.0; // micro-scaled as in examples/
+        cfg.prelora.zeta = zeta * 12.0;
+        b.run(&format!("fig4_cycle_{label}"), || {
+            let mut t = Trainer::new(cfg.clone()).unwrap();
+            for _ in 0..epochs {
+                t.run_epoch().unwrap();
+            }
+            std::hint::black_box(t.summary());
+        });
+    }
+
+    // Fig 5/6: warmup windows
+    for w in [2usize, 4] {
+        let mut cfg = micro_cfg(&format!("w{w}"), epochs);
+        cfg.prelora.warmup_epochs = w;
+        b.run(&format!("fig5_cycle_w{w}"), || {
+            let mut t = Trainer::new(cfg.clone()).unwrap();
+            for _ in 0..epochs {
+                t.run_epoch().unwrap();
+            }
+            std::hint::black_box(t.lora_module_norm("query"));
+        });
+    }
+
+    // Fig 7: resource ratios from one full PreLoRA cycle
+    {
+        let cfg = micro_cfg("fig7", 12);
+        let mut t = Trainer::new(cfg).unwrap();
+        for _ in 0..12 {
+            t.run_epoch().unwrap();
+        }
+        let s = t.summary();
+        println!(
+            "fig7 rows: epoch_time_ratio={:?} throughput_ratio={:?} mem_saving={:?} trainable {} -> {:?}",
+            s.epoch_time_ratio, s.throughput_ratio, s.memory_saving_frac,
+            s.trainable_full, s.trainable_lora
+        );
+    }
+
+    b.write_csv("results/bench_figures.csv").unwrap();
+}

@@ -1,0 +1,93 @@
+//! Fig. 7 microbench: per-phase gradient-step latency on real artifacts.
+//!
+//! The paper's epoch-time/throughput gains come from the cheaper backward
+//! pass after the base is frozen. This bench measures exactly that at the
+//! step level: full_grads vs warmup_grads vs lora_grads vs eval, on every
+//! model with built artifacts. Expect lora < full < warmup.
+//!
+//! Writes results/bench_step_latency.csv.
+
+use std::sync::Arc;
+
+use prelora::data::{Dataset, EpochLoader, SynthSpec};
+use prelora::dp::{Algorithm, GradEngine, StepMode};
+use prelora::manifest::{Manifest, ADAPTED_MODULES};
+use prelora::rank::{build_adapter_cfg, uniform_ranks};
+use prelora::tensor::Pcg64;
+use prelora::util::bench::Bench;
+
+fn bench_model(b: &mut Bench, name: &str) {
+    let dir = std::path::Path::new("artifacts").join(name);
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("skipping {name}: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let m = Arc::new(m);
+    let c = m.config.clone();
+    let data = Dataset::generate(&SynthSpec {
+        samples: c.batch_size * 4,
+        image_size: c.image_size,
+        channels: c.in_channels,
+        num_classes: c.num_classes,
+        noise: 0.3,
+        phase_jitter: true,
+        seed: 1,
+    });
+    let loader = EpochLoader::new(c.batch_size, 1, 0);
+    let mut engine = GradEngine::new(m.clone(), 1, false, Algorithm::Naive).unwrap();
+    let base = m.load_init_base().unwrap();
+    let mut lora = vec![0.0f32; m.lora.size];
+    Pcg64::new(7).fill_normal(&mut lora, 0.02);
+    let modules: Vec<String> = ADAPTED_MODULES.iter().map(|s| s.to_string()).collect();
+    let mid_rank = c.rank_buckets[c.rank_buckets.len() / 2];
+    let assign = uniform_ranks(&modules, c.depth, mid_rank);
+    let acfg = build_adapter_cfg(&m, &assign, c.lora_alpha).unwrap();
+    let batches = loader.step_batches(&data, 0, 0);
+    let bsz = c.batch_size as f64;
+
+    b.run_units(&format!("{name}/full_grads"), bsz, || {
+        engine
+            .compute(StepMode::Full, &base, None, batches.clone())
+            .unwrap();
+    });
+    b.run_units(&format!("{name}/warmup_grads"), bsz, || {
+        engine
+            .compute(StepMode::Warmup, &base, Some((&lora, &acfg.values)), batches.clone())
+            .unwrap();
+    });
+    b.run_units(&format!("{name}/lora_grads"), bsz, || {
+        engine
+            .compute(StepMode::LoraOnly, &base, Some((&lora, &acfg.values)), batches.clone())
+            .unwrap();
+    });
+    b.run_units(&format!("{name}/eval_full"), bsz, || {
+        engine.evaluate(&base, None, batches.clone()).unwrap();
+    });
+}
+
+fn main() {
+    let mut b = Bench::heavy();
+    // PRELORA_BENCH_MODELS=vit-small,... restricts the sweep
+    let models = std::env::var("PRELORA_BENCH_MODELS")
+        .unwrap_or_else(|_| "vit-micro,vit-small,vit-base-sim".into());
+    for model in models.split(',') {
+        bench_model(&mut b, model);
+    }
+    b.write_csv("results/bench_step_latency.csv").unwrap();
+    // Fig. 7 shape assertion: the frozen-base step must beat the full step
+    // on every model where both ran.
+    let r = b.results();
+    for model in models.split(',') {
+        let get = |suffix: &str| {
+            r.iter()
+                .find(|m| m.name == format!("{model}/{suffix}"))
+                .map(|m| m.mean.as_secs_f64())
+        };
+        if let (Some(full), Some(lora)) = (get("full_grads"), get("lora_grads")) {
+            println!(
+                "{model}: lora step / full step = {:.3} (expect < 1)",
+                lora / full
+            );
+        }
+    }
+}

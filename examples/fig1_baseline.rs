@@ -1,0 +1,84 @@
+//! Figure 1 + Figure 3 reproduction: full-model pretraining telemetry.
+//!
+//! Paper: ViT-Large on ImageNet-1k, 300 epochs — (a) per-module weight
+//! norms stabilize in the second half of training while (b) the training
+//! cross-entropy loss keeps falling; Fig. 3 shows the per-layer Query
+//! norms fanning out. We run the scaled baseline (PreLoRA disabled) and
+//! emit the same three series:
+//!
+//! * `results/fig1_norms.csv`        — epoch, module, mean weight norm
+//! * `results/fig1_loss.csv`         — epoch, train CE loss
+//! * `results/fig3_query_layers.csv` — epoch, layer, Query weight norm
+//!
+//! The expected *shape*: norm deltas shrink well before the loss plateaus
+//! — exactly the window the PreLoRA switch exploits.
+//!
+//! ```text
+//! cargo run --release --example fig1_baseline [-- <model> <epochs>]
+//! ```
+
+use anyhow::Result;
+use prelora::config::RunConfig;
+use prelora::telemetry::recorder::CsvRecorder;
+use prelora::trainer::Trainer;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map_or("vit-small", |s| s.as_str());
+    let epochs: usize = args.get(1).map_or(36, |s| s.parse().expect("epochs"));
+
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.run_name = "fig1-baseline".into();
+    cfg.train.epochs = epochs;
+    cfg.train.data.train_samples = 512;
+    cfg.train.data.val_samples = 128;
+    cfg.train.data.noise = 1.5;
+    cfg.train.data.fresh_per_epoch = true; // calibrated: irreducible error keeps the loss floor paper-like
+    cfg.prelora.enabled = false; // pure full-parameter baseline
+
+    let mut trainer = Trainer::new(cfg.clone())?;
+    let mut norms = CsvRecorder::create(&cfg.results_dir, "fig1_norms", &["epoch", "module_id", "norm"])?;
+    let mut norms_named =
+        CsvRecorder::create(&cfg.results_dir, "fig1_norms_named", &["module", "epoch", "norm"])?;
+    let mut loss = CsvRecorder::create(&cfg.results_dir, "fig1_loss", &["epoch", "train_loss"])?;
+    let mut fig3 =
+        CsvRecorder::create(&cfg.results_dir, "fig3_query_layers", &["epoch", "layer", "norm"])?;
+
+    for _ in 0..epochs {
+        let s = trainer.run_epoch()?;
+        let snap = trainer.history().last().unwrap().clone();
+        for (mi, (module, layers)) in snap.by_module.iter().enumerate() {
+            let mean = layers.iter().sum::<f64>() / layers.len() as f64;
+            norms.row(&[s.epoch as f64, mi as f64, mean])?;
+            norms_named.tagged_row(module, &[s.epoch as f64, mean])?;
+        }
+        for (l, n) in snap.by_module["query"].iter().enumerate() {
+            fig3.row(&[s.epoch as f64, l as f64, *n])?;
+        }
+        loss.row(&[s.epoch as f64, s.train_loss])?;
+        eprintln!(
+            "epoch {:>3} loss {:.4} acc {:.3} ({:.2}s)",
+            s.epoch, s.train_loss, s.train_acc, s.epoch_seconds
+        );
+    }
+
+    // Fig. 1's claim, checked numerically: late-phase norm drift is far
+    // smaller than early-phase drift, while the loss is still moving.
+    let h = trainer.history();
+    let e = h.epochs();
+    let drift = |module: &str, a: usize, b: usize| {
+        let na = h.snapshot(a).module_mean(module).unwrap();
+        let nb = h.snapshot(b).module_mean(module).unwrap();
+        ((nb - na) / na * 100.0).abs()
+    };
+    let early = drift("query", 1, e / 4);
+    let late = drift("query", 3 * e / 4, e - 1);
+    let loss_late = (h.losses()[e - 1] - h.losses()[3 * e / 4]).abs();
+    println!("\nFig1 shape check:");
+    println!("  query norm drift early {early:.2}% vs late {late:.2}%  (expect early >> late)");
+    println!("  loss still moving late: |dL| = {loss_late:.4}  (expect > 0)");
+    println!("{}", trainer.summary().render());
+    println!("series written to results/fig1_*.csv and results/fig3_query_layers.csv");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+"""AOT compile path: lower every artifact to HLO *text* + emit the manifest.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` /
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/load_hlo/gen_hlo.py).
+
+This module runs ONCE at build time (``make artifacts``) and never on the
+request path. Outputs per model, under ``artifacts/<model>/``:
+
+* ``<artifact>.hlo.txt``  — one per entry in ``model.ARTIFACT_BUILDERS``
+* ``manifest.json``       — tensor/adapter offset tables + artifact I/O
+                            signatures (parsed by ``rust/src/manifest.rs``)
+* ``init_base.f32``       — little-endian f32 initial base parameters
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, vit
+from .kernels import lora_matmul as km
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_manifest(cfg: configs.ModelConfig, backend: str, seed: int) -> dict:
+    base_specs = vit.base_param_specs(cfg)
+    lora_tensors, adapters = vit.lora_param_specs(cfg)
+
+    def tens(specs):
+        return [
+            {
+                "name": s.name,
+                "offset": s.offset,
+                "size": s.size,
+                "shape": list(s.shape),
+                "module": s.module,
+                "layer": s.layer,
+            }
+            for s in specs
+        ]
+
+    return {
+        "schema_version": 1,
+        "model": cfg.name,
+        "backend": backend,
+        "seed": seed,
+        "config": {
+            "image_size": cfg.image_size,
+            "patch_size": cfg.patch_size,
+            "in_channels": cfg.in_channels,
+            "hidden_dim": cfg.hidden_dim,
+            "depth": cfg.depth,
+            "num_heads": cfg.num_heads,
+            "mlp_dim": cfg.mlp_dim,
+            "num_classes": cfg.num_classes,
+            "batch_size": cfg.batch_size,
+            "tokens": cfg.tokens,
+            "r_min": cfg.r_min,
+            "r_max": cfg.r_max,
+            "lora_alpha": cfg.lora_alpha,
+            "rank_buckets": cfg.rank_buckets,
+        },
+        "base": {"size": vit.base_param_count(cfg), "tensors": tens(base_specs)},
+        "lora": {"size": vit.lora_param_count(cfg), "tensors": tens(lora_tensors)},
+        "adapters": [
+            {
+                "name": a.name,
+                "layer": a.layer,
+                "module": a.module,
+                "in_dim": a.in_dim,
+                "out_dim": a.out_dim,
+                "a_offset": a.a_offset,
+                "a_size": a.in_dim * cfg.r_max,
+                "b_offset": a.b_offset,
+                "b_size": cfg.r_max * a.out_dim,
+                "cfg_offset": a.cfg_offset,
+            }
+            for a in adapters
+        ],
+        "adapter_cfg_size": vit.adapter_cfg_size(cfg),
+        "artifacts": {
+            name: {"file": f"{name}.hlo.txt", "inputs": io[0], "outputs": io[1]}
+            for name, io in model.ARTIFACT_IO.items()
+        },
+    }
+
+
+def build_model(cfg: configs.ModelConfig, out_dir: pathlib.Path, backend: str, seed: int) -> None:
+    km.set_backend(backend)
+    mdir = out_dir / cfg.name
+    mdir.mkdir(parents=True, exist_ok=True)
+    for name, builder in model.ARTIFACT_BUILDERS.items():
+        t0 = time.perf_counter()
+        fn = builder(cfg)
+        lowered = jax.jit(fn).lower(*model.example_args(cfg, name))
+        text = to_hlo_text(lowered)
+        (mdir / f"{name}.hlo.txt").write_text(text)
+        print(
+            f"[aot] {cfg.name}/{name}: {len(text)} chars in "
+            f"{time.perf_counter() - t0:.1f}s",
+            file=sys.stderr,
+        )
+    init = vit.init_base(cfg, seed=seed)
+    (mdir / "init_base.f32").write_bytes(init.tobytes())
+    (mdir / "manifest.json").write_text(json.dumps(build_manifest(cfg, backend, seed), indent=1))
+    print(f"[aot] {cfg.name}: manifest + init ({init.size} base params)", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root directory")
+    ap.add_argument(
+        "--models",
+        nargs="+",
+        default=["vit-micro", "vit-small", "vit-base-sim"],
+        choices=sorted(configs.MODELS),
+    )
+    ap.add_argument("--backend", default="pallas", choices=["pallas", "jnp"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    for name in args.models:
+        build_model(configs.get(name), out, args.backend, args.seed)
+    # Build-stamp so `make artifacts` is a no-op when inputs are unchanged.
+    (out / ".stamp").write_text(str(time.time()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Model zoo for the PreLoRA reproduction.
+
+The paper trains ViT-Large (300M) on ImageNet-1k; our testbed is CPU-only
+PJRT, so we provide a scaled family whose *dynamics* (from-scratch training,
+module taxonomy q/k/v/output/dense, power-of-two rank buckets) match the
+paper while staying runnable. Mirrored on the Rust side by
+``rust/src/config/model.rs`` — the manifest emitted by ``aot.py`` is the
+source of truth at runtime; this table only drives artifact generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration for one ViT variant.
+
+    Attributes mirror the paper's setup scaled down; ``r_min``/``r_max``
+    bound the power-of-two rank buckets of Algorithm 2 (paper: 8..64 on
+    D=1024; we scale the bounds with the hidden dim so the trainable-param
+    fraction lands near the paper's ~10%).
+    """
+
+    name: str
+    image_size: int
+    patch_size: int
+    in_channels: int
+    hidden_dim: int
+    depth: int
+    num_heads: int
+    mlp_dim: int
+    num_classes: int
+    batch_size: int
+    r_min: int
+    r_max: int
+    lora_alpha: float  # numerator of the LoRA scale: scale = alpha / r
+
+    @property
+    def tokens(self) -> int:
+        """Sequence length (no CLS token: we use global average pooling, one
+        of the standard ViT head variants in Steiner et al., so token counts
+        stay power-of-two friendly for Pallas block tiling)."""
+        side = self.image_size // self.patch_size
+        return side * side
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.in_channels
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden_dim % self.num_heads == 0
+        return self.hidden_dim // self.num_heads
+
+    @property
+    def rank_buckets(self) -> list[int]:
+        """Power-of-two ranks r_min..r_max inclusive (Algorithm 2, lines 3-6)."""
+        lo = int(math.log2(self.r_min))
+        hi = int(math.log2(self.r_max))
+        return [2**p for p in range(lo, hi + 1)]
+
+
+# Target-module taxonomy (the paper's alpha set, Section 4.1):
+#   query/key/value  -> attention projections
+#   output           -> attention output projection
+#   dense            -> MLP up-projection
+# ``mlp_out`` is deliberately NOT adapted (not in the paper's alpha set).
+ADAPTED_MODULES = ("query", "key", "value", "output", "dense")
+
+MODELS: dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        # Test-scale model: fast enough for pytest + cargo test round trips.
+        ModelConfig(
+            name="vit-micro",
+            image_size=16,
+            patch_size=4,
+            in_channels=3,
+            hidden_dim=32,
+            depth=2,
+            num_heads=2,
+            mlp_dim=64,
+            num_classes=8,
+            batch_size=8,
+            r_min=1,
+            r_max=4,
+            lora_alpha=8.0,
+        ),
+        ModelConfig(
+            name="vit-tiny",
+            image_size=16,
+            patch_size=4,
+            in_channels=3,
+            hidden_dim=64,
+            depth=4,
+            num_heads=4,
+            mlp_dim=128,
+            num_classes=10,
+            batch_size=16,
+            r_min=1,
+            r_max=8,
+            lora_alpha=16.0,
+        ),
+        # Default model for the figure harnesses.
+        ModelConfig(
+            name="vit-small",
+            image_size=32,
+            patch_size=4,
+            in_channels=3,
+            hidden_dim=128,
+            depth=6,
+            num_heads=4,
+            mlp_dim=256,
+            num_classes=16,
+            batch_size=16,
+            r_min=2,
+            r_max=16,
+            lora_alpha=32.0,
+        ),
+        # Largest CPU-feasible stand-in for ViT-Large in the e2e driver.
+        ModelConfig(
+            name="vit-base-sim",
+            image_size=32,
+            patch_size=4,
+            in_channels=3,
+            hidden_dim=256,
+            depth=8,
+            num_heads=8,
+            mlp_dim=1024,
+            num_classes=32,
+            batch_size=32,
+            r_min=4,
+            r_max=32,
+            lora_alpha=64.0,
+        ),
+    ]
+}
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return MODELS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown model {name!r}; available: {sorted(MODELS)}") from e

@@ -1,0 +1,395 @@
+"""L1 Pallas kernels: fused LoRA matmul (forward + custom VJP backward).
+
+The paper's compute hot spot is the dense projection ``x @ W`` plus the
+low-rank bypass ``(x @ A) @ B * scale`` on the target modules
+(query/key/value/output/dense). On the paper's A100s the bypass is a second
+GEMM fused by cuBLAS/torch; the TPU-style Pallas adaptation here fuses the
+bypass into the *epilogue of the base GEMM's output tile* so the adapter
+costs no extra HBM round-trip:
+
+* grid tiles the (M, N) output; each cell holds one (bm, bn) output tile in
+  VMEM, streams the full-K x/W panels plus the (K, R_MAX) / (R_MAX, bn)
+  adapter panels, and writes the fused result once.
+* the backward pass is FOUR SEPARATE ``pallas_call``s (dx, dW, dA, dB). This
+  is deliberate: when the coordinator freezes the base model (LoRA-only
+  phase) it lowers the loss with ``stop_gradient`` on the base parameters,
+  the ``dW`` cotangent becomes dead, and XLA dead-code-eliminates the whole
+  dW kernel — the kernel-level realization of the paper's "freeze the full
+  model" speedup. A fused single-kernel backward could not be DCE'd.
+
+Rank masking: ``mask`` ([R_MAX] of 0/1) and ``scale`` (= alpha / r_l) carry
+Algorithm 2's per-layer dynamic rank through a *static* shape — the first
+``r_l`` mask entries are 1, the rest 0, so masked A-columns/B-rows are inert
+and receive zero gradient. One compiled HLO serves every rank assignment.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode (which lowers to plain HLO) is both
+the correctness path and what ships in the AOT artifacts. Real-TPU VMEM /
+MXU estimates live in DESIGN.md §Perf.
+
+``set_backend("jnp")`` swaps every call site to the pure-jnp oracle in
+``ref.py`` (identical semantics, asserted by pytest); ``aot.py --backend``
+exposes it so the perf harness can measure kernel overhead on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# The CPU PJRT client can only run interpret-mode Pallas (see module doc).
+INTERPRET = True
+
+_BACKEND = "pallas"
+
+
+def set_backend(name: str) -> None:
+    """Select the kernel backend: ``"pallas"`` (default) or ``"jnp"``."""
+    global _BACKEND
+    if name not in ("pallas", "jnp"):
+        raise ValueError(f"unknown kernel backend {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _pick_block(dim: int, cap: int = 256) -> int:
+    """Largest power-of-two ≤ cap that divides ``dim``.
+
+    Pallas interpret mode requires the grid to tile the array exactly for
+    the index maps used here; model dims are chosen so M = batch*(tokens)
+    and the hidden dims always have a power-of-two divisor ≥ 8. On a real
+    TPU the caps below keep a (bm, K) x-panel + (K, bn) w-panel + (bm, bn)
+    accumulator comfortably inside the ~16 MiB VMEM budget for every model
+    in the zoo (worst case vit-base-sim: 256*1024*4B * 3 panels ≈ 3 MiB).
+
+    Perf note (EXPERIMENTS.md §Perf): cap=256 vs the initial cap=128
+    quarters the grid-cell count; in interpret mode each cell pays a
+    while-loop iteration of dispatch overhead, and the measured fused
+    lora_matmul at vit-small projection shapes drops 4.9ms -> 2.4ms,
+    matching the pure-jnp roofline. cap=512 measured no further gain.
+    """
+    b = 1
+    while b * 2 <= min(dim, cap) and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# forward kernels
+# ---------------------------------------------------------------------------
+
+
+def _matmul_fwd_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _pallas_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn = _pick_block(m), _pick_block(n)
+    return pl.pallas_call(
+        _matmul_fwd_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _lora_fwd_kernel(x_ref, w_ref, a_ref, b_ref, mask_ref, scale_ref, o_ref):
+    # One (bm, bn) output tile: base GEMM + fused low-rank epilogue.
+    x = x_ref[...]  # [bm, K]
+    w = w_ref[...]  # [K, bn]
+    a = a_ref[...]  # [K, R]
+    b = b_ref[...]  # [R, bn]
+    mask = mask_ref[...]  # [1, R]
+    scale = scale_ref[0, 0]
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32) * mask
+    low = jnp.dot(z, b, preferred_element_type=jnp.float32)
+    o_ref[...] = (base + scale * low).astype(o_ref.dtype)
+
+
+def _pallas_lora_matmul(x, w, a, b, mask2d, scale2d):
+    m, k = x.shape
+    _, n = w.shape
+    r = a.shape[1]
+    bm, bn = _pick_block(m), _pick_block(n)
+    return pl.pallas_call(
+        _lora_fwd_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, a, b, mask2d, scale2d)
+
+
+# ---------------------------------------------------------------------------
+# backward kernels — one pallas_call per cotangent (DCE-friendly, see doc)
+# ---------------------------------------------------------------------------
+
+
+def _dx_base_kernel(dy_ref, w_ref, o_ref):
+    # dx tile [bm, bk] = dy[bm, N] @ w[bk, N]^T
+    dy = dy_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jnp.dot(dy, w.T, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _pallas_dx_base(dy, w):
+    m, n = dy.shape
+    k = w.shape[0]
+    bm, bk = _pick_block(m), _pick_block(k)
+    return pl.pallas_call(
+        _dx_base_kernel,
+        grid=(m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), dy.dtype),
+        interpret=INTERPRET,
+    )(dy, w)
+
+
+def _dx_lora_kernel(dy_ref, w_ref, a_ref, b_ref, mask_ref, scale_ref, o_ref):
+    # dx tile = dy @ w^T + ((dy @ b^T) * mask) @ a^T * scale
+    dy = dy_ref[...]  # [bm, N]
+    w = w_ref[...]  # [bk, N]
+    a = a_ref[...]  # [bk, R]
+    b = b_ref[...]  # [R, N]
+    mask = mask_ref[...]  # [1, R]
+    scale = scale_ref[0, 0]
+    base = jnp.dot(dy, w.T, preferred_element_type=jnp.float32)
+    z = jnp.dot(dy, b.T, preferred_element_type=jnp.float32) * mask
+    low = jnp.dot(z, a.T, preferred_element_type=jnp.float32)
+    o_ref[...] = (base + scale * low).astype(o_ref.dtype)
+
+
+def _pallas_dx_lora(dy, w, a, b, mask2d, scale2d):
+    m, n = dy.shape
+    k, r = a.shape
+    bm, bk = _pick_block(m), _pick_block(k)
+    return pl.pallas_call(
+        _dx_lora_kernel,
+        grid=(m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((r, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), dy.dtype),
+        interpret=INTERPRET,
+    )(dy, w, a, b, mask2d, scale2d)
+
+
+def _dw_kernel(x_ref, dy_ref, o_ref):
+    # dw tile [bk, bn] = x[M, bk]^T @ dy[M, bn]
+    x = x_ref[...]
+    dy = dy_ref[...]
+    o_ref[...] = jnp.dot(x.T, dy, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _pallas_dw(x, dy):
+    m, k = x.shape
+    n = dy.shape[1]
+    bk, bn = _pick_block(k), _pick_block(n)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid=(k // bk, n // bn),
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda i, j: (0, i)),
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, dy)
+
+
+def _da_kernel(x_ref, dy_ref, b_ref, mask_ref, scale_ref, o_ref):
+    # da tile [bk, R] = x[M, bk]^T @ ((dy @ b^T) * mask) * scale
+    x = x_ref[...]  # [M, bk]
+    dy = dy_ref[...]  # [M, N]
+    b = b_ref[...]  # [R, N]
+    mask = mask_ref[...]  # [1, R]
+    scale = scale_ref[0, 0]
+    z = jnp.dot(dy, b.T, preferred_element_type=jnp.float32) * mask
+    o_ref[...] = (scale * jnp.dot(x.T, z, preferred_element_type=jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def _pallas_da(x, dy, b, mask2d, scale2d):
+    m, k = x.shape
+    r, n = b.shape
+    bk = _pick_block(k)
+    return pl.pallas_call(
+        _da_kernel,
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda i: (0, i)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((r, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, r), x.dtype),
+        interpret=INTERPRET,
+    )(x, dy, b, mask2d, scale2d)
+
+
+def _db_kernel(x_ref, a_ref, dy_ref, mask_ref, scale_ref, o_ref):
+    # db tile [R, bn] = ((x @ a) * mask)^T @ dy[:, bn] * scale
+    x = x_ref[...]  # [M, K]
+    a = a_ref[...]  # [K, R]
+    dy = dy_ref[...]  # [M, bn]
+    mask = mask_ref[...]  # [1, R]
+    scale = scale_ref[0, 0]
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32) * mask
+    o_ref[...] = (scale * jnp.dot(z.T, dy, preferred_element_type=jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def _pallas_db(x, a, dy, mask2d, scale2d):
+    m, k = x.shape
+    r = a.shape[1]
+    n = dy.shape[1]
+    bn = _pick_block(n)
+    return pl.pallas_call(
+        _db_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, r), lambda j: (0, 0)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, r), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, a, dy, mask2d, scale2d)
+
+
+# ---------------------------------------------------------------------------
+# public differentiable ops
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable base projection ``x @ w`` backed by Pallas kernels."""
+    if _BACKEND == "jnp":
+        return ref.ref_matmul(x, w)
+    return _pallas_matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    if _BACKEND == "jnp":
+        return jnp.dot(dy, w.T).astype(x.dtype), jnp.dot(x.T, dy).astype(w.dtype)
+    return _pallas_dx_base(dy, w), _pallas_dw(x, dy)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@jax.custom_vjp
+def lora_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: jnp.ndarray,
+    scale: jnp.ndarray,
+) -> jnp.ndarray:
+    """Differentiable fused LoRA projection (see module doc and ref.py)."""
+    if _BACKEND == "jnp":
+        return ref.ref_lora_matmul(x, w, a, b, mask, scale)
+    mask2d = mask.reshape(1, -1)
+    scale2d = scale.reshape(1, 1)
+    return _pallas_lora_matmul(x, w, a, b, mask2d, scale2d)
+
+
+def _lora_fwd(x, w, a, b, mask, scale):
+    return lora_matmul(x, w, a, b, mask, scale), (x, w, a, b, mask, scale)
+
+
+def _lora_bwd(res, dy):
+    x, w, a, b, mask, scale = res
+    # mask / scale are rank configuration, not parameters: zero cotangents.
+    dmask = jnp.zeros_like(mask)
+    dscale = jnp.zeros_like(scale)
+    if _BACKEND == "jnp":
+        z_fwd = jnp.dot(x, a, preferred_element_type=jnp.float32) * mask
+        zt = jnp.dot(dy, b.T, preferred_element_type=jnp.float32) * mask
+        dx = (jnp.dot(dy, w.T) + scale * jnp.dot(zt, a.T)).astype(x.dtype)
+        dw = jnp.dot(x.T, dy).astype(w.dtype)
+        da = (scale * jnp.dot(x.T, zt)).astype(a.dtype)
+        db = (scale * jnp.dot(z_fwd.T, dy)).astype(b.dtype)
+        return dx, dw, da, db, dmask, dscale
+    mask2d = mask.reshape(1, -1)
+    scale2d = scale.reshape(1, 1)
+    dx = _pallas_dx_lora(dy, w, a, b, mask2d, scale2d)
+    dw = _pallas_dw(x, dy)  # dead + DCE'd when the base is frozen
+    da = _pallas_da(x, dy, b, mask2d, scale2d)
+    db = _pallas_db(x, a, dy, mask2d, scale2d)
+    return dx, dw, da, db, dmask, dscale
+
+
+lora_matmul.defvjp(_lora_fwd, _lora_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(m: int, k: int, n: int, r: int, bytes_per_el: int = 4) -> dict:
+    """Analytic VMEM footprint (bytes) of one forward grid cell on real TPU.
+
+    Used by DESIGN.md §Perf / EXPERIMENTS.md — interpret mode gives no
+    hardware numbers, so the shipping block shapes are justified by this
+    estimate staying far below the ~16 MiB VMEM budget.
+    """
+    bm, bn = _pick_block(m), _pick_block(n)
+    panels = {
+        "x": bm * k,
+        "w": k * bn,
+        "a": k * r,
+        "b": r * bn,
+        "out": bm * bn,
+    }
+    total = sum(panels.values()) * bytes_per_el
+    return {"block": (bm, bn), "panels": panels, "total_bytes": total}

@@ -1,0 +1,43 @@
+# Pure-jnp correctness oracle for the L1 Pallas kernels.
+#
+# These definitions are the *semantic contract*: pytest asserts the Pallas
+# kernels (forward and every custom_vjp cotangent) match these to float32
+# tolerance across a hypothesis-driven shape/dtype sweep. They are also the
+# `jnp` kernel backend used by `aot.py --backend jnp` artifacts.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain base projection: ``x @ w`` with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ref_lora_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: jnp.ndarray,
+    scale: jnp.ndarray,
+) -> jnp.ndarray:
+    """LoRA-augmented projection.
+
+    ``y = x @ w + ((x @ a) * mask) @ b * scale``
+
+    * ``x``: [M, K] activations
+    * ``w``: [K, N] frozen/base weight
+    * ``a``: [K, R_MAX] LoRA down-projection
+    * ``b``: [R_MAX, N] LoRA up-projection
+    * ``mask``: [R_MAX] 0/1 rank mask — the first ``r_l`` entries are 1 for a
+      layer assigned rank ``r_l`` by Algorithm 2; columns of ``a`` / rows of
+      ``b`` beyond ``r_l`` are inert and receive zero gradient, so a single
+      static shape serves every dynamic rank assignment.
+    * ``scale``: scalar ``alpha / r_l``.
+    """
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32) * mask
+    low = jnp.dot(z, b, preferred_element_type=jnp.float32)
+    return (base + scale * low).astype(x.dtype)

@@ -1,0 +1,156 @@
+"""L2: loss + gradient entry points, one per AOT artifact.
+
+Every function here becomes exactly one HLO artifact (see ``aot.py``):
+
+* ``full_grads``   — grads w.r.t. the base vector (pre-switch + baseline).
+* ``warmup_grads`` — grads w.r.t. base AND LoRA vectors (paper §3.3: full
+  model and adapters train jointly for ``w`` warmup epochs).
+* ``lora_grads``   — grads w.r.t. the LoRA vector only; the base vector is
+  wrapped in ``stop_gradient`` so XLA dead-code-eliminates the entire base
+  backward pass (including the per-adapter dW Pallas kernels) — this is
+  where the paper's post-switch speedup physically comes from.
+* ``eval_full`` / ``eval_lora`` — forward-only loss/accuracy.
+
+All of them return ``(grads..., loss, correct)`` where ``correct`` is the
+number of top-1 hits in the batch as f32 (the Rust side accumulates it into
+train/val accuracy). The optimizer lives in Rust; XLA computes fwd/bwd only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import vit
+from .configs import ModelConfig
+
+
+def loss_and_correct(
+    cfg: ModelConfig,
+    base: jnp.ndarray,
+    images: jnp.ndarray,
+    labels: jnp.ndarray,
+    lora: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean cross-entropy over the batch + top-1 hit count (f32 scalar)."""
+    logits = vit.forward(cfg, base, images, lora=lora)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, correct
+
+
+def make_full_grads(cfg: ModelConfig):
+    """(base, images, labels) -> (d_base, loss, correct)"""
+
+    def fn(base, images, labels):
+        def loss_fn(b):
+            return loss_and_correct(cfg, b, images, labels)
+
+        (loss, correct), d_base = jax.value_and_grad(loss_fn, has_aux=True)(base)
+        return d_base, loss, correct
+
+    return fn
+
+
+def make_warmup_grads(cfg: ModelConfig):
+    """(base, lora, adapter_cfg, images, labels) -> (d_base, d_lora, loss, correct)"""
+
+    def fn(base, lora, adapter_cfg, images, labels):
+        def loss_fn(b, lo):
+            return loss_and_correct(cfg, b, images, labels, lora=(lo, adapter_cfg))
+
+        (loss, correct), (d_base, d_lora) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(base, lora)
+        return d_base, d_lora, loss, correct
+
+    return fn
+
+
+def make_lora_grads(cfg: ModelConfig):
+    """(base, lora, adapter_cfg, images, labels) -> (d_lora, loss, correct)
+
+    ``stop_gradient`` on the base vector makes every base cotangent dead:
+    XLA removes the base backward pass (verified by the HLO-size check in
+    the pytest suite and by the measured step-latency gap in Fig. 7).
+    """
+
+    def fn(base, lora, adapter_cfg, images, labels):
+        frozen = jax.lax.stop_gradient(base)
+
+        def loss_fn(lo):
+            return loss_and_correct(cfg, frozen, images, labels, lora=(lo, adapter_cfg))
+
+        (loss, correct), d_lora = jax.value_and_grad(loss_fn, has_aux=True)(lora)
+        return d_lora, loss, correct
+
+    return fn
+
+
+def make_eval_full(cfg: ModelConfig):
+    """(base, images, labels) -> (loss, correct)"""
+
+    def fn(base, images, labels):
+        return loss_and_correct(cfg, base, images, labels)
+
+    return fn
+
+
+def make_eval_lora(cfg: ModelConfig):
+    """(base, lora, adapter_cfg, images, labels) -> (loss, correct)"""
+
+    def fn(base, lora, adapter_cfg, images, labels):
+        return loss_and_correct(cfg, base, images, labels, lora=(lora, adapter_cfg))
+
+    return fn
+
+
+def example_args(cfg: ModelConfig, which: str):
+    """ShapeDtypeStructs matching one artifact's input signature."""
+    n_base = vit.base_param_count(cfg)
+    n_lora = vit.lora_param_count(cfg)
+    n_cfg = vit.adapter_cfg_size(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+    base = jax.ShapeDtypeStruct((n_base,), f32)
+    lora = jax.ShapeDtypeStruct((n_lora,), f32)
+    acfg = jax.ShapeDtypeStruct((n_cfg,), f32)
+    images = jax.ShapeDtypeStruct(
+        (cfg.batch_size, cfg.image_size, cfg.image_size, cfg.in_channels), f32
+    )
+    labels = jax.ShapeDtypeStruct((cfg.batch_size,), i32)
+    sigs = {
+        "full_grads": (base, images, labels),
+        "warmup_grads": (base, lora, acfg, images, labels),
+        "lora_grads": (base, lora, acfg, images, labels),
+        "eval_full": (base, images, labels),
+        "eval_lora": (base, lora, acfg, images, labels),
+    }
+    return sigs[which]
+
+
+ARTIFACT_BUILDERS = {
+    "full_grads": make_full_grads,
+    "warmup_grads": make_warmup_grads,
+    "lora_grads": make_lora_grads,
+    "eval_full": make_eval_full,
+    "eval_lora": make_eval_lora,
+}
+
+ARTIFACT_IO = {
+    "full_grads": (["base", "images", "labels"], ["d_base", "loss", "correct"]),
+    "warmup_grads": (
+        ["base", "lora", "adapter_cfg", "images", "labels"],
+        ["d_base", "d_lora", "loss", "correct"],
+    ),
+    "lora_grads": (
+        ["base", "lora", "adapter_cfg", "images", "labels"],
+        ["d_lora", "loss", "correct"],
+    ),
+    "eval_full": (["base", "images", "labels"], ["loss", "correct"]),
+    "eval_lora": (
+        ["base", "lora", "adapter_cfg", "images", "labels"],
+        ["loss", "correct"],
+    ),
+}

@@ -1,0 +1,292 @@
+"""L2: Vision Transformer over flat parameter vectors.
+
+The L2↔L3 contract keeps *all* parameters in flat f32 vectors so the Rust
+coordinator can own the optimizer, weight-norm telemetry, convergence test
+and rank assignment without understanding pytrees:
+
+* ``base_param_specs(cfg)``   — deterministic tensor table for the base model
+* ``lora_param_specs(cfg)``   — tensor table + adapter table for LoRA params
+* ``forward(cfg, base, images, lora=...)`` — the model, unflattening via
+  static slices (free at HLO level) and routing every dense projection
+  through the L1 Pallas kernels (``kernels.lora_matmul``).
+
+Module taxonomy follows the paper's target set alpha =
+{query, key, value, output, dense} (Section 4.1); ``mlp_out`` and the
+patch-embed / head / layernorm tensors are tracked in telemetry but never
+adapted. The same spec tables are serialized into ``manifest.json`` by
+``aot.py`` and re-parsed by ``rust/src/manifest.rs`` — they are the single
+source of truth for offsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ADAPTED_MODULES, ModelConfig
+from .kernels import lora_matmul as km
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One tensor inside a flat parameter vector."""
+
+    name: str
+    shape: tuple[int, ...]
+    module: str  # query|key|value|output|dense|mlp_out|ln|embed|head|lora_a|lora_b
+    layer: int  # -1 for non-layer tensors (embeddings, final ln, head)
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSpec:
+    """One LoRA adapter (an A/B pair) attached to a base matrix."""
+
+    name: str  # e.g. "layer3.query"
+    layer: int
+    module: str
+    in_dim: int
+    out_dim: int
+    a_offset: int  # offset of A [in_dim, r_max] in the lora flat vector
+    b_offset: int  # offset of B [r_max, out_dim] in the lora flat vector
+    cfg_offset: int  # offset of [mask(r_max) ++ scale(1)] in adapter_cfg
+
+
+def base_param_specs(cfg: ModelConfig) -> list[TensorSpec]:
+    """Deterministic tensor table for the base (full) model."""
+    specs: list[TensorSpec] = []
+    off = 0
+
+    def add(name: str, shape: tuple[int, ...], module: str, layer: int) -> None:
+        nonlocal off
+        specs.append(TensorSpec(name, shape, module, layer, off))
+        off += int(np.prod(shape))
+
+    d, f = cfg.hidden_dim, cfg.mlp_dim
+    add("patch_embed.w", (cfg.patch_dim, d), "embed", -1)
+    add("patch_embed.b", (d,), "embed", -1)
+    add("pos_embed", (cfg.tokens, d), "embed", -1)
+    for l in range(cfg.depth):
+        p = f"layer{l}."
+        add(p + "ln1.scale", (d,), "ln", l)
+        add(p + "ln1.bias", (d,), "ln", l)
+        add(p + "query.w", (d, d), "query", l)
+        add(p + "query.b", (d,), "query", l)
+        add(p + "key.w", (d, d), "key", l)
+        add(p + "key.b", (d,), "key", l)
+        add(p + "value.w", (d, d), "value", l)
+        add(p + "value.b", (d,), "value", l)
+        add(p + "output.w", (d, d), "output", l)
+        add(p + "output.b", (d,), "output", l)
+        add(p + "ln2.scale", (d,), "ln", l)
+        add(p + "ln2.bias", (d,), "ln", l)
+        add(p + "dense.w", (d, f), "dense", l)
+        add(p + "dense.b", (f,), "dense", l)
+        add(p + "mlp_out.w", (f, d), "mlp_out", l)
+        add(p + "mlp_out.b", (d,), "mlp_out", l)
+    add("ln_f.scale", (d,), "ln", -1)
+    add("ln_f.bias", (d,), "ln", -1)
+    add("head.w", (d, cfg.num_classes), "head", -1)
+    add("head.b", (cfg.num_classes,), "head", -1)
+    return specs
+
+
+def base_param_count(cfg: ModelConfig) -> int:
+    specs = base_param_specs(cfg)
+    return specs[-1].offset + specs[-1].size
+
+
+def lora_param_specs(cfg: ModelConfig) -> tuple[list[TensorSpec], list[AdapterSpec]]:
+    """Tensor + adapter tables for the LoRA flat vector.
+
+    Adapter order is layer-major then the paper's module order; the same
+    order indexes ``adapter_cfg`` = concat per adapter of [mask(r_max),
+    scale]. Every A is allocated at r_max; Algorithm 2's dynamic per-layer
+    rank r_l is expressed purely through mask/scale (see kernels doc).
+    """
+    d, f, r = cfg.hidden_dim, cfg.mlp_dim, cfg.r_max
+    dims = {"query": (d, d), "key": (d, d), "value": (d, d), "output": (d, d), "dense": (d, f)}
+    tensors: list[TensorSpec] = []
+    adapters: list[AdapterSpec] = []
+    off = 0
+    for l in range(cfg.depth):
+        for mod in ADAPTED_MODULES:
+            din, dout = dims[mod]
+            name = f"layer{l}.{mod}"
+            a_off, b_off = off, off + din * r
+            tensors.append(TensorSpec(name + ".lora_a", (din, r), "lora_a", l, a_off))
+            tensors.append(TensorSpec(name + ".lora_b", (r, dout), "lora_b", l, b_off))
+            idx = len(adapters)
+            adapters.append(
+                AdapterSpec(name, l, mod, din, dout, a_off, b_off, idx * (r + 1))
+            )
+            off = b_off + r * dout
+    return tensors, adapters
+
+
+def lora_param_count(cfg: ModelConfig) -> int:
+    tensors, _ = lora_param_specs(cfg)
+    return tensors[-1].offset + tensors[-1].size
+
+
+def adapter_cfg_size(cfg: ModelConfig) -> int:
+    _, adapters = lora_param_specs(cfg)
+    return len(adapters) * (cfg.r_max + 1)
+
+
+# ---------------------------------------------------------------------------
+# initialization (numpy: reproducible, dumped to init_base.f32 by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def init_base(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Initial base parameters, truncated-normal-style ViT init."""
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(base_param_count(cfg), dtype=np.float32)
+    for spec in base_param_specs(cfg):
+        if spec.name.endswith(".scale"):
+            val = np.ones(spec.shape, np.float32)
+        elif spec.name.endswith((".bias", ".b")) or spec.module == "head":
+            # zero biases; zero head => uniform initial predictions
+            val = np.zeros(spec.shape, np.float32)
+        elif spec.name == "pos_embed":
+            val = rng.normal(0.0, 0.02, spec.shape).astype(np.float32)
+        else:
+            val = rng.normal(0.0, 0.02, spec.shape).astype(np.float32)
+        flat[spec.offset : spec.offset + spec.size] = val.ravel()
+    return flat
+
+
+def init_lora(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """LoRA init: A ~ N(0, 0.02), B = 0 (adapter starts as identity delta).
+
+    The Rust coordinator performs the same-policy init at switch time with
+    its own RNG; this Python version exists for the pytest suite.
+    """
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(lora_param_count(cfg), dtype=np.float32)
+    tensors, _ = lora_param_specs(cfg)
+    for spec in tensors:
+        if spec.module == "lora_a":
+            v = rng.normal(0.0, 0.02, spec.shape).astype(np.float32)
+            flat[spec.offset : spec.offset + spec.size] = v.ravel()
+    return flat
+
+
+def uniform_adapter_cfg(cfg: ModelConfig, rank: int) -> np.ndarray:
+    """adapter_cfg with every adapter at the same rank (testing / baseline)."""
+    _, adapters = lora_param_specs(cfg)
+    out = np.zeros(adapter_cfg_size(cfg), np.float32)
+    for ad in adapters:
+        out[ad.cfg_offset : ad.cfg_offset + rank] = 1.0
+        out[ad.cfg_offset + cfg.r_max] = cfg.lora_alpha / rank
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+
+class _Params:
+    """Name → array view over a flat vector (static slices: free in HLO)."""
+
+    def __init__(self, flat: jnp.ndarray, specs: list[TensorSpec]):
+        self._flat = flat
+        self._specs = {s.name: s for s in specs}
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        s = self._specs[name]
+        return self._flat[s.offset : s.offset + s.size].reshape(s.shape)
+
+
+def _ln(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale + bias
+
+
+def patchify(cfg: ModelConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """[B, H, W, C] → [B, T, patch_dim] non-overlapping patches."""
+    b = images.shape[0]
+    p, s = cfg.patch_size, cfg.image_size // cfg.patch_size
+    x = images.reshape(b, s, p, s, p, cfg.in_channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, s * s, cfg.patch_dim)
+
+
+def forward(
+    cfg: ModelConfig,
+    base_flat: jnp.ndarray,
+    images: jnp.ndarray,
+    lora: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> jnp.ndarray:
+    """ViT forward pass → logits [B, num_classes].
+
+    ``lora``: optional ``(lora_flat, adapter_cfg)``. When present, every
+    projection in the paper's alpha set goes through the fused Pallas
+    ``lora_matmul``; otherwise through the plain Pallas ``matmul``.
+    """
+    p = _Params(base_flat, base_param_specs(cfg))
+    adapters: dict[str, AdapterSpec] = {}
+    lp: _Params | None = None
+    acfg = None
+    if lora is not None:
+        lora_flat, acfg = lora
+        tensors, adapter_list = lora_param_specs(cfg)
+        lp = _Params(lora_flat, tensors)
+        adapters = {a.name: a for a in adapter_list}
+
+    b = images.shape[0]
+    t, d, h, dh = cfg.tokens, cfg.hidden_dim, cfg.num_heads, cfg.head_dim
+
+    def proj(x2d: jnp.ndarray, layer: int, module: str) -> jnp.ndarray:
+        """Dense projection through the L1 kernels (+ bias)."""
+        name = f"layer{layer}.{module}"
+        w = p[name + ".w"]
+        bias = p[name + ".b"]
+        if lp is not None and module in ADAPTED_MODULES:
+            ad = adapters[name]
+            a = lp[name + ".lora_a"]
+            bb = lp[name + ".lora_b"]
+            mask = acfg[ad.cfg_offset : ad.cfg_offset + cfg.r_max]
+            scale = acfg[ad.cfg_offset + cfg.r_max]
+            y = km.lora_matmul(x2d, w, a, bb, mask, scale)
+        else:
+            y = km.matmul(x2d, w)
+        return y + bias
+
+    x = km.matmul(patchify(cfg, images).reshape(b * t, cfg.patch_dim), p["patch_embed.w"])
+    x = x + p["patch_embed.b"]
+    x = x.reshape(b, t, d) + p["pos_embed"]
+
+    for l in range(cfg.depth):
+        pre = f"layer{l}."
+        # --- multi-head self-attention ---
+        y = _ln(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        y2 = y.reshape(b * t, d)
+        q = proj(y2, l, "query").reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = proj(y2, l, "key").reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = proj(y2, l, "value").reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b * t, d)
+        x = x + proj(o, l, "output").reshape(b, t, d)
+        # --- MLP ---
+        y = _ln(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        y2 = y.reshape(b * t, d)
+        zz = jax.nn.gelu(proj(y2, l, "dense"))
+        zz = km.matmul(zz, p["layer%d.mlp_out.w" % l]) + p["layer%d.mlp_out.b" % l]
+        x = x + zz.reshape(b, t, d)
+
+    x = _ln(x, p["ln_f.scale"], p["ln_f.bias"])
+    pooled = jnp.mean(x, axis=1)  # GAP head (Steiner et al. variant)
+    return km.matmul(pooled, p["head.w"]) + p["head.b"]

@@ -1,0 +1,93 @@
+# AOT pipeline tests: manifest schema, HLO text emission, init dump.
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, configs, model, vit
+
+CFG = configs.get("vit-micro")
+
+
+def test_manifest_schema_roundtrip():
+    m = aot.build_manifest(CFG, backend="pallas", seed=0)
+    s = json.dumps(m)
+    m2 = json.loads(s)
+    assert m2["model"] == "vit-micro"
+    assert m2["base"]["size"] == vit.base_param_count(CFG)
+    assert m2["lora"]["size"] == vit.lora_param_count(CFG)
+    assert m2["adapter_cfg_size"] == vit.adapter_cfg_size(CFG)
+    assert set(m2["artifacts"]) == set(model.ARTIFACT_BUILDERS)
+    # offsets tile the flat vectors exactly
+    for sec in ("base", "lora"):
+        off = 0
+        for t in m2[sec]["tensors"]:
+            assert t["offset"] == off
+            assert t["size"] == int(np.prod(t["shape"]))
+            off += t["size"]
+        assert off == m2[sec]["size"]
+    # adapter table consistent with tensors
+    for a in m2["adapters"]:
+        assert a["a_size"] == a["in_dim"] * CFG.r_max
+        assert a["b_size"] == CFG.r_max * a["out_dim"]
+        assert a["b_offset"] == a["a_offset"] + a["a_size"]
+
+
+def test_manifest_io_signatures_match_model_table():
+    m = aot.build_manifest(CFG, backend="pallas", seed=0)
+    for name, (ins, outs) in model.ARTIFACT_IO.items():
+        assert m["artifacts"][name]["inputs"] == ins
+        assert m["artifacts"][name]["outputs"] == outs
+        assert m["artifacts"][name]["file"] == f"{name}.hlo.txt"
+
+
+def test_hlo_text_emission_parses_back():
+    """Lowered HLO text must contain an ENTRY and parameter declarations
+    matching the artifact signature (what the Rust loader consumes)."""
+    fn = model.make_eval_full(CFG)
+    lowered = jax.jit(fn).lower(*model.example_args(CFG, "eval_full"))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "parameter(0)" in text and "parameter(2)" in text
+    n = vit.base_param_count(CFG)
+    assert f"f32[{n}]" in text  # base vector input
+    b = CFG.batch_size
+    assert f"s32[{b}]" in text  # labels input
+
+
+def test_build_model_writes_all_files(tmp_path: pathlib.Path):
+    aot.build_model(CFG, tmp_path, backend="jnp", seed=0)
+    mdir = tmp_path / CFG.name
+    for name in model.ARTIFACT_BUILDERS:
+        f = mdir / f"{name}.hlo.txt"
+        assert f.exists() and f.stat().st_size > 1000, name
+    man = json.loads((mdir / "manifest.json").read_text())
+    assert man["backend"] == "jnp"
+    init = np.fromfile(mdir / "init_base.f32", dtype=np.float32)
+    assert init.size == vit.base_param_count(CFG)
+    want = vit.init_base(CFG, seed=0)
+    np.testing.assert_array_equal(init, want)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_backends_lower_equivalent_semantics(backend):
+    """Both kernel backends must produce the same loss on the same inputs
+    (the jnp backend is the oracle; artifacts may ship either)."""
+    from compile.kernels import lora_matmul as km
+
+    rng = np.random.default_rng(0)
+    base = vit.init_base(CFG, seed=0)
+    images = rng.normal(size=(CFG.batch_size, CFG.image_size, CFG.image_size, CFG.in_channels)).astype(np.float32)
+    labels = rng.integers(0, CFG.num_classes, CFG.batch_size).astype(np.int32)
+    try:
+        km.set_backend(backend)
+        loss, correct = model.make_eval_full(CFG)(base, images, labels)
+    finally:
+        km.set_backend("pallas")
+    km.set_backend("jnp")
+    loss_ref, correct_ref = model.make_eval_full(CFG)(base, images, labels)
+    km.set_backend("pallas")
+    np.testing.assert_allclose(float(loss), float(loss_ref), rtol=1e-5)
+    assert float(correct) == float(correct_ref)

@@ -1,0 +1,116 @@
+# Gradient-path tests: the artifact entry points must agree with each other
+# and the frozen-base artifact must really drop the base backward pass.
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import configs, model, vit
+
+CFG = configs.get("vit-micro")
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    images = jnp.asarray(
+        rng.normal(size=(CFG.batch_size, CFG.image_size, CFG.image_size, CFG.in_channels)).astype(
+            np.float32
+        )
+    )
+    labels = jnp.asarray(rng.integers(0, CFG.num_classes, CFG.batch_size).astype(np.int32))
+    return images, labels
+
+
+def _state(seed=0):
+    base = jnp.asarray(vit.init_base(CFG, seed=seed))
+    lora = jnp.asarray(vit.init_lora(CFG, seed=seed + 1))
+    acfg = jnp.asarray(vit.uniform_adapter_cfg(CFG, rank=2))
+    return base, lora, acfg
+
+
+def test_full_grads_shapes_and_nonzero():
+    base = jnp.asarray(vit.init_base(CFG, seed=0))
+    images, labels = _batch()
+    d_base, loss, correct = model.make_full_grads(CFG)(base, images, labels)
+    assert d_base.shape == base.shape
+    assert float(jnp.abs(d_base).max()) > 0
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= CFG.batch_size
+    # initial loss ~ log(num_classes): head starts at zero
+    assert abs(float(loss) - np.log(CFG.num_classes)) < 0.2
+
+
+def test_lora_grads_agree_with_warmup_lora_part():
+    """d_lora from the frozen-base artifact must equal the lora part of the
+    joint warmup artifact (same loss, same point)."""
+    base, lora, acfg = _state()
+    images, labels = _batch(1)
+    d_base_w, d_lora_w, loss_w, _ = model.make_warmup_grads(CFG)(
+        base, lora, acfg, images, labels
+    )
+    d_lora, loss_l, _ = model.make_lora_grads(CFG)(base, lora, acfg, images, labels)
+    np.testing.assert_allclose(loss_w, loss_l, rtol=1e-6)
+    np.testing.assert_allclose(d_lora, d_lora_w, rtol=5e-4, atol=1e-6)
+    assert float(jnp.abs(d_base_w).max()) > 0
+
+
+def test_warmup_base_grads_agree_with_full_when_lora_inert():
+    """With B = 0 and fresh adapters the joint warmup base-gradient must
+    equal the pure full-model gradient (forward functions coincide)."""
+    base, lora, acfg = _state(3)
+    images, labels = _batch(3)
+    d_base_full, loss_f, _ = model.make_full_grads(CFG)(base, images, labels)
+    d_base_w, _, loss_w, _ = model.make_warmup_grads(CFG)(base, lora, acfg, images, labels)
+    np.testing.assert_allclose(loss_f, loss_w, rtol=1e-6)
+    np.testing.assert_allclose(d_base_full, d_base_w, rtol=5e-4, atol=5e-6)
+
+
+def test_eval_matches_train_loss():
+    base, lora, acfg = _state(5)
+    images, labels = _batch(5)
+    _, loss_g, corr_g = model.make_full_grads(CFG)(base, images, labels)
+    loss_e, corr_e = model.make_eval_full(CFG)(base, images, labels)
+    np.testing.assert_allclose(loss_g, loss_e, rtol=1e-6)
+    assert float(corr_g) == float(corr_e)
+    _, loss_lg, _ = model.make_lora_grads(CFG)(base, lora, acfg, images, labels)
+    loss_le, _ = model.make_eval_lora(CFG)(base, lora, acfg, images, labels)
+    np.testing.assert_allclose(loss_lg, loss_le, rtol=1e-6)
+
+
+def test_frozen_base_backward_is_dce_d():
+    """The lora_grads HLO must be materially smaller than warmup_grads: the
+    base backward pass (dW kernels, attention bwd wrt weights) is dead code
+    once the base is stop_gradient'ed. This is the compile-time witness of
+    the paper's post-switch speedup."""
+    from compile.aot import to_hlo_text
+
+    lw = jax.jit(model.make_warmup_grads(CFG)).lower(*model.example_args(CFG, "warmup_grads"))
+    ll = jax.jit(model.make_lora_grads(CFG)).lower(*model.example_args(CFG, "lora_grads"))
+    warm = to_hlo_text(lw)
+    lora = to_hlo_text(ll)
+    assert len(lora) < 0.85 * len(warm), (len(lora), len(warm))
+
+
+def test_rank_mask_restricts_capacity_in_model():
+    """Increasing the masked rank changes the lora gradient support.
+
+    Note B must be non-zero here: with the standard B=0 init, dA = x^T (dy
+    B^T) = 0 exactly, so a fresh adapter would vacuously pass. The head must
+    also be non-zero: the zero-init head makes every trunk gradient vanish
+    at initialization (d pooled = head.w @ d logits = 0)."""
+    base, _, _ = _state(7)
+    rng = np.random.default_rng(7)
+    head = {s.name: s for s in vit.base_param_specs(CFG)}["head.w"]
+    base = base.at[head.offset : head.offset + head.size].set(
+        jnp.asarray(rng.normal(0, 0.05, head.size).astype(np.float32))
+    )
+    lora = jnp.asarray(rng.normal(0, 0.02, vit.lora_param_count(CFG)).astype(np.float32))
+    images, labels = _batch(7)
+    tensors, adapters = vit.lora_param_specs(CFG)
+    for rank in (1, CFG.r_max):
+        acfg = jnp.asarray(vit.uniform_adapter_cfg(CFG, rank=rank))
+        d_lora, _, _ = model.make_lora_grads(CFG)(base, lora, acfg, images, labels)
+        d = np.asarray(d_lora)
+        ad = adapters[0]
+        da = d[ad.a_offset : ad.a_offset + ad.in_dim * CFG.r_max].reshape(ad.in_dim, CFG.r_max)
+        assert np.any(da[:, :rank] != 0)
+        assert np.all(da[:, rank:] == 0)

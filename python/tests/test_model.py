@@ -1,0 +1,147 @@
+# L2 model structure tests: spec tables, manifest invariants, forward shapes.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, vit
+from compile.configs import ADAPTED_MODULES
+
+MICRO = configs.get("vit-micro")
+
+
+def test_model_zoo_sane():
+    for cfg in configs.MODELS.values():
+        assert cfg.hidden_dim % cfg.num_heads == 0
+        assert cfg.image_size % cfg.patch_size == 0
+        assert cfg.r_min <= cfg.r_max
+        assert all(b & (b - 1) == 0 for b in cfg.rank_buckets)  # powers of two
+        assert cfg.rank_buckets[0] == cfg.r_min and cfg.rank_buckets[-1] == cfg.r_max
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        configs.get("vit-huge")
+
+
+@pytest.mark.parametrize("name", sorted(configs.MODELS))
+def test_base_specs_contiguous(name):
+    cfg = configs.get(name)
+    specs = vit.base_param_specs(cfg)
+    off = 0
+    for s in specs:
+        assert s.offset == off, s.name
+        off += s.size
+    assert off == vit.base_param_count(cfg)
+
+
+@pytest.mark.parametrize("name", sorted(configs.MODELS))
+def test_lora_specs_contiguous_and_adapters_cover_alpha(name):
+    cfg = configs.get(name)
+    tensors, adapters = vit.lora_param_specs(cfg)
+    off = 0
+    for s in tensors:
+        assert s.offset == off, s.name
+        off += s.size
+    assert off == vit.lora_param_count(cfg)
+    # exactly depth * |alpha| adapters, every module of the paper's set per layer
+    assert len(adapters) == cfg.depth * len(ADAPTED_MODULES)
+    for l in range(cfg.depth):
+        mods = [a.module for a in adapters if a.layer == l]
+        assert mods == list(ADAPTED_MODULES)
+    # cfg offsets stride r_max + 1
+    for i, a in enumerate(adapters):
+        assert a.cfg_offset == i * (cfg.r_max + 1)
+
+
+def test_trainable_fraction_near_paper_claim():
+    """Paper: 300M -> ~30M trainable (~10%). Our scaled models should land
+    in the same ballpark at the mid rank bucket."""
+    for name in ("vit-small", "vit-base-sim"):
+        cfg = configs.get(name)
+        _, adapters = vit.lora_param_specs(cfg)
+        mid_rank = cfg.rank_buckets[len(cfg.rank_buckets) // 2]
+        trainable = sum(mid_rank * (a.in_dim + a.out_dim) for a in adapters)
+        frac = trainable / vit.base_param_count(cfg)
+        assert 0.02 < frac < 0.30, (name, frac)
+
+
+def test_init_base_deterministic_and_structured():
+    f1 = vit.init_base(MICRO, seed=3)
+    f2 = vit.init_base(MICRO, seed=3)
+    f3 = vit.init_base(MICRO, seed=4)
+    assert np.array_equal(f1, f2)
+    assert not np.array_equal(f1, f3)
+    specs = {s.name: s for s in vit.base_param_specs(MICRO)}
+    ln = specs["layer0.ln1.scale"]
+    assert np.all(f1[ln.offset : ln.offset + ln.size] == 1.0)
+    head = specs["head.w"]
+    assert np.all(f1[head.offset : head.offset + head.size] == 0.0)
+
+
+def test_init_lora_b_zero_a_nonzero():
+    flat = vit.init_lora(MICRO, seed=0)
+    tensors, _ = vit.lora_param_specs(MICRO)
+    for s in tensors:
+        chunk = flat[s.offset : s.offset + s.size]
+        if s.module == "lora_b":
+            assert np.all(chunk == 0.0), s.name
+        else:
+            assert np.any(chunk != 0.0), s.name
+
+
+def test_patchify_reassembles_pixels():
+    cfg = MICRO
+    img = np.arange(
+        cfg.image_size * cfg.image_size * cfg.in_channels, dtype=np.float32
+    ).reshape(1, cfg.image_size, cfg.image_size, cfg.in_channels)
+    patches = np.asarray(vit.patchify(cfg, jnp.asarray(img)))
+    assert patches.shape == (1, cfg.tokens, cfg.patch_dim)
+    # first patch == top-left p x p block
+    p = cfg.patch_size
+    want = img[0, :p, :p, :].reshape(-1)
+    np.testing.assert_array_equal(patches[0, 0], want)
+
+
+def test_forward_shapes_and_finite():
+    cfg = MICRO
+    base = jnp.asarray(vit.init_base(cfg, seed=0))
+    rng = np.random.default_rng(0)
+    images = jnp.asarray(
+        rng.normal(size=(cfg.batch_size, cfg.image_size, cfg.image_size, cfg.in_channels)).astype(
+            np.float32
+        )
+    )
+    logits = vit.forward(cfg, base, images)
+    assert logits.shape == (cfg.batch_size, cfg.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_lora_b_zero_matches_base():
+    """Freshly initialized adapters (B = 0) must not change the function —
+    the invariant that makes the warmup switch loss-continuous."""
+    cfg = MICRO
+    base = jnp.asarray(vit.init_base(cfg, seed=1))
+    lora = jnp.asarray(vit.init_lora(cfg, seed=2))
+    acfg = jnp.asarray(vit.uniform_adapter_cfg(cfg, rank=2))
+    rng = np.random.default_rng(1)
+    images = jnp.asarray(
+        rng.normal(size=(cfg.batch_size, cfg.image_size, cfg.image_size, cfg.in_channels)).astype(
+            np.float32
+        )
+    )
+    y0 = vit.forward(cfg, base, images)
+    y1 = vit.forward(cfg, base, images, lora=(lora, acfg))
+    np.testing.assert_allclose(y0, y1, rtol=1e-5, atol=1e-5)
+
+
+def test_uniform_adapter_cfg_layout():
+    cfg = MICRO
+    acfg = vit.uniform_adapter_cfg(cfg, rank=2)
+    _, adapters = vit.lora_param_specs(cfg)
+    per = cfg.r_max + 1
+    assert acfg.size == len(adapters) * per
+    first = acfg[:per]
+    np.testing.assert_array_equal(first[:2], [1.0, 1.0])
+    np.testing.assert_array_equal(first[2 : cfg.r_max], 0.0)
+    assert first[cfg.r_max] == cfg.lora_alpha / 2

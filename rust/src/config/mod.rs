@@ -1,0 +1,251 @@
+//! Configuration system: TOML-subset-loadable (see `util::tomlish`),
+//! validated, with the paper's experimental presets (Table 1 thresholds,
+//! warmup sweeps) built in. Unknown keys are hard errors.
+
+mod prelora;
+mod train;
+
+pub use prelora::{ConvergenceStrategyKind, PreLoraConfig, StrictnessPreset};
+pub use train::{DataConfig, DpConfig, LrScheduleKind, OptimizerKind, TrainConfig};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tomlish::{self, escape_str, Value};
+
+/// Top-level run configuration (one TOML file or built programmatically).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model name — must match an `artifacts/<model>/` directory.
+    pub model: String,
+    /// Root of the AOT artifacts tree.
+    pub artifacts_dir: String,
+    /// Where CSV/JSONL series are written.
+    pub results_dir: String,
+    /// Run label used in output file names.
+    pub run_name: String,
+    pub seed: u64,
+    pub train: TrainConfig,
+    pub prelora: PreLoraConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "vit-small".into(),
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+            run_name: "run".into(),
+            seed: 0,
+            train: TrainConfig::default(),
+            prelora: PreLoraConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from the TOML subset; every key must be known.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let map = tomlish::parse(text)?;
+        let mut cfg = RunConfig::default();
+        for (path, value) in &map {
+            cfg.set(path, value).with_context(|| format!("config key {path}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn set(&mut self, path: &str, v: &Value) -> Result<()> {
+        let t = &mut self.train;
+        let p = &mut self.prelora;
+        match path {
+            "model" => self.model = v.as_str()?.to_string(),
+            "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
+            "results_dir" => self.results_dir = v.as_str()?.to_string(),
+            "run_name" => self.run_name = v.as_str()?.to_string(),
+            "seed" => self.seed = v.as_u64()?,
+            "train.epochs" => t.epochs = v.as_usize()?,
+            "train.optimizer" => t.optimizer = v.as_str()?.parse()?,
+            "train.lr_schedule" => t.lr_schedule = v.as_str()?.parse()?,
+            "train.lr" => t.lr = v.as_f64()?,
+            "train.lr_warmup_frac" => t.lr_warmup_frac = v.as_f64()?,
+            "train.min_lr" => t.min_lr = v.as_f64()?,
+            "train.weight_decay" => t.weight_decay = v.as_f64()?,
+            "train.beta1" => t.beta1 = v.as_f64()?,
+            "train.beta2" => t.beta2 = v.as_f64()?,
+            "train.eps" => t.eps = v.as_f64()?,
+            "train.grad_clip" => t.grad_clip = v.as_f64()?,
+            "train.eval_every" => t.eval_every = v.as_usize()?,
+            "train.checkpoint_every" => t.checkpoint_every = v.as_usize()?,
+            "train.data.train_samples" => t.data.train_samples = v.as_usize()?,
+            "train.data.val_samples" => t.data.val_samples = v.as_usize()?,
+            "train.data.noise" => t.data.noise = v.as_f32()?,
+            "train.data.phase_jitter" => t.data.phase_jitter = v.as_bool()?,
+            "train.data.fresh_per_epoch" => t.data.fresh_per_epoch = v.as_bool()?,
+            "train.dp.workers" => t.dp.workers = v.as_usize()?,
+            "train.dp.allreduce" => t.dp.allreduce = v.as_str()?.to_string(),
+            "train.dp.threaded" => t.dp.threaded = v.as_bool()?,
+            "prelora.enabled" => p.enabled = v.as_bool()?,
+            "prelora.windows" => p.windows = v.as_usize()?,
+            "prelora.window_epochs" => p.window_epochs = v.as_usize()?,
+            "prelora.tau" => p.tau = v.as_f64()?,
+            "prelora.zeta" => p.zeta = v.as_f64()?,
+            "prelora.warmup_epochs" => p.warmup_epochs = v.as_usize()?,
+            "prelora.r_min" => p.r_min = Some(v.as_usize()?),
+            "prelora.r_max" => p.r_max = Some(v.as_usize()?),
+            "prelora.dynamic_ranks" => p.dynamic_ranks = v.as_bool()?,
+            "prelora.uniform_rank" => p.uniform_rank = v.as_usize()?,
+            "prelora.strategy" => p.strategy = v.as_str()?.parse()?,
+            "prelora.ttest_alpha" => p.ttest_alpha = v.as_f64()?,
+            "prelora.min_epochs_before_switch" => p.min_epochs_before_switch = v.as_usize()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Serialize to the same TOML subset (round-trips through
+    /// `from_toml_str`).
+    pub fn to_toml(&self) -> String {
+        let t = &self.train;
+        let p = &self.prelora;
+        let mut s = String::new();
+        s.push_str(&format!("model = {}\n", escape_str(&self.model)));
+        s.push_str(&format!("artifacts_dir = {}\n", escape_str(&self.artifacts_dir)));
+        s.push_str(&format!("results_dir = {}\n", escape_str(&self.results_dir)));
+        s.push_str(&format!("run_name = {}\n", escape_str(&self.run_name)));
+        s.push_str(&format!("seed = {}\n\n", self.seed));
+        s.push_str("[train]\n");
+        s.push_str(&format!("epochs = {}\n", t.epochs));
+        s.push_str(&format!("optimizer = {}\n", escape_str(t.optimizer.as_str())));
+        s.push_str(&format!("lr_schedule = {}\n", escape_str(t.lr_schedule.as_str())));
+        s.push_str(&format!("lr = {:e}\n", t.lr));
+        s.push_str(&format!("lr_warmup_frac = {}\n", fmt_f64(t.lr_warmup_frac)));
+        s.push_str(&format!("min_lr = {:e}\n", t.min_lr));
+        s.push_str(&format!("weight_decay = {}\n", fmt_f64(t.weight_decay)));
+        s.push_str(&format!("beta1 = {}\n", fmt_f64(t.beta1)));
+        s.push_str(&format!("beta2 = {}\n", fmt_f64(t.beta2)));
+        s.push_str(&format!("eps = {:e}\n", t.eps));
+        s.push_str(&format!("grad_clip = {}\n", fmt_f64(t.grad_clip)));
+        s.push_str(&format!("eval_every = {}\n", t.eval_every));
+        s.push_str(&format!("checkpoint_every = {}\n\n", t.checkpoint_every));
+        s.push_str("[train.data]\n");
+        s.push_str(&format!("train_samples = {}\n", t.data.train_samples));
+        s.push_str(&format!("val_samples = {}\n", t.data.val_samples));
+        s.push_str(&format!("noise = {}\n", fmt_f64(t.data.noise as f64)));
+        s.push_str(&format!("phase_jitter = {}\n", t.data.phase_jitter));
+        s.push_str(&format!("fresh_per_epoch = {}\n\n", t.data.fresh_per_epoch));
+        s.push_str("[train.dp]\n");
+        s.push_str(&format!("workers = {}\n", t.dp.workers));
+        s.push_str(&format!("allreduce = {}\n", escape_str(&t.dp.allreduce)));
+        s.push_str(&format!("threaded = {}\n\n", t.dp.threaded));
+        s.push_str("[prelora]\n");
+        s.push_str(&format!("enabled = {}\n", p.enabled));
+        s.push_str(&format!("windows = {}\n", p.windows));
+        s.push_str(&format!("window_epochs = {}\n", p.window_epochs));
+        s.push_str(&format!("tau = {}\n", fmt_f64(p.tau)));
+        s.push_str(&format!("zeta = {}\n", fmt_f64(p.zeta)));
+        s.push_str(&format!("warmup_epochs = {}\n", p.warmup_epochs));
+        if let Some(r) = p.r_min {
+            s.push_str(&format!("r_min = {r}\n"));
+        }
+        if let Some(r) = p.r_max {
+            s.push_str(&format!("r_max = {r}\n"));
+        }
+        s.push_str(&format!("dynamic_ranks = {}\n", p.dynamic_ranks));
+        s.push_str(&format!("uniform_rank = {}\n", p.uniform_rank));
+        s.push_str(&format!("strategy = {}\n", escape_str(p.strategy.as_str())));
+        s.push_str(&format!("ttest_alpha = {}\n", fmt_f64(p.ttest_alpha)));
+        s.push_str(&format!(
+            "min_epochs_before_switch = {}\n",
+            p.min_epochs_before_switch
+        ));
+        s
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.train.validate()?;
+        self.prelora.validate()?;
+        Ok(())
+    }
+
+    /// Directory holding this run's model artifacts.
+    pub fn model_dir(&self) -> std::path::PathBuf {
+        Path::new(&self.artifacts_dir).join(&self.model)
+    }
+}
+
+/// Format a float so the tomlish parser reads it back as Float (or Int
+/// where exact — both re-parse to the same f64).
+fn fmt_f64(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}.0", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.model = "vit-micro".into();
+        cfg.prelora.r_min = Some(2);
+        cfg.prelora.r_max = Some(8);
+        cfg.train.dp.workers = 4;
+        let text = cfg.to_toml();
+        let back = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.prelora.tau, cfg.prelora.tau);
+        assert_eq!(back.prelora.r_min, Some(2));
+        assert_eq!(back.train.epochs, cfg.train.epochs);
+        assert_eq!(back.train.dp.workers, 4);
+        assert_eq!(back.train.lr, cfg.train.lr);
+    }
+
+    #[test]
+    fn rejects_unknown_fields() {
+        let bad = "model = \"vit-small\"\nnot_a_field = 3\n";
+        let err = RunConfig::from_toml_str(bad).unwrap_err().to_string();
+        assert!(err.contains("not_a_field"), "{err}");
+    }
+
+    #[test]
+    fn partial_toml_fills_defaults() {
+        let cfg = RunConfig::from_toml_str("model = \"vit-micro\"").unwrap();
+        assert_eq!(cfg.model, "vit-micro");
+        assert_eq!(cfg.train.epochs, TrainConfig::default().epochs);
+    }
+
+    #[test]
+    fn enum_keys_parse() {
+        let cfg = RunConfig::from_toml_str(
+            "[train]\noptimizer = \"sgd\"\nlr_schedule = \"constant\"\n[prelora]\nstrategy = \"welch_ttest\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.optimizer, OptimizerKind::Sgd);
+        assert_eq!(cfg.train.lr_schedule, LrScheduleKind::Constant);
+        assert_eq!(cfg.prelora.strategy, ConvergenceStrategyKind::WelchTTest);
+        assert!(RunConfig::from_toml_str("[train]\noptimizer = \"adagrad\"").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected_at_validate() {
+        assert!(RunConfig::from_toml_str("[train]\nepochs = 0").is_err());
+        assert!(RunConfig::from_toml_str("[prelora]\nwindows = 1").is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! PreLoRA hyper-parameters: the paper's (k, m, tau, zeta, w, r_min, r_max)
+//! plus the Table 1 strictness presets and the convergence-strategy ablation.
+
+use anyhow::{bail, ensure, Result};
+
+/// Which partial-convergence detector drives the switch (ablation:
+/// the paper's Algorithm 1 vs the dual-loss Welch t-test of Dahal et al.
+/// that the related-work section argues against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvergenceStrategyKind {
+    /// Algorithm 1: windowed weight-norm + loss percentage thresholds.
+    WindowedThreshold,
+    /// Welch t-test on consecutive loss windows (HPT-style baseline).
+    WelchTTest,
+}
+
+impl ConvergenceStrategyKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ConvergenceStrategyKind::WindowedThreshold => "windowed_threshold",
+            ConvergenceStrategyKind::WelchTTest => "welch_ttest",
+        }
+    }
+}
+
+impl std::str::FromStr for ConvergenceStrategyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "windowed_threshold" => Ok(ConvergenceStrategyKind::WindowedThreshold),
+            "welch_ttest" => Ok(ConvergenceStrategyKind::WelchTTest),
+            other => bail!("unknown convergence strategy {other:?}"),
+        }
+    }
+}
+
+/// Table 1 presets: strictness of the partial convergence test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrictnessPreset {
+    /// tau = 1.00%, zeta = 5.00% — relaxed, earliest switch (~40% speedup).
+    Exp1,
+    /// tau = 0.50%, zeta = 2.50% — the paper's default for the w sweep.
+    Exp2,
+    /// tau = 0.25%, zeta = 1.00% — strict, latest switch (~28% speedup).
+    Exp3,
+}
+
+impl StrictnessPreset {
+    pub fn thresholds(self) -> (f64, f64) {
+        match self {
+            StrictnessPreset::Exp1 => (1.00, 5.00),
+            StrictnessPreset::Exp2 => (0.50, 2.50),
+            StrictnessPreset::Exp3 => (0.25, 1.00),
+        }
+    }
+
+    pub fn all() -> [StrictnessPreset; 3] {
+        [StrictnessPreset::Exp1, StrictnessPreset::Exp2, StrictnessPreset::Exp3]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PreLoraConfig {
+    /// Master switch: `false` trains the full baseline end-to-end.
+    pub enabled: bool,
+    /// Number of consecutive windows k in Algorithm 1 (paper: 3).
+    pub windows: usize,
+    /// Window size m in epochs (paper: 3).
+    pub window_epochs: usize,
+    /// Weight-norm threshold tau, percent (Table 1).
+    pub tau: f64,
+    /// Loss threshold zeta, percent (Table 1).
+    pub zeta: f64,
+    /// Warmup epochs w: base + LoRA train jointly before the base freezes
+    /// (paper sweeps 5/10/15; 10 found best).
+    pub warmup_epochs: usize,
+    /// Rank bucket bounds (powers of two, inclusive). `None` defers to the
+    /// model's manifest defaults.
+    pub r_min: Option<usize>,
+    pub r_max: Option<usize>,
+    /// Use Algorithm 2's dynamic per-layer ranks; `false` = uniform-rank
+    /// ablation at `uniform_rank`.
+    pub dynamic_ranks: bool,
+    /// Rank used when `dynamic_ranks = false`.
+    pub uniform_rank: usize,
+    pub strategy: ConvergenceStrategyKind,
+    /// Significance level for the Welch t-test strategy.
+    pub ttest_alpha: f64,
+    /// Don't test for convergence before this many epochs (guards the
+    /// highly non-stationary early phase, cf. paper's local-minima remark).
+    pub min_epochs_before_switch: usize,
+}
+
+impl Default for PreLoraConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            windows: 3,
+            window_epochs: 3,
+            tau: 0.50,
+            zeta: 2.50,
+            warmup_epochs: 10,
+            r_min: None,
+            r_max: None,
+            dynamic_ranks: true,
+            uniform_rank: 8,
+            strategy: ConvergenceStrategyKind::WindowedThreshold,
+            ttest_alpha: 0.05,
+            min_epochs_before_switch: 0,
+        }
+    }
+}
+
+impl PreLoraConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.windows >= 2, "need k >= 2 windows to compare");
+        ensure!(self.window_epochs >= 1, "window size m must be >= 1");
+        ensure!(self.tau > 0.0 && self.zeta > 0.0, "thresholds must be positive");
+        ensure!(self.uniform_rank >= 1, "uniform rank must be >= 1");
+        ensure!(
+            (0.0..1.0).contains(&self.ttest_alpha) && self.ttest_alpha > 0.0,
+            "ttest alpha in (0, 1)"
+        );
+        if let (Some(lo), Some(hi)) = (self.r_min, self.r_max) {
+            ensure!(lo <= hi, "r_min <= r_max");
+            ensure!(lo.is_power_of_two() && hi.is_power_of_two(), "ranks are powers of two");
+        }
+        Ok(())
+    }
+
+    /// Apply a Table 1 preset.
+    pub fn with_preset(mut self, p: StrictnessPreset) -> Self {
+        let (tau, zeta) = p.thresholds();
+        self.tau = tau;
+        self.zeta = zeta;
+        self
+    }
+
+    /// Epochs of history the convergence test needs (k windows of m).
+    pub fn history_epochs(&self) -> usize {
+        self.windows * self.window_epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table1() {
+        assert_eq!(StrictnessPreset::Exp1.thresholds(), (1.00, 5.00));
+        assert_eq!(StrictnessPreset::Exp2.thresholds(), (0.50, 2.50));
+        assert_eq!(StrictnessPreset::Exp3.thresholds(), (0.25, 1.00));
+    }
+
+    #[test]
+    fn preset_application() {
+        let cfg = PreLoraConfig::default().with_preset(StrictnessPreset::Exp3);
+        assert_eq!((cfg.tau, cfg.zeta), (0.25, 1.00));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = PreLoraConfig::default();
+        cfg.windows = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PreLoraConfig::default();
+        cfg.tau = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PreLoraConfig::default();
+        cfg.r_min = Some(3);
+        cfg.r_max = Some(8);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn history_epochs_is_k_times_m() {
+        let cfg = PreLoraConfig::default();
+        assert_eq!(cfg.history_epochs(), 9);
+    }
+}

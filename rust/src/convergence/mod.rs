@@ -1,0 +1,45 @@
+//! Partial-convergence detection: when is it safe to switch to LoRA?
+//!
+//! [`WindowedThreshold`] is the paper's Algorithm 1. [`WelchTTest`] is the
+//! dual-loss t-test strategy of Dahal et al. (HPT) that the related-work
+//! section argues is heavier than necessary — implemented here as the
+//! comparison baseline for the strategy ablation bench.
+
+mod ttest;
+mod windowed;
+
+pub use ttest::WelchTTest;
+pub use windowed::{ConvergenceReport, WindowedThreshold};
+
+use crate::config::{ConvergenceStrategyKind, PreLoraConfig};
+use crate::telemetry::NormHistory;
+
+/// A convergence detector consulted at window boundaries.
+pub trait ConvergenceStrategy {
+    /// Inspect the history up to (and excluding) epoch `end`; return a
+    /// report whose `converged` flag triggers the phase switch.
+    fn check(&self, history: &NormHistory, end: usize) -> ConvergenceReport;
+
+    /// Epochs of history required before `check` is meaningful.
+    fn required_epochs(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build the configured strategy over the paper's target module set.
+pub fn build(cfg: &PreLoraConfig, modules: Vec<String>) -> Box<dyn ConvergenceStrategy + Send> {
+    match cfg.strategy {
+        ConvergenceStrategyKind::WindowedThreshold => Box::new(WindowedThreshold::new(
+            cfg.windows,
+            cfg.window_epochs,
+            cfg.tau,
+            cfg.zeta,
+            modules,
+        )),
+        ConvergenceStrategyKind::WelchTTest => Box::new(WelchTTest::new(
+            cfg.windows,
+            cfg.window_epochs,
+            cfg.ttest_alpha,
+        )),
+    }
+}

@@ -1,0 +1,218 @@
+//! Welch t-test convergence baseline (Dahal et al., HPT).
+//!
+//! HPT runs the full model and a LoRA copy in parallel and t-tests their
+//! losses; the paper's related-work section criticizes the dual-model
+//! memory cost. We implement the statistical core as a *single-model*
+//! variant — Welch's t-test between the losses of two consecutive epoch
+//! windows; "converged" when the windows are statistically
+//! indistinguishable (p >= alpha). Used by the strategy ablation bench to
+//! quantify how the paper's thresholded test compares.
+
+use super::{ConvergenceStrategy, windowed::ConvergenceReport};
+use crate::telemetry::NormHistory;
+
+pub struct WelchTTest {
+    k: usize,
+    m: usize,
+    alpha: f64,
+}
+
+impl WelchTTest {
+    pub fn new(k: usize, m: usize, alpha: f64) -> Self {
+        assert!(k >= 2 && m >= 2, "t-test needs windows of >= 2 samples");
+        Self { k, m, alpha }
+    }
+}
+
+fn mean_var(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var)
+}
+
+/// Two-sided Welch t-test p-value.
+pub fn welch_p_value(a: &[f64], b: &[f64]) -> f64 {
+    let (ma, va) = mean_var(a);
+    let (mb, vb) = mean_var(b);
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let se2 = va / na + vb / nb;
+    if se2 <= 0.0 {
+        // identical constant windows: indistinguishable
+        return if (ma - mb).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    let t = (ma - mb) / se2.sqrt();
+    // Welch-Satterthwaite degrees of freedom
+    let df = se2 * se2
+        / ((va / na) * (va / na) / (na - 1.0) + (vb / nb) * (vb / nb) / (nb - 1.0));
+    2.0 * (1.0 - student_t_cdf(t.abs(), df))
+}
+
+/// Student-t CDF via the regularized incomplete beta function.
+fn student_t_cdf(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    1.0 - 0.5 * inc_beta(df / 2.0, 0.5, x)
+}
+
+/// Regularized incomplete beta I_x(a, b) by continued fraction (Lentz).
+fn inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_beta = ln_gamma(a) + ln_gamma(b) - ln_gamma(a + b);
+    let front = (a * x.ln() + b * (1.0 - x).ln() - ln_beta).exp();
+    // symmetry for faster convergence
+    if x > (a + 1.0) / (a + b + 2.0) {
+        return 1.0 - inc_beta(b, a, 1.0 - x);
+    }
+    let mut f = 1.0f64;
+    let mut c = 1.0f64;
+    let mut d = 0.0f64;
+    for i in 0..200 {
+        let m = i / 2;
+        let numerator = if i == 0 {
+            1.0
+        } else if i % 2 == 0 {
+            (m as f64) * (b - m as f64) * x / ((a + 2.0 * m as f64 - 1.0) * (a + 2.0 * m as f64))
+        } else {
+            -((a + m as f64) * (a + b + m as f64) * x)
+                / ((a + 2.0 * m as f64) * (a + 2.0 * m as f64 + 1.0))
+        };
+        d = 1.0 + numerator * d;
+        if d.abs() < 1e-30 {
+            d = 1e-30;
+        }
+        d = 1.0 / d;
+        c = 1.0 + numerator / c;
+        if c.abs() < 1e-30 {
+            c = 1e-30;
+        }
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-12 {
+            break;
+        }
+    }
+    front * (f - 1.0) / a
+}
+
+/// Lanczos log-gamma.
+fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = G[0];
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        acc += g / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+impl ConvergenceStrategy for WelchTTest {
+    fn check(&self, history: &NormHistory, end: usize) -> ConvergenceReport {
+        if end < self.required_epochs() || history.epochs() < end {
+            return ConvergenceReport::not_enough_history();
+        }
+        // compare every adjacent window pair among the last k windows
+        let mut min_p = 1.0f64;
+        let losses = history.losses();
+        for t in 1..self.k {
+            let b_end = end - (self.k - 1 - t) * self.m;
+            let a_end = b_end - self.m;
+            let a = &losses[a_end - self.m..a_end];
+            let b = &losses[b_end - self.m..b_end];
+            min_p = min_p.min(welch_p_value(a, b));
+        }
+        let converged = min_p >= self.alpha;
+        ConvergenceReport {
+            converged,
+            max_weight_delta: 0.0,
+            max_loss_delta: min_p, // repurposed: the minimum p-value
+            fail_reason: if converged {
+                None
+            } else {
+                Some(format!("welch p={min_p:.4} < alpha={:.3}", self.alpha))
+            },
+        }
+    }
+
+    fn required_epochs(&self) -> usize {
+        self.k * self.m
+    }
+
+    fn name(&self) -> &'static str {
+        "welch_ttest"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::NormSnapshot;
+    use std::collections::BTreeMap;
+
+    fn history(losses: &[f64]) -> NormHistory {
+        let mut h = NormHistory::new();
+        for (e, &l) in losses.iter().enumerate() {
+            let mut by_module = BTreeMap::new();
+            by_module.insert("query".into(), vec![1.0]);
+            h.push(NormSnapshot { epoch: e, by_module }, l);
+        }
+        h
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - (24.0f64).ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p_value_high_for_same_distribution() {
+        let a = [2.01, 1.99, 2.0, 2.02, 1.98];
+        let b = [2.0, 2.01, 1.99, 2.0, 2.02];
+        assert!(welch_p_value(&a, &b) > 0.3);
+    }
+
+    #[test]
+    fn p_value_low_for_shifted_means() {
+        let a = [3.0, 3.02, 2.98, 3.01, 2.99];
+        let b = [2.0, 2.01, 1.99, 2.02, 1.98];
+        assert!(welch_p_value(&a, &b) < 0.001);
+    }
+
+    #[test]
+    fn converges_on_plateaued_loss() {
+        let mut losses = vec![4.0, 3.6, 3.2, 2.9, 2.7, 2.55];
+        losses.extend([2.0, 2.02, 1.98, 2.01, 1.99, 2.0, 2.01, 1.99, 2.0]);
+        let s = WelchTTest::new(3, 3, 0.05);
+        let r = s.check(&history(&losses), losses.len());
+        assert!(r.converged, "{:?}", r.fail_reason);
+    }
+
+    #[test]
+    fn keeps_training_on_steep_loss() {
+        let losses: Vec<f64> = (0..12).map(|i| 4.0 - 0.25 * i as f64).collect();
+        let s = WelchTTest::new(3, 3, 0.05);
+        let r = s.check(&history(&losses), losses.len());
+        assert!(!r.converged);
+    }
+}

@@ -1,0 +1,218 @@
+//! Algorithm 1: the partial convergence test.
+//!
+//! For k consecutive windows of m epochs, the test passes iff for every
+//! target module `a` and every adjacent window pair (t-1, t):
+//!
+//! ```text
+//! |DeltaW_t^a| = |(W_t^a - W_{t-1}^a) / W_{t-1}^a| * 100  <= tau
+//! |DeltaL_t|   = |(L_t - L_{t-1}) / L_{t-1}| * 100        <= zeta
+//! ```
+//!
+//! where W_t^a is the module's weight norm averaged across layers and the
+//! window's epochs, and L_t the window-mean training loss. Increasing
+//! (k, m) and decreasing (tau, zeta) makes the criterion stricter
+//! (Table 1's Exp1..Exp3).
+
+use super::ConvergenceStrategy;
+use crate::telemetry::NormHistory;
+
+/// Outcome of one convergence check, with the evidence that produced it
+/// (logged by the controller and surfaced in run summaries).
+#[derive(Debug, Clone)]
+pub struct ConvergenceReport {
+    pub converged: bool,
+    /// Largest |DeltaW| seen across modules/windows (percent).
+    pub max_weight_delta: f64,
+    /// Largest |DeltaL| seen across windows (percent).
+    pub max_loss_delta: f64,
+    /// Human-readable reason for the first failure, if any.
+    pub fail_reason: Option<String>,
+}
+
+impl ConvergenceReport {
+    pub fn not_enough_history() -> Self {
+        Self {
+            converged: false,
+            max_weight_delta: f64::NAN,
+            max_loss_delta: f64::NAN,
+            fail_reason: Some("insufficient history".into()),
+        }
+    }
+}
+
+pub struct WindowedThreshold {
+    k: usize,
+    m: usize,
+    tau: f64,
+    zeta: f64,
+    modules: Vec<String>,
+}
+
+impl WindowedThreshold {
+    pub fn new(k: usize, m: usize, tau: f64, zeta: f64, modules: Vec<String>) -> Self {
+        assert!(k >= 2 && m >= 1);
+        Self { k, m, tau, zeta, modules }
+    }
+
+    /// Window-mean module norms W_t^a for t = 1..k ending at `end`.
+    fn window_series(&self, history: &NormHistory, module: &str, end: usize) -> Vec<f64> {
+        (0..self.k)
+            .map(|t| {
+                let w_end = end - (self.k - 1 - t) * self.m;
+                history.window_module_norm(module, w_end, self.m)
+            })
+            .collect()
+    }
+
+    fn loss_series(&self, history: &NormHistory, end: usize) -> Vec<f64> {
+        (0..self.k)
+            .map(|t| {
+                let w_end = end - (self.k - 1 - t) * self.m;
+                history.window_loss(w_end, self.m)
+            })
+            .collect()
+    }
+}
+
+fn pct_change(prev: f64, cur: f64) -> f64 {
+    if prev == 0.0 {
+        0.0
+    } else {
+        (cur - prev) / prev * 100.0
+    }
+}
+
+impl ConvergenceStrategy for WindowedThreshold {
+    fn check(&self, history: &NormHistory, end: usize) -> ConvergenceReport {
+        if end < self.required_epochs() || history.epochs() < end {
+            return ConvergenceReport::not_enough_history();
+        }
+        let mut max_w: f64 = 0.0;
+        let mut max_l: f64 = 0.0;
+        let mut fail: Option<String> = None;
+
+        // loss windows (module-independent, checked once)
+        let losses = self.loss_series(history, end);
+        for t in 1..self.k {
+            let dl = pct_change(losses[t - 1], losses[t]).abs();
+            max_l = max_l.max(dl);
+            if dl > self.zeta && fail.is_none() {
+                fail = Some(format!(
+                    "loss window {t}: |dL|={dl:.3}% > zeta={:.3}%",
+                    self.zeta
+                ));
+            }
+        }
+        // per-module weight-norm windows
+        for module in &self.modules {
+            let series = self.window_series(history, module, end);
+            for t in 1..self.k {
+                let dw = pct_change(series[t - 1], series[t]).abs();
+                max_w = max_w.max(dw);
+                if dw > self.tau && fail.is_none() {
+                    fail = Some(format!(
+                        "module {module} window {t}: |dW|={dw:.3}% > tau={:.3}%",
+                        self.tau
+                    ));
+                }
+            }
+        }
+        ConvergenceReport {
+            converged: fail.is_none(),
+            max_weight_delta: max_w,
+            max_loss_delta: max_l,
+            fail_reason: fail,
+        }
+    }
+
+    fn required_epochs(&self) -> usize {
+        self.k * self.m
+    }
+
+    fn name(&self) -> &'static str {
+        "windowed_threshold"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::NormSnapshot;
+    use std::collections::BTreeMap;
+
+    /// Build a history whose module norm and loss follow given sequences.
+    fn make_history(norms: &[f64], losses: &[f64]) -> NormHistory {
+        let mut h = NormHistory::new();
+        for (e, (&n, &l)) in norms.iter().zip(losses).enumerate() {
+            let mut by_module = BTreeMap::new();
+            by_module.insert("query".into(), vec![n, n]);
+            h.push(NormSnapshot { epoch: e, by_module }, l);
+        }
+        h
+    }
+
+    fn strat(tau: f64, zeta: f64) -> WindowedThreshold {
+        WindowedThreshold::new(3, 3, tau, zeta, vec!["query".into()])
+    }
+
+    #[test]
+    fn passes_when_flat() {
+        let h = make_history(&[10.0; 9], &[2.0; 9]);
+        let r = strat(0.5, 2.5).check(&h, 9);
+        assert!(r.converged, "{:?}", r.fail_reason);
+        assert_eq!(r.max_weight_delta, 0.0);
+        assert_eq!(r.max_loss_delta, 0.0);
+    }
+
+    #[test]
+    fn fails_on_moving_weights() {
+        // windows: [10,10,10] [11,11,11] [12,12,12] => dW = 10%, 9.1%
+        let norms = [10., 10., 10., 11., 11., 11., 12., 12., 12.];
+        let h = make_history(&norms, &[2.0; 9]);
+        let r = strat(0.5, 2.5).check(&h, 9);
+        assert!(!r.converged);
+        assert!(r.max_weight_delta > 9.0);
+        assert!(r.fail_reason.unwrap().contains("tau"));
+    }
+
+    #[test]
+    fn fails_on_moving_loss() {
+        let losses = [3.0, 3.0, 3.0, 2.5, 2.5, 2.5, 2.0, 2.0, 2.0];
+        let h = make_history(&[10.0; 9], &losses);
+        let r = strat(0.5, 2.5).check(&h, 9);
+        assert!(!r.converged);
+        assert!(r.fail_reason.unwrap().contains("zeta"));
+    }
+
+    #[test]
+    fn relaxed_thresholds_pass_where_strict_fail() {
+        // ~0.8% weight drift per window, ~3% loss drift
+        let norms = [10.0, 10.0, 10.0, 10.08, 10.08, 10.08, 10.16, 10.16, 10.16];
+        let losses = [2.0, 2.0, 2.0, 1.94, 1.94, 1.94, 1.88, 1.88, 1.88];
+        let h = make_history(&norms, &losses);
+        let relaxed = strat(1.0, 5.0).check(&h, 9); // Exp1
+        let strict = strat(0.25, 1.0).check(&h, 9); // Exp3
+        assert!(relaxed.converged, "{:?}", relaxed.fail_reason);
+        assert!(!strict.converged);
+    }
+
+    #[test]
+    fn insufficient_history() {
+        let h = make_history(&[10.0; 5], &[2.0; 5]);
+        let r = strat(0.5, 2.5).check(&h, 5);
+        assert!(!r.converged);
+        assert_eq!(r.fail_reason.as_deref(), Some("insufficient history"));
+    }
+
+    #[test]
+    fn uses_trailing_windows_only() {
+        // noisy early history must not matter once the tail is flat
+        let mut norms = vec![5.0, 20.0, 3.0, 17.0];
+        norms.extend_from_slice(&[10.0; 9]);
+        let mut losses = vec![4.0, 3.5, 3.2, 3.1];
+        losses.extend_from_slice(&[2.0; 9]);
+        let h = make_history(&norms, &losses);
+        let r = strat(0.5, 2.5).check(&h, 13);
+        assert!(r.converged, "{:?}", r.fail_reason);
+    }
+}

@@ -1,0 +1,279 @@
+//! The PreLoRA controller: telemetry in, phase decisions out.
+
+use std::collections::BTreeMap;
+
+use crate::config::PreLoraConfig;
+use crate::convergence::{self, ConvergenceReport, ConvergenceStrategy};
+use crate::manifest::{Manifest, ADAPTED_MODULES};
+use crate::rank::{assign_ranks, uniform_ranks, RankAssignment};
+use crate::telemetry::NormHistory;
+
+use super::Phase;
+
+/// What the trainer must do at an epoch boundary.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Keep training in the current phase.
+    Stay,
+    /// Convergence detected: initialize adapters with this assignment and
+    /// enter the warmup phase (base + LoRA jointly).
+    SwitchToWarmup { assignment: RankAssignment, report: ConvergenceReport },
+    /// Warmup window elapsed: freeze the base, train adapters only.
+    FreezeBase,
+}
+
+/// Drives the Full -> Warmup -> LoraOnly phase machine from telemetry.
+pub struct PreLoraController {
+    cfg: PreLoraConfig,
+    strategy: Box<dyn ConvergenceStrategy + Send>,
+    phase: Phase,
+    /// Target modules (the paper's alpha set, filtered to what the
+    /// manifest actually exposes).
+    target_modules: Vec<String>,
+    r_min: usize,
+    r_max: usize,
+    depth: usize,
+    switch_epoch: Option<usize>,
+    freeze_epoch: Option<usize>,
+    /// Evidence from the convergence checks (logged by harnesses).
+    pub checks: Vec<(usize, ConvergenceReport)>,
+}
+
+impl PreLoraController {
+    pub fn new(cfg: PreLoraConfig, manifest: &Manifest) -> Self {
+        let target_modules: Vec<String> = ADAPTED_MODULES
+            .iter()
+            .map(|s| s.to_string())
+            .filter(|m| manifest.telemetry_modules().contains(m))
+            .collect();
+        let strategy = convergence::build(&cfg, target_modules.clone());
+        let r_min = cfg.r_min.unwrap_or(manifest.config.r_min);
+        let r_max = cfg.r_max.unwrap_or(manifest.config.r_max);
+        Self {
+            cfg,
+            strategy,
+            phase: Phase::FullParam,
+            target_modules,
+            r_min,
+            r_max,
+            depth: manifest.config.depth,
+            switch_epoch: None,
+            freeze_epoch: None,
+            checks: Vec::new(),
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn switch_epoch(&self) -> Option<usize> {
+        self.switch_epoch
+    }
+
+    pub fn freeze_epoch(&self) -> Option<usize> {
+        self.freeze_epoch
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Consult the controller after `history` has absorbed an epoch.
+    /// `history.epochs()` is the number of completed epochs.
+    pub fn on_epoch_end(&mut self, history: &NormHistory) -> Decision {
+        if !self.cfg.enabled {
+            return Decision::Stay;
+        }
+        let epoch = history.epochs();
+        match self.phase {
+            Phase::FullParam => {
+                // test only at window boundaries (paper §4.1: testing too
+                // frequently risks false positives from local minima)
+                let m = self.cfg.window_epochs;
+                if epoch < self.cfg.min_epochs_before_switch
+                    || epoch % m != 0
+                    || epoch < self.strategy.required_epochs()
+                {
+                    return Decision::Stay;
+                }
+                let report = self.strategy.check(history, epoch);
+                self.checks.push((epoch, report.clone()));
+                if !report.converged {
+                    return Decision::Stay;
+                }
+                let assignment = self.make_assignment(history, epoch);
+                self.phase = Phase::Warmup { since_epoch: epoch };
+                self.switch_epoch = Some(epoch);
+                Decision::SwitchToWarmup { assignment, report }
+            }
+            Phase::Warmup { since_epoch } => {
+                if epoch >= since_epoch + self.cfg.warmup_epochs {
+                    self.phase = Phase::LoraOnly { since_epoch: epoch };
+                    self.freeze_epoch = Some(epoch);
+                    Decision::FreezeBase
+                } else {
+                    Decision::Stay
+                }
+            }
+            Phase::LoraOnly { .. } => Decision::Stay,
+        }
+    }
+
+    /// Algorithm 2 inputs: per-layer weight deltas between the last two
+    /// windows at the switch point.
+    fn make_assignment(&self, history: &NormHistory, epoch: usize) -> RankAssignment {
+        if !self.cfg.dynamic_ranks {
+            return uniform_ranks(&self.target_modules, self.depth, self.cfg.uniform_rank);
+        }
+        let m = self.cfg.window_epochs;
+        let mut deltas = BTreeMap::new();
+        for module in &self.target_modules {
+            let d = history
+                .last_two_window_layer_deltas(module, epoch, m)
+                .unwrap_or_else(|| vec![0.0; self.depth]);
+            deltas.insert(module.clone(), d);
+        }
+        assign_ranks(&deltas, self.r_min, self.r_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::NormSnapshot;
+    use std::path::PathBuf;
+
+    fn micro() -> Manifest {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-micro");
+        Manifest::load(dir).expect("run `make artifacts` first")
+    }
+
+    /// History where norms/losses move by `slope` per epoch (percent-ish).
+    fn feed(h: &mut NormHistory, epochs: usize, norm0: f64, slope: f64, loss0: f64, lslope: f64) {
+        let start = h.epochs();
+        for e in start..start + epochs {
+            let mut by_module = BTreeMap::new();
+            for md in ADAPTED_MODULES {
+                let base = norm0 + slope * e as f64;
+                // layers diverge slightly so rank assignment has signal
+                by_module.insert(md.to_string(), vec![base, base * 1.01]);
+            }
+            by_module.insert("mlp_out".into(), vec![norm0, norm0]);
+            h.push(NormSnapshot { epoch: e, by_module }, loss0 + lslope * e as f64);
+        }
+    }
+
+    fn cfg() -> PreLoraConfig {
+        let mut c = PreLoraConfig::default();
+        c.windows = 3;
+        c.window_epochs = 3;
+        c.tau = 0.5;
+        c.zeta = 2.5;
+        c.warmup_epochs = 2;
+        c
+    }
+
+    #[test]
+    fn stays_while_training_moves() {
+        let m = micro();
+        let mut ctl = PreLoraController::new(cfg(), &m);
+        let mut h = NormHistory::new();
+        feed(&mut h, 12, 10.0, 0.5, 3.0, -0.2); // 5%/epoch norm growth
+        for _ in 0..h.epochs() {
+            // replay epoch ends — phase must remain FullParam
+        }
+        let d = ctl.on_epoch_end(&h);
+        assert!(matches!(d, Decision::Stay));
+        assert!(ctl.phase().is_full());
+    }
+
+    #[test]
+    fn full_lifecycle_switches_then_freezes() {
+        let m = micro();
+        let mut ctl = PreLoraController::new(cfg(), &m);
+        let mut h = NormHistory::new();
+        // plateau from the start: converges at the first eligible boundary
+        feed(&mut h, 9, 10.0, 0.0001, 2.0, -0.0001);
+        let d = ctl.on_epoch_end(&h);
+        let assignment = match d {
+            Decision::SwitchToWarmup { assignment, report } => {
+                assert!(report.converged);
+                assignment
+            }
+            other => panic!("expected switch, got {other:?}"),
+        };
+        assert_eq!(ctl.switch_epoch(), Some(9));
+        assert!(ctl.phase().is_warmup());
+        // every target module got per-layer ranks within bounds
+        for md in ADAPTED_MODULES {
+            let ranks = &assignment.by_module[md];
+            assert_eq!(ranks.len(), m.config.depth);
+            for &r in ranks {
+                assert!(r >= m.config.r_min && r <= m.config.r_max);
+            }
+        }
+        // warmup lasts exactly w epochs
+        feed(&mut h, 1, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
+        feed(&mut h, 1, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::FreezeBase));
+        assert!(ctl.phase().is_lora_only());
+        assert_eq!(ctl.freeze_epoch(), Some(11));
+        // further epochs: stay
+        feed(&mut h, 1, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
+    }
+
+    #[test]
+    fn disabled_controller_never_switches() {
+        let m = micro();
+        let mut c = cfg();
+        c.enabled = false;
+        let mut ctl = PreLoraController::new(c, &m);
+        let mut h = NormHistory::new();
+        feed(&mut h, 20, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
+        assert!(ctl.phase().is_full());
+    }
+
+    #[test]
+    fn only_checks_at_window_boundaries() {
+        let m = micro();
+        let mut ctl = PreLoraController::new(cfg(), &m);
+        let mut h = NormHistory::new();
+        feed(&mut h, 10, 10.0, 0.0, 2.0, 0.0); // epoch 10: not a multiple of 3
+        let _ = ctl.on_epoch_end(&h);
+        assert!(ctl.checks.is_empty(), "no check off-boundary");
+    }
+
+    #[test]
+    fn min_epochs_guard_delays_switch() {
+        let m = micro();
+        let mut c = cfg();
+        c.min_epochs_before_switch = 12;
+        let mut ctl = PreLoraController::new(c, &m);
+        let mut h = NormHistory::new();
+        feed(&mut h, 9, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
+        feed(&mut h, 3, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::SwitchToWarmup { .. }));
+    }
+
+    #[test]
+    fn uniform_rank_ablation() {
+        let m = micro();
+        let mut c = cfg();
+        c.dynamic_ranks = false;
+        c.uniform_rank = 4;
+        let mut ctl = PreLoraController::new(c, &m);
+        let mut h = NormHistory::new();
+        feed(&mut h, 9, 10.0, 0.0, 2.0, 0.0);
+        match ctl.on_epoch_end(&h) {
+            Decision::SwitchToWarmup { assignment, .. } => {
+                assert!(assignment.histogram().keys().all(|&r| r == 4));
+            }
+            other => panic!("expected switch, got {other:?}"),
+        }
+    }
+}

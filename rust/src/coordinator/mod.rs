@@ -1,0 +1,20 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! [`PreLoraController`] glues together the telemetry stream, the partial
+//! convergence test (Algorithm 1), the rank-assignment algorithm
+//! (Algorithm 2) and the warmup schedule (§3.3) into the phase machine
+//!
+//! ```text
+//! FullParam --(convergence test passes at a window boundary)--> Warmup(w)
+//! Warmup    --(w epochs elapsed)------------------------------> LoraOnly
+//! ```
+//!
+//! The controller is deliberately model-agnostic: it sees only the
+//! manifest-driven norm history and epoch losses, which is what makes the
+//! framework "generalizable ... across diverse domains" (paper §5).
+
+mod controller;
+mod phase;
+
+pub use controller::{Decision, PreLoraController};
+pub use phase::Phase;

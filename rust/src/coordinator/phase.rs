@@ -1,0 +1,64 @@
+//! Training-phase state machine.
+
+use std::fmt;
+
+/// The three phases of a PreLoRA run (paper Figure 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Full-parameter training; convergence monitored at window boundaries.
+    FullParam,
+    /// Base + LoRA train jointly; base still updating (paper §3.3).
+    Warmup { since_epoch: usize },
+    /// Base frozen; only LoRA adapters train.
+    LoraOnly { since_epoch: usize },
+}
+
+impl Phase {
+    pub fn is_full(&self) -> bool {
+        matches!(self, Phase::FullParam)
+    }
+
+    pub fn is_warmup(&self) -> bool {
+        matches!(self, Phase::Warmup { .. })
+    }
+
+    pub fn is_lora_only(&self) -> bool {
+        matches!(self, Phase::LoraOnly { .. })
+    }
+
+    /// Stable label used in CSV output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::FullParam => "full",
+            Phase::Warmup { .. } => "warmup",
+            Phase::LoraOnly { .. } => "lora",
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Phase::FullParam => write!(f, "full-param"),
+            Phase::Warmup { since_epoch } => write!(f, "warmup(since={since_epoch})"),
+            Phase::LoraOnly { since_epoch } => write!(f, "lora-only(since={since_epoch})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_predicates() {
+        assert_eq!(Phase::FullParam.label(), "full");
+        assert!(Phase::FullParam.is_full());
+        let w = Phase::Warmup { since_epoch: 3 };
+        assert!(w.is_warmup() && !w.is_full());
+        assert_eq!(w.label(), "warmup");
+        let l = Phase::LoraOnly { since_epoch: 9 };
+        assert!(l.is_lora_only());
+        assert_eq!(format!("{l}"), "lora-only(since=9)");
+    }
+}

@@ -1,0 +1,143 @@
+//! Epoch iteration: deterministic shuffles, fixed-size batches, and
+//! per-worker sharding for the simulated data-parallel engine.
+
+use super::synth::Dataset;
+use crate::tensor::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+/// One batch, materialized contiguously in artifact layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>, // [B, H, W, C]
+    pub labels: Vec<i32>, // [B]
+}
+
+/// Iterates a dataset in epochs of `batch * workers`-sized super-batches.
+///
+/// Every global step consumes one local batch per worker; the shard
+/// assignment is round-robin over a per-epoch Fisher-Yates shuffle seeded
+/// from (seed, epoch), so runs are bit-reproducible regardless of worker
+/// thread interleaving — the property the DP equivalence test relies on.
+pub struct EpochLoader {
+    batch: usize,
+    workers: usize,
+    seed: u64,
+}
+
+impl EpochLoader {
+    pub fn new(batch: usize, workers: usize, seed: u64) -> Self {
+        assert!(batch > 0 && workers > 0);
+        Self { batch, workers, seed }
+    }
+
+    /// Number of global steps per epoch (drop-last semantics).
+    pub fn steps_per_epoch(&self, data: &Dataset) -> usize {
+        data.len() / (self.batch * self.workers)
+    }
+
+    /// Shuffled index order for one epoch.
+    fn epoch_order(&self, data: &Dataset, epoch: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        let mut rng = Pcg64::new(self.seed ^ 0x5eed_0000).fork(epoch as u64);
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// Materialize the per-worker batches of one global step.
+    pub fn step_batches(&self, data: &Dataset, epoch: usize, step: usize) -> Vec<Batch> {
+        let order = self.epoch_order(data, epoch);
+        let stride = self.batch * self.workers;
+        let start = step * stride;
+        assert!(start + stride <= order.len(), "step out of range");
+        (0..self.workers)
+            .map(|w| {
+                let idx = &order[start + w * self.batch..start + (w + 1) * self.batch];
+                self.gather(data, idx)
+            })
+            .collect()
+    }
+
+    /// Sequential (unshuffled) batches for evaluation; remainder dropped.
+    pub fn eval_batches(&self, data: &Dataset) -> Vec<Batch> {
+        let n = data.len() / self.batch;
+        (0..n)
+            .map(|b| {
+                let idx: Vec<usize> = (b * self.batch..(b + 1) * self.batch).collect();
+                self.gather(data, &idx)
+            })
+            .collect()
+    }
+
+    fn gather(&self, data: &Dataset, idx: &[usize]) -> Batch {
+        let px = data.pixels_per_image();
+        let mut images = Vec::with_capacity(idx.len() * px);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            images.extend_from_slice(data.image(i));
+            labels.push(data.labels[i]);
+        }
+        Batch { images, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+
+    fn data() -> Dataset {
+        Dataset::generate(&SynthSpec {
+            samples: 97,
+            image_size: 8,
+            channels: 3,
+            num_classes: 4,
+            noise: 0.1,
+            phase_jitter: false,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn steps_per_epoch_drop_last() {
+        let d = data();
+        let l = EpochLoader::new(8, 2, 0);
+        assert_eq!(l.steps_per_epoch(&d), 97 / 16);
+    }
+
+    #[test]
+    fn epoch_shuffles_differ_but_are_deterministic() {
+        let d = data();
+        let l = EpochLoader::new(8, 1, 3);
+        let a0 = l.step_batches(&d, 0, 0);
+        let a0_again = l.step_batches(&d, 0, 0);
+        let a1 = l.step_batches(&d, 1, 0);
+        assert_eq!(a0[0].labels, a0_again[0].labels);
+        assert_ne!(a0[0].labels, a1[0].labels, "epochs should reshuffle");
+    }
+
+    #[test]
+    fn worker_shards_are_disjoint() {
+        let d = data();
+        let l = EpochLoader::new(8, 2, 0);
+        let batches = l.step_batches(&d, 0, 1);
+        assert_eq!(batches.len(), 2);
+        // disjointness: images from shard 0 and 1 come from different samples
+        assert_ne!(batches[0].images, batches[1].images);
+        assert_eq!(batches[0].labels.len(), 8);
+        assert_eq!(batches[0].images.len(), 8 * d.pixels_per_image());
+    }
+
+    #[test]
+    fn eval_batches_cover_prefix_in_order() {
+        let d = data();
+        let l = EpochLoader::new(8, 1, 0);
+        let evs = l.eval_batches(&d);
+        assert_eq!(evs.len(), 12);
+        assert_eq!(evs[0].labels, d.labels[..8].to_vec());
+    }
+}

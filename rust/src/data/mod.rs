@@ -1,0 +1,14 @@
+//! Synthetic data substrate (ImageNet-1k stand-in).
+//!
+//! The paper trains on ImageNet-1k, which we cannot ship; per the
+//! substitution rule we generate a deterministic class-conditional image
+//! task that is (a) learnable but not trivially separable, so the loss
+//! keeps improving after weight norms stabilize — the exact regime the
+//! partial convergence test needs — and (b) fully reproducible from one
+//! seed so every figure harness sees identical data.
+
+mod loader;
+mod synth;
+
+pub use loader::{Batch, EpochLoader, Split};
+pub use synth::{Dataset, SynthSpec};

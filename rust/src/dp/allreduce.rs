@@ -1,0 +1,199 @@
+//! Gradient all-reduce algorithms.
+//!
+//! All three compute the elementwise *mean* of N same-length gradient
+//! buffers into the first buffer. They are numerically different summation
+//! orders of the same reduction:
+//!
+//! * `Naive` — leader sums sequentially; O(N * n) work on one core, the
+//!   baseline a single-process DDP leader would do.
+//! * `Tree`  — pairwise reduction, log2(N) rounds; pairs are summed in
+//!   parallel with scoped threads (the NCCL tree pattern).
+//! * `Ring`  — chunked reduce-scatter + all-gather schedule (the NCCL ring
+//!   pattern). In-memory the data movement is simulated by the chunk
+//!   schedule; the arithmetic matches a real ring exactly.
+
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Naive,
+    Tree,
+    Ring,
+}
+
+impl FromStr for Algorithm {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "naive" => Ok(Algorithm::Naive),
+            "tree" => Ok(Algorithm::Tree),
+            "ring" => Ok(Algorithm::Ring),
+            other => Err(format!("unknown allreduce algorithm {other:?}")),
+        }
+    }
+}
+
+/// Reduce `bufs` to their elementwise mean, left in `bufs[0]`.
+/// Returns early on a single buffer. Panics on length mismatch.
+pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "buffer length mismatch");
+    match alg {
+        Algorithm::Naive => naive(bufs),
+        Algorithm::Tree => tree(bufs),
+        Algorithm::Ring => ring(bufs),
+    }
+    let inv = 1.0 / n as f32;
+    for v in bufs[0].iter_mut() {
+        *v *= inv;
+    }
+}
+
+fn naive(bufs: &mut [Vec<f32>]) {
+    let (first, rest) = bufs.split_at_mut(1);
+    for b in rest.iter() {
+        crate::tensor::add_assign(&mut first[0], b);
+    }
+}
+
+fn tree(bufs: &mut [Vec<f32>]) {
+    // pairwise rounds: stride doubles each round; each pair sums in parallel
+    let n = bufs.len();
+    let mut stride = 1;
+    while stride < n {
+        let step = stride * 2;
+        // split bufs into disjoint (dst, src) pairs for this round
+        std::thread::scope(|scope| {
+            let mut rest = &mut bufs[..];
+            let mut base = 0;
+            while base + stride < n {
+                let take = (step).min(rest.len());
+                let (chunk, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let (dst, src) = chunk.split_at_mut(stride);
+                scope.spawn(move || {
+                    crate::tensor::add_assign(&mut dst[0], &src[0]);
+                });
+                base += step;
+            }
+        });
+        stride = step;
+    }
+}
+
+fn ring(bufs: &mut [Vec<f32>]) {
+    // reduce-scatter: rank i receives chunk (i - round - 1) mod N from its
+    // left neighbor each round, so after N-1 rounds rank i holds the fully
+    // summed chunk (i + 1) mod N — equivalently, chunk c completes on rank
+    // (c - 1) mod N. The gather phase then copies the owned chunks into
+    // rank 0 (we only need the full sum there) — the chunk schedule (which
+    // rank sums what, when) matches a textbook ring exactly.
+    let n = bufs.len();
+    let len = bufs[0].len();
+    let chunk = len.div_ceil(n);
+    let bounds = |c: usize| (c * chunk, ((c + 1) * chunk).min(len));
+    // reduce-scatter rounds
+    for round in 0..n - 1 {
+        for rank in 0..n {
+            // rank receives chunk (rank - round - 1) from its left neighbor
+            let c = (rank + n - round - 1) % n;
+            let src = (rank + n - 1) % n;
+            let (lo, hi) = bounds(c);
+            if lo >= hi {
+                continue;
+            }
+            // sum src's chunk into rank's chunk
+            let (a, b) = if src < rank {
+                let (l, r) = bufs.split_at_mut(rank);
+                (&l[src], &mut r[0])
+            } else {
+                let (l, r) = bufs.split_at_mut(src);
+                (&r[0], &mut l[rank])
+            };
+            // note: direction matters — data flows src -> rank
+            let (src_buf, dst_buf) = (a, b);
+            for i in lo..hi {
+                dst_buf[i] += src_buf[i];
+            }
+        }
+    }
+    // gather: rank (c-1) mod n owns the fully-reduced chunk c
+    for c in 0..n {
+        let owner = (c + n - 1) % n;
+        if owner == 0 {
+            continue;
+        }
+        let (lo, hi) = bounds(c);
+        if lo >= hi {
+            continue;
+        }
+        let (head, tail) = bufs.split_at_mut(1);
+        head[0][lo..hi].copy_from_slice(&tail[owner - 1][lo..hi]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_bufs(n: usize, len: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|w| (0..len).map(|i| ((w * 31 + i * 7) % 13) as f32 - 6.0).collect())
+            .collect();
+        let mut want = vec![0.0f32; len];
+        for b in &bufs {
+            for (o, v) in want.iter_mut().zip(b) {
+                *o += v;
+            }
+        }
+        for v in want.iter_mut() {
+            *v /= n as f32;
+        }
+        (bufs, want)
+    }
+
+    fn check(alg: Algorithm, n: usize, len: usize) {
+        let (mut bufs, want) = make_bufs(n, len);
+        reduce_mean(alg, &mut bufs);
+        for (i, (&got, &want)) in bufs[0].iter().zip(&want).enumerate() {
+            assert!((got - want).abs() < 1e-4, "{alg:?} n={n} len={len} idx={i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn all_algorithms_agree_with_mean() {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            for n in [2usize, 3, 4, 7, 8, 16] {
+                for len in [1usize, 5, 64, 1000] {
+                    check(alg, n, len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_buffer_is_identity() {
+        let mut bufs = vec![vec![1.0, 2.0, 3.0]];
+        reduce_mean(Algorithm::Ring, &mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn parse_algorithm() {
+        assert_eq!("ring".parse::<Algorithm>().unwrap(), Algorithm::Ring);
+        assert_eq!("tree".parse::<Algorithm>().unwrap(), Algorithm::Tree);
+        assert!("mesh".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut bufs = vec![vec![1.0; 4], vec![1.0; 5]];
+        reduce_mean(Algorithm::Naive, &mut bufs);
+    }
+}

@@ -1,0 +1,531 @@
+//! Worker pool: per-thread PJRT runtimes computing gradients on shards.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::allreduce::{reduce_mean, Algorithm};
+use crate::data::Batch;
+use crate::manifest::Manifest;
+use crate::runtime::{Input, Runtime};
+
+/// Which training phase's artifact a step should execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Pre-switch: `full_grads` (base only).
+    Full,
+    /// Warmup: `warmup_grads` (base + LoRA jointly, paper §3.3).
+    Warmup,
+    /// Post-freeze: `lora_grads` (base backward DCE'd).
+    LoraOnly,
+}
+
+impl StepMode {
+    fn artifact(self) -> &'static str {
+        match self {
+            StepMode::Full => "full_grads",
+            StepMode::Warmup => "warmup_grads",
+            StepMode::LoraOnly => "lora_grads",
+        }
+    }
+
+    fn needs_lora(self) -> bool {
+        !matches!(self, StepMode::Full)
+    }
+}
+
+/// All-reduced gradients + averaged scalars for one global step.
+#[derive(Debug, Clone)]
+pub struct GradResult {
+    pub d_base: Option<Vec<f32>>,
+    pub d_lora: Option<Vec<f32>>,
+    /// Mean loss across workers (each already batch-mean).
+    pub loss: f64,
+    /// Total top-1 hits across all shards.
+    pub correct: f64,
+    /// Samples processed this step.
+    pub samples: usize,
+    /// Wall seconds spent inside PJRT execute, summed over workers
+    /// (= GPU-seconds analogue for the throughput accounting).
+    pub execute_seconds: f64,
+}
+
+struct Job {
+    mode: Option<StepMode>, // None => eval
+    eval_lora: bool,
+    base: Arc<Vec<f32>>,
+    lora: Option<Arc<Vec<f32>>>,
+    acfg: Option<Arc<Vec<f32>>>,
+    batch: Batch,
+}
+
+struct WorkerOut {
+    worker: usize,
+    d_base: Option<Vec<f32>>,
+    d_lora: Option<Vec<f32>>,
+    loss: f32,
+    correct: f32,
+    execute_seconds: f64,
+}
+
+/// Execute one job on a runtime (shared by threaded workers and the
+/// sequential fallback). Takes borrowed slices so the sequential path pays
+/// zero parameter copies per step (perf pass, EXPERIMENTS.md §Perf).
+#[allow(clippy::too_many_arguments)]
+fn run_job(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    mode: Option<StepMode>,
+    eval_lora: bool,
+    base: &[f32],
+    lora: Option<(&[f32], &[f32])>,
+    batch: &Batch,
+) -> Result<WorkerOut> {
+    let c = &manifest.config;
+    let img_shape = [
+        c.batch_size as i64,
+        c.image_size as i64,
+        c.image_size as i64,
+        c.in_channels as i64,
+    ];
+    ensure!(
+        batch.labels.len() == c.batch_size,
+        "batch size {} != artifact batch {}",
+        batch.labels.len(),
+        c.batch_size
+    );
+    let name = match mode {
+        Some(m) => m.artifact(),
+        None if eval_lora => "eval_lora",
+        None => "eval_full",
+    };
+    let needs_lora = mode.map(|m| m.needs_lora()).unwrap_or(eval_lora);
+    let exe = rt.artifact(manifest, name)?;
+
+    let base_shape = [manifest.base.size as i64];
+    let lora_shape = [manifest.lora.size as i64];
+    let acfg_shape = [manifest.adapter_cfg_size as i64];
+    let lab_shape = [c.batch_size as i64];
+
+    let mut inputs: Vec<Input<'_>> = vec![Input::f32(base, &base_shape)];
+    if needs_lora {
+        let (lora, acfg) = lora.ok_or_else(|| anyhow!("mode needs lora params"))?;
+        inputs.push(Input::f32(lora, &lora_shape));
+        inputs.push(Input::f32(acfg, &acfg_shape));
+    }
+    inputs.push(Input::f32(&batch.images, &img_shape));
+    inputs.push(Input::i32(&batch.labels, &lab_shape));
+
+    let t0 = std::time::Instant::now();
+    let outs = exe.run(&inputs)?;
+    let execute_seconds = t0.elapsed().as_secs_f64();
+
+    // output order per manifest: grads.., loss, correct
+    let (d_base, d_lora, loss, correct) = match mode {
+        Some(StepMode::Full) => (Some(outs[0].clone()), None, outs[1][0], outs[2][0]),
+        Some(StepMode::Warmup) => (
+            Some(outs[0].clone()),
+            Some(outs[1].clone()),
+            outs[2][0],
+            outs[3][0],
+        ),
+        Some(StepMode::LoraOnly) => (None, Some(outs[0].clone()), outs[1][0], outs[2][0]),
+        None => (None, None, outs[0][0], outs[1][0]),
+    };
+    Ok(WorkerOut { worker: 0, d_base, d_lora, loss, correct, execute_seconds })
+}
+
+enum WorkerMsg {
+    Job(Box<Job>),
+    /// Compile artifacts now (phase change) so the next step's timing is
+    /// clean of compilation cost.
+    Precompile(Vec<&'static str>),
+    Shutdown,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<WorkerMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The data-parallel gradient engine: leader-side API over N workers.
+pub struct GradEngine {
+    manifest: Arc<Manifest>,
+    workers: Vec<WorkerHandle>,
+    results_rx: mpsc::Receiver<Result<WorkerOut>>,
+    results_tx: mpsc::Sender<Result<WorkerOut>>,
+    /// Sequential fallback runtime (also used when `workers == 0`).
+    local: Option<Runtime>,
+    algorithm: Algorithm,
+    threaded: bool,
+    n_workers: usize,
+}
+
+impl GradEngine {
+    /// Spin up `workers` threads (each compiling its own executables) or a
+    /// single sequential runtime when `threaded` is false.
+    pub fn new(
+        manifest: Arc<Manifest>,
+        workers: usize,
+        threaded: bool,
+        algorithm: Algorithm,
+    ) -> Result<Self> {
+        ensure!(workers >= 1, "need at least one worker");
+        let (results_tx, results_rx) = mpsc::channel();
+        let mut engine = Self {
+            manifest: manifest.clone(),
+            workers: Vec::new(),
+            results_rx,
+            results_tx,
+            local: None,
+            algorithm,
+            threaded: threaded && workers > 1,
+            n_workers: workers,
+        };
+        if engine.threaded {
+            for w in 0..workers {
+                engine.spawn_worker(w)?;
+            }
+        } else {
+            // artifacts compile lazily on first use: a baseline run never
+            // pays for the LoRA artifacts, and a PreLoRA run amortizes the
+            // warmup/lora compiles to the epoch where the phase starts
+            // (perf pass iteration 3 — eager preload cost ~100s/run here)
+            engine.local = Some(Runtime::new()?);
+        }
+        Ok(engine)
+    }
+
+    fn spawn_worker(&mut self, id: usize) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        let results = self.results_tx.clone();
+        let manifest = self.manifest.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("dp-worker-{id}"))
+            .spawn(move || {
+                // each worker owns its own PJRT client (not Send)
+                let mut rt = match Runtime::new() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = results.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        WorkerMsg::Job(job) => {
+                            let lora = match (&job.lora, &job.acfg) {
+                                (Some(l), Some(a)) => Some((l.as_slice(), a.as_slice())),
+                                _ => None,
+                            };
+                            let out = run_job(
+                                &mut rt,
+                                &manifest,
+                                job.mode,
+                                job.eval_lora,
+                                &job.base,
+                                lora,
+                                &job.batch,
+                            )
+                            .map(|mut o| {
+                                o.worker = id;
+                                o
+                            });
+                            if results.send(out).is_err() {
+                                break;
+                            }
+                        }
+                        WorkerMsg::Precompile(names) => {
+                            for n in names {
+                                if let Err(e) = rt.artifact(&manifest, n) {
+                                    let _ = results.send(Err(e));
+                                }
+                            }
+                        }
+                        WorkerMsg::Shutdown => break,
+                    }
+                }
+            })?;
+        self.workers.push(WorkerHandle { tx, join: Some(join) });
+        Ok(())
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Compile artifacts ahead of their first use (called by the trainer
+    /// at phase changes, outside the epoch timing).
+    pub fn precompile(&mut self, names: &[&'static str]) -> Result<()> {
+        if self.threaded {
+            for w in &self.workers {
+                w.tx
+                    .send(WorkerMsg::Precompile(names.to_vec()))
+                    .map_err(|_| anyhow!("worker hung up"))?;
+            }
+        } else if let Some(rt) = self.local.as_mut() {
+            for n in names {
+                rt.artifact(&self.manifest, n)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Compute all-reduced gradients for one global step. `batches` must
+    /// hold exactly one local batch per worker.
+    pub fn compute(
+        &mut self,
+        mode: StepMode,
+        base: &[f32],
+        lora: Option<(&[f32], &[f32])>,
+        batches: Vec<Batch>,
+    ) -> Result<GradResult> {
+        ensure!(batches.len() == self.n_workers, "one batch per worker required");
+        let outs = self.dispatch(Some(mode), false, base, lora, batches)?;
+        let samples = self.manifest.config.batch_size * outs.len();
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        let mut exec = 0.0;
+        let mut base_bufs = Vec::new();
+        let mut lora_bufs = Vec::new();
+        for o in outs {
+            loss += o.loss as f64;
+            correct += o.correct as f64;
+            exec += o.execute_seconds;
+            if let Some(b) = o.d_base {
+                base_bufs.push(b);
+            }
+            if let Some(l) = o.d_lora {
+                lora_bufs.push(l);
+            }
+        }
+        let n = self.n_workers as f64;
+        let d_base = if base_bufs.is_empty() {
+            None
+        } else {
+            reduce_mean(self.algorithm, &mut base_bufs);
+            Some(base_bufs.swap_remove(0))
+        };
+        let d_lora = if lora_bufs.is_empty() {
+            None
+        } else {
+            reduce_mean(self.algorithm, &mut lora_bufs);
+            Some(lora_bufs.swap_remove(0))
+        };
+        Ok(GradResult {
+            d_base,
+            d_lora,
+            loss: loss / n,
+            correct,
+            samples,
+            execute_seconds: exec,
+        })
+    }
+
+    /// Evaluate loss/accuracy over a batch list (round-robin sharding).
+    /// Returns (mean loss, accuracy, samples).
+    pub fn evaluate(
+        &mut self,
+        base: &[f32],
+        lora: Option<(&[f32], &[f32])>,
+        batches: Vec<Batch>,
+    ) -> Result<(f64, f64, usize)> {
+        ensure!(!batches.is_empty(), "no eval batches");
+        let bsz = self.manifest.config.batch_size;
+        let n_batches = batches.len();
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        // dispatch in waves of worker-count
+        let mut batches = batches;
+        while !batches.is_empty() {
+            let take = batches.len().min(self.n_workers.max(1));
+            let wave: Vec<Batch> = batches.drain(..take).collect();
+            let outs = self.dispatch(None, lora.is_some(), base, lora, wave)?;
+            for o in outs {
+                loss += o.loss as f64;
+                correct += o.correct as f64;
+            }
+        }
+        let samples = n_batches * bsz;
+        Ok((loss / n_batches as f64, correct / samples as f64, samples))
+    }
+
+    fn dispatch(
+        &mut self,
+        mode: Option<StepMode>,
+        eval_lora: bool,
+        base: &[f32],
+        lora: Option<(&[f32], &[f32])>,
+        batches: Vec<Batch>,
+    ) -> Result<Vec<WorkerOut>> {
+        let n = batches.len();
+        if self.threaded {
+            // one shared snapshot of the parameters per step (inherent to
+            // fan-out: workers outlive the borrow)
+            let base = Arc::new(base.to_vec());
+            let (lora_arc, acfg_arc) = match lora {
+                Some((l, a)) => (Some(Arc::new(l.to_vec())), Some(Arc::new(a.to_vec()))),
+                None => (None, None),
+            };
+            for (w, batch) in batches.into_iter().enumerate() {
+                let job = Job {
+                    mode,
+                    eval_lora,
+                    base: base.clone(),
+                    lora: lora_arc.clone(),
+                    acfg: acfg_arc.clone(),
+                    batch,
+                };
+                self.workers[w]
+                    .tx
+                    .send(WorkerMsg::Job(Box::new(job)))
+                    .map_err(|_| anyhow!("worker {w} hung up"))?;
+            }
+            let mut outs = Vec::with_capacity(n);
+            for _ in 0..n {
+                outs.push(self.results_rx.recv().map_err(|_| anyhow!("workers died"))??);
+            }
+            // deterministic reduction order regardless of completion order
+            outs.sort_by_key(|o| o.worker);
+            Ok(outs)
+        } else {
+            // sequential path: zero-copy borrows straight into the runtime
+            let rt = self.local.as_mut().expect("local runtime");
+            let mut outs = Vec::with_capacity(n);
+            for (w, batch) in batches.iter().enumerate() {
+                let mut o = run_job(rt, &self.manifest, mode, eval_lora, base, lora, batch)?;
+                o.worker = w;
+                outs.push(o);
+            }
+            Ok(outs)
+        }
+    }
+}
+
+impl Drop for GradEngine {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, EpochLoader, SynthSpec};
+    use std::path::PathBuf;
+
+    fn micro() -> Arc<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-micro");
+        Arc::new(Manifest::load(dir).expect("run `make artifacts` first"))
+    }
+
+    fn data(m: &Manifest, samples: usize) -> Dataset {
+        let c = &m.config;
+        Dataset::generate(&SynthSpec {
+            samples,
+            image_size: c.image_size,
+            channels: c.in_channels,
+            num_classes: c.num_classes,
+            noise: 0.3,
+            phase_jitter: true,
+            seed: 11,
+        })
+    }
+
+    #[test]
+    fn sequential_full_step_produces_grads() {
+        let m = micro();
+        let d = data(&m, 64);
+        let loader = EpochLoader::new(m.config.batch_size, 1, 0);
+        let mut eng = GradEngine::new(m.clone(), 1, false, Algorithm::Naive).unwrap();
+        let base = m.load_init_base().unwrap();
+        let batches = loader.step_batches(&d, 0, 0);
+        let r = eng.compute(StepMode::Full, &base, None, batches).unwrap();
+        let g = r.d_base.unwrap();
+        assert_eq!(g.len(), m.base.size);
+        assert!(crate::tensor::l2_norm(&g) > 0.0);
+        assert!(r.loss.is_finite() && r.loss > 0.0);
+        assert!(r.d_lora.is_none());
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise() {
+        // The DP equivalence invariant: threading must not change numerics
+        // (deterministic shard order + ordered reduction).
+        let m = micro();
+        let d = data(&m, 64);
+        let workers = 2;
+        let loader = EpochLoader::new(m.config.batch_size, workers, 0);
+        let base = m.load_init_base().unwrap();
+        let batches = loader.step_batches(&d, 0, 0);
+
+        let mut seq = GradEngine::new(m.clone(), workers, false, Algorithm::Tree).unwrap();
+        let r1 = seq.compute(StepMode::Full, &base, None, batches.clone()).unwrap();
+        let mut thr = GradEngine::new(m.clone(), workers, true, Algorithm::Tree).unwrap();
+        let r2 = thr.compute(StepMode::Full, &base, None, batches).unwrap();
+
+        assert_eq!(r1.d_base.as_ref().unwrap(), r2.d_base.as_ref().unwrap());
+        assert_eq!(r1.loss, r2.loss);
+        assert_eq!(r1.correct, r2.correct);
+    }
+
+    #[test]
+    fn lora_step_leaves_base_gradient_absent() {
+        let m = micro();
+        let d = data(&m, 32);
+        let loader = EpochLoader::new(m.config.batch_size, 1, 0);
+        let mut eng = GradEngine::new(m.clone(), 1, false, Algorithm::Naive).unwrap();
+        let mut base = m.load_init_base().unwrap();
+        // the zero-init head makes every trunk gradient vanish at init
+        // (d pooled = head.w @ d logits = 0); randomize it as real training
+        // would have by the time the switch happens
+        let mut rng = crate::tensor::Pcg64::new(3);
+        for t in &m.base.tensors {
+            if t.module == "head" && t.is_weight_matrix() {
+                rng.fill_normal(&mut base[t.offset..t.offset + t.size], 0.05);
+            }
+        }
+        // uniform rank-2 adapters, A random / B zero
+        let mut lora = vec![0.0f32; m.lora.size];
+        for t in &m.lora.tensors {
+            if t.module == "lora_a" {
+                rng.fill_normal(&mut lora[t.offset..t.offset + t.size], 0.02);
+            }
+        }
+        let modules: Vec<String> =
+            crate::manifest::ADAPTED_MODULES.iter().map(|s| s.to_string()).collect();
+        let assign = crate::rank::uniform_ranks(&modules, m.config.depth, 2);
+        let acfg = crate::rank::build_adapter_cfg(&m, &assign, m.config.lora_alpha).unwrap();
+        let batches = loader.step_batches(&d, 0, 0);
+        let r = eng
+            .compute(StepMode::LoraOnly, &base, Some((&lora, &acfg.values)), batches)
+            .unwrap();
+        assert!(r.d_base.is_none());
+        let dl = r.d_lora.unwrap();
+        assert_eq!(dl.len(), m.lora.size);
+        assert!(crate::tensor::l2_norm(&dl) > 0.0);
+    }
+
+    #[test]
+    fn evaluate_returns_chance_accuracy_at_init() {
+        let m = micro();
+        let d = data(&m, 64);
+        let loader = EpochLoader::new(m.config.batch_size, 1, 0);
+        let mut eng = GradEngine::new(m.clone(), 1, false, Algorithm::Naive).unwrap();
+        let base = m.load_init_base().unwrap();
+        let (loss, acc, samples) = eng.evaluate(&base, None, loader.eval_batches(&d)).unwrap();
+        assert_eq!(samples, 64);
+        // zero head => exactly ln(K) loss, accuracy near chance
+        assert!((loss - (m.config.num_classes as f64).ln()).abs() < 0.05);
+        assert!(acc <= 0.5);
+    }
+}

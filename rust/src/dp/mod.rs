@@ -1,0 +1,16 @@
+//! Simulated data-parallel engine.
+//!
+//! The paper trains with DDP over 64 A100s; the coordination pattern —
+//! N workers compute gradients on disjoint shards, gradients are
+//! all-reduced, the leader applies one optimizer step — is reproduced here
+//! with OS threads standing in for ranks. Each worker owns its own PJRT
+//! client + compiled executables (the `xla` crate's client is not `Send`),
+//! receives `(phase, params, batch)` work items over a channel, and returns
+//! gradient buffers. The all-reduce itself is implemented three ways
+//! (naive / tree / ring) and benchmarked in `benches/allreduce.rs`.
+
+pub mod allreduce;
+mod engine;
+
+pub use allreduce::{reduce_mean, Algorithm};
+pub use engine::{GradEngine, GradResult, StepMode};

@@ -1,0 +1,52 @@
+//! # prelora
+//!
+//! A reproduction of *PreLoRA: Hybrid Pre-training of Vision Transformers
+//! with Full Training and Low-Rank Adapters* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (fused LoRA matmul fwd/bwd) authored in
+//!   `python/compile/kernels/`, lowered at build time.
+//! * **L2** — a JAX ViT over flat parameter vectors
+//!   (`python/compile/vit.py`), AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: the coordinator that owns the training loop,
+//!   data pipeline, optimizer, simulated data-parallel engine, and the
+//!   paper's contributions — the partial convergence test (Algorithm 1),
+//!   dynamic rank assignment (Algorithm 2) and the warmup schedule (§3.3).
+//!
+//! Python never runs on the training path: the `runtime` module loads the
+//! HLO artifacts through PJRT and everything else is Rust.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use prelora::config::RunConfig;
+//! use prelora::trainer::Trainer;
+//!
+//! let mut cfg = RunConfig::default();
+//! cfg.model = "vit-micro".into();
+//! cfg.train.epochs = 12;
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let summary = trainer.run().unwrap();
+//! println!("{}", summary.render());
+//! ```
+
+pub mod config;
+pub mod convergence;
+pub mod coordinator;
+pub mod data;
+pub mod dp;
+pub mod manifest;
+pub mod optim;
+pub mod rank;
+pub mod report;
+pub mod runtime;
+pub mod telemetry;
+pub mod tensor;
+pub mod trainer;
+pub mod util;
+
+pub use config::RunConfig;
+pub use coordinator::{Phase, PreLoraController};
+pub use manifest::Manifest;
+pub use report::RunSummary;
+pub use trainer::Trainer;

@@ -1,0 +1,172 @@
+//! `prelora` CLI: train, evaluate, and inspect PreLoRA runs.
+//!
+//! ```text
+//! prelora train --model vit-small --epochs 60 --preset exp2
+//! prelora baseline --model vit-small --epochs 60
+//! prelora inspect --model vit-small
+//! prelora gen-config > run.toml ; prelora train --config run.toml
+//! ```
+
+use anyhow::{bail, Result};
+
+use prelora::config::{RunConfig, StrictnessPreset};
+use prelora::manifest::Manifest;
+use prelora::trainer::Trainer;
+use prelora::util::args::Args;
+
+const USAGE: &str = "usage: prelora <train|baseline|inspect|gen-config> [flags]
+  train       run with the PreLoRA controller enabled
+  baseline    run the full-parameter baseline (controller disabled)
+  inspect     print a model's manifest summary
+  gen-config  emit a default TOML config to stdout
+(use `prelora <cmd> --help` for per-command flags)";
+
+fn train_flags() -> Args {
+    Args::new()
+        .flag("config", "TOML config file; other flags override it")
+        .flag("model", "model name under artifacts/ (default vit-small)")
+        .flag("epochs", "training epochs")
+        .flag("preset", "Table 1 strictness preset: exp1|exp2|exp3")
+        .flag("tau", "weight-norm threshold tau (percent)")
+        .flag("zeta", "loss threshold zeta (percent)")
+        .flag("warmup", "warmup window w (epochs)")
+        .flag("workers", "data-parallel worker count")
+        .flag("seed", "run seed")
+        .flag("run-name", "label used in logs and output files")
+        .flag("summary-out", "write the run summary JSON here")
+        .flag("train-samples", "synthetic train-set size")
+        .flag("val-samples", "synthetic val-set size")
+}
+
+fn parse_preset(name: &str) -> Result<StrictnessPreset> {
+    match name {
+        "exp1" => Ok(StrictnessPreset::Exp1),
+        "exp2" => Ok(StrictnessPreset::Exp2),
+        "exp3" => Ok(StrictnessPreset::Exp3),
+        other => bail!("unknown preset {other:?} (expected exp1|exp2|exp3)"),
+    }
+}
+
+fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
+    let mut cfg = match a.get("config") {
+        Some(p) => RunConfig::from_toml_file(p)?,
+        None => RunConfig::default(),
+    };
+    cfg.model = a.get_or("model", &cfg.model);
+    cfg.run_name = a.get_or("run-name", &cfg.run_name);
+    cfg.prelora.enabled = prelora_enabled;
+    if let Some(e) = a.get_parsed::<usize>("epochs")? {
+        cfg.train.epochs = e;
+    }
+    if let Some(p) = a.get("preset") {
+        cfg.prelora = cfg.prelora.with_preset(parse_preset(p)?);
+    }
+    if let Some(t) = a.get_parsed::<f64>("tau")? {
+        cfg.prelora.tau = t;
+    }
+    if let Some(z) = a.get_parsed::<f64>("zeta")? {
+        cfg.prelora.zeta = z;
+    }
+    if let Some(w) = a.get_parsed::<usize>("warmup")? {
+        cfg.prelora.warmup_epochs = w;
+    }
+    if let Some(w) = a.get_parsed::<usize>("workers")? {
+        cfg.train.dp.workers = w;
+    }
+    if let Some(s) = a.get_parsed::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(n) = a.get_parsed::<usize>("train-samples")? {
+        cfg.train.data.train_samples = n;
+    }
+    if let Some(n) = a.get_parsed::<usize>("val-samples")? {
+        cfg.train.data.val_samples = n;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run_training(raw: &[String], cmd: &str, enabled: bool) -> Result<()> {
+    let a = train_flags().parse(cmd, raw)?;
+    let cfg = build_config(&a, enabled)?;
+    let summary_out = a.get("summary-out").map(str::to_string);
+    let mut trainer = Trainer::new(cfg)?;
+    let summary = trainer.run()?;
+    println!("{}", summary.render());
+    if let Some(path) = summary_out {
+        std::fs::write(&path, summary.to_json())?;
+        eprintln!("summary written to {path}");
+    }
+    Ok(())
+}
+
+fn inspect(raw: &[String]) -> Result<()> {
+    let a = Args::new()
+        .flag("model", "model name (default vit-small)")
+        .flag("artifacts-dir", "artifacts root (default artifacts)")
+        .parse("inspect", raw)?;
+    let model = a.get_or("model", "vit-small");
+    let dir = a.get_or("artifacts-dir", "artifacts");
+    let m = Manifest::load(std::path::Path::new(&dir).join(&model))?;
+    println!("model {} (backend {}, seed {})", m.model, m.backend, m.seed);
+    let c = &m.config;
+    println!(
+        "  dims: {}x{}x{} patch {} hidden {} depth {} heads {} mlp {} classes {} batch {}",
+        c.image_size,
+        c.image_size,
+        c.in_channels,
+        c.patch_size,
+        c.hidden_dim,
+        c.depth,
+        c.num_heads,
+        c.mlp_dim,
+        c.num_classes,
+        c.batch_size
+    );
+    println!(
+        "  base params: {} | lora params (r_max={}): {} | adapters: {}",
+        m.base.size,
+        c.r_max,
+        m.lora.size,
+        m.adapters.len()
+    );
+    println!("  rank buckets: {:?}", c.rank_buckets);
+    for (name, a) in &m.artifacts {
+        let size = std::fs::metadata(m.artifact_path(name)?)
+            .map(|md| md.len())
+            .unwrap_or(0);
+        println!(
+            "  artifact {name}: {} -> {} ({} KiB)",
+            a.inputs.join(","),
+            a.outputs.join(","),
+            size / 1024
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "train" => run_training(rest, "train", true),
+        "baseline" => run_training(rest, "baseline", false),
+        "inspect" => inspect(rest),
+        "gen-config" => {
+            println!("{}", RunConfig::default().to_toml());
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,417 @@
+//! Artifact manifest: the L2↔L3 contract emitted by `python/compile/aot.py`.
+//!
+//! The manifest is the *single source of truth* for how the flat f32
+//! parameter vectors are laid out (tensor offsets/shapes/modules/layers),
+//! which adapters exist, and what each HLO artifact's input/output
+//! signature is. Everything the coordinator does — optimizer masking,
+//! weight-norm telemetry, rank assignment, adapter_cfg construction —
+//! is driven by these tables, so the Rust side never hard-codes model
+//! architecture.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// The paper's target-module set alpha (Section 4.1) in canonical order.
+pub const ADAPTED_MODULES: [&str; 5] = ["query", "key", "value", "output", "dense"];
+
+/// One tensor inside a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+    /// Module taxonomy: query|key|value|output|dense|mlp_out|ln|embed|head|lora_a|lora_b
+    pub module: String,
+    /// Transformer block index, or -1 for global tensors (embeddings, head).
+    pub layer: i32,
+}
+
+impl TensorEntry {
+    /// Whether this is a weight *matrix* tracked by the paper's weight-norm
+    /// telemetry (biases / layernorm vectors are excluded).
+    pub fn is_weight_matrix(&self) -> bool {
+        self.shape.len() == 2
+    }
+}
+
+/// A LoRA adapter (A/B pair) attached to one base matrix.
+#[derive(Debug, Clone)]
+pub struct AdapterEntry {
+    pub name: String,
+    pub layer: i32,
+    pub module: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub a_offset: usize,
+    pub a_size: usize,
+    pub b_offset: usize,
+    pub b_size: usize,
+    /// Offset of this adapter's `[mask(r_max) ++ scale]` block in adapter_cfg.
+    pub cfg_offset: usize,
+}
+
+impl AdapterEntry {
+    /// Trainable parameters when this adapter is assigned rank `r`.
+    pub fn trainable_at_rank(&self, r: usize) -> usize {
+        r * (self.in_dim + self.out_dim)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SectionEntry {
+    pub size: usize,
+    pub tensors: Vec<TensorEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Scaled model hyper-parameters (mirrors `python/compile/configs.py`).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub in_channels: usize,
+    pub hidden_dim: usize,
+    pub depth: usize,
+    pub num_heads: usize,
+    pub mlp_dim: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub tokens: usize,
+    pub r_min: usize,
+    pub r_max: usize,
+    pub lora_alpha: f64,
+    pub rank_buckets: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema_version: u32,
+    pub model: String,
+    pub backend: String,
+    pub seed: u64,
+    pub config: ModelDims,
+    pub base: SectionEntry,
+    pub lora: SectionEntry,
+    pub adapters: Vec<AdapterEntry>,
+    pub adapter_cfg_size: usize,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    /// Directory the manifest was loaded from (not serialized).
+    pub dir: PathBuf,
+}
+
+
+impl TensorEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            offset: v.req("offset")?.as_usize()?,
+            size: v.req("size")?.as_usize()?,
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            module: v.req("module")?.as_str()?.to_string(),
+            layer: v.req("layer")?.as_i64()? as i32,
+        })
+    }
+}
+
+impl AdapterEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            layer: v.req("layer")?.as_i64()? as i32,
+            module: v.req("module")?.as_str()?.to_string(),
+            in_dim: v.req("in_dim")?.as_usize()?,
+            out_dim: v.req("out_dim")?.as_usize()?,
+            a_offset: v.req("a_offset")?.as_usize()?,
+            a_size: v.req("a_size")?.as_usize()?,
+            b_offset: v.req("b_offset")?.as_usize()?,
+            b_size: v.req("b_size")?.as_usize()?,
+            cfg_offset: v.req("cfg_offset")?.as_usize()?,
+        })
+    }
+}
+
+impl SectionEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            size: v.req("size")?.as_usize()?,
+            tensors: v
+                .req("tensors")?
+                .as_arr()?
+                .iter()
+                .map(TensorEntry::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let strs = |key: &str| -> Result<Vec<String>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect()
+        };
+        Ok(Self {
+            file: v.req("file")?.as_str()?.to_string(),
+            inputs: strs("inputs")?,
+            outputs: strs("outputs")?,
+        })
+    }
+}
+
+impl ModelDims {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            image_size: v.req("image_size")?.as_usize()?,
+            patch_size: v.req("patch_size")?.as_usize()?,
+            in_channels: v.req("in_channels")?.as_usize()?,
+            hidden_dim: v.req("hidden_dim")?.as_usize()?,
+            depth: v.req("depth")?.as_usize()?,
+            num_heads: v.req("num_heads")?.as_usize()?,
+            mlp_dim: v.req("mlp_dim")?.as_usize()?,
+            num_classes: v.req("num_classes")?.as_usize()?,
+            batch_size: v.req("batch_size")?.as_usize()?,
+            tokens: v.req("tokens")?.as_usize()?,
+            r_min: v.req("r_min")?.as_usize()?,
+            r_max: v.req("r_max")?.as_usize()?,
+            lora_alpha: v.req("lora_alpha")?.as_f64()?,
+            rank_buckets: v
+                .req("rank_buckets")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        let mut m = Self::from_json(&doc).context("decoding manifest.json")?;
+        m.dir = dir.to_path_buf();
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Decode from a parsed JSON document (see `python/compile/aot.py`).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in doc.req("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), ArtifactEntry::from_json(v)?);
+        }
+        Ok(Self {
+            schema_version: doc.req("schema_version")?.as_usize()? as u32,
+            model: doc.req("model")?.as_str()?.to_string(),
+            backend: doc.req("backend")?.as_str()?.to_string(),
+            seed: doc.req("seed")?.as_i64()? as u64,
+            config: ModelDims::from_json(doc.req("config")?)?,
+            base: SectionEntry::from_json(doc.req("base")?)?,
+            lora: SectionEntry::from_json(doc.req("lora")?)?,
+            adapters: doc
+                .req("adapters")?
+                .as_arr()?
+                .iter()
+                .map(AdapterEntry::from_json)
+                .collect::<Result<_>>()?,
+            adapter_cfg_size: doc.req("adapter_cfg_size")?.as_usize()?,
+            artifacts,
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Structural invariants: contiguous offsets, adapter table consistent,
+    /// all expected artifacts present.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.schema_version == 1, "unsupported manifest schema");
+        for (name, sec) in [("base", &self.base), ("lora", &self.lora)] {
+            let mut off = 0;
+            for t in &sec.tensors {
+                ensure!(t.offset == off, "{name}: tensor {} not contiguous", t.name);
+                ensure!(
+                    t.size == t.shape.iter().product::<usize>(),
+                    "{name}: {} size/shape mismatch",
+                    t.name
+                );
+                off += t.size;
+            }
+            ensure!(off == sec.size, "{name}: section size mismatch");
+        }
+        let r = self.config.r_max;
+        for (i, a) in self.adapters.iter().enumerate() {
+            ensure!(a.a_size == a.in_dim * r, "adapter {}: a_size", a.name);
+            ensure!(a.b_size == r * a.out_dim, "adapter {}: b_size", a.name);
+            ensure!(a.b_offset == a.a_offset + a.a_size, "adapter {}: layout", a.name);
+            ensure!(a.cfg_offset == i * (r + 1), "adapter {}: cfg offset", a.name);
+            ensure!(
+                ADAPTED_MODULES.contains(&a.module.as_str()),
+                "adapter {}: module {} not in alpha",
+                a.name,
+                a.module
+            );
+        }
+        ensure!(
+            self.adapter_cfg_size == self.adapters.len() * (r + 1),
+            "adapter_cfg size mismatch"
+        );
+        ensure!(
+            self.adapters.len() == self.config.depth * ADAPTED_MODULES.len(),
+            "expected depth * |alpha| adapters"
+        );
+        for key in ["full_grads", "warmup_grads", "lora_grads", "eval_full", "eval_lora"] {
+            ensure!(self.artifacts.contains_key(key), "missing artifact {key}");
+        }
+        Ok(())
+    }
+
+    /// Path to one artifact's HLO text file.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let a = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        Ok(self.dir.join(&a.file))
+    }
+
+    /// Load the initial base parameters dumped by aot.py.
+    pub fn load_init_base(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_base.f32");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ensure!(
+            bytes.len() == self.base.size * 4,
+            "init_base.f32: expected {} f32, got {} bytes",
+            self.base.size,
+            bytes.len()
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Weight matrices of one target module across layers, in layer order.
+    pub fn module_weight_tensors(&self, module: &str) -> Vec<&TensorEntry> {
+        let mut v: Vec<&TensorEntry> = self
+            .base
+            .tensors
+            .iter()
+            .filter(|t| t.module == module && t.is_weight_matrix() && t.layer >= 0)
+            .collect();
+        v.sort_by_key(|t| t.layer);
+        v
+    }
+
+    /// All per-layer modules that have weight matrices (telemetry set:
+    /// superset of alpha — includes mlp_out for the Fig. 1-style plots).
+    pub fn telemetry_modules(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for t in &self.base.tensors {
+            if t.layer >= 0 && t.is_weight_matrix() && !seen.contains(&t.module) {
+                seen.push(t.module.clone());
+            }
+        }
+        seen
+    }
+
+    /// Total trainable parameters in the full-training phase.
+    pub fn full_trainable(&self) -> usize {
+        self.base.size
+    }
+
+    /// Trainable parameters post-switch for a given per-adapter rank list
+    /// (manifest adapter order).
+    pub fn lora_trainable(&self, ranks: &[usize]) -> usize {
+        self.adapters
+            .iter()
+            .zip(ranks)
+            .map(|(a, &r)| a.trainable_at_rank(r))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn micro_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-micro")
+    }
+
+    #[test]
+    fn load_and_validate_micro() {
+        let m = Manifest::load(micro_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.model, "vit-micro");
+        assert_eq!(m.config.depth, 2);
+        assert_eq!(m.adapters.len(), 2 * ADAPTED_MODULES.len());
+        assert!(m.base.size > 10_000);
+    }
+
+    #[test]
+    fn init_base_loads_with_ln_ones() {
+        let m = Manifest::load(micro_dir()).unwrap();
+        let init = m.load_init_base().unwrap();
+        assert_eq!(init.len(), m.base.size);
+        let ln = m
+            .base
+            .tensors
+            .iter()
+            .find(|t| t.name == "layer0.ln1.scale")
+            .unwrap();
+        assert!(init[ln.offset..ln.offset + ln.size].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn module_weight_tensors_ordered_by_layer() {
+        let m = Manifest::load(micro_dir()).unwrap();
+        let q = m.module_weight_tensors("query");
+        assert_eq!(q.len(), m.config.depth);
+        for (l, t) in q.iter().enumerate() {
+            assert_eq!(t.layer as usize, l);
+            assert_eq!(t.shape, vec![m.config.hidden_dim, m.config.hidden_dim]);
+        }
+    }
+
+    #[test]
+    fn trainable_counts() {
+        let m = Manifest::load(micro_dir()).unwrap();
+        let ranks = vec![1usize; m.adapters.len()];
+        let lo = m.lora_trainable(&ranks);
+        assert!(lo > 0 && lo < m.full_trainable());
+        let hi = m.lora_trainable(&vec![m.config.r_max; m.adapters.len()]);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn telemetry_modules_cover_alpha() {
+        let m = Manifest::load(micro_dir()).unwrap();
+        let mods = m.telemetry_modules();
+        for a in ADAPTED_MODULES {
+            assert!(mods.iter().any(|s| s == a), "missing {a}");
+        }
+        assert!(mods.iter().any(|s| s == "mlp_out"));
+    }
+}

@@ -1,0 +1,79 @@
+//! AdamW (decoupled weight decay) on flat vectors.
+
+use super::Optimizer;
+
+pub struct AdamW {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n], beta1, beta2, eps, weight_decay, t: 0 }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, b2, eps, wd) = (self.beta1, self.beta2, self.eps, self.weight_decay);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            // decoupled decay (AdamW): decay applied to the parameter, not the gradient
+            params[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * params[i]);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_correction_first_step() {
+        // After one step with g = 1, AdamW moves by ~lr regardless of betas.
+        let mut opt = AdamW::new(1, 0.9, 0.999, 1e-8, 0.0);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 0.01);
+        assert!((p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params_without_gradient() {
+        let mut opt = AdamW::new(1, 0.9, 0.999, 1e-8, 0.1);
+        let mut p = vec![1.0f32];
+        for _ in 0..10 {
+            opt.step(&mut p, &[0.0], 0.1);
+        }
+        assert!(p[0] < 1.0 && p[0] > 0.8, "{}", p[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let mut opt = AdamW::new(2, 0.9, 0.999, 1e-8, 0.0);
+        let mut p = vec![0.0f32; 3];
+        opt.step(&mut p, &[0.0; 3], 0.1);
+    }
+}

@@ -1,0 +1,101 @@
+//! Learning-rate schedules (epoch-resolution, per Steiner et al. recipe).
+
+use crate::config::{LrScheduleKind, TrainConfig};
+
+/// Precomputed per-epoch learning rates.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    per_epoch: Vec<f64>,
+}
+
+impl LrSchedule {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        let e = cfg.epochs.max(1);
+        let warmup = ((cfg.epochs as f64) * cfg.lr_warmup_frac).round() as usize;
+        let per_epoch = (0..e)
+            .map(|i| match cfg.lr_schedule {
+                LrScheduleKind::Constant => cfg.lr,
+                LrScheduleKind::WarmupCosine => {
+                    if i < warmup && warmup > 0 {
+                        cfg.lr * (i + 1) as f64 / warmup as f64
+                    } else {
+                        let p = if e == warmup {
+                            1.0
+                        } else {
+                            (i - warmup) as f64 / (e - warmup) as f64
+                        };
+                        cfg.min_lr
+                            + 0.5 * (cfg.lr - cfg.min_lr) * (1.0 + (std::f64::consts::PI * p).cos())
+                    }
+                }
+                LrScheduleKind::Step => {
+                    let frac = i as f64 / e as f64;
+                    if frac < 0.6 {
+                        cfg.lr
+                    } else if frac < 0.85 {
+                        cfg.lr * 0.1
+                    } else {
+                        cfg.lr * 0.01
+                    }
+                }
+            })
+            .collect();
+        Self { per_epoch }
+    }
+
+    #[inline]
+    pub fn lr_at(&self, epoch: usize) -> f64 {
+        let i = epoch.min(self.per_epoch.len() - 1);
+        self.per_epoch[i]
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.per_epoch.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn cfg(kind: LrScheduleKind) -> TrainConfig {
+        let mut c = TrainConfig::default();
+        c.lr_schedule = kind;
+        c.epochs = 100;
+        c.lr = 1.0;
+        c.min_lr = 0.01;
+        c.lr_warmup_frac = 0.1;
+        c
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::new(&cfg(LrScheduleKind::WarmupCosine));
+        // ramps up
+        assert!(s.lr_at(0) < s.lr_at(5));
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-9, "peak at end of warmup");
+        // decays monotonically after warmup
+        for i in 10..99 {
+            assert!(s.lr_at(i) >= s.lr_at(i + 1) - 1e-12);
+        }
+        assert!(s.lr_at(99) >= 0.01 - 1e-9);
+        assert!(s.lr_at(99) < 0.05);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::new(&cfg(LrScheduleKind::Constant));
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(99), 1.0);
+        assert_eq!(s.lr_at(1000), 1.0); // clamps beyond the end
+    }
+
+    #[test]
+    fn step_decays_twice() {
+        let s = LrSchedule::new(&cfg(LrScheduleKind::Step));
+        assert_eq!(s.lr_at(0), 1.0);
+        assert!((s.lr_at(70) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(90) - 0.01).abs() < 1e-12);
+    }
+}

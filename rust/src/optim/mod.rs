@@ -1,0 +1,77 @@
+//! Optimizers + learning-rate schedules, operating on flat f32 vectors.
+//!
+//! The optimizer lives on the Rust side of the artifact boundary: XLA
+//! computes gradients only, which keeps one HLO artifact valid for every
+//! optimizer/schedule configuration and lets the LoRA switch re-use the
+//! same machinery on a different (much smaller) parameter vector — the
+//! paper's memory saving is precisely that the frozen base keeps *no*
+//! optimizer state after the switch.
+
+mod adamw;
+mod lr;
+mod sgd;
+
+pub use adamw::AdamW;
+pub use lr::LrSchedule;
+pub use sgd::Sgd;
+
+use crate::config::{OptimizerKind, TrainConfig};
+
+/// A first-order optimizer over a flat parameter vector.
+pub trait Optimizer {
+    /// Apply one update in place. `lr` comes from the schedule.
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+
+    /// Bytes of optimizer state currently held (memory accounting, Fig. 7).
+    fn state_bytes(&self) -> usize;
+
+    /// Number of update steps taken.
+    fn steps(&self) -> u64;
+}
+
+/// Construct the configured optimizer for a parameter vector of length `n`.
+pub fn build(cfg: &TrainConfig, n: usize) -> Box<dyn Optimizer + Send> {
+    match cfg.optimizer {
+        OptimizerKind::AdamW => Box::new(AdamW::new(
+            n,
+            cfg.beta1 as f32,
+            cfg.beta2 as f32,
+            cfg.eps as f32,
+            cfg.weight_decay as f32,
+        )),
+        OptimizerKind::Sgd => Box::new(Sgd::new(n, 0.9, cfg.weight_decay as f32)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    /// Both optimizers must reduce a simple quadratic.
+    #[test]
+    fn optimizers_descend_quadratic() {
+        for kind in [OptimizerKind::AdamW, OptimizerKind::Sgd] {
+            let mut cfg = TrainConfig::default();
+            cfg.optimizer = kind;
+            cfg.weight_decay = 0.0;
+            let mut opt = build(&cfg, 4);
+            let mut p = vec![1.0f32, -2.0, 3.0, -4.0];
+            for _ in 0..300 {
+                let g: Vec<f32> = p.iter().map(|&x| 2.0 * x).collect();
+                opt.step(&mut p, &g, 0.05);
+            }
+            let norm: f32 = p.iter().map(|x| x * x).sum();
+            assert!(norm < 1e-3, "{kind:?} failed to descend: {p:?}");
+            assert_eq!(opt.steps(), 300);
+        }
+    }
+
+    #[test]
+    fn state_bytes_scale_with_params() {
+        let cfg = TrainConfig::default();
+        let small = build(&cfg, 100).state_bytes();
+        let big = build(&cfg, 10_000).state_bytes();
+        assert!(big > 50 * small);
+    }
+}

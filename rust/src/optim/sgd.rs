@@ -1,0 +1,54 @@
+//! SGD with classical momentum + coupled weight decay.
+
+use super::Optimizer;
+
+pub struct Sgd {
+    velocity: Vec<f32>,
+    momentum: f32,
+    weight_decay: f32,
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(n: usize, momentum: f32, weight_decay: f32) -> Self {
+        Self { velocity: vec![0.0; n], momentum, weight_decay, t: 0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.velocity.len());
+        assert_eq!(grads.len(), self.velocity.len());
+        self.t += 1;
+        let (mu, wd) = (self.momentum, self.weight_decay);
+        for i in 0..params.len() {
+            let g = grads[i] + wd * params[i];
+            self.velocity[i] = mu * self.velocity[i] + g;
+            params[i] -= lr * self.velocity[i];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.velocity.len() * std::mem::size_of::<f32>()
+    }
+
+    fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(1, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 0.1);
+        let first = -p[0];
+        opt.step(&mut p, &[1.0], 0.1);
+        let second = -p[0] - first;
+        assert!(second > first, "second step larger under momentum");
+    }
+}

@@ -1,0 +1,202 @@
+//! Algorithm 2: dynamic rank assignment.
+//!
+//! After the partial convergence test passes over k windows, the per-layer
+//! weight-norm changes between the last two windows, DeltaW_k^{a_l}, are
+//! min-max normalized *within each module* and bucketed into the
+//! power-of-two rank set R = [r_min, 2*r_min, ..., r_max]:
+//!
+//! ```text
+//! v = (|dW_l| - min) / (max - min)            in [0, 1]
+//! i = ceil(v * |R|) - 1   if v != 0  else  0
+//! rank(l) = R[i]
+//! ```
+//!
+//! Layers that moved most since the previous window (least converged) get
+//! the largest adapters; fully settled layers get r_min. When every layer
+//! of a module moved identically (min == max, normalization degenerate)
+//! the middle bucket is assigned — documented deviation, the paper leaves
+//! this case unspecified.
+
+use std::collections::BTreeMap;
+
+/// The outcome of one rank assignment, keyed like the manifest adapters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankAssignment {
+    /// module -> per-layer rank (layer order).
+    pub by_module: BTreeMap<String, Vec<usize>>,
+    pub r_min: usize,
+    pub r_max: usize,
+}
+
+impl RankAssignment {
+    pub fn rank_of(&self, module: &str, layer: usize) -> Option<usize> {
+        self.by_module.get(module)?.get(layer).copied()
+    }
+
+    /// Flatten to manifest adapter order (layer-major, module order given).
+    pub fn in_adapter_order(&self, modules: &[&str], layers: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(modules.len() * layers);
+        for l in 0..layers {
+            for m in modules {
+                out.push(self.by_module[*m][l]);
+            }
+        }
+        out
+    }
+
+    /// Histogram over the bucket set (for run summaries).
+    pub fn histogram(&self) -> BTreeMap<usize, usize> {
+        let mut h = BTreeMap::new();
+        for ranks in self.by_module.values() {
+            for &r in ranks {
+                *h.entry(r).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+}
+
+/// Powers of two from r_min to r_max inclusive (Algorithm 2, lines 3-6).
+pub fn rank_buckets(r_min: usize, r_max: usize) -> Vec<usize> {
+    assert!(r_min.is_power_of_two() && r_max.is_power_of_two() && r_min <= r_max);
+    let mut r = Vec::new();
+    let mut p = r_min;
+    while p <= r_max {
+        r.push(p);
+        p *= 2;
+    }
+    r
+}
+
+/// Algorithm 2 over per-module, per-layer |DeltaW_k^{a_l}| (percent,
+/// absolute value taken here).
+pub fn assign_ranks(
+    deltas: &BTreeMap<String, Vec<f64>>,
+    r_min: usize,
+    r_max: usize,
+) -> RankAssignment {
+    let buckets = rank_buckets(r_min, r_max);
+    let nb = buckets.len();
+    let mut by_module = BTreeMap::new();
+    for (module, dw) in deltas {
+        let abs: Vec<f64> = dw.iter().map(|d| d.abs()).collect();
+        let lo = abs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = abs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ranks: Vec<usize> = if (hi - lo).abs() < 1e-15 {
+            // degenerate normalization: middle bucket (see module doc)
+            vec![buckets[(nb - 1) / 2]; abs.len()]
+        } else {
+            abs.iter()
+                .map(|&a| {
+                    let v = (a - lo) / (hi - lo);
+                    let i = if v == 0.0 {
+                        0
+                    } else {
+                        ((v * nb as f64).ceil() as usize).saturating_sub(1).min(nb - 1)
+                    };
+                    buckets[i]
+                })
+                .collect()
+        };
+        by_module.insert(module.clone(), ranks);
+    }
+    RankAssignment { by_module, r_min, r_max }
+}
+
+/// Uniform-rank ablation: every adapter at the same rank.
+pub fn uniform_ranks(modules: &[String], layers: usize, rank: usize) -> RankAssignment {
+    let by_module = modules
+        .iter()
+        .map(|m| (m.clone(), vec![rank; layers]))
+        .collect();
+    RankAssignment { by_module, r_min: rank, r_max: rank }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deltas(pairs: &[(&str, &[f64])]) -> BTreeMap<String, Vec<f64>> {
+        pairs.iter().map(|(m, d)| (m.to_string(), d.to_vec())).collect()
+    }
+
+    #[test]
+    fn buckets_are_powers_of_two() {
+        assert_eq!(rank_buckets(8, 64), vec![8, 16, 32, 64]);
+        assert_eq!(rank_buckets(4, 4), vec![4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        rank_buckets(3, 12);
+    }
+
+    #[test]
+    fn extremes_map_to_extreme_buckets() {
+        let d = deltas(&[("query", &[0.0, 0.1, 0.5, 1.0])]);
+        let a = assign_ranks(&d, 8, 64);
+        let q = &a.by_module["query"];
+        assert_eq!(q[0], 8, "most converged layer -> r_min");
+        assert_eq!(q[3], 64, "least converged layer -> r_max");
+        assert!(q[1] <= q[2]);
+    }
+
+    #[test]
+    fn monotonic_in_delta() {
+        let d = deltas(&[("dense", &[0.05, 0.2, 0.4, 0.6, 0.8, 1.0])]);
+        let a = assign_ranks(&d, 8, 64);
+        let r = &a.by_module["dense"];
+        for w in r.windows(2) {
+            assert!(w[0] <= w[1], "{r:?}");
+        }
+    }
+
+    #[test]
+    fn negative_deltas_use_magnitude() {
+        let d = deltas(&[("query", &[-1.0, 0.0, 0.5])]);
+        let a = assign_ranks(&d, 8, 64);
+        assert_eq!(a.by_module["query"][0], 64);
+        assert_eq!(a.by_module["query"][1], 8);
+    }
+
+    #[test]
+    fn degenerate_module_gets_middle_bucket() {
+        let d = deltas(&[("key", &[0.3, 0.3, 0.3])]);
+        let a = assign_ranks(&d, 8, 64);
+        assert_eq!(a.by_module["key"], vec![16, 16, 16]);
+    }
+
+    #[test]
+    fn normalization_is_per_module() {
+        // query's 0.2 is its max -> r_max; dense's 0.2 is its min -> r_min
+        let d = deltas(&[("query", &[0.0, 0.2]), ("dense", &[0.2, 2.0])]);
+        let a = assign_ranks(&d, 8, 64);
+        assert_eq!(a.rank_of("query", 1), Some(64));
+        assert_eq!(a.rank_of("dense", 0), Some(8));
+    }
+
+    #[test]
+    fn adapter_order_flattening() {
+        let d = deltas(&[("dense", &[0.0, 1.0]), ("query", &[1.0, 0.0])]);
+        let a = assign_ranks(&d, 8, 16);
+        let flat = a.in_adapter_order(&["query", "dense"], 2);
+        assert_eq!(flat, vec![16, 8, 8, 16]);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let d = deltas(&[("q", &[0.0, 1.0, 1.0])]);
+        let a = assign_ranks(&d, 8, 64);
+        let h = a.histogram();
+        assert_eq!(h[&8], 1);
+        assert_eq!(h[&64], 2);
+    }
+
+    #[test]
+    fn uniform_assignment() {
+        let a = uniform_ranks(&["query".into(), "dense".into()], 3, 8);
+        assert_eq!(a.by_module["query"], vec![8, 8, 8]);
+        assert_eq!(a.histogram()[&8], 6);
+    }
+}

@@ -1,0 +1,104 @@
+//! adapter_cfg construction: rank assignment -> the flat mask/scale vector
+//! consumed by the AOT artifacts.
+//!
+//! Layout (manifest adapter order): per adapter, `r_max` mask entries
+//! (first r_l ones) followed by one scale entry `alpha / r_l`. This is the
+//! static-shape encoding of Algorithm 2's dynamic ranks — one compiled HLO
+//! serves every assignment.
+
+use anyhow::{ensure, Result};
+
+use super::RankAssignment;
+use crate::manifest::Manifest;
+
+/// A materialized adapter_cfg vector plus its bookkeeping.
+#[derive(Debug, Clone)]
+pub struct AdapterCfg {
+    pub values: Vec<f32>,
+    /// Per-adapter rank in manifest order.
+    pub ranks: Vec<usize>,
+    /// Trainable LoRA parameters implied by the ranks.
+    pub trainable_params: usize,
+}
+
+/// Build adapter_cfg from a rank assignment.
+pub fn build_adapter_cfg(
+    manifest: &Manifest,
+    assignment: &RankAssignment,
+    alpha: f64,
+) -> Result<AdapterCfg> {
+    let r_max = manifest.config.r_max;
+    let mut values = vec![0.0f32; manifest.adapter_cfg_size];
+    let mut ranks = Vec::with_capacity(manifest.adapters.len());
+    for ad in &manifest.adapters {
+        let r = assignment
+            .rank_of(&ad.module, ad.layer as usize)
+            .ok_or_else(|| anyhow::anyhow!("no rank for adapter {}", ad.name))?;
+        ensure!(r >= 1 && r <= r_max, "rank {r} out of [1, {r_max}] for {}", ad.name);
+        for i in 0..r {
+            values[ad.cfg_offset + i] = 1.0;
+        }
+        values[ad.cfg_offset + r_max] = (alpha / r as f64) as f32;
+        ranks.push(r);
+    }
+    let trainable_params = manifest.lora_trainable(&ranks);
+    Ok(AdapterCfg { values, ranks, trainable_params })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Manifest, ADAPTED_MODULES};
+    use crate::rank::{assign_ranks, uniform_ranks};
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn micro() -> Manifest {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-micro");
+        Manifest::load(dir).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn uniform_cfg_layout() {
+        let m = micro();
+        let modules: Vec<String> = ADAPTED_MODULES.iter().map(|s| s.to_string()).collect();
+        let a = uniform_ranks(&modules, m.config.depth, 2);
+        let cfg = build_adapter_cfg(&m, &a, m.config.lora_alpha).unwrap();
+        assert_eq!(cfg.values.len(), m.adapter_cfg_size);
+        assert!(cfg.ranks.iter().all(|&r| r == 2));
+        let r_max = m.config.r_max;
+        let first = &cfg.values[..r_max + 1];
+        assert_eq!(&first[..2], &[1.0, 1.0]);
+        assert!(first[2..r_max].iter().all(|&x| x == 0.0));
+        assert!((first[r_max] - (m.config.lora_alpha / 2.0) as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dynamic_cfg_trainable_counts_match_manifest() {
+        let m = micro();
+        // ramp deltas so layer 0 -> r_min, last layer -> r_max
+        let mut deltas = BTreeMap::new();
+        for md in ADAPTED_MODULES {
+            let d: Vec<f64> = (0..m.config.depth).map(|l| l as f64).collect();
+            deltas.insert(md.to_string(), d);
+        }
+        let a = assign_ranks(&deltas, m.config.r_min, m.config.r_max);
+        let cfg = build_adapter_cfg(&m, &a, m.config.lora_alpha).unwrap();
+        assert_eq!(cfg.trainable_params, m.lora_trainable(&cfg.ranks));
+        // layer 0 adapters at r_min, last layer at r_max
+        assert_eq!(cfg.ranks[0], m.config.r_min);
+        assert_eq!(*cfg.ranks.last().unwrap(), m.config.r_max);
+    }
+
+    #[test]
+    fn scale_is_alpha_over_rank() {
+        let m = micro();
+        let modules: Vec<String> = ADAPTED_MODULES.iter().map(|s| s.to_string()).collect();
+        for r in [1usize, 2, 4] {
+            let a = uniform_ranks(&modules, m.config.depth, r);
+            let cfg = build_adapter_cfg(&m, &a, 8.0).unwrap();
+            let r_max = m.config.r_max;
+            assert!((cfg.values[r_max] - (8.0 / r as f64) as f32).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Rank assignment (the paper's Algorithm 2) + adapter_cfg construction.
+
+mod assign;
+mod masks;
+
+pub use assign::{assign_ranks, rank_buckets, uniform_ranks, RankAssignment};
+pub use masks::{build_adapter_cfg, AdapterCfg};

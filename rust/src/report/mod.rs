@@ -1,0 +1,272 @@
+//! Run summaries: aggregate per-epoch stats into the quantities the
+//! paper's evaluation section reports (Fig. 4 speedups, Fig. 7 resource
+//! table, the trainable-parameter headline).
+
+use std::collections::BTreeMap;
+
+use crate::config::RunConfig;
+use crate::manifest::Manifest;
+use crate::rank::AdapterCfg;
+use crate::trainer::EpochStats;
+use crate::util::json::Json;
+
+/// Phase-level aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseAggregate {
+    pub epochs: usize,
+    pub mean_epoch_seconds: f64,
+    pub mean_images_per_sec: f64,
+    pub mean_memory_bytes: f64,
+    pub final_train_loss: f64,
+}
+
+/// Everything a figure harness or the CLI needs to print about one run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub run_name: String,
+    pub model: String,
+    pub epochs: usize,
+    pub switch_epoch: Option<usize>,
+    pub freeze_epoch: Option<usize>,
+    /// rank -> count over adapters (present after a switch).
+    pub rank_histogram: Option<BTreeMap<usize, usize>>,
+    pub trainable_full: usize,
+    pub trainable_lora: Option<usize>,
+    pub by_phase: BTreeMap<String, PhaseAggregate>,
+    pub final_train_loss: f64,
+    pub final_val_loss: f64,
+    pub final_val_acc: f64,
+    /// Fig. 7 ratios (present when both phases were observed).
+    pub epoch_time_ratio: Option<f64>,
+    pub throughput_ratio: Option<f64>,
+    pub memory_saving_frac: Option<f64>,
+}
+
+impl RunSummary {
+    pub fn from_stats(
+        cfg: &RunConfig,
+        manifest: &Manifest,
+        stats: &[EpochStats],
+        switch_epoch: Option<usize>,
+        freeze_epoch: Option<usize>,
+        adapter_cfg: Option<&AdapterCfg>,
+    ) -> Self {
+        let mut by_phase: BTreeMap<String, PhaseAggregate> = BTreeMap::new();
+        for s in stats {
+            let agg = by_phase.entry(s.phase.to_string()).or_default();
+            agg.epochs += 1;
+            agg.mean_epoch_seconds += s.epoch_seconds;
+            agg.mean_images_per_sec += s.images_per_sec;
+            agg.mean_memory_bytes += s.memory_model_bytes as f64;
+            agg.final_train_loss = s.train_loss;
+        }
+        for agg in by_phase.values_mut() {
+            let n = agg.epochs.max(1) as f64;
+            agg.mean_epoch_seconds /= n;
+            agg.mean_images_per_sec /= n;
+            agg.mean_memory_bytes /= n;
+        }
+        let last = stats.last();
+        let last_val = stats.iter().rev().find(|s| !s.val_loss.is_nan());
+        let (full, lora) = (by_phase.get("full"), by_phase.get("lora"));
+        let epoch_time_ratio = match (full, lora) {
+            (Some(f), Some(l)) if l.mean_epoch_seconds > 0.0 => {
+                Some(f.mean_epoch_seconds / l.mean_epoch_seconds)
+            }
+            _ => None,
+        };
+        let throughput_ratio = match (full, lora) {
+            (Some(f), Some(l)) if f.mean_images_per_sec > 0.0 => {
+                Some(l.mean_images_per_sec / f.mean_images_per_sec)
+            }
+            _ => None,
+        };
+        let memory_saving_frac = match (full, lora) {
+            (Some(f), Some(l)) if f.mean_memory_bytes > 0.0 => {
+                Some(1.0 - l.mean_memory_bytes / f.mean_memory_bytes)
+            }
+            _ => None,
+        };
+        let rank_histogram = adapter_cfg.map(|a| {
+            let mut h = BTreeMap::new();
+            for &r in &a.ranks {
+                *h.entry(r).or_insert(0usize) += 1;
+            }
+            h
+        });
+        Self {
+            run_name: cfg.run_name.clone(),
+            model: cfg.model.clone(),
+            epochs: stats.len(),
+            switch_epoch,
+            freeze_epoch,
+            rank_histogram,
+            trainable_full: manifest.full_trainable(),
+            trainable_lora: adapter_cfg.map(|a| a.trainable_params),
+            by_phase,
+            final_train_loss: last.map_or(f64::NAN, |s| s.train_loss),
+            final_val_loss: last_val.map_or(f64::NAN, |s| s.val_loss),
+            final_val_acc: last_val.map_or(f64::NAN, |s| s.val_acc),
+            epoch_time_ratio,
+            throughput_ratio,
+            memory_saving_frac,
+        }
+    }
+
+    /// Multi-line human-readable report (CLI + examples).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "run {} (model {}) — {} epochs\n",
+            self.run_name, self.model, self.epochs
+        ));
+        match (self.switch_epoch, self.freeze_epoch) {
+            (Some(s), Some(f)) => {
+                out.push_str(&format!("  switch->warmup at epoch {s}, base frozen at {f}\n"))
+            }
+            (Some(s), None) => out.push_str(&format!("  switch->warmup at epoch {s}\n")),
+            _ => out.push_str("  never switched (full baseline)\n"),
+        }
+        if let Some(h) = &self.rank_histogram {
+            out.push_str(&format!("  rank histogram: {h:?}\n"));
+        }
+        if let Some(t) = self.trainable_lora {
+            out.push_str(&format!(
+                "  trainable params: {} -> {} ({:.1}% of full)\n",
+                self.trainable_full,
+                t,
+                100.0 * t as f64 / self.trainable_full as f64
+            ));
+        }
+        for (phase, agg) in &self.by_phase {
+            out.push_str(&format!(
+                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem\n",
+                agg.epochs,
+                agg.mean_epoch_seconds,
+                agg.mean_images_per_sec,
+                agg.mean_memory_bytes / (1 << 20) as f64,
+            ));
+        }
+        if let Some(r) = self.epoch_time_ratio {
+            out.push_str(&format!("  epoch-time ratio (full/lora): {r:.2}x\n"));
+        }
+        if let Some(r) = self.throughput_ratio {
+            out.push_str(&format!("  throughput ratio (lora/full): {r:.2}x\n"));
+        }
+        if let Some(r) = self.memory_saving_frac {
+            out.push_str(&format!("  memory saving: {:.1}%\n", r * 100.0));
+        }
+        out.push_str(&format!(
+            "  final: train_loss {:.4}, val_loss {:.4}, val_acc {:.3}\n",
+            self.final_train_loss, self.final_val_loss, self.final_val_acc
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let opt_num = |o: Option<usize>| o.map_or(Json::Null, Json::from_usize);
+        let opt_f = |o: Option<f64>| o.map_or(Json::Null, Json::Num);
+        let phases = Json::Obj(
+            self.by_phase
+                .iter()
+                .map(|(k, a)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("epochs", Json::from_usize(a.epochs)),
+                            ("mean_epoch_seconds", Json::Num(a.mean_epoch_seconds)),
+                            ("mean_images_per_sec", Json::Num(a.mean_images_per_sec)),
+                            ("mean_memory_bytes", Json::Num(a.mean_memory_bytes)),
+                            ("final_train_loss", Json::Num(a.final_train_loss)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let hist = self.rank_histogram.as_ref().map_or(Json::Null, |h| {
+            Json::Obj(
+                h.iter()
+                    .map(|(k, v)| (k.to_string(), Json::from_usize(*v)))
+                    .collect(),
+            )
+        });
+        let nan_safe = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        Json::obj(vec![
+            ("run_name", Json::Str(self.run_name.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("epochs", Json::from_usize(self.epochs)),
+            ("switch_epoch", opt_num(self.switch_epoch)),
+            ("freeze_epoch", opt_num(self.freeze_epoch)),
+            ("rank_histogram", hist),
+            ("trainable_full", Json::from_usize(self.trainable_full)),
+            ("trainable_lora", opt_num(self.trainable_lora)),
+            ("by_phase", phases),
+            ("final_train_loss", nan_safe(self.final_train_loss)),
+            ("final_val_loss", nan_safe(self.final_val_loss)),
+            ("final_val_acc", nan_safe(self.final_val_acc)),
+            ("epoch_time_ratio", opt_f(self.epoch_time_ratio)),
+            ("throughput_ratio", opt_f(self.throughput_ratio)),
+            ("memory_saving_frac", opt_f(self.memory_saving_frac)),
+        ])
+        .dump_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(epoch: usize, phase: &'static str, secs: f64, mem: usize) -> EpochStats {
+        EpochStats {
+            epoch,
+            phase,
+            train_loss: 2.0 - epoch as f64 * 0.01,
+            train_acc: 0.5,
+            val_loss: 2.1,
+            val_acc: 0.4,
+            lr: 1e-3,
+            epoch_seconds: secs,
+            execute_seconds: secs * 0.9,
+            images_per_sec: 1000.0 / secs,
+            trainable_params: 1000,
+            memory_model_bytes: mem,
+            grad_norm: 1.0,
+        }
+    }
+
+    fn summary() -> RunSummary {
+        let cfg = RunConfig::default();
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-micro");
+        let manifest = Manifest::load(dir).unwrap();
+        let stats: Vec<EpochStats> = (0..6)
+            .map(|e| {
+                if e < 4 {
+                    stat(e, "full", 2.0, 1000)
+                } else {
+                    stat(e, "lora", 1.0, 600)
+                }
+            })
+            .collect();
+        RunSummary::from_stats(&cfg, &manifest, &stats, Some(4), Some(4), None)
+    }
+
+    #[test]
+    fn ratios_reflect_phase_aggregates() {
+        let s = summary();
+        assert!((s.epoch_time_ratio.unwrap() - 2.0).abs() < 1e-9);
+        assert!((s.throughput_ratio.unwrap() - 2.0).abs() < 1e-9);
+        assert!((s.memory_saving_frac.unwrap() - 0.4).abs() < 1e-9);
+        assert_eq!(s.by_phase["full"].epochs, 4);
+        assert_eq!(s.by_phase["lora"].epochs, 2);
+    }
+
+    #[test]
+    fn render_and_json() {
+        let s = summary();
+        let text = s.render();
+        assert!(text.contains("epoch-time ratio"));
+        assert!(text.contains("switch->warmup at epoch 4"));
+        let j = s.to_json();
+        assert!(j.contains("\"epoch_time_ratio\""));
+    }
+}

@@ -1,0 +1,145 @@
+//! Thread-local PJRT client + artifact compilation cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+use crate::manifest::Manifest;
+
+/// A PJRT CPU client plus a name-keyed cache of compiled executables.
+///
+/// Construction and compilation are one-time costs (recorded for the
+/// metrics report); `execute` is the request-path operation.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+    /// Cumulative compile time, exposed to the metrics report.
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: HashMap::new(), compile_seconds: 0.0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact (uncached).
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.compile_seconds += t0.elapsed().as_secs_f64();
+        Ok(Executable::new(name.to_string(), exe))
+    }
+
+    /// Compile (or fetch from cache) one artifact of a manifest.
+    pub fn artifact(&mut self, manifest: &Manifest, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = manifest.artifact_path(name)?;
+            let exe = self.load_hlo_text(name, &path)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile a set of artifacts (worker startup).
+    pub fn preload(&mut self, manifest: &Manifest, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.artifact(manifest, n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Input;
+
+    fn micro() -> Manifest {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-micro");
+        Manifest::load(dir).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn load_and_execute_eval_full() {
+        let m = micro();
+        let mut rt = Runtime::new().unwrap();
+        let exe = rt.artifact(&m, "eval_full").unwrap();
+        let base = m.load_init_base().unwrap();
+        let c = &m.config;
+        let images = vec![0.1f32; c.batch_size * c.image_size * c.image_size * c.in_channels];
+        let labels = vec![0i32; c.batch_size];
+        let img_shape = [
+            c.batch_size as i64,
+            c.image_size as i64,
+            c.image_size as i64,
+            c.in_channels as i64,
+        ];
+        let outs = exe
+            .run(&[
+                Input::f32(&base, &[m.base.size as i64]),
+                Input::f32(&images, &img_shape),
+                Input::i32(&labels, &[c.batch_size as i64]),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2); // loss, correct
+        let loss = outs[0][0];
+        // zero-init head => loss == ln(num_classes)
+        assert!((loss - (c.num_classes as f32).ln()).abs() < 0.05, "loss {loss}");
+        let correct = outs[1][0];
+        assert!((0.0..=c.batch_size as f32).contains(&correct));
+    }
+
+    #[test]
+    fn full_grads_artifact_returns_gradient_of_right_size() {
+        let m = micro();
+        let mut rt = Runtime::new().unwrap();
+        let exe = rt.artifact(&m, "full_grads").unwrap();
+        let base = m.load_init_base().unwrap();
+        let c = &m.config;
+        let n = c.batch_size * c.image_size * c.image_size * c.in_channels;
+        let images: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let labels: Vec<i32> = (0..c.batch_size as i32).map(|i| i % c.num_classes as i32).collect();
+        let img_shape = [
+            c.batch_size as i64,
+            c.image_size as i64,
+            c.image_size as i64,
+            c.in_channels as i64,
+        ];
+        let outs = exe
+            .run(&[
+                Input::f32(&base, &[m.base.size as i64]),
+                Input::f32(&images, &img_shape),
+                Input::i32(&labels, &[c.batch_size as i64]),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 3); // d_base, loss, correct
+        assert_eq!(outs[0].len(), m.base.size);
+        let gmax = outs[0].iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(gmax > 0.0, "gradient must be non-zero");
+        assert!(outs[1][0].is_finite());
+    }
+
+    #[test]
+    fn cache_hits_do_not_recompile() {
+        let m = micro();
+        let mut rt = Runtime::new().unwrap();
+        rt.artifact(&m, "eval_full").unwrap();
+        let t = rt.compile_seconds;
+        rt.artifact(&m, "eval_full").unwrap();
+        assert_eq!(rt.compile_seconds, t);
+    }
+}

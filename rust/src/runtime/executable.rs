@@ -1,0 +1,100 @@
+//! Compiled executable + typed input bridging between flat vectors and
+//! PJRT literals.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+/// One typed input buffer (borrowed; literal creation copies once).
+pub enum Input<'a> {
+    F32 { data: &'a [f32], shape: &'a [i64] },
+    I32 { data: &'a [i32], shape: &'a [i64] },
+}
+
+impl<'a> Input<'a> {
+    pub fn f32(data: &'a [f32], shape: &'a [i64]) -> Self {
+        Input::F32 { data, shape }
+    }
+
+    pub fn i32(data: &'a [i32], shape: &'a [i64]) -> Self {
+        Input::I32 { data, shape }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Input::F32 { data, shape } => {
+                let n: i64 = shape.iter().product();
+                ensure!(n as usize == data.len(), "f32 input shape/len mismatch");
+                let flat = xla::Literal::vec1(data);
+                if shape.len() == 1 { flat } else { flat.reshape(shape)? }
+            }
+            Input::I32 { data, shape } => {
+                let n: i64 = shape.iter().product();
+                ensure!(n as usize == data.len(), "i32 input shape/len mismatch");
+                let flat = xla::Literal::vec1(data);
+                if shape.len() == 1 { flat } else { flat.reshape(shape)? }
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A compiled artifact. `run` returns every tuple element as a flat f32
+/// vector (all our artifact outputs are f32: gradients, loss, correct).
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative wall time spent inside PJRT execute (metrics).
+    pub execute_seconds: std::cell::Cell<f64>,
+    /// Number of run() calls (metrics).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    pub(super) fn new(name: String, exe: xla::PjRtLoadedExecutable) -> Self {
+        Self {
+            name,
+            exe,
+            execute_seconds: std::cell::Cell::new(0.0),
+            executions: std::cell::Cell::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; decompose the (return_tuple=True)
+    /// result into per-output f32 vectors.
+    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.decompose_tuple().context("decomposing result tuple")?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outs.push(p.to_vec::<f32>().context("reading f32 output")?);
+        }
+        self.execute_seconds
+            .set(self.execute_seconds.get() + t0.elapsed().as_secs_f64());
+        self.executions.set(self.executions.get() + 1);
+        Ok(outs)
+    }
+
+    /// Mean execute latency so far (seconds).
+    pub fn mean_latency(&self) -> f64 {
+        let n = self.executions.get();
+        if n == 0 {
+            0.0
+        } else {
+            self.execute_seconds.get() / n as f64
+        }
+    }
+}

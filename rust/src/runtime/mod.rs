@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! format is HLO *text* (see DESIGN.md and `python/compile/aot.py`): jax
+//! >= 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+//!
+//! One [`Runtime`] per thread (the underlying `PjRtClient` is `Rc`-based
+//! and not `Send`); the data-parallel engine gives each worker thread its
+//! own runtime + compiled executables.
+
+mod client;
+mod executable;
+
+pub use client::Runtime;
+pub use executable::{Executable, Input};

@@ -1,0 +1,12 @@
+//! Training telemetry: the measurements the PreLoRA controller consumes.
+//!
+//! The paper's Algorithm 1 observes (a) per-module weight norms averaged
+//! across layers and (b) training loss, both aggregated over windows of
+//! `m` epochs; Algorithm 2 additionally needs the per-layer norm deltas
+//! between the final two windows. [`NormHistory`] owns those series;
+//! [`recorder`] persists everything as CSV for the figure harnesses.
+
+mod norms;
+pub mod recorder;
+
+pub use norms::{NormHistory, NormSnapshot};

@@ -1,0 +1,175 @@
+//! Per-(module, layer) weight-norm history with windowed aggregation.
+
+use std::collections::BTreeMap;
+
+use crate::manifest::Manifest;
+use crate::tensor::tensor_norm;
+
+/// Frobenius norms of every tracked weight matrix at one epoch, organized
+/// as module -> per-layer vector (layer order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormSnapshot {
+    pub epoch: usize,
+    pub by_module: BTreeMap<String, Vec<f64>>,
+}
+
+impl NormSnapshot {
+    /// Measure from the current base parameter vector.
+    pub fn measure(manifest: &Manifest, epoch: usize, base: &[f32]) -> Self {
+        let mut by_module = BTreeMap::new();
+        for module in manifest.telemetry_modules() {
+            let norms: Vec<f64> = manifest
+                .module_weight_tensors(&module)
+                .iter()
+                .map(|t| tensor_norm(base, t))
+                .collect();
+            by_module.insert(module, norms);
+        }
+        Self { epoch, by_module }
+    }
+
+    /// Module-level norm: mean across layers (the paper's W_t^a).
+    pub fn module_mean(&self, module: &str) -> Option<f64> {
+        let v = self.by_module.get(module)?;
+        Some(v.iter().sum::<f64>() / v.len() as f64)
+    }
+}
+
+/// Epoch-indexed history of norm snapshots + training losses.
+#[derive(Debug, Default, Clone)]
+pub struct NormHistory {
+    snapshots: Vec<NormSnapshot>,
+    losses: Vec<f64>,
+}
+
+impl NormHistory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, snapshot: NormSnapshot, epoch_loss: f64) {
+        debug_assert_eq!(snapshot.epoch, self.snapshots.len());
+        self.snapshots.push(snapshot);
+        self.losses.push(epoch_loss);
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    pub fn losses(&self) -> &[f64] {
+        &self.losses
+    }
+
+    pub fn snapshot(&self, epoch: usize) -> &NormSnapshot {
+        &self.snapshots[epoch]
+    }
+
+    pub fn last(&self) -> Option<&NormSnapshot> {
+        self.snapshots.last()
+    }
+
+    /// Mean loss over the trailing window `[end-m, end)` of epochs.
+    pub fn window_loss(&self, end: usize, m: usize) -> f64 {
+        let s = &self.losses[end - m..end];
+        s.iter().sum::<f64>() / m as f64
+    }
+
+    /// Module-level windowed weight norm W_t^a: per-layer norms averaged
+    /// across layers, then across the window's epochs.
+    pub fn window_module_norm(&self, module: &str, end: usize, m: usize) -> f64 {
+        let mut acc = 0.0;
+        for snap in &self.snapshots[end - m..end] {
+            acc += snap.module_mean(module).unwrap_or(0.0);
+        }
+        acc / m as f64
+    }
+
+    /// Per-layer windowed norms for one module (Algorithm 2's inputs).
+    pub fn window_layer_norms(&self, module: &str, end: usize, m: usize) -> Vec<f64> {
+        let snaps = &self.snapshots[end - m..end];
+        let layers = snaps[0].by_module[module].len();
+        let mut out = vec![0.0; layers];
+        for snap in snaps {
+            for (o, v) in out.iter_mut().zip(&snap.by_module[module]) {
+                *o += v;
+            }
+        }
+        for o in &mut out {
+            *o /= m as f64;
+        }
+        out
+    }
+
+    /// Percentage change of per-layer norms between the last two complete
+    /// windows ending at `end` — the paper's DeltaW_k^{a_l} used for rank
+    /// assignment. Returns None with fewer than 2m epochs of history.
+    pub fn last_two_window_layer_deltas(
+        &self,
+        module: &str,
+        end: usize,
+        m: usize,
+    ) -> Option<Vec<f64>> {
+        if end < 2 * m {
+            return None;
+        }
+        let prev = self.window_layer_norms(module, end - m, m);
+        let cur = self.window_layer_norms(module, end, m);
+        Some(
+            prev.iter()
+                .zip(&cur)
+                .map(|(&p, &c)| if p == 0.0 { 0.0 } else { (c - p) / p * 100.0 })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(epoch: usize, q: &[f64], d: &[f64]) -> NormSnapshot {
+        let mut by_module = BTreeMap::new();
+        by_module.insert("query".to_string(), q.to_vec());
+        by_module.insert("dense".to_string(), d.to_vec());
+        NormSnapshot { epoch, by_module }
+    }
+
+    fn history(n: usize) -> NormHistory {
+        let mut h = NormHistory::new();
+        for e in 0..n {
+            // query norms grow then flatten; dense stays flat
+            let g = 10.0 + (e as f64).min(4.0);
+            h.push(snap(e, &[g, g + 1.0], &[5.0, 5.0]), 3.0 - 0.1 * e as f64);
+        }
+        h
+    }
+
+    #[test]
+    fn module_mean_averages_layers() {
+        let s = snap(0, &[1.0, 3.0], &[2.0, 2.0]);
+        assert_eq!(s.module_mean("query"), Some(2.0));
+        assert_eq!(s.module_mean("nope"), None);
+    }
+
+    #[test]
+    fn window_aggregates() {
+        let h = history(6);
+        // window over epochs 3..6 of dense = 5.0
+        assert_eq!(h.window_module_norm("dense", 6, 3), 5.0);
+        let loss = h.window_loss(6, 3);
+        assert!((loss - (2.7 + 2.6 + 2.5) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_deltas_between_windows() {
+        let h = history(8);
+        let deltas = h.last_two_window_layer_deltas("dense", 8, 3).unwrap();
+        assert_eq!(deltas, vec![0.0, 0.0]); // dense never moves
+        let q = h.last_two_window_layer_deltas("query", 8, 3).unwrap();
+        assert_eq!(q.len(), 2);
+        // query flattens after epoch 4: windows 2..5 vs 5..8 differ slightly
+        assert!(q[0].abs() < 10.0);
+        assert!(h.last_two_window_layer_deltas("query", 3, 3).is_none());
+    }
+}

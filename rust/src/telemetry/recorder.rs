@@ -1,0 +1,119 @@
+//! CSV series recorder: every figure harness writes its data through this.
+//!
+//! Files are plain CSV with a header row; the figure binaries document the
+//! column meanings so external plotting (the paper's matplotlib scripts)
+//! can consume them directly.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A buffered CSV writer with a fixed schema.
+pub struct CsvRecorder {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    columns: usize,
+    rows: usize,
+}
+
+impl CsvRecorder {
+    /// Create `<dir>/<name>.csv` with the given header.
+    pub fn create(dir: impl AsRef<Path>, name: &str, header: &[&str]) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!("{name}.csv"));
+        let file = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut writer = BufWriter::new(file);
+        writeln!(writer, "{}", header.join(","))?;
+        Ok(Self { path, writer, columns: header.len(), rows: 0 })
+    }
+
+    /// Append one row of f64 values (formatted with enough precision for
+    /// downstream plotting).
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.columns, "row width mismatch");
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v:.6}"));
+        }
+        writeln!(self.writer, "{line}")?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Append a row with a leading string tag (e.g. a run label).
+    pub fn tagged_row(&mut self, tag: &str, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len() + 1, self.columns, "row width mismatch");
+        let mut line = String::from(tag);
+        for v in values {
+            line.push(',');
+            line.push_str(&format!("{v:.6}"));
+        }
+        writeln!(self.writer, "{line}")?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+impl Drop for CsvRecorder {
+    fn drop(&mut self) {
+        let _ = self.writer.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("prelora_csv_{}", std::process::id()));
+        let mut rec = CsvRecorder::create(&dir, "test", &["epoch", "loss"]).unwrap();
+        rec.row(&[0.0, 2.5]).unwrap();
+        rec.row(&[1.0, 2.25]).unwrap();
+        rec.flush().unwrap();
+        let text = std::fs::read_to_string(rec.path()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "epoch,loss");
+        assert!(lines[1].starts_with("0.000000,2.5"));
+        assert_eq!(rec.rows(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tagged_rows() {
+        let dir = std::env::temp_dir().join(format!("prelora_csv_t_{}", std::process::id()));
+        let mut rec = CsvRecorder::create(&dir, "tagged", &["run", "epoch", "v"]).unwrap();
+        rec.tagged_row("exp1", &[1.0, 2.0]).unwrap();
+        rec.flush().unwrap();
+        let text = std::fs::read_to_string(rec.path()).unwrap();
+        assert!(text.contains("exp1,1.000000,2.000000"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let dir = std::env::temp_dir().join(format!("prelora_csv_w_{}", std::process::id()));
+        let mut rec = CsvRecorder::create(&dir, "w", &["a", "b"]).unwrap();
+        let _ = rec.row(&[1.0]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Dense primitives over flat f32 parameter vectors.
+//!
+//! These are the coordinator's hot-path numeric kernels (optimizer update,
+//! gradient reduction, weight-norm telemetry). They are written as simple
+//! slice loops — LLVM auto-vectorizes all of them — and benchmarked in
+//! `benches/controller.rs`.
+
+use crate::manifest::TensorEntry;
+
+/// `acc += x`, elementwise. Panics on length mismatch.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// `acc *= s`, elementwise.
+#[inline]
+pub fn scale(acc: &mut [f32], s: f32) {
+    for a in acc.iter_mut() {
+        *a *= s;
+    }
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += alpha * b;
+    }
+}
+
+/// Squared L2 norm (f64 accumulation for stability on large vectors).
+#[inline]
+pub fn sq_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Frobenius norm of one manifest tensor inside a flat vector.
+#[inline]
+pub fn tensor_norm(flat: &[f32], t: &TensorEntry) -> f64 {
+    sq_norm(&flat[t.offset..t.offset + t.size]).sqrt()
+}
+
+/// Global L2 norm of a gradient vector (for clipping / logging).
+pub fn l2_norm(x: &[f32]) -> f64 {
+    sq_norm(x).sqrt()
+}
+
+/// In-place gradient clipping by global norm; returns the pre-clip norm.
+pub fn clip_by_global_norm(grads: &mut [f32], max_norm: f64) -> f64 {
+    let norm = l2_norm(grads);
+    if norm > max_norm && norm > 0.0 {
+        scale(grads, (max_norm / norm) as f32);
+    }
+    norm
+}
+
+/// Mean of `n` same-length vectors, written into `out` (all-reduce epilogue).
+pub fn mean_into(out: &mut [f32], parts: &[&[f32]]) {
+    assert!(!parts.is_empty());
+    out.copy_from_slice(parts[0]);
+    for p in &parts[1..] {
+        add_assign(out, p);
+    }
+    scale(out, 1.0 / parts.len() as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_add() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        add_assign(&mut y, &[1.0, 0.0, -1.0]);
+        assert_eq!(y, vec![4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(sq_norm(&[3.0, 4.0]), 25.0);
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn clip() {
+        let mut g = vec![3.0, 4.0];
+        let pre = clip_by_global_norm(&mut g, 1.0);
+        assert_eq!(pre, 5.0);
+        assert!((l2_norm(&g) - 1.0).abs() < 1e-6);
+        // under the cap: untouched
+        let mut h = vec![0.3, 0.4];
+        clip_by_global_norm(&mut h, 1.0);
+        assert_eq!(h, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn mean() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 6.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&mut out, &[&a, &b]);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+}

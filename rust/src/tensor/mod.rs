@@ -1,0 +1,11 @@
+//! Flat-vector math + deterministic RNG.
+//!
+//! All model state crosses the L3↔runtime boundary as flat `f32` vectors
+//! (see `manifest.rs`), so the coordinator's numeric needs reduce to a
+//! handful of dense-slice primitives kept in one place for profiling.
+
+pub mod flat;
+pub mod rng;
+
+pub use flat::*;
+pub use rng::Pcg64;

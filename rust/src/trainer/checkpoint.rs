@@ -1,0 +1,196 @@
+//! Checkpointing: flat vectors + a JSON header in one file.
+//!
+//! Format: one JSON header line (sizes, epoch, ranks) followed by the raw
+//! little-endian f32 payloads in header order. Self-describing enough for
+//! the analysis binaries and stable across runs.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub epoch: usize,
+    pub base: Vec<f32>,
+    pub lora: Option<Vec<f32>>,
+    pub adapter_cfg: Option<Vec<f32>>,
+    pub ranks: Option<Vec<usize>>,
+}
+
+struct Header {
+    magic: String,
+    epoch: usize,
+    base_len: usize,
+    lora_len: usize,
+    adapter_cfg_len: usize,
+    ranks: Option<Vec<usize>>,
+}
+
+impl Header {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("magic", Json::Str(self.magic.clone())),
+            ("epoch", Json::from_usize(self.epoch)),
+            ("base_len", Json::from_usize(self.base_len)),
+            ("lora_len", Json::from_usize(self.lora_len)),
+            ("adapter_cfg_len", Json::from_usize(self.adapter_cfg_len)),
+            (
+                "ranks",
+                match &self.ranks {
+                    Some(r) => Json::arr_usize(r),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let ranks = match v.req("ranks")? {
+            Json::Null => None,
+            arr => Some(arr.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?),
+        };
+        Ok(Self {
+            magic: v.req("magic")?.as_str()?.to_string(),
+            epoch: v.req("epoch")?.as_usize()?,
+            base_len: v.req("base_len")?.as_usize()?,
+            lora_len: v.req("lora_len")?.as_usize()?,
+            adapter_cfg_len: v.req("adapter_cfg_len")?.as_usize()?,
+            ranks,
+        })
+    }
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(file);
+        let header = Header {
+            magic: "prelora-ckpt-v1".into(),
+            epoch: self.epoch,
+            base_len: self.base.len(),
+            lora_len: self.lora.as_ref().map_or(0, |v| v.len()),
+            adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
+            ranks: self.ranks.clone(),
+        };
+        w.write_all(header.to_json().dump().as_bytes())?;
+        w.write_all(b"\n")?;
+        write_f32s(&mut w, &self.base)?;
+        if let Some(l) = &self.lora {
+            write_f32s(&mut w, l)?;
+        }
+        if let Some(a) = &self.adapter_cfg {
+            write_f32s(&mut w, a)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let file = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = BufReader::new(file);
+        let mut header_line = Vec::new();
+        // read until newline
+        let mut byte = [0u8; 1];
+        loop {
+            r.read_exact(&mut byte)?;
+            if byte[0] == b'\n' {
+                break;
+            }
+            header_line.push(byte[0]);
+            ensure!(header_line.len() < 1 << 20, "header too large");
+        }
+        let header = Header::from_json(&Json::parse(std::str::from_utf8(&header_line)?)?)?;
+        ensure!(header.magic == "prelora-ckpt-v1", "bad checkpoint magic");
+        let base = read_f32s(&mut r, header.base_len)?;
+        let lora = if header.lora_len > 0 {
+            Some(read_f32s(&mut r, header.lora_len)?)
+        } else {
+            None
+        };
+        let adapter_cfg = if header.adapter_cfg_len > 0 {
+            Some(read_f32s(&mut r, header.adapter_cfg_len)?)
+        } else {
+            None
+        };
+        Ok(Self { epoch: header.epoch, base, lora, adapter_cfg, ranks: header.ranks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("prelora_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn roundtrip_full_phase() {
+        let c = Checkpoint {
+            epoch: 7,
+            base: vec![1.0, -2.5, 3.25],
+            lora: None,
+            adapter_cfg: None,
+            ranks: None,
+        };
+        let p = tmp("full.ckpt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.base, c.base);
+        assert!(back.lora.is_none() && back.adapter_cfg.is_none());
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_lora_phase() {
+        let c = Checkpoint {
+            epoch: 42,
+            base: vec![0.5; 10],
+            lora: Some(vec![0.25; 6]),
+            adapter_cfg: Some(vec![1.0, 0.0, 4.0]),
+            ranks: Some(vec![2, 4]),
+        };
+        let p = tmp("lora.ckpt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.lora.unwrap(), vec![0.25; 6]);
+        assert_eq!(back.adapter_cfg.unwrap(), vec![1.0, 0.0, 4.0]);
+        assert_eq!(back.ranks.unwrap(), vec![2, 4]);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.ckpt");
+        std::fs::write(&p, b"{\"magic\":\"nope\"}\n").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).unwrap();
+    }
+}

@@ -1,0 +1,397 @@
+//! Training loop: ties the data pipeline, DP engine, optimizer and the
+//! PreLoRA controller into epochs, and measures everything the paper's
+//! evaluation section reports.
+
+mod checkpoint;
+mod metrics;
+
+pub use checkpoint::Checkpoint;
+pub use metrics::{EpochStats, MemoryBreakdown};
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{Decision, Phase, PreLoraController};
+use crate::data::{Dataset, EpochLoader, SynthSpec};
+use crate::dp::{Algorithm, GradEngine, StepMode};
+use crate::manifest::Manifest;
+use crate::optim::{self, LrSchedule, Optimizer};
+use crate::rank::{build_adapter_cfg, AdapterCfg};
+use crate::report::RunSummary;
+use crate::telemetry::{NormHistory, NormSnapshot};
+use crate::tensor::{clip_by_global_norm, Pcg64};
+
+/// A fully wired training run.
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub manifest: Arc<Manifest>,
+    engine: GradEngine,
+    loader: EpochLoader,
+    train_data: Dataset,
+    val_data: Dataset,
+    lr: LrSchedule,
+    controller: PreLoraController,
+    history: NormHistory,
+
+    // mutable model state
+    base: Vec<f32>,
+    lora: Option<Vec<f32>>,
+    adapter_cfg: Option<AdapterCfg>,
+    opt_base: Option<Box<dyn Optimizer + Send>>,
+    opt_lora: Option<Box<dyn Optimizer + Send>>,
+
+    pub stats: Vec<EpochStats>,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let manifest = Arc::new(Manifest::load(cfg.model_dir())?);
+        let c = &manifest.config;
+        let algorithm: Algorithm = cfg
+            .train
+            .dp
+            .allreduce
+            .parse()
+            .map_err(|e: String| anyhow!(e))?;
+        let engine = GradEngine::new(
+            manifest.clone(),
+            cfg.train.dp.workers,
+            cfg.train.dp.threaded,
+            algorithm,
+        )?;
+        let loader = EpochLoader::new(c.batch_size, cfg.train.dp.workers, cfg.seed);
+        let train_data = Dataset::generate(&SynthSpec {
+            samples: cfg.train.data.train_samples,
+            image_size: c.image_size,
+            channels: c.in_channels,
+            num_classes: c.num_classes,
+            noise: cfg.train.data.noise,
+            phase_jitter: cfg.train.data.phase_jitter,
+            seed: cfg.seed ^ 0xda7a_5eed_u64,
+        });
+        let val_data = Dataset::generate(&SynthSpec {
+            samples: cfg.train.data.val_samples,
+            image_size: c.image_size,
+            channels: c.in_channels,
+            num_classes: c.num_classes,
+            noise: cfg.train.data.noise,
+            phase_jitter: cfg.train.data.phase_jitter,
+            seed: cfg.seed ^ 0x7a1_5eed_u64,
+        });
+        let base = manifest.load_init_base()?;
+        let opt_base = Some(optim::build(&cfg.train, base.len()));
+        let lr = LrSchedule::new(&cfg.train);
+        let controller = PreLoraController::new(cfg.prelora.clone(), &manifest);
+        Ok(Self {
+            cfg,
+            manifest,
+            engine,
+            loader,
+            train_data,
+            val_data,
+            lr,
+            controller,
+            history: NormHistory::new(),
+            base,
+            lora: None,
+            adapter_cfg: None,
+            opt_base,
+            opt_lora: None,
+            stats: Vec::new(),
+        })
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.controller.phase()
+    }
+
+    pub fn controller(&self) -> &PreLoraController {
+        &self.controller
+    }
+
+    pub fn history(&self) -> &NormHistory {
+        &self.history
+    }
+
+    pub fn base_params(&self) -> &[f32] {
+        &self.base
+    }
+
+    pub fn adapter_cfg(&self) -> Option<&AdapterCfg> {
+        self.adapter_cfg.as_ref()
+    }
+
+    /// Mean Frobenius norm of one module's LoRA adapters across layers
+    /// (per-layer norm of the stacked [A; B] pair) — the Fig. 6b series.
+    /// None before the switch.
+    pub fn lora_module_norm(&self, module: &str) -> Option<f64> {
+        let lora = self.lora.as_ref()?;
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for ad in self.manifest.adapters.iter().filter(|a| a.module == module) {
+            let a2 = crate::tensor::sq_norm(&lora[ad.a_offset..ad.a_offset + ad.a_size]);
+            let b2 = crate::tensor::sq_norm(&lora[ad.b_offset..ad.b_offset + ad.b_size]);
+            acc += (a2 + b2).sqrt();
+            n += 1;
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(acc / n as f64)
+        }
+    }
+
+    /// Trainable parameters in the current phase (the paper's 300M -> 30M
+    /// headline number).
+    pub fn trainable_params(&self) -> usize {
+        match self.controller.phase() {
+            Phase::FullParam => self.manifest.full_trainable(),
+            Phase::Warmup { .. } => {
+                self.manifest.full_trainable()
+                    + self.adapter_cfg.as_ref().map_or(0, |a| a.trainable_params)
+            }
+            Phase::LoraOnly { .. } => {
+                self.adapter_cfg.as_ref().map_or(0, |a| a.trainable_params)
+            }
+        }
+    }
+
+    /// Current memory accounting (see `MemoryBreakdown` docs).
+    pub fn memory(&self) -> MemoryBreakdown {
+        let n_base = self.manifest.base.size;
+        let trainable = self.trainable_params();
+        let opt_bytes = self.opt_base.as_ref().map_or(0, |o| o.state_bytes())
+            + self.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
+        let grad_bytes = match self.controller.phase() {
+            Phase::FullParam => n_base * 4,
+            Phase::Warmup { .. } => (n_base + self.manifest.lora.size) * 4,
+            Phase::LoraOnly { .. } => self.manifest.lora.size * 4,
+        };
+        MemoryBreakdown::new(n_base, self.manifest.lora.size, trainable, grad_bytes, opt_bytes)
+    }
+
+    /// Run one epoch: steps, telemetry, controller decision, optional eval.
+    pub fn run_epoch(&mut self) -> Result<EpochStats> {
+        let epoch = self.history.epochs();
+        if self.cfg.train.data.fresh_per_epoch {
+            // infinite-data regime (see DataConfig::fresh_per_epoch)
+            let c = &self.manifest.config;
+            self.train_data = Dataset::generate(&SynthSpec {
+                samples: self.cfg.train.data.train_samples,
+                image_size: c.image_size,
+                channels: c.in_channels,
+                num_classes: c.num_classes,
+                noise: self.cfg.train.data.noise,
+                phase_jitter: self.cfg.train.data.phase_jitter,
+                seed: self.cfg.seed ^ 0xda7a_5eed_u64 ^ (epoch as u64).wrapping_mul(0x9e37_79b9),
+            });
+        }
+        let t0 = std::time::Instant::now();
+        let steps = self.loader.steps_per_epoch(&self.train_data);
+        anyhow::ensure!(steps > 0, "dataset too small for one global step");
+        let lr = self.lr.lr_at(epoch) as f32;
+        let mode = match self.controller.phase() {
+            Phase::FullParam => StepMode::Full,
+            Phase::Warmup { .. } => StepMode::Warmup,
+            Phase::LoraOnly { .. } => StepMode::LoraOnly,
+        };
+        let mut loss_acc = 0.0;
+        let mut correct = 0.0;
+        let mut samples = 0usize;
+        let mut exec_s = 0.0;
+        let mut grad_norm = 0.0f64;
+        for step in 0..steps {
+            let batches = self.loader.step_batches(&self.train_data, epoch, step);
+            let lora_pair = match (&self.lora, &self.adapter_cfg) {
+                (Some(l), Some(a)) => Some((l.as_slice(), a.values.as_slice())),
+                _ => None,
+            };
+            let mut r = self.engine.compute(mode, &self.base, lora_pair, batches)?;
+            loss_acc += r.loss;
+            correct += r.correct;
+            samples += r.samples;
+            exec_s += r.execute_seconds;
+            let clip = self.cfg.train.grad_clip;
+            if let Some(ref mut g) = r.d_base {
+                if clip > 0.0 {
+                    clip_by_global_norm(g, clip);
+                }
+                grad_norm = crate::tensor::l2_norm(g);
+                self.opt_base
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("base optimizer missing"))?
+                    .step(&mut self.base, g, lr);
+            }
+            if let Some(ref mut g) = r.d_lora {
+                if clip > 0.0 {
+                    clip_by_global_norm(g, clip);
+                }
+                if r.d_base.is_none() {
+                    grad_norm = crate::tensor::l2_norm(g);
+                }
+                let lora = self.lora.as_mut().expect("lora params present");
+                self.opt_lora
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("lora optimizer missing"))?
+                    .step(lora, g, lr);
+            }
+        }
+        let epoch_seconds = t0.elapsed().as_secs_f64();
+        let train_loss = loss_acc / steps as f64;
+        let train_acc = correct / samples as f64;
+
+        // telemetry + controller
+        let snapshot = NormSnapshot::measure(&self.manifest, epoch, &self.base);
+        self.history.push(snapshot, train_loss);
+        let decision = self.controller.on_epoch_end(&self.history);
+        self.apply(decision)?;
+
+        // validation
+        let (val_loss, val_acc) = if (epoch + 1) % self.cfg.train.eval_every == 0 {
+            self.evaluate()?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let mem = self.memory();
+        let stats = EpochStats {
+            epoch,
+            phase: self.history_phase_label(epoch),
+            train_loss,
+            train_acc,
+            val_loss,
+            val_acc,
+            lr: lr as f64,
+            epoch_seconds,
+            execute_seconds: exec_s,
+            images_per_sec: samples as f64 / epoch_seconds,
+            trainable_params: self.trainable_params(),
+            memory_model_bytes: mem.model_bytes(),
+            grad_norm,
+        };
+        self.stats.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Phase label for an epoch that just ran (decisions apply *after* the
+    /// epoch's steps, so the label reflects the mode the steps used).
+    fn history_phase_label(&self, epoch: usize) -> &'static str {
+        match (self.controller.switch_epoch(), self.controller.freeze_epoch()) {
+            (Some(s), _) if epoch < s => "full",
+            (Some(_), Some(f)) if epoch >= f => "lora",
+            (Some(_), _) => "warmup",
+            (None, _) => "full",
+        }
+    }
+
+    /// Evaluate on the validation split.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let batches = self.loader.eval_batches(&self.val_data);
+        let lora_pair = match (&self.lora, &self.adapter_cfg) {
+            (Some(l), Some(a)) => Some((l.as_slice(), a.values.as_slice())),
+            _ => None,
+        };
+        let (loss, acc, _) = self.engine.evaluate(&self.base, lora_pair, batches)?;
+        Ok((loss, acc))
+    }
+
+    fn apply(&mut self, decision: Decision) -> Result<()> {
+        match decision {
+            Decision::Stay => {}
+            Decision::SwitchToWarmup { assignment, report } => {
+                // compile the warmup/lora artifacts now, outside epoch timing
+                self.engine
+                    .precompile(&["warmup_grads", "lora_grads", "eval_lora"])?;
+                let acfg = build_adapter_cfg(
+                    &self.manifest,
+                    &assignment,
+                    self.manifest.config.lora_alpha,
+                )?;
+                // LoRA init: A ~ N(0, 0.02), B = 0 => adapters start inert
+                let mut lora = vec![0.0f32; self.manifest.lora.size];
+                let mut rng = Pcg64::new(self.cfg.seed ^ 0x10ca_c0de);
+                for t in &self.manifest.lora.tensors {
+                    if t.module == "lora_a" {
+                        rng.fill_normal(&mut lora[t.offset..t.offset + t.size], 0.02);
+                    }
+                }
+                self.opt_lora = Some(optim::build(&self.cfg.train, lora.len()));
+                self.lora = Some(lora);
+                self.adapter_cfg = Some(acfg);
+                eprintln!(
+                    "[prelora] epoch {}: convergence passed (max dW {:.3}%, max dL {:.3}%) -> warmup; ranks {:?}",
+                    self.history.epochs(),
+                    report.max_weight_delta,
+                    report.max_loss_delta,
+                    assignment.histogram()
+                );
+            }
+            Decision::FreezeBase => {
+                // frozen base keeps no optimizer state — the paper's memory
+                // saving made literal
+                self.opt_base = None;
+                eprintln!(
+                    "[prelora] epoch {}: warmup done -> base frozen, LoRA-only ({} trainable params, {:.1}% of full)",
+                    self.history.epochs(),
+                    self.trainable_params(),
+                    100.0 * self.trainable_params() as f64 / self.manifest.full_trainable() as f64
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the configured number of epochs and summarize.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        for _ in 0..self.cfg.train.epochs {
+            let s = self.run_epoch()?;
+            eprintln!(
+                "[{}] epoch {:>3} [{}] loss {:.4} acc {:.3} val_loss {:.4} val_acc {:.3} {:.2}s {:.0} img/s",
+                self.cfg.run_name,
+                s.epoch,
+                s.phase,
+                s.train_loss,
+                s.train_acc,
+                s.val_loss,
+                s.val_acc,
+                s.epoch_seconds,
+                s.images_per_sec,
+            );
+        }
+        Ok(self.summary())
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        RunSummary::from_stats(
+            &self.cfg,
+            &self.manifest,
+            &self.stats,
+            self.controller.switch_epoch(),
+            self.controller.freeze_epoch(),
+            self.adapter_cfg.as_ref(),
+        )
+    }
+
+    /// Save current model state.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            epoch: self.history.epochs(),
+            base: self.base.clone(),
+            lora: self.lora.clone(),
+            adapter_cfg: self.adapter_cfg.as_ref().map(|a| a.values.clone()),
+            ranks: self.adapter_cfg.as_ref().map(|a| a.ranks.clone()),
+        }
+    }
+
+    /// Restore model state (phase machine state is not restored — used for
+    /// eval/analysis, not resumption mid-run).
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        anyhow::ensure!(ckpt.base.len() == self.base.len(), "checkpoint size mismatch");
+        self.base.copy_from_slice(&ckpt.base);
+        self.lora = ckpt.lora.clone();
+        Ok(())
+    }
+}

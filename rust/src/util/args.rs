@@ -1,0 +1,172 @@
+//! Tiny CLI argument parser (offline substrate; no `clap` available).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and a
+//! leading subcommand word. Unknown flags are hard errors; `--help` text
+//! is assembled from registered flags.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+}
+
+/// Declarative flag set + parsed values for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a value-taking flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, takes_value: true });
+        self
+    }
+
+    /// Register a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, takes_value: false });
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut s = format!("usage: prelora {cmd} [flags]\n");
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            s.push_str(&format!("  {arg:<24} {}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse raw args (after the subcommand). Returns Err on unknown flags
+    /// or a missing value; `--help` produces a special error containing
+    /// the usage text.
+    pub fn parse(mut self, cmd: &str, raw: &[String]) -> Result<Self> {
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage(cmd));
+            }
+            let Some(body) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}\n{}", self.usage(cmd));
+            };
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let Some(spec) = self.specs.iter().find(|s| s.name == name) else {
+                bail!("unknown flag --{name}\n{}", self.usage(cmd));
+            };
+            if spec.takes_value {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        let Some(v) = raw.get(i) else {
+                            bail!("flag --{name} requires a value");
+                        };
+                        v.clone()
+                    }
+                };
+                self.values.insert(name.to_string(), value);
+            } else {
+                if inline.is_some() {
+                    bail!("flag --{name} takes no value");
+                }
+                self.bools.insert(name.to_string(), true);
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("invalid value for --{name}: {e}"),
+            },
+        }
+    }
+
+    pub fn get_switch(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new()
+            .flag("model", "model name")
+            .flag("epochs", "epoch count")
+            .switch("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let a = spec()
+            .parse("train", &raw(&["--model", "vit-micro", "--epochs=12", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("model"), Some("vit-micro"));
+        assert_eq!(a.get_parsed::<usize>("epochs").unwrap(), Some(12));
+        assert!(a.get_switch("verbose"));
+        assert_eq!(a.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(spec().parse("t", &raw(&["--nope"])).is_err());
+        assert!(spec().parse("t", &raw(&["--model"])).is_err());
+        assert!(spec().parse("t", &raw(&["positional"])).is_err());
+        assert!(spec().parse("t", &raw(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let err = spec().parse("train", &raw(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("--model"));
+        assert!(err.contains("usage: prelora train"));
+    }
+
+    #[test]
+    fn bad_parse_reports_flag_name() {
+        let a = spec().parse("t", &raw(&["--epochs", "abc"])).unwrap();
+        let err = a.get_parsed::<usize>("epochs").unwrap_err().to_string();
+        assert!(err.contains("--epochs"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Micro-benchmark harness (offline substrate; no `criterion` available).
+//!
+//! `harness = false` benches call [`Bench::run`] per case: warmup, then
+//! timed iterations until both a minimum iteration count and a minimum
+//! wall budget are met, reporting mean / p50 / p95 and allowing throughput
+//! annotation. Deliberately simple but honest: per-iteration timings, no
+//! batching tricks, outliers visible in the p95.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Optional unit count per iteration (e.g. images) for throughput.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.mean.as_secs_f64())
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        );
+        if let Some(t) = self.throughput() {
+            s.push_str(&format!("  {t:.1} units/s"));
+        }
+        s
+    }
+}
+
+/// Harness configuration.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1_000_000,
+            min_time: Duration::from_millis(300),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Heavier cases (whole epochs): fewer, longer iterations.
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(500),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must perform one full iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.run_with_units(name, None, &mut f)
+    }
+
+    /// Time `f` and annotate each iteration as processing `units` items.
+    pub fn run_units<F: FnMut()>(&mut self, name: &str, units: f64, mut f: F) -> &Measurement {
+        self.run_with_units(name, Some(units), &mut f)
+    }
+
+    fn run_with_units(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (times.len() < self.min_iters || start.elapsed() < self.min_time)
+            && times.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: times.len(),
+            mean: total / times.len() as u32,
+            p50: times[times.len() / 2],
+            p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+            units_per_iter: units,
+        };
+        println!("{}", m.render());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as CSV next to the figure data.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("name,iters,mean_s,p50_s,p95_s,units_per_s\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{}\n",
+                m.name,
+                m.iters,
+                m.mean.as_secs_f64(),
+                m.p50.as_secs_f64(),
+                m.p95.as_secs_f64(),
+                m.throughput().map_or(String::from(""), |t| format!("{t:.3}")),
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders_percentiles() {
+        let mut b = Bench {
+            warmup_iters: 0,
+            min_iters: 20,
+            max_iters: 20,
+            min_time: Duration::ZERO,
+            results: Vec::new(),
+        };
+        let mut x = 0u64;
+        let m = b.run("spin", || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(m.iters, 20);
+        assert!(m.p50 <= m.p95);
+        assert!(m.mean > Duration::ZERO);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bench {
+            warmup_iters: 0,
+            min_iters: 5,
+            max_iters: 5,
+            min_time: Duration::ZERO,
+            results: Vec::new(),
+        };
+        let m = b.run_units("units", 100.0, || {
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        let t = m.throughput().unwrap();
+        assert!(t > 0.0 && t < 1_000_000.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Offline substrates: the build environment has no network access and
+//! only the `xla` + `anyhow` crates vendored, so the pieces a production
+//! crate would pull from the ecosystem are implemented in-tree:
+//!
+//! * [`json`]    — strict JSON parser/writer (manifest, checkpoints, summaries)
+//! * [`tomlish`] — TOML-subset config parser (run configs)
+//! * [`args`]    — CLI flag parser (the `prelora` binary)
+//! * [`bench`]   — micro-benchmark harness (`benches/*.rs`, harness = false)
+//! * [`prop`]    — property-testing driver with shrinking (invariant tests)
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod tomlish;

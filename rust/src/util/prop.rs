@@ -1,0 +1,147 @@
+//! Property-testing driver (offline substrate; no `proptest` available).
+//!
+//! [`check`] runs a property over many PCG-generated random cases and, on
+//! failure, performs greedy input shrinking via the case's [`Shrink`]
+//! implementation before panicking with the minimal counterexample. Used
+//! by the coordinator-invariant tests (rank assignment, all-reduce,
+//! loader determinism, convergence monotonicity).
+
+use crate::tensor::Pcg64;
+
+/// Types that can generate themselves from an RNG and shrink toward
+/// simpler counterexamples.
+pub trait Arbitrary: Sized + std::fmt::Debug + Clone {
+    fn generate(rng: &mut Pcg64) -> Self;
+
+    /// Candidate simplifications (smaller vectors, smaller numbers...).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` random inputs (seeded deterministically per
+/// test by `seed`). Panics with a shrunk counterexample on failure.
+pub fn check<T: Arbitrary, F: Fn(&T) -> bool>(seed: u64, cases: usize, prop: F) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let input = T::generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!("property failed on case {case}: {minimal:#?}");
+        }
+    }
+}
+
+fn shrink_loop<T: Arbitrary, F: Fn(&T) -> bool>(mut failing: T, prop: &F) -> T {
+    // greedy descent: keep taking the first shrink that still fails
+    let mut budget = 1000;
+    'outer: while budget > 0 {
+        for cand in failing.shrink() {
+            budget -= 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---- common generators ----
+
+impl Arbitrary for f64 {
+    fn generate(rng: &mut Pcg64) -> Self {
+        (rng.next_f64() - 0.5) * 200.0
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self != 0.0 {
+            v.push(0.0);
+            v.push(self / 2.0);
+        }
+        v
+    }
+}
+
+impl Arbitrary for usize {
+    fn generate(rng: &mut Pcg64) -> Self {
+        rng.next_below(1000)
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            Vec::new()
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let n = 1 + rng.next_below(32);
+        (0..n).map(|_| T::generate(rng)).collect()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+        }
+        // shrink one element
+        if let Some(first) = self.first() {
+            for s in first.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[0] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn generate(rng: &mut Pcg64) -> Self {
+        (A::generate(rng), B::generate(rng))
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check::<Vec<usize>, _>(1, 200, |v| !v.is_empty());
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check::<Vec<usize>, _>(2, 200, |v| v.iter().sum::<usize>() < 100);
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("property failed"), "{msg}");
+        // shrunk example should be small (one or two elements)
+        let brackets = msg.matches(',').count();
+        assert!(brackets <= 4, "not shrunk enough: {msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        let x: Vec<f64> = Arbitrary::generate(&mut a);
+        let y: Vec<f64> = Arbitrary::generate(&mut b);
+        assert_eq!(x, y);
+    }
+}

@@ -1,0 +1,236 @@
+//! Minimal TOML-subset parser for run configs (offline substrate; no
+//! `toml` crate available).
+//!
+//! Supported grammar — the subset `RunConfig` round-trips through:
+//!
+//! ```toml
+//! # comment
+//! key = "string"
+//! key2 = 42
+//! [section.subsection]
+//! flag = true
+//! rate = 1.5e-3
+//! ```
+//!
+//! Values: quoted strings, booleans, integers, floats. Keys are flattened
+//! to dotted paths (`section.subsection.flag`). Duplicate keys and unknown
+//! syntax are hard errors — config typos should fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as u64),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Parse a document into dotted-path -> value.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.') {
+                bail!("line {}: invalid section name {name:?}", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            bail!("line {}: invalid key {key:?}", lineno + 1);
+        }
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(val.trim(), lineno + 1)?;
+        if out.insert(path.clone(), value).is_some() {
+            bail!("line {}: duplicate key {path}", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        // simple escapes only
+        let mut out = String::new();
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("line {lineno}: bad escape {other:?}"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+/// Serialize helpers for writing configs back out.
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::from("\"");
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = r#"
+# top comment
+model = "vit-small"   # trailing comment
+seed = 42
+[train]
+lr = 1.5e-3
+epochs = 60
+[train.dp]
+threaded = true
+allreduce = "ring"
+"#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["model"], Value::Str("vit-small".into()));
+        assert_eq!(m["seed"], Value::Int(42));
+        assert_eq!(m["train.lr"], Value::Float(1.5e-3));
+        assert_eq!(m["train.epochs"], Value::Int(60));
+        assert_eq!(m["train.dp.threaded"], Value::Bool(true));
+        assert_eq!(m["train.dp.allreduce"], Value::Str("ring".into()));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = parse("name = \"exp#1\"").unwrap();
+        assert_eq!(m["name"], Value::Str("exp#1".into()));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("a = ???").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_usize().unwrap(), 3);
+        assert!(Value::Int(-1).as_usize().is_err());
+        assert_eq!(Value::Int(2).as_f64().unwrap(), 2.0);
+        assert!(Value::Str("x".into()).as_f64().is_err());
+        assert_eq!(Value::Bool(true).as_bool().unwrap(), true);
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let s = "a\"b\\c\nd";
+        let doc = format!("k = {}", escape_str(s));
+        let m = parse(&doc).unwrap();
+        assert_eq!(m["k"], Value::Str(s.into()));
+    }
+}

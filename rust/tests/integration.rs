@@ -1,0 +1,348 @@
+//! Integration tests: the full PreLoRA lifecycle through real artifacts,
+//! plus property-based invariants over the coordinator components.
+//!
+//! Requires `make artifacts` (vit-micro) to have run.
+
+use std::collections::BTreeMap;
+
+use prelora::config::{RunConfig, StrictnessPreset};
+use prelora::coordinator::Phase;
+use prelora::data::{Dataset, EpochLoader, SynthSpec};
+use prelora::dp::{reduce_mean, Algorithm};
+use prelora::rank::{assign_ranks, rank_buckets};
+use prelora::tensor::Pcg64;
+use prelora::trainer::{Checkpoint, Trainer};
+use prelora::util::prop::{check, Arbitrary};
+
+fn micro_config(epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "vit-micro".into();
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    cfg.run_name = "itest".into();
+    cfg.train.epochs = epochs;
+    cfg.train.data.train_samples = 192;
+    cfg.train.data.val_samples = 64;
+    cfg.train.eval_every = 4;
+    // relaxed thresholds so the micro run switches quickly
+    cfg.prelora.tau = 6.0;
+    cfg.prelora.zeta = 25.0;
+    cfg.prelora.windows = 2;
+    cfg.prelora.window_epochs = 2;
+    cfg.prelora.warmup_epochs = 2;
+    cfg
+}
+
+#[test]
+fn full_prelora_lifecycle_reaches_lora_phase_and_learns() {
+    let mut t = Trainer::new(micro_config(16)).unwrap();
+    let summary = t.run().unwrap();
+    // the controller must have walked Full -> Warmup -> LoraOnly
+    assert!(summary.switch_epoch.is_some(), "never switched");
+    assert!(summary.freeze_epoch.is_some(), "never froze");
+    assert!(t.phase().is_lora_only());
+    // learning happened overall
+    let first = t.stats[0].train_loss;
+    let last = t.stats.last().unwrap().train_loss;
+    assert!(last < first - 0.3, "no learning: {first} -> {last}");
+    // trainable params dropped to a small fraction (paper: ~10%)
+    let frac = summary.trainable_lora.unwrap() as f64 / summary.trainable_full as f64;
+    assert!(frac < 0.35, "trainable fraction {frac}");
+    // rank histogram only uses bucket ranks
+    let c = &t.manifest.config;
+    let buckets = rank_buckets(c.r_min, c.r_max);
+    for r in summary.rank_histogram.unwrap().keys() {
+        assert!(buckets.contains(r), "rank {r} not in {buckets:?}");
+    }
+    // memory accounting: lora phase cheaper than full phase (requires at
+    // least one post-freeze epoch to have run)
+    assert!(
+        summary.by_phase.get("lora").map_or(0, |a| a.epochs) > 0,
+        "no lora-phase epochs ran; freeze too late for this test's length"
+    );
+    assert!(summary.memory_saving_frac.unwrap() > 0.0);
+}
+
+#[test]
+fn baseline_never_switches() {
+    let mut cfg = micro_config(6);
+    cfg.prelora.enabled = false;
+    let mut t = Trainer::new(cfg).unwrap();
+    let summary = t.run().unwrap();
+    assert!(summary.switch_epoch.is_none());
+    assert!(t.phase().is_full());
+    assert!(summary.by_phase.contains_key("full"));
+    assert!(!summary.by_phase.contains_key("lora"));
+}
+
+#[test]
+fn strict_preset_switches_later_than_relaxed() {
+    let run = |preset: StrictnessPreset| {
+        let mut cfg = micro_config(20);
+        cfg.prelora = cfg.prelora.with_preset(preset);
+        cfg.prelora.windows = 2;
+        cfg.prelora.window_epochs = 2;
+        let mut t = Trainer::new(cfg).unwrap();
+        for _ in 0..20 {
+            t.run_epoch().unwrap();
+            if t.controller().switch_epoch().is_some() {
+                break;
+            }
+        }
+        t.controller().switch_epoch()
+    };
+    let relaxed = run(StrictnessPreset::Exp1);
+    let strict = run(StrictnessPreset::Exp3);
+    // Exp1 must not switch after Exp3 (strictly-ordered thresholds);
+    // either may not switch at all in 20 micro-epochs
+    if let (Some(r), Some(s)) = (relaxed, strict) {
+        assert!(r <= s, "relaxed switched at {r}, strict at {s}");
+    }
+    if relaxed.is_none() {
+        assert!(strict.is_none(), "strict switched but relaxed did not");
+    }
+}
+
+#[test]
+fn dp_workers_match_single_worker_numerics() {
+    // 2-worker global batch == 1-worker with the same sample set is NOT
+    // the same batch split, so instead check determinism: same config
+    // twice => identical loss trajectories.
+    let mut a = Trainer::new(micro_config(3)).unwrap();
+    let mut b = Trainer::new(micro_config(3)).unwrap();
+    for _ in 0..3 {
+        let sa = a.run_epoch().unwrap();
+        let sb = b.run_epoch().unwrap();
+        assert_eq!(sa.train_loss, sb.train_loss, "non-deterministic training");
+    }
+}
+
+#[test]
+fn threaded_two_worker_run_is_deterministic() {
+    let make = || {
+        let mut cfg = micro_config(2);
+        cfg.train.dp.workers = 2;
+        cfg.train.dp.threaded = true;
+        Trainer::new(cfg).unwrap()
+    };
+    let mut a = make();
+    let mut b = make();
+    for _ in 0..2 {
+        let sa = a.run_epoch().unwrap();
+        let sb = b.run_epoch().unwrap();
+        assert_eq!(sa.train_loss, sb.train_loss);
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let mut t = Trainer::new(micro_config(2)).unwrap();
+    t.run_epoch().unwrap();
+    let ck = t.checkpoint();
+    let path = std::env::temp_dir().join(format!("prelora_itest_{}.ckpt", std::process::id()));
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.base, ck.base);
+    assert_eq!(back.epoch, 1);
+    t.restore(&back).unwrap();
+    std::fs::remove_file(path).unwrap();
+}
+
+#[test]
+fn warmup_window_length_is_respected() {
+    let mut cfg = micro_config(18);
+    cfg.prelora.warmup_epochs = 4;
+    let mut t = Trainer::new(cfg).unwrap();
+    for _ in 0..18 {
+        t.run_epoch().unwrap();
+    }
+    if let (Some(s), Some(f)) = (t.controller().switch_epoch(), t.controller().freeze_epoch()) {
+        assert_eq!(f - s, 4, "warmup must last w epochs");
+        assert!(matches!(t.phase(), Phase::LoraOnly { .. }));
+    } else {
+        panic!("run never completed the lifecycle: {:?}", t.controller().switch_epoch());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property-based invariants (in-tree prop driver, see util::prop)
+// ---------------------------------------------------------------------------
+
+/// Random per-module delta tables for Algorithm 2.
+#[derive(Debug, Clone)]
+struct DeltaTable(BTreeMap<String, Vec<f64>>);
+
+impl Arbitrary for DeltaTable {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let layers = 1 + rng.next_below(12);
+        let mods = ["query", "key", "value", "output", "dense"];
+        let n_mods = 1 + rng.next_below(mods.len());
+        let mut m = BTreeMap::new();
+        for md in mods.iter().take(n_mods) {
+            let v: Vec<f64> = (0..layers).map(|_| (rng.next_f64() - 0.3) * 10.0).collect();
+            m.insert(md.to_string(), v);
+        }
+        DeltaTable(m)
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.0.len() > 1 {
+            let mut m = self.0.clone();
+            let k = m.keys().next().unwrap().clone();
+            m.remove(&k);
+            out.push(DeltaTable(m));
+        }
+        if self.0.values().next().map_or(0, |v| v.len()) > 1 {
+            let m = self
+                .0
+                .iter()
+                .map(|(k, v)| (k.clone(), v[..v.len() / 2].to_vec()))
+                .collect();
+            out.push(DeltaTable(m));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_rank_assignment_invariants() {
+    check::<DeltaTable, _>(101, 300, |t| {
+        let a = assign_ranks(&t.0, 2, 16);
+        let buckets = rank_buckets(2, 16);
+        for (module, deltas) in &t.0 {
+            let ranks = &a.by_module[module];
+            // every layer assigned, every rank a bucket
+            if ranks.len() != deltas.len() || ranks.iter().any(|r| !buckets.contains(r)) {
+                return false;
+            }
+            // monotonicity: larger |delta| never gets a smaller rank
+            for i in 0..deltas.len() {
+                for j in 0..deltas.len() {
+                    if deltas[i].abs() < deltas[j].abs() && ranks[i] > ranks[j] {
+                        return false;
+                    }
+                }
+            }
+            // extremes hit the extreme buckets (non-degenerate case)
+            let lo = deltas.iter().map(|d| d.abs()).fold(f64::INFINITY, f64::min);
+            let hi = deltas.iter().map(|d| d.abs()).fold(0.0f64, f64::max);
+            if (hi - lo).abs() > 1e-12 {
+                let imax = (0..deltas.len())
+                    .max_by(|&i, &j| deltas[i].abs().total_cmp(&deltas[j].abs()))
+                    .unwrap();
+                let imin = (0..deltas.len())
+                    .min_by(|&i, &j| deltas[i].abs().total_cmp(&deltas[j].abs()))
+                    .unwrap();
+                if ranks[imax] != 16 || ranks[imin] != 2 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Random all-reduce inputs: (workers, len) sized buffers.
+#[derive(Debug, Clone)]
+struct ReduceCase {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl Arbitrary for ReduceCase {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let n = 2 + rng.next_below(9);
+        let len = 1 + rng.next_below(300);
+        let bufs = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_f32() * 4.0 - 2.0).collect())
+            .collect();
+        ReduceCase { bufs }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.bufs.len() > 2 {
+            out.push(ReduceCase { bufs: self.bufs[..self.bufs.len() - 1].to_vec() });
+        }
+        let len = self.bufs[0].len();
+        if len > 1 {
+            out.push(ReduceCase {
+                bufs: self.bufs.iter().map(|b| b[..len / 2].to_vec()).collect(),
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_allreduce_algorithms_agree() {
+    check::<ReduceCase, _>(202, 200, |case| {
+        let mut naive = case.bufs.clone();
+        let mut tree = case.bufs.clone();
+        let mut ring = case.bufs.clone();
+        reduce_mean(Algorithm::Naive, &mut naive);
+        reduce_mean(Algorithm::Tree, &mut tree);
+        reduce_mean(Algorithm::Ring, &mut ring);
+        naive[0]
+            .iter()
+            .zip(&tree[0])
+            .zip(&ring[0])
+            .all(|((&a, &b), &c)| (a - b).abs() < 1e-4 && (a - c).abs() < 1e-4)
+    });
+}
+
+/// Loader sharding: disjoint cover of the epoch prefix.
+#[derive(Debug, Clone)]
+struct LoaderCase {
+    samples: usize,
+    batch: usize,
+    workers: usize,
+    seed: u64,
+}
+
+impl Arbitrary for LoaderCase {
+    fn generate(rng: &mut Pcg64) -> Self {
+        LoaderCase {
+            samples: 16 + rng.next_below(300),
+            batch: 1 + rng.next_below(8),
+            workers: 1 + rng.next_below(4),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+#[test]
+fn prop_loader_shards_are_disjoint_and_deterministic() {
+    check::<LoaderCase, _>(303, 60, |c| {
+        let data = Dataset::generate(&SynthSpec {
+            samples: c.samples,
+            image_size: 8,
+            channels: 1,
+            num_classes: 4,
+            noise: 0.1,
+            phase_jitter: false,
+            seed: c.seed,
+        });
+        let loader = EpochLoader::new(c.batch, c.workers, c.seed);
+        let steps = loader.steps_per_epoch(&data);
+        if steps == 0 {
+            return true;
+        }
+        // labels drawn across one epoch must match dataset multiset prefix
+        let mut seen = 0usize;
+        for step in 0..steps {
+            let batches = loader.step_batches(&data, 1, step);
+            if batches.len() != c.workers {
+                return false;
+            }
+            for b in &batches {
+                if b.labels.len() != c.batch {
+                    return false;
+                }
+                seen += b.labels.len();
+            }
+        }
+        // determinism
+        let again = loader.step_batches(&data, 1, 0);
+        seen == steps * c.batch * c.workers && again[0].labels == loader.step_batches(&data, 1, 0)[0].labels
+    });
+}

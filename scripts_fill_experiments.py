@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Inject measured figure results into EXPERIMENTS.md placeholders."""
+import csv, json, pathlib, re
+
+root = pathlib.Path("/root/repo")
+exp = (root / "EXPERIMENTS.md").read_text()
+
+def table(rows, header):
+    out = ["| " + " | ".join(header) + " |", "|" + "---|" * len(header)]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+# Fig4
+p = root / "results/fig4_summary.csv"
+if p.exists() and p.stat().st_size > 40:
+    rows = []
+    for r in csv.DictReader(open(p)):
+        sw = int(float(r["switch_epoch"])); fr = int(float(r["freeze_epoch"]))
+        rows.append([r["run"], sw if sw >= 0 else "—", fr if fr >= 0 else "—",
+                     f"{float(r['mean_epoch_s']):.2f}", f"{float(r['speedup_pct']):.1f}%",
+                     f"{float(r['final_loss']):.4f}"])
+    t = table(rows, ["run", "switch", "freeze", "mean epoch s", "speedup", "final loss"])
+    exp = exp.replace("<!-- FIG4_RESULTS -->", "Measured (30 epochs, vit-small):\n\n" + t)
+
+# Fig5: freeze epochs + final losses per w from curves
+p = root / "results/fig5_epoch_time.csv"
+q = root / "results/fig5_loss.csv"
+if p.exists() and p.stat().st_size > 40:
+    times, losses, firstlora = {}, {}, {}
+    for r in csv.DictReader(open(p)):
+        times.setdefault(r["run"], []).append(float(r["epoch_seconds"]))
+        if float(r["phase"]) == 2.0 and r["run"] not in firstlora:
+            firstlora[r["run"]] = int(float(r["epoch"]))
+    for r in csv.DictReader(open(q)):
+        losses.setdefault(r["run"], []).append(float(r["train_loss"]))
+    rows = []
+    for run in sorted(times):
+        rows.append([run, firstlora.get(run, "—"),
+                     f"{sum(times[run])/len(times[run]):.2f}",
+                     f"{losses[run][-1]:.4f}"])
+    t = table(rows, ["run", "first LoRA-only epoch", "mean epoch s", "final loss"])
+    exp = exp.replace("<!-- FIG5_RESULTS -->", "Measured (30 epochs, vit-small):\n\n" + t)
+
+# Fig7
+p = root / "results/fig7.csv"
+if p.exists() and p.stat().st_size > 40:
+    names = ["epoch_time_s", "throughput_img_s", "memory_bytes(saving)", "trainable_params"]
+    rows = []
+    for r in csv.DictReader(open(p)):
+        i = int(float(r["metric_id"]))
+        rows.append([names[i], f"{float(r['baseline']):.2f}", f"{float(r['prelora']):.2f}",
+                     f"{float(r['ratio']):.3f}"])
+    t = table(rows, ["metric", "baseline", "prelora", "ratio"])
+    exp = exp.replace("<!-- FIG7_RESULTS -->", "Measured (24 epochs, vit-small, whole-cycle averages):\n\n" + t)
+
+# e2e
+p = root / "results/e2e_summary.json"
+if p.exists():
+    s = json.loads(p.read_text())
+    lines = [
+        f"Measured ({s['model']}, {s['epochs']} epochs): switch at {s['switch_epoch']}, "
+        f"freeze at {s['freeze_epoch']}; final train loss {s['final_train_loss']:.4f}, "
+        f"val acc {s['final_val_acc']:.3f}; trainable {s['trainable_full']} -> "
+        f"{s['trainable_lora']}"]
+    if s.get("epoch_time_ratio"):
+        lines.append(f"; epoch-time ratio {s['epoch_time_ratio']:.2f}x, "
+                     f"throughput ratio {s['throughput_ratio']:.2f}x, "
+                     f"memory saving {100*s['memory_saving_frac']:.1f}%.")
+    exp = exp.replace("<!-- E2E_RESULTS -->", "".join(lines))
+
+# ablation
+p = root / "results/ablation_strategies.csv"
+if p.exists() and p.stat().st_size > 40:
+    rows = []
+    for r in csv.DictReader(open(p)):
+        sw = int(float(r["switch"])); fr = int(float(r["freeze"]))
+        rows.append([r["run"], sw if sw >= 0 else "—", fr if fr >= 0 else "—",
+                     f"{float(r['final_loss']):.4f}", int(float(r["trainable_params"])),
+                     f"{float(r['mean_epoch_s']):.3f}"])
+    t = table(rows, ["run", "switch", "freeze", "final loss", "trainable", "mean epoch s"])
+    exp = exp.replace("<!-- ABLATION_RESULTS -->", "Measured (20 epochs, vit-micro):\n\n" + t)
+
+(root / "EXPERIMENTS.md").write_text(exp)
+print("filled")
