@@ -9,9 +9,12 @@
 
 use std::sync::Arc;
 
+use prelora::config::{PipelineConfig, TrainConfig};
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
 use prelora::dp::{Algorithm, GradEngine, StepMode};
 use prelora::manifest::{Manifest, ADAPTED_MODULES};
+use prelora::optim;
+use prelora::pipeline::{ModelState, StepPipeline, UpdateStage};
 use prelora::rank::{build_adapter_cfg, uniform_ranks};
 use prelora::tensor::Pcg64;
 use prelora::util::bench::Bench;
@@ -65,6 +68,73 @@ fn bench_model(b: &mut Bench, name: &str) {
     });
 }
 
+/// Pipeline-on vs pipeline-off: one full-phase epoch at 2 threaded
+/// workers through the staged engine vs the serial reference loop. The
+/// overlap claim is that the pipelined per-step wall clock is <= the
+/// sequential one (prefetch + deferred accounting hide the data and
+/// bookkeeping work behind the workers' compute).
+fn bench_pipeline(b: &mut Bench, name: &str) {
+    let dir = std::path::Path::new("artifacts").join(name);
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("skipping {name} pipeline bench: no artifacts");
+        return;
+    };
+    let m = Arc::new(m);
+    let c = m.config.clone();
+    let workers = 2;
+    let epoch_steps = 4;
+    let data = Arc::new(Dataset::generate(&SynthSpec {
+        samples: c.batch_size * workers * epoch_steps,
+        image_size: c.image_size,
+        channels: c.in_channels,
+        num_classes: c.num_classes,
+        noise: 0.3,
+        phase_jitter: true,
+        seed: 2,
+    }));
+    let loader = EpochLoader::new(c.batch_size, workers, 0);
+    let steps = loader.steps_per_epoch(&data);
+    let mut engine = GradEngine::new(m.clone(), workers, true, Algorithm::Tree).unwrap();
+    let tcfg = TrainConfig::default();
+    let base = m.load_init_base().unwrap();
+    let update = UpdateStage::new(tcfg.grad_clip);
+    let units = (c.batch_size * workers * steps) as f64;
+    let mut means = [0.0f64; 2];
+    for enabled in [false, true] {
+        let pcfg = PipelineConfig { enabled, prefetch_depth: 2, overlap_reduce: true };
+        let mut pipe = StepPipeline::new(&pcfg, engine.algorithm()).unwrap();
+        let mut model = ModelState::new(base.clone(), optim::build(&tcfg, base.len()));
+        let label = format!(
+            "{name}/epoch_pipeline_{}",
+            if enabled { "on" } else { "off" }
+        );
+        let mean = b
+            .run_units(&label, units, || {
+                pipe.run_epoch(
+                    &mut engine,
+                    &loader,
+                    &data,
+                    &mut model,
+                    &update,
+                    StepMode::Full,
+                    0,
+                    steps,
+                    1e-3,
+                )
+                .unwrap();
+            })
+            .mean;
+        means[enabled as usize] = mean.as_secs_f64();
+    }
+    let [off, on] = means;
+    println!(
+        "{name}: per-step wall clock pipelined {:.3} ms vs sequential {:.3} ms ({:.2}x, expect <= 1 at {workers} workers)",
+        on * 1e3 / steps as f64,
+        off * 1e3 / steps as f64,
+        on / off
+    );
+}
+
 fn main() {
     let mut b = Bench::heavy();
     // PRELORA_BENCH_MODELS=vit-small,... restricts the sweep
@@ -72,6 +142,7 @@ fn main() {
         .unwrap_or_else(|_| "vit-micro,vit-small,vit-base-sim".into());
     for model in models.split(',') {
         bench_model(&mut b, model);
+        bench_pipeline(&mut b, model);
     }
     b.write_csv("results/bench_step_latency.csv").unwrap();
     // Fig. 7 shape assertion: the frozen-base step must beat the full step

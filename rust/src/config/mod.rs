@@ -6,7 +6,9 @@ mod prelora;
 mod train;
 
 pub use prelora::{ConvergenceStrategyKind, PreLoraConfig, StrictnessPreset};
-pub use train::{DataConfig, DpConfig, LrScheduleKind, OptimizerKind, TrainConfig};
+pub use train::{
+    DataConfig, DpConfig, LrScheduleKind, OptimizerKind, PipelineConfig, TrainConfig,
+};
 
 use std::path::Path;
 
@@ -92,6 +94,9 @@ impl RunConfig {
             "train.dp.workers" => t.dp.workers = v.as_usize()?,
             "train.dp.allreduce" => t.dp.allreduce = v.as_str()?.to_string(),
             "train.dp.threaded" => t.dp.threaded = v.as_bool()?,
+            "train.pipeline.enabled" => t.pipeline.enabled = v.as_bool()?,
+            "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
+            "train.pipeline.overlap_reduce" => t.pipeline.overlap_reduce = v.as_bool()?,
             "prelora.enabled" => p.enabled = v.as_bool()?,
             "prelora.windows" => p.windows = v.as_usize()?,
             "prelora.window_epochs" => p.window_epochs = v.as_usize()?,
@@ -145,6 +150,10 @@ impl RunConfig {
         s.push_str(&format!("workers = {}\n", t.dp.workers));
         s.push_str(&format!("allreduce = {}\n", escape_str(&t.dp.allreduce)));
         s.push_str(&format!("threaded = {}\n\n", t.dp.threaded));
+        s.push_str("[train.pipeline]\n");
+        s.push_str(&format!("enabled = {}\n", t.pipeline.enabled));
+        s.push_str(&format!("prefetch_depth = {}\n", t.pipeline.prefetch_depth));
+        s.push_str(&format!("overlap_reduce = {}\n\n", t.pipeline.overlap_reduce));
         s.push_str("[prelora]\n");
         s.push_str(&format!("enabled = {}\n", p.enabled));
         s.push_str(&format!("windows = {}\n", p.windows));
@@ -215,6 +224,19 @@ mod tests {
         assert_eq!(back.train.epochs, cfg.train.epochs);
         assert_eq!(back.train.dp.workers, 4);
         assert_eq!(back.train.lr, cfg.train.lr);
+        assert_eq!(back.train.pipeline.enabled, cfg.train.pipeline.enabled);
+        assert_eq!(back.train.pipeline.prefetch_depth, cfg.train.pipeline.prefetch_depth);
+    }
+
+    #[test]
+    fn pipeline_keys_parse() {
+        let cfg = RunConfig::from_toml_str(
+            "[train.pipeline]\nenabled = false\nprefetch_depth = 4\noverlap_reduce = false\n",
+        )
+        .unwrap();
+        assert!(!cfg.train.pipeline.enabled);
+        assert_eq!(cfg.train.pipeline.prefetch_depth, 4);
+        assert!(!cfg.train.pipeline.overlap_reduce);
     }
 
     #[test]

@@ -103,6 +103,27 @@ impl Default for DpConfig {
 }
 
 #[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Drive epochs through the staged step pipeline
+    /// (prefetch -> compute -> reduce -> update, see `crate::pipeline`);
+    /// `false` runs the fully serial reference loop. Both paths produce
+    /// bit-identical losses for a fixed seed.
+    pub enabled: bool,
+    /// Global steps of batches the prefetch stage may materialize ahead of
+    /// the compute stage (>= 1).
+    pub prefetch_depth: usize,
+    /// Reduce the base gradients on the stage thread concurrently with the
+    /// LoRA gradients on the leader when a step carries both (warmup).
+    pub overlap_reduce: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { enabled: true, prefetch_depth: 2, overlap_reduce: true }
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Total training epochs (paper: 300 on ImageNet; scaled here).
     pub epochs: usize,
@@ -126,6 +147,7 @@ pub struct TrainConfig {
     pub checkpoint_every: usize,
     pub data: DataConfig,
     pub dp: DpConfig,
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for TrainConfig {
@@ -146,6 +168,7 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             data: DataConfig::default(),
             dp: DpConfig::default(),
+            pipeline: PipelineConfig::default(),
         }
     }
 }
@@ -160,10 +183,11 @@ impl TrainConfig {
         ensure!(self.eval_every >= 1, "eval_every >= 1");
         ensure!(self.train_batchable(), "train_samples must be > 0");
         ensure!(self.dp.workers >= 1, "workers >= 1");
-        ensure!(
-            ["naive", "tree", "ring"].contains(&self.dp.allreduce.as_str()),
-            "allreduce must be naive|tree|ring"
-        );
+        self.dp
+            .allreduce
+            .parse::<crate::dp::Algorithm>()
+            .map_err(|e| anyhow::anyhow!(e))?;
+        ensure!(self.pipeline.prefetch_depth >= 1, "pipeline.prefetch_depth >= 1");
         Ok(())
     }
 
@@ -185,6 +209,17 @@ mod tests {
     fn bad_allreduce_rejected() {
         let mut cfg = TrainConfig::default();
         cfg.dp.allreduce = "butterfly".into();
+        assert!(cfg.validate().is_err());
+        // case-insensitive spellings are fine (FromStr is the one parser)
+        let mut cfg = TrainConfig::default();
+        cfg.dp.allreduce = "Ring".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_pipeline_depth_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.prefetch_depth = 0;
         assert!(cfg.validate().is_err());
     }
 

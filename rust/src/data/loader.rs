@@ -23,6 +23,7 @@ pub struct Batch {
 /// assignment is round-robin over a per-epoch Fisher-Yates shuffle seeded
 /// from (seed, epoch), so runs are bit-reproducible regardless of worker
 /// thread interleaving — the property the DP equivalence test relies on.
+#[derive(Debug, Clone)]
 pub struct EpochLoader {
     batch: usize,
     workers: usize,
@@ -40,17 +41,19 @@ impl EpochLoader {
         data.len() / (self.batch * self.workers)
     }
 
-    /// Shuffled index order for one epoch.
-    fn epoch_order(&self, data: &Dataset, epoch: usize) -> Vec<usize> {
+    /// Shuffled index order for one epoch. Compute once per epoch and feed
+    /// [`step_batches_in`](Self::step_batches_in) — the prefetch stage does
+    /// this, instead of redoing the O(N) shuffle for every step.
+    pub fn epoch_order(&self, data: &Dataset, epoch: usize) -> Vec<usize> {
         let mut order: Vec<usize> = (0..data.len()).collect();
         let mut rng = Pcg64::new(self.seed ^ 0x5eed_0000).fork(epoch as u64);
         rng.shuffle(&mut order);
         order
     }
 
-    /// Materialize the per-worker batches of one global step.
-    pub fn step_batches(&self, data: &Dataset, epoch: usize, step: usize) -> Vec<Batch> {
-        let order = self.epoch_order(data, epoch);
+    /// Materialize one global step's per-worker batches from a precomputed
+    /// epoch order.
+    pub fn step_batches_in(&self, data: &Dataset, order: &[usize], step: usize) -> Vec<Batch> {
         let stride = self.batch * self.workers;
         let start = step * stride;
         assert!(start + stride <= order.len(), "step out of range");
@@ -60,6 +63,12 @@ impl EpochLoader {
                 self.gather(data, idx)
             })
             .collect()
+    }
+
+    /// Materialize the per-worker batches of one global step (convenience
+    /// wrapper that recomputes the epoch order).
+    pub fn step_batches(&self, data: &Dataset, epoch: usize, step: usize) -> Vec<Batch> {
+        self.step_batches_in(data, &self.epoch_order(data, epoch), step)
     }
 
     /// Sequential (unshuffled) batches for evaluation; remainder dropped.

@@ -20,6 +20,19 @@ pub struct SynthSpec {
     pub seed: u64,
 }
 
+impl SynthSpec {
+    /// Derive the spec for regenerating this split at `epoch` in the
+    /// infinite-data regime (`DataConfig::fresh_per_epoch`): same
+    /// distribution, an epoch-mixed seed. Epoch 0 reproduces the original
+    /// spec, so a fresh-per-epoch run's first epoch matches a fixed-data
+    /// run's.
+    pub fn fresh_epoch(&self, epoch: usize) -> SynthSpec {
+        let mut s = self.clone();
+        s.seed = self.seed ^ (epoch as u64).wrapping_mul(0x9e37_79b9);
+        s
+    }
+}
+
 /// An in-memory dataset: images as one contiguous [N, H, W, C] f32 block.
 pub struct Dataset {
     pub images: Vec<f32>,

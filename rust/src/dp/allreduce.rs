@@ -21,15 +21,37 @@ pub enum Algorithm {
     Ring,
 }
 
+impl Algorithm {
+    /// Canonical config-file spelling (round-trips through [`FromStr`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Algorithm::Naive => "naive",
+            Algorithm::Tree => "tree",
+            Algorithm::Ring => "ring",
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 impl FromStr for Algorithm {
     type Err = String;
 
     fn from_str(s: &str) -> Result<Self, String> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "naive" => Ok(Algorithm::Naive),
             "tree" => Ok(Algorithm::Tree),
             "ring" => Ok(Algorithm::Ring),
-            other => Err(format!("unknown allreduce algorithm {other:?}")),
+            other => Err(format!(
+                "unknown allreduce algorithm {other:?} (expected {}, {} or {})",
+                Algorithm::Naive,
+                Algorithm::Tree,
+                Algorithm::Ring
+            )),
         }
     }
 }
@@ -52,6 +74,21 @@ pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
     for v in bufs[0].iter_mut() {
         *v *= inv;
     }
+}
+
+/// Owned-buffer variant: reduce to the mean and hand back the first
+/// buffer, or `None` for an empty set. The primitive shared by
+/// `GradEngine::compute` and the pipeline's [`ReduceStage`] — both paths
+/// reduce through this exact summation schedule, which is what makes the
+/// pipelined loop bit-identical to the serial one.
+///
+/// [`ReduceStage`]: crate::pipeline::ReduceStage
+pub fn reduce_owned(alg: Algorithm, mut bufs: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+    if bufs.is_empty() {
+        return None;
+    }
+    reduce_mean(alg, &mut bufs);
+    Some(bufs.swap_remove(0))
 }
 
 fn naive(bufs: &mut [Vec<f32>]) {
@@ -184,10 +221,47 @@ mod tests {
     }
 
     #[test]
+    fn odd_worker_counts_and_unaligned_lengths_agree() {
+        // the ring schedule's chunking is the interesting case: worker
+        // counts that don't divide the buffer length exercise the ragged
+        // final chunk and the empty-chunk guard
+        for n in [3usize, 5, 7] {
+            for len in [1usize, 2, 17, 33, 101, 1023] {
+                check(Algorithm::Naive, n, len);
+                check(Algorithm::Tree, n, len);
+                check(Algorithm::Ring, n, len);
+            }
+        }
+    }
+
+    #[test]
     fn parse_algorithm() {
         assert_eq!("ring".parse::<Algorithm>().unwrap(), Algorithm::Ring);
         assert_eq!("tree".parse::<Algorithm>().unwrap(), Algorithm::Tree);
         assert!("mesh".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn display_roundtrips_case_insensitively() {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            assert_eq!(alg.to_string().parse::<Algorithm>().unwrap(), alg);
+            assert_eq!(
+                alg.to_string().to_uppercase().parse::<Algorithm>().unwrap(),
+                alg
+            );
+        }
+        let err = "mesh".parse::<Algorithm>().unwrap_err();
+        assert!(err.contains("naive") && err.contains("ring"), "{err}");
+    }
+
+    #[test]
+    fn reduce_owned_returns_first_buffer_mean() {
+        let (bufs, want) = make_bufs(3, 10);
+        let got = reduce_owned(Algorithm::Tree, bufs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+        assert!(reduce_owned(Algorithm::Tree, Vec::new()).is_none());
     }
 
     #[test]

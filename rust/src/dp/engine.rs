@@ -6,7 +6,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::allreduce::{reduce_mean, Algorithm};
+use super::allreduce::{reduce_owned, Algorithm};
 use crate::data::Batch;
 use crate::manifest::Manifest;
 use crate::runtime::{Input, Runtime};
@@ -50,6 +50,39 @@ pub struct GradResult {
     /// Wall seconds spent inside PJRT execute, summed over workers
     /// (= GPU-seconds analogue for the throughput accounting).
     pub execute_seconds: f64,
+}
+
+/// Raw per-worker gradients of one global step (worker order), scalars
+/// already aggregated. Produced by [`GradEngine::collect`]; the reduce
+/// stage (or [`StepOutputs::reduce`]) turns it into a [`GradResult`].
+#[derive(Debug)]
+pub struct StepOutputs {
+    /// One base-gradient buffer per worker that produced one.
+    pub base_grads: Vec<Vec<f32>>,
+    /// One LoRA-gradient buffer per worker that produced one.
+    pub lora_grads: Vec<Vec<f32>>,
+    /// Mean loss across workers.
+    pub loss: f64,
+    /// Total top-1 hits across shards.
+    pub correct: f64,
+    /// Samples processed this step.
+    pub samples: usize,
+    /// Wall seconds inside PJRT execute, summed over workers.
+    pub execute_seconds: f64,
+}
+
+impl StepOutputs {
+    /// All-reduce both buffer sets inline (the non-overlapped path).
+    pub fn reduce(self, algorithm: Algorithm) -> GradResult {
+        GradResult {
+            d_base: reduce_owned(algorithm, self.base_grads),
+            d_lora: reduce_owned(algorithm, self.lora_grads),
+            loss: self.loss,
+            correct: self.correct,
+            samples: self.samples,
+            execute_seconds: self.execute_seconds,
+        }
+    }
 }
 
 struct Job {
@@ -161,6 +194,10 @@ pub struct GradEngine {
     algorithm: Algorithm,
     threaded: bool,
     n_workers: usize,
+    /// Worker results outstanding for a submitted-but-uncollected step.
+    in_flight: usize,
+    /// Parked outputs of a sequential-path submit (runs synchronously).
+    parked: Option<Vec<WorkerOut>>,
 }
 
 impl GradEngine {
@@ -183,6 +220,8 @@ impl GradEngine {
             algorithm,
             threaded: threaded && workers > 1,
             n_workers: workers,
+            in_flight: 0,
+            parked: None,
         };
         if engine.threaded {
             for w in 0..workers {
@@ -273,8 +312,169 @@ impl GradEngine {
         Ok(())
     }
 
-    /// Compute all-reduced gradients for one global step. `batches` must
-    /// hold exactly one local batch per worker.
+    pub fn algorithm(&self) -> Algorithm {
+        self.algorithm
+    }
+
+    /// Threaded fan-out: snapshot the parameters once, send one job per
+    /// worker. Every successful send increments `in_flight`, so an error
+    /// mid-loop leaves an exact count for [`drain`](Self::drain) /
+    /// [`recv_all`](Self::recv_all) to flush.
+    fn fan_out(
+        &mut self,
+        mode: Option<StepMode>,
+        eval_lora: bool,
+        base: &[f32],
+        lora: Option<(&[f32], &[f32])>,
+        batches: Vec<Batch>,
+    ) -> Result<()> {
+        // one shared snapshot of the parameters per step (inherent to
+        // fan-out: workers outlive the borrow)
+        let base = Arc::new(base.to_vec());
+        let (lora_arc, acfg_arc) = match lora {
+            Some((l, a)) => (Some(Arc::new(l.to_vec())), Some(Arc::new(a.to_vec()))),
+            None => (None, None),
+        };
+        for (w, batch) in batches.into_iter().enumerate() {
+            let job = Job {
+                mode,
+                eval_lora,
+                base: base.clone(),
+                lora: lora_arc.clone(),
+                acfg: acfg_arc.clone(),
+                batch,
+            };
+            self.workers[w]
+                .tx
+                .send(WorkerMsg::Job(Box::new(job)))
+                .map_err(|_| anyhow!("worker {w} hung up"))?;
+            self.in_flight += 1;
+        }
+        Ok(())
+    }
+
+    /// Receive every outstanding result in deterministic worker order,
+    /// consuming all of them even on error so nothing stays queued for the
+    /// next step to trip over.
+    fn recv_all(&mut self) -> Result<Vec<WorkerOut>> {
+        let n = self.in_flight;
+        let mut outs = Vec::with_capacity(n);
+        let mut first_err = None;
+        for _ in 0..n {
+            match self.results_rx.recv() {
+                Ok(Ok(o)) => outs.push(o),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("workers died"));
+                    }
+                    break; // channel closed: no more results coming
+                }
+            }
+        }
+        self.in_flight = 0;
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // deterministic reduction order regardless of completion order
+        outs.sort_by_key(|o| o.worker);
+        Ok(outs)
+    }
+
+    /// Dispatch one global step to the workers without waiting for it.
+    /// `batches` must hold exactly one local batch per worker; exactly one
+    /// step may be in flight (synchronous SGD — step *k+1*'s inputs depend
+    /// on step *k*'s update anyway). On the sequential fallback the step
+    /// runs here and [`collect`](Self::collect) just hands it back.
+    pub fn submit(
+        &mut self,
+        mode: StepMode,
+        base: &[f32],
+        lora: Option<(&[f32], &[f32])>,
+        batches: Vec<Batch>,
+    ) -> Result<()> {
+        ensure!(self.in_flight == 0, "a step is already in flight");
+        ensure!(batches.len() == self.n_workers, "one batch per worker required");
+        let n = batches.len();
+        if self.threaded {
+            self.fan_out(Some(mode), false, base, lora, batches)?;
+        } else {
+            // sequential path: zero-copy borrows straight into the runtime,
+            // executed eagerly (there is no background thread to defer to)
+            let rt = self.local.as_mut().expect("local runtime");
+            let mut outs = Vec::with_capacity(n);
+            for (w, batch) in batches.iter().enumerate() {
+                let mut o = run_job(rt, &self.manifest, Some(mode), false, base, lora, batch)?;
+                o.worker = w;
+                outs.push(o);
+            }
+            self.parked = Some(outs);
+            self.in_flight = n;
+        }
+        Ok(())
+    }
+
+    /// Wait for the in-flight step and return its raw per-worker outputs
+    /// in deterministic worker order.
+    pub fn collect(&mut self) -> Result<StepOutputs> {
+        ensure!(self.in_flight > 0, "no step in flight");
+        let outs = match self.parked.take() {
+            Some(outs) => {
+                self.in_flight = 0;
+                outs
+            }
+            None => self.recv_all()?,
+        };
+        let samples = self.manifest.config.batch_size * outs.len();
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        let mut exec = 0.0;
+        let mut base_grads = Vec::new();
+        let mut lora_grads = Vec::new();
+        for o in outs {
+            loss += o.loss as f64;
+            correct += o.correct as f64;
+            exec += o.execute_seconds;
+            if let Some(b) = o.d_base {
+                base_grads.push(b);
+            }
+            if let Some(l) = o.d_lora {
+                lora_grads.push(l);
+            }
+        }
+        Ok(StepOutputs {
+            base_grads,
+            lora_grads,
+            loss: loss / self.n_workers as f64,
+            correct,
+            samples,
+            execute_seconds: exec,
+        })
+    }
+
+    /// Discard any in-flight step (error-path barrier: nothing may stay
+    /// queued across a phase switch or into the next epoch).
+    pub fn drain(&mut self) {
+        // sequential-path results are parked locally, nothing is queued
+        if self.parked.take().is_some() {
+            self.in_flight = 0;
+            return;
+        }
+        while self.in_flight > 0 {
+            if self.results_rx.recv().is_err() {
+                break;
+            }
+            self.in_flight -= 1;
+        }
+        self.in_flight = 0;
+    }
+
+    /// Compute all-reduced gradients for one global step (submit + collect
+    /// + inline reduce — the serial reference path).
     pub fn compute(
         &mut self,
         mode: StepMode,
@@ -282,46 +482,9 @@ impl GradEngine {
         lora: Option<(&[f32], &[f32])>,
         batches: Vec<Batch>,
     ) -> Result<GradResult> {
-        ensure!(batches.len() == self.n_workers, "one batch per worker required");
-        let outs = self.dispatch(Some(mode), false, base, lora, batches)?;
-        let samples = self.manifest.config.batch_size * outs.len();
-        let mut loss = 0.0;
-        let mut correct = 0.0;
-        let mut exec = 0.0;
-        let mut base_bufs = Vec::new();
-        let mut lora_bufs = Vec::new();
-        for o in outs {
-            loss += o.loss as f64;
-            correct += o.correct as f64;
-            exec += o.execute_seconds;
-            if let Some(b) = o.d_base {
-                base_bufs.push(b);
-            }
-            if let Some(l) = o.d_lora {
-                lora_bufs.push(l);
-            }
-        }
-        let n = self.n_workers as f64;
-        let d_base = if base_bufs.is_empty() {
-            None
-        } else {
-            reduce_mean(self.algorithm, &mut base_bufs);
-            Some(base_bufs.swap_remove(0))
-        };
-        let d_lora = if lora_bufs.is_empty() {
-            None
-        } else {
-            reduce_mean(self.algorithm, &mut lora_bufs);
-            Some(lora_bufs.swap_remove(0))
-        };
-        Ok(GradResult {
-            d_base,
-            d_lora,
-            loss: loss / n,
-            correct,
-            samples,
-            execute_seconds: exec,
-        })
+        self.submit(mode, base, lora, batches)?;
+        let outs = self.collect()?;
+        Ok(outs.reduce(self.algorithm))
     }
 
     /// Evaluate loss/accuracy over a batch list (round-robin sharding).
@@ -342,7 +505,7 @@ impl GradEngine {
         while !batches.is_empty() {
             let take = batches.len().min(self.n_workers.max(1));
             let wave: Vec<Batch> = batches.drain(..take).collect();
-            let outs = self.dispatch(None, lora.is_some(), base, lora, wave)?;
+            let outs = self.eval_dispatch(lora.is_some(), base, lora, wave)?;
             for o in outs {
                 loss += o.loss as f64;
                 correct += o.correct as f64;
@@ -352,50 +515,25 @@ impl GradEngine {
         Ok((loss / n_batches as f64, correct / samples as f64, samples))
     }
 
-    fn dispatch(
+    /// Fan one evaluation wave out to the workers (training steps go
+    /// through [`submit`](Self::submit)/[`collect`](Self::collect)).
+    fn eval_dispatch(
         &mut self,
-        mode: Option<StepMode>,
         eval_lora: bool,
         base: &[f32],
         lora: Option<(&[f32], &[f32])>,
         batches: Vec<Batch>,
     ) -> Result<Vec<WorkerOut>> {
-        let n = batches.len();
+        ensure!(self.in_flight == 0, "cannot evaluate with a step in flight");
         if self.threaded {
-            // one shared snapshot of the parameters per step (inherent to
-            // fan-out: workers outlive the borrow)
-            let base = Arc::new(base.to_vec());
-            let (lora_arc, acfg_arc) = match lora {
-                Some((l, a)) => (Some(Arc::new(l.to_vec())), Some(Arc::new(a.to_vec()))),
-                None => (None, None),
-            };
-            for (w, batch) in batches.into_iter().enumerate() {
-                let job = Job {
-                    mode,
-                    eval_lora,
-                    base: base.clone(),
-                    lora: lora_arc.clone(),
-                    acfg: acfg_arc.clone(),
-                    batch,
-                };
-                self.workers[w]
-                    .tx
-                    .send(WorkerMsg::Job(Box::new(job)))
-                    .map_err(|_| anyhow!("worker {w} hung up"))?;
-            }
-            let mut outs = Vec::with_capacity(n);
-            for _ in 0..n {
-                outs.push(self.results_rx.recv().map_err(|_| anyhow!("workers died"))??);
-            }
-            // deterministic reduction order regardless of completion order
-            outs.sort_by_key(|o| o.worker);
-            Ok(outs)
+            self.fan_out(None, eval_lora, base, lora, batches)?;
+            self.recv_all()
         } else {
             // sequential path: zero-copy borrows straight into the runtime
             let rt = self.local.as_mut().expect("local runtime");
-            let mut outs = Vec::with_capacity(n);
+            let mut outs = Vec::with_capacity(batches.len());
             for (w, batch) in batches.iter().enumerate() {
-                let mut o = run_job(rt, &self.manifest, mode, eval_lora, base, lora, batch)?;
+                let mut o = run_job(rt, &self.manifest, None, eval_lora, base, lora, batch)?;
                 o.worker = w;
                 outs.push(o);
             }
@@ -476,6 +614,34 @@ mod tests {
         assert_eq!(r1.d_base.as_ref().unwrap(), r2.d_base.as_ref().unwrap());
         assert_eq!(r1.loss, r2.loss);
         assert_eq!(r1.correct, r2.correct);
+    }
+
+    #[test]
+    fn split_submit_collect_matches_compute() {
+        // the pipeline's submit/collect path must see exactly what the
+        // one-shot compute path sees
+        let m = micro();
+        let d = data(&m, 64);
+        let workers = 2;
+        let loader = EpochLoader::new(m.config.batch_size, workers, 0);
+        let base = m.load_init_base().unwrap();
+        let batches = loader.step_batches(&d, 0, 0);
+        let mut eng = GradEngine::new(m.clone(), workers, false, Algorithm::Tree).unwrap();
+        let r1 = eng.compute(StepMode::Full, &base, None, batches.clone()).unwrap();
+        eng.submit(StepMode::Full, &base, None, batches.clone()).unwrap();
+        // a second submit with a step in flight must be rejected
+        assert!(eng.submit(StepMode::Full, &base, None, batches).is_err());
+        let outs = eng.collect().unwrap();
+        assert_eq!(outs.base_grads.len(), workers);
+        assert!(outs.lora_grads.is_empty());
+        let r2 = outs.reduce(Algorithm::Tree);
+        assert_eq!(r1.d_base, r2.d_base);
+        assert_eq!(r1.loss, r2.loss);
+        assert_eq!(r1.correct, r2.correct);
+        assert_eq!(r1.samples, r2.samples);
+        // collect with nothing in flight must be rejected; drain is a no-op
+        assert!(eng.collect().is_err());
+        eng.drain();
     }
 
     #[test]

@@ -6,11 +6,14 @@
 //! with OS threads standing in for ranks. Each worker owns its own PJRT
 //! client + compiled executables (the `xla` crate's client is not `Send`),
 //! receives `(phase, params, batch)` work items over a channel, and returns
-//! gradient buffers. The all-reduce itself is implemented three ways
-//! (naive / tree / ring) and benchmarked in `benches/allreduce.rs`.
+//! gradient buffers. The leader drives steps through the `submit`/`collect`
+//! split so the pipeline (`crate::pipeline`) can overlap its other stages
+//! with the workers' compute; `compute` is the one-shot wrapper. The
+//! all-reduce itself is implemented three ways (naive / tree / ring) and
+//! benchmarked in `benches/allreduce.rs`.
 
 pub mod allreduce;
 mod engine;
 
-pub use allreduce::{reduce_mean, Algorithm};
-pub use engine::{GradEngine, GradResult, StepMode};
+pub use allreduce::{reduce_mean, reduce_owned, Algorithm};
+pub use engine::{GradEngine, GradResult, StepMode, StepOutputs};

@@ -16,6 +16,41 @@
 //! Python never runs on the training path: the `runtime` module loads the
 //! HLO artifacts through PJRT and everything else is Rust.
 //!
+//! ## The L3 step engine
+//!
+//! Training steps flow through a staged pipeline ([`pipeline`]) rather
+//! than a serial loop:
+//!
+//! ```text
+//!   data ──► compute ──► reduce ──► update
+//!   (prefetch   (GradEngine  (all-reduce,   (clip + optimizer
+//!    thread)     workers)     overlapped     + grad telemetry)
+//!                             base ∥ lora)
+//! ```
+//!
+//! * **data** — a per-epoch prefetch thread materializes the next global
+//!   step's per-worker batches (bounded by `train.pipeline.prefetch_depth`)
+//!   while the current step computes.
+//! * **compute** — the `dp::GradEngine` worker pool, driven through its
+//!   `submit`/`collect` split so the leader re-dispatches step *k+1*
+//!   right after the step-*k* update and books step *k* while the workers
+//!   are busy.
+//! * **reduce** — `pipeline::ReduceStage`: with
+//!   `train.pipeline.overlap_reduce`, a warmup step's base gradients
+//!   all-reduce on the stage thread concurrently with its LoRA gradients
+//!   on the leader (a double-buffered accumulation pair).
+//! * **update** — `pipeline::UpdateStage`: clip + optimizer step + per-step
+//!   pre-clip gradient-norm telemetry, shared by the pipelined and the
+//!   sequential (`train.pipeline.enabled = false`) paths.
+//!
+//! **Determinism contract:** for a fixed seed the two paths produce
+//! bit-identical per-epoch losses in every phase. Batches are pure
+//! functions of `(seed, epoch, step)`, worker gradients reduce in worker
+//! order through one summation schedule regardless of thread placement,
+//! and epoch boundaries are barriers — the controller can only change the
+//! `StepMode` once every in-flight step has drained, so the
+//! Full -> Warmup -> LoraOnly transitions land on the same epochs.
+//!
 //! Quick start (see `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -37,6 +72,7 @@ pub mod data;
 pub mod dp;
 pub mod manifest;
 pub mod optim;
+pub mod pipeline;
 pub mod rank;
 pub mod report;
 pub mod runtime;

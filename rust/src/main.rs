@@ -31,6 +31,8 @@ fn train_flags() -> Args {
         .flag("zeta", "loss threshold zeta (percent)")
         .flag("warmup", "warmup window w (epochs)")
         .flag("workers", "data-parallel worker count")
+        .flag("allreduce", "gradient all-reduce algorithm: naive|tree|ring")
+        .switch("no-pipeline", "run the serial reference loop instead of the step pipeline")
         .flag("seed", "run seed")
         .flag("run-name", "label used in logs and output files")
         .flag("summary-out", "write the run summary JSON here")
@@ -72,6 +74,12 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
     }
     if let Some(w) = a.get_parsed::<usize>("workers")? {
         cfg.train.dp.workers = w;
+    }
+    if let Some(alg) = a.get_parsed::<prelora::dp::Algorithm>("allreduce")? {
+        cfg.train.dp.allreduce = alg.to_string();
+    }
+    if a.get_switch("no-pipeline") {
+        cfg.train.pipeline.enabled = false;
     }
     if let Some(s) = a.get_parsed::<u64>("seed")? {
         cfg.seed = s;

@@ -6,6 +6,10 @@
 //! same machinery on a different (much smaller) parameter vector — the
 //! paper's memory saving is precisely that the frozen base keeps *no*
 //! optimizer state after the switch.
+//!
+//! On the training path these are driven exclusively by the pipeline's
+//! update stage (`crate::pipeline::UpdateStage`), which owns the
+//! clip-then-step ordering shared by the pipelined and sequential loops.
 
 mod adamw;
 mod lr;

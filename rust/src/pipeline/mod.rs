@@ -1,0 +1,168 @@
+//! The pipelined step engine: data -> compute -> reduce -> update.
+//!
+//! `Trainer::run_epoch` used to generate batches, fan out gradients,
+//! all-reduce, clip and step the optimizer strictly one phase after
+//! another on one thread. This module decomposes that hot loop into four
+//! stages that overlap wherever synchronous-SGD semantics allow:
+//!
+//! * **data** ([`Prefetcher`]) — a background thread materializes the next
+//!   global step's per-worker batches (one epoch-order shuffle, reused for
+//!   every step) while the current step computes;
+//! * **compute** — the [`GradEngine`] workers, driven through the
+//!   `submit`/`collect` split so the leader re-dispatches step *k+1*
+//!   immediately after the step-*k* update and does its bookkeeping while
+//!   the workers are already busy;
+//! * **reduce** ([`ReduceStage`]) — a double-buffered accumulation pair:
+//!   with `overlap_reduce` on, the base-gradient all-reduce runs on the
+//!   stage thread concurrently with the LoRA-gradient reduce on the
+//!   leader (the warmup phase carries both buffers);
+//! * **update** ([`UpdateStage`]) — clip + optimizer step + gradient-norm
+//!   telemetry, shared verbatim by the pipelined and the retained
+//!   sequential path.
+//!
+//! **Determinism contract.** With a fixed seed the pipelined loop produces
+//! bit-identical per-step losses and parameters to the sequential path:
+//! batches depend only on `(seed, epoch, step)`, worker outputs are
+//! reduced in worker order by the same [`reduce_mean`] summation schedule
+//! regardless of which thread runs it, and updates apply in step order.
+//! Phase switches act as barriers — an epoch drains every in-flight step
+//! before the controller's decision can change the [`StepMode`], so the
+//! Full -> Warmup -> LoraOnly transition is deterministic.
+//!
+//! [`reduce_mean`]: crate::dp::reduce_mean
+
+mod prefetch;
+mod reduce;
+mod update;
+
+pub use prefetch::Prefetcher;
+pub use reduce::ReduceStage;
+pub use update::{ModelState, StepNorms, UpdateStage};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::PipelineConfig;
+use crate::data::{Dataset, EpochLoader};
+use crate::dp::{Algorithm, GradEngine, StepMode};
+use crate::telemetry::GradNormStats;
+
+/// Aggregated results of one epoch of training steps (either path).
+#[derive(Debug, Default, Clone)]
+pub struct EpochRun {
+    /// Per-step mean losses summed over steps (divide by `steps`).
+    pub loss_sum: f64,
+    /// Top-1 hits summed over all shards and steps.
+    pub correct: f64,
+    /// Samples consumed.
+    pub samples: usize,
+    /// Wall seconds inside PJRT execute, summed over workers and steps.
+    pub execute_seconds: f64,
+    /// Pre-clip gradient-norm statistics over the epoch's steps (its
+    /// `steps()` is also the number of steps executed).
+    pub grad_norms: GradNormStats,
+}
+
+impl EpochRun {
+    fn ingest(&mut self, r: &crate::dp::GradResult, norms: StepNorms) {
+        self.loss_sum += r.loss;
+        self.correct += r.correct;
+        self.samples += r.samples;
+        self.execute_seconds += r.execute_seconds;
+        self.grad_norms.record(norms.pre_clip, norms.clipped);
+    }
+}
+
+/// The staged step driver. Owns the reduce stage's worker thread; the
+/// prefetch thread is per-epoch (it terminates when the epoch drains).
+pub struct StepPipeline {
+    cfg: PipelineConfig,
+    reduce: ReduceStage,
+}
+
+impl StepPipeline {
+    pub fn new(cfg: &PipelineConfig, algorithm: Algorithm) -> Result<Self> {
+        let reduce = ReduceStage::new(algorithm, cfg.enabled && cfg.overlap_reduce)?;
+        Ok(Self { cfg: cfg.clone(), reduce })
+    }
+
+    /// Run one epoch of `steps` training steps in mode `mode`, dispatching
+    /// to the pipelined or the sequential driver per config. Both produce
+    /// bit-identical results (see the module docs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_epoch(
+        &mut self,
+        engine: &mut GradEngine,
+        loader: &EpochLoader,
+        data: &Arc<Dataset>,
+        model: &mut ModelState,
+        update: &UpdateStage,
+        mode: StepMode,
+        epoch: usize,
+        steps: usize,
+        lr: f32,
+    ) -> Result<EpochRun> {
+        if !self.cfg.enabled {
+            return Self::run_sequential(engine, loader, data, model, update, mode, epoch, steps, lr);
+        }
+        let mut prefetch = Prefetcher::spawn(
+            loader.clone(),
+            data.clone(),
+            epoch,
+            steps,
+            self.cfg.prefetch_depth,
+        )?;
+        let mut out = EpochRun::default();
+        // Prime the compute stage with step 0, then keep exactly one step
+        // in flight: collect k, reduce k, update k, submit k+1, account k.
+        // The accounting and the next prefetch overlap the workers' compute.
+        let run = (|| -> Result<()> {
+            if steps > 0 {
+                engine.submit(mode, &model.base, model.lora_pair(), prefetch.recv()?)?;
+            }
+            for step in 0..steps {
+                let outs = engine.collect()?;
+                let mut r = self.reduce.reduce(outs)?;
+                let norms = update.apply(model, &mut r, lr)?;
+                if step + 1 < steps {
+                    engine.submit(mode, &model.base, model.lora_pair(), prefetch.recv()?)?;
+                }
+                out.ingest(&r, norms);
+            }
+            Ok(())
+        })();
+        if run.is_err() {
+            // barrier on the error path too: never leave a step in flight
+            // across a phase switch or the next epoch
+            engine.drain();
+        }
+        run.map(|()| out)
+    }
+
+    /// The fully serial reference loop (pipeline disabled). Shares the
+    /// [`UpdateStage`] and the reduce summation schedule with the pipelined
+    /// path — this is the other half of the determinism contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_sequential(
+        engine: &mut GradEngine,
+        loader: &EpochLoader,
+        data: &Arc<Dataset>,
+        model: &mut ModelState,
+        update: &UpdateStage,
+        mode: StepMode,
+        epoch: usize,
+        steps: usize,
+        lr: f32,
+    ) -> Result<EpochRun> {
+        let order = loader.epoch_order(data, epoch);
+        let mut out = EpochRun::default();
+        for step in 0..steps {
+            let batches = loader.step_batches_in(data, &order, step);
+            let mut r = engine.compute(mode, &model.base, model.lora_pair(), batches)?;
+            let norms = update.apply(model, &mut r, lr)?;
+            out.ingest(&r, norms);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,116 @@
+//! Data stage: background materialization of per-worker batches.
+//!
+//! One thread per epoch. It computes the epoch's shuffle order once (the
+//! serial loop used to redo the O(N) Fisher-Yates for every step) and
+//! pushes each global step's `Vec<Batch>` through a bounded channel, so at
+//! most `depth` steps of batches are resident ahead of the consumer.
+//! Batches depend only on `(seed, epoch, step)`, so prefetching cannot
+//! change what the compute stage sees — only when it is ready.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{Batch, Dataset, EpochLoader};
+
+/// Handle to one epoch's prefetch thread.
+pub struct Prefetcher {
+    rx: Option<mpsc::Receiver<Vec<Batch>>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Start prefetching `steps` global steps of epoch `epoch`, keeping at
+    /// most `depth` steps buffered.
+    pub fn spawn(
+        loader: EpochLoader,
+        data: Arc<Dataset>,
+        epoch: usize,
+        steps: usize,
+        depth: usize,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let join = std::thread::Builder::new()
+            .name("data-prefetch".into())
+            .spawn(move || {
+                let order = loader.epoch_order(&data, epoch);
+                for step in 0..steps {
+                    let batches = loader.step_batches_in(&data, &order, step);
+                    if tx.send(batches).is_err() {
+                        return; // consumer stopped early
+                    }
+                }
+            })
+            .context("spawning prefetch thread")?;
+        Ok(Self { rx: Some(rx), join: Some(join) })
+    }
+
+    /// Receive the next step's batches, blocking until materialized.
+    pub fn recv(&mut self) -> Result<Vec<Batch>> {
+        self.rx
+            .as_ref()
+            .ok_or_else(|| anyhow!("prefetcher already shut down"))?
+            .recv()
+            .map_err(|_| anyhow!("prefetch thread terminated early"))
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // disconnect first so a producer blocked on a full channel unblocks
+        drop(self.rx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+
+    fn data() -> Arc<Dataset> {
+        Arc::new(Dataset::generate(&SynthSpec {
+            samples: 96,
+            image_size: 8,
+            channels: 1,
+            num_classes: 4,
+            noise: 0.1,
+            phase_jitter: false,
+            seed: 5,
+        }))
+    }
+
+    #[test]
+    fn prefetched_batches_match_direct_loader_calls() {
+        let d = data();
+        let loader = EpochLoader::new(8, 2, 9);
+        let steps = loader.steps_per_epoch(&d);
+        let mut pf = Prefetcher::spawn(loader.clone(), d.clone(), 3, steps, 2).unwrap();
+        for step in 0..steps {
+            let got = pf.recv().unwrap();
+            let want = loader.step_batches(&d, 3, step);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.labels, w.labels);
+                assert_eq!(g.images, w.images);
+            }
+        }
+        assert!(pf.recv().is_err(), "exactly `steps` sends then EOF");
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let d = data();
+        let loader = EpochLoader::new(8, 1, 0);
+        let steps = loader.steps_per_epoch(&d);
+        // depth 1 forces the producer to block mid-epoch; dropping the
+        // consumer must still shut it down cleanly
+        let mut pf = Prefetcher::spawn(loader, d, 0, steps, 1).unwrap();
+        let _ = pf.recv().unwrap();
+        drop(pf);
+    }
+}

@@ -1,0 +1,126 @@
+//! Reduce stage: gradient all-reduce with optional cross-buffer overlap.
+//!
+//! A step in the warmup phase carries two independent gradient buffers
+//! (base + LoRA). With overlap on, they reduce as a double-buffered pair:
+//! the base buffers go to the stage's worker thread while the leader
+//! reduces the LoRA buffers, so both accumulations are active at once and
+//! the warmup step's reduce critical path is max(base, lora) instead of
+//! base + lora. Each reduce runs the exact same [`reduce_mean`] summation
+//! schedule as the serial path — which thread executes it cannot change
+//! the bits (the determinism contract in the module docs).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::dp::allreduce::reduce_owned;
+use crate::dp::{Algorithm, GradResult, StepOutputs};
+
+/// Persistent reduce stage; the worker thread exists only when overlap is
+/// requested.
+pub struct ReduceStage {
+    algorithm: Algorithm,
+    tx: Option<mpsc::Sender<Vec<Vec<f32>>>>,
+    rx: Option<mpsc::Receiver<Option<Vec<f32>>>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ReduceStage {
+    pub fn new(algorithm: Algorithm, overlap: bool) -> Result<Self> {
+        if !overlap {
+            return Ok(Self { algorithm, tx: None, rx: None, join: None });
+        }
+        let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
+        let (out_tx, rx) = mpsc::channel::<Option<Vec<f32>>>();
+        let join = std::thread::Builder::new()
+            .name("reduce-stage".into())
+            .spawn(move || {
+                while let Ok(bufs) = job_rx.recv() {
+                    if out_tx.send(reduce_owned(algorithm, bufs)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .context("spawning reduce-stage thread")?;
+        Ok(Self { algorithm, tx: Some(tx), rx: Some(rx), join: Some(join) })
+    }
+
+    /// Reduce one step's worker outputs to mean gradients. Overlaps the
+    /// base reduce with the LoRA reduce when both are present and a stage
+    /// thread exists; otherwise defers to [`StepOutputs::reduce`] — the
+    /// serial path's epilogue — so the two can never diverge.
+    pub fn reduce(&mut self, outs: StepOutputs) -> Result<GradResult> {
+        let (tx, rx) = match (&self.tx, &self.rx) {
+            (Some(tx), Some(rx))
+                if !outs.base_grads.is_empty() && !outs.lora_grads.is_empty() =>
+            {
+                (tx, rx)
+            }
+            _ => return Ok(outs.reduce(self.algorithm)),
+        };
+        let StepOutputs {
+            base_grads,
+            lora_grads,
+            loss,
+            correct,
+            samples,
+            execute_seconds,
+        } = outs;
+        tx.send(base_grads)
+            .map_err(|_| anyhow!("reduce stage hung up"))?;
+        let d_lora = reduce_owned(self.algorithm, lora_grads);
+        let d_base = rx.recv().map_err(|_| anyhow!("reduce stage died"))?;
+        Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
+    }
+}
+
+impl Drop for ReduceStage {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        drop(self.rx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outs(base_workers: usize, lora_workers: usize, len: usize) -> StepOutputs {
+        let buf = |w: usize| (0..len).map(|i| ((w * 13 + i * 5) % 11) as f32 - 5.0).collect();
+        StepOutputs {
+            base_grads: (0..base_workers).map(buf).collect(),
+            lora_grads: (0..lora_workers).map(|w| buf(w + 100)).collect(),
+            loss: 1.5,
+            correct: 3.0,
+            samples: 8,
+            execute_seconds: 0.01,
+        }
+    }
+
+    #[test]
+    fn overlapped_reduce_is_bitwise_identical_to_inline() {
+        for (nb, nl) in [(4usize, 4usize), (3, 3), (2, 0), (0, 5)] {
+            let mut overlapped = ReduceStage::new(Algorithm::Tree, true).unwrap();
+            let mut inline = ReduceStage::new(Algorithm::Tree, false).unwrap();
+            let a = overlapped.reduce(outs(nb, nl, 97)).unwrap();
+            let b = inline.reduce(outs(nb, nl, 97)).unwrap();
+            assert_eq!(a.d_base, b.d_base);
+            assert_eq!(a.d_lora, b.d_lora);
+            assert_eq!(a.loss, b.loss);
+        }
+    }
+
+    #[test]
+    fn scalars_pass_through() {
+        let mut stage = ReduceStage::new(Algorithm::Naive, false).unwrap();
+        let r = stage.reduce(outs(2, 0, 8)).unwrap();
+        assert_eq!(r.loss, 1.5);
+        assert_eq!(r.correct, 3.0);
+        assert_eq!(r.samples, 8);
+        assert!(r.d_base.is_some() && r.d_lora.is_none());
+    }
+}

@@ -1,0 +1,172 @@
+//! Update stage: clip + optimizer step + gradient-norm telemetry.
+//!
+//! Extracted from the old `Trainer::run_epoch` inline block so the
+//! pipelined and sequential epoch drivers share one implementation — any
+//! divergence here would break the bit-equivalence contract. Also owns
+//! [`ModelState`], the mutable parameter/optimizer bundle the stage
+//! operates on.
+
+use anyhow::{anyhow, Result};
+
+use crate::dp::GradResult;
+use crate::optim::Optimizer;
+use crate::rank::AdapterCfg;
+use crate::tensor::{clip_by_global_norm, l2_norm};
+
+/// The mutable model the update stage advances: flat parameter vectors
+/// plus their optimizers. `lora`/`adapter_cfg`/`opt_lora` appear at the
+/// warmup switch; `opt_base` is dropped at the freeze (the paper's memory
+/// saving made literal).
+pub struct ModelState {
+    pub base: Vec<f32>,
+    pub lora: Option<Vec<f32>>,
+    pub adapter_cfg: Option<AdapterCfg>,
+    pub opt_base: Option<Box<dyn Optimizer + Send>>,
+    pub opt_lora: Option<Box<dyn Optimizer + Send>>,
+}
+
+impl ModelState {
+    pub fn new(base: Vec<f32>, opt_base: Box<dyn Optimizer + Send>) -> Self {
+        Self { base, lora: None, adapter_cfg: None, opt_base: Some(opt_base), opt_lora: None }
+    }
+
+    /// The `(lora_params, adapter_cfg)` input pair for the engine, present
+    /// only once both halves exist.
+    pub fn lora_pair(&self) -> Option<(&[f32], &[f32])> {
+        match (&self.lora, &self.adapter_cfg) {
+            (Some(l), Some(a)) => Some((l.as_slice(), a.values.as_slice())),
+            _ => None,
+        }
+    }
+}
+
+/// One step's gradient-norm observation.
+#[derive(Debug, Clone, Copy)]
+pub struct StepNorms {
+    /// Global L2 norm over all gradient buffers *before* clipping — the
+    /// quantity Fig. 2-style telemetry wants (the post-clip norm saturates
+    /// at the clip threshold and hides gradient growth).
+    pub pre_clip: f64,
+    /// Whether any buffer was rescaled by the clip.
+    pub clipped: bool,
+}
+
+/// Stateless per-step update: clip each gradient buffer by global norm,
+/// then apply the phase's optimizer(s).
+pub struct UpdateStage {
+    grad_clip: f64,
+}
+
+impl UpdateStage {
+    /// `grad_clip <= 0` disables clipping.
+    pub fn new(grad_clip: f64) -> Self {
+        Self { grad_clip }
+    }
+
+    /// Apply one reduced step to the model. Buffers are clipped
+    /// independently (base and LoRA live on different scales), matching
+    /// the pre-pipeline trainer numerics exactly.
+    pub fn apply(&self, model: &mut ModelState, r: &mut GradResult, lr: f32) -> Result<StepNorms> {
+        let mut sq = 0.0f64;
+        let mut clipped = false;
+        if let Some(ref mut g) = r.d_base {
+            let pre = if self.grad_clip > 0.0 {
+                clip_by_global_norm(g, self.grad_clip)
+            } else {
+                l2_norm(g)
+            };
+            clipped |= self.grad_clip > 0.0 && pre > self.grad_clip;
+            sq += pre * pre;
+            model
+                .opt_base
+                .as_mut()
+                .ok_or_else(|| anyhow!("base optimizer missing"))?
+                .step(&mut model.base, g, lr);
+        }
+        if let Some(ref mut g) = r.d_lora {
+            let pre = if self.grad_clip > 0.0 {
+                clip_by_global_norm(g, self.grad_clip)
+            } else {
+                l2_norm(g)
+            };
+            clipped |= self.grad_clip > 0.0 && pre > self.grad_clip;
+            sq += pre * pre;
+            let lora = model
+                .lora
+                .as_mut()
+                .ok_or_else(|| anyhow!("lora params missing"))?;
+            model
+                .opt_lora
+                .as_mut()
+                .ok_or_else(|| anyhow!("lora optimizer missing"))?
+                .step(lora, g, lr);
+        }
+        Ok(StepNorms { pre_clip: sq.sqrt(), clipped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::optim;
+
+    fn model(n: usize) -> ModelState {
+        let cfg = TrainConfig::default();
+        ModelState::new(vec![0.5; n], optim::build(&cfg, n))
+    }
+
+    #[test]
+    fn reports_pre_clip_norm_and_updates_params() {
+        let mut m = model(4);
+        let before = m.base.clone();
+        let stage = UpdateStage::new(1.0);
+        let mut r = GradResult {
+            d_base: Some(vec![3.0, 4.0, 0.0, 0.0]), // norm 5 -> clipped
+            d_lora: None,
+            loss: 1.0,
+            correct: 0.0,
+            samples: 4,
+            execute_seconds: 0.0,
+        };
+        let norms = stage.apply(&mut m, &mut r, 0.1).unwrap();
+        assert!((norms.pre_clip - 5.0).abs() < 1e-9, "pre-clip, not post-clip");
+        assert!(norms.clipped);
+        assert_ne!(m.base, before, "optimizer must have stepped");
+        // the applied gradient was the clipped one
+        assert!((l2_norm(r.d_base.as_ref().unwrap()) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_clip_reports_raw_norm() {
+        let mut m = model(2);
+        let stage = UpdateStage::new(0.0);
+        let mut r = GradResult {
+            d_base: Some(vec![3.0, 4.0]),
+            d_lora: None,
+            loss: 1.0,
+            correct: 0.0,
+            samples: 2,
+            execute_seconds: 0.0,
+        };
+        let norms = stage.apply(&mut m, &mut r, 0.1).unwrap();
+        assert!((norms.pre_clip - 5.0).abs() < 1e-9);
+        assert!(!norms.clipped);
+    }
+
+    #[test]
+    fn missing_optimizer_is_an_error() {
+        let mut m = model(2);
+        m.opt_base = None;
+        let stage = UpdateStage::new(1.0);
+        let mut r = GradResult {
+            d_base: Some(vec![1.0, 1.0]),
+            d_lora: None,
+            loss: 1.0,
+            correct: 0.0,
+            samples: 2,
+            execute_seconds: 0.0,
+        };
+        assert!(stage.apply(&mut m, &mut r, 0.1).is_err());
+    }
+}

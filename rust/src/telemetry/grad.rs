@@ -1,0 +1,79 @@
+//! Streaming gradient-norm statistics for one epoch of steps.
+//!
+//! The epoch loop used to report only the *last* step's *post-clip* norm,
+//! which both discards the other steps and saturates at the clip
+//! threshold — Fig. 2-style telemetry read as "gradients stopped growing"
+//! the moment clipping engaged. [`GradNormStats`] accumulates the
+//! pre-clip norm of every step and exposes the mean/max plus how often the
+//! clip fired.
+
+/// Mean/max accumulator over per-step pre-clip gradient norms.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GradNormStats {
+    sum: f64,
+    max: f64,
+    steps: usize,
+    clipped_steps: usize,
+}
+
+impl GradNormStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one step's pre-clip norm and whether clipping rescaled it.
+    pub fn record(&mut self, pre_clip: f64, clipped: bool) {
+        self.sum += pre_clip;
+        self.max = self.max.max(pre_clip);
+        self.steps += 1;
+        if clipped {
+            self.clipped_steps += 1;
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Mean pre-clip norm over the recorded steps (0.0 before any step).
+    pub fn mean(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.sum / self.steps as f64
+        }
+    }
+
+    /// Largest pre-clip norm seen.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Fraction of steps where the clip rescaled the gradient.
+    pub fn clipped_frac(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.clipped_steps as f64 / self.steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_mean_max_and_clip_fraction() {
+        let mut s = GradNormStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.clipped_frac(), 0.0);
+        s.record(1.0, false);
+        s.record(3.0, true);
+        s.record(2.0, true);
+        assert_eq!(s.steps(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.clipped_frac() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -4,9 +4,13 @@
 //! across layers and (b) training loss, both aggregated over windows of
 //! `m` epochs; Algorithm 2 additionally needs the per-layer norm deltas
 //! between the final two windows. [`NormHistory`] owns those series;
-//! [`recorder`] persists everything as CSV for the figure harnesses.
+//! [`GradNormStats`] accumulates per-step pre-clip gradient norms inside
+//! an epoch (fed by the pipeline's update stage); [`recorder`] persists
+//! everything as CSV for the figure harnesses.
 
+mod grad;
 mod norms;
 pub mod recorder;
 
+pub use grad::GradNormStats;
 pub use norms::{NormHistory, NormSnapshot};

@@ -1,6 +1,12 @@
-//! Training loop: ties the data pipeline, DP engine, optimizer and the
+//! Training loop: wires the data pipeline, DP engine, optimizer and the
 //! PreLoRA controller into epochs, and measures everything the paper's
 //! evaluation section reports.
+//!
+//! The per-step mechanics live in `crate::pipeline`: `run_epoch` here only
+//! picks the phase's [`StepMode`], hands the epoch to the
+//! [`StepPipeline`], and applies the controller's decision at the epoch
+//! barrier (where every in-flight step has drained — phase switches are
+//! deterministic by construction).
 
 mod checkpoint;
 mod metrics;
@@ -10,7 +16,7 @@ pub use metrics::{EpochStats, MemoryBreakdown};
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::{Decision, Phase, PreLoraController};
@@ -18,10 +24,11 @@ use crate::data::{Dataset, EpochLoader, SynthSpec};
 use crate::dp::{Algorithm, GradEngine, StepMode};
 use crate::manifest::Manifest;
 use crate::optim::{self, LrSchedule, Optimizer};
+use crate::pipeline::{ModelState, StepPipeline, UpdateStage};
 use crate::rank::{build_adapter_cfg, AdapterCfg};
 use crate::report::RunSummary;
 use crate::telemetry::{NormHistory, NormSnapshot};
-use crate::tensor::{clip_by_global_norm, Pcg64};
+use crate::tensor::Pcg64;
 
 /// A fully wired training run.
 pub struct Trainer {
@@ -29,18 +36,15 @@ pub struct Trainer {
     pub manifest: Arc<Manifest>,
     engine: GradEngine,
     loader: EpochLoader,
-    train_data: Dataset,
-    val_data: Dataset,
+    pipeline: StepPipeline,
+    update: UpdateStage,
+    train_spec: SynthSpec,
+    train_data: Arc<Dataset>,
+    val_data: Arc<Dataset>,
     lr: LrSchedule,
     controller: PreLoraController,
     history: NormHistory,
-
-    // mutable model state
-    base: Vec<f32>,
-    lora: Option<Vec<f32>>,
-    adapter_cfg: Option<AdapterCfg>,
-    opt_base: Option<Box<dyn Optimizer + Send>>,
-    opt_lora: Option<Box<dyn Optimizer + Send>>,
+    model: ModelState,
 
     pub stats: Vec<EpochStats>,
 }
@@ -62,8 +66,12 @@ impl Trainer {
             cfg.train.dp.threaded,
             algorithm,
         )?;
+        // the pipeline's reduce stage must use the engine's exact algorithm
+        // (same summation schedule => the bit-equivalence contract)
+        let pipeline = StepPipeline::new(&cfg.train.pipeline, engine.algorithm())?;
+        let update = UpdateStage::new(cfg.train.grad_clip);
         let loader = EpochLoader::new(c.batch_size, cfg.train.dp.workers, cfg.seed);
-        let train_data = Dataset::generate(&SynthSpec {
+        let train_spec = SynthSpec {
             samples: cfg.train.data.train_samples,
             image_size: c.image_size,
             channels: c.in_channels,
@@ -71,8 +79,9 @@ impl Trainer {
             noise: cfg.train.data.noise,
             phase_jitter: cfg.train.data.phase_jitter,
             seed: cfg.seed ^ 0xda7a_5eed_u64,
-        });
-        let val_data = Dataset::generate(&SynthSpec {
+        };
+        let train_data = Arc::new(Dataset::generate(&train_spec));
+        let val_data = Arc::new(Dataset::generate(&SynthSpec {
             samples: cfg.train.data.val_samples,
             image_size: c.image_size,
             channels: c.in_channels,
@@ -80,9 +89,10 @@ impl Trainer {
             noise: cfg.train.data.noise,
             phase_jitter: cfg.train.data.phase_jitter,
             seed: cfg.seed ^ 0x7a1_5eed_u64,
-        });
+        }));
         let base = manifest.load_init_base()?;
-        let opt_base = Some(optim::build(&cfg.train, base.len()));
+        let opt_base = optim::build(&cfg.train, base.len());
+        let model = ModelState::new(base, opt_base);
         let lr = LrSchedule::new(&cfg.train);
         let controller = PreLoraController::new(cfg.prelora.clone(), &manifest);
         Ok(Self {
@@ -90,16 +100,15 @@ impl Trainer {
             manifest,
             engine,
             loader,
+            pipeline,
+            update,
+            train_spec,
             train_data,
             val_data,
             lr,
             controller,
             history: NormHistory::new(),
-            base,
-            lora: None,
-            adapter_cfg: None,
-            opt_base,
-            opt_lora: None,
+            model,
             stats: Vec::new(),
         })
     }
@@ -117,18 +126,18 @@ impl Trainer {
     }
 
     pub fn base_params(&self) -> &[f32] {
-        &self.base
+        &self.model.base
     }
 
     pub fn adapter_cfg(&self) -> Option<&AdapterCfg> {
-        self.adapter_cfg.as_ref()
+        self.model.adapter_cfg.as_ref()
     }
 
     /// Mean Frobenius norm of one module's LoRA adapters across layers
     /// (per-layer norm of the stacked [A; B] pair) — the Fig. 6b series.
     /// None before the switch.
     pub fn lora_module_norm(&self, module: &str) -> Option<f64> {
-        let lora = self.lora.as_ref()?;
+        let lora = self.model.lora.as_ref()?;
         let mut acc = 0.0;
         let mut n = 0usize;
         for ad in self.manifest.adapters.iter().filter(|a| a.module == module) {
@@ -151,10 +160,10 @@ impl Trainer {
             Phase::FullParam => self.manifest.full_trainable(),
             Phase::Warmup { .. } => {
                 self.manifest.full_trainable()
-                    + self.adapter_cfg.as_ref().map_or(0, |a| a.trainable_params)
+                    + self.model.adapter_cfg.as_ref().map_or(0, |a| a.trainable_params)
             }
             Phase::LoraOnly { .. } => {
-                self.adapter_cfg.as_ref().map_or(0, |a| a.trainable_params)
+                self.model.adapter_cfg.as_ref().map_or(0, |a| a.trainable_params)
             }
         }
     }
@@ -163,8 +172,8 @@ impl Trainer {
     pub fn memory(&self) -> MemoryBreakdown {
         let n_base = self.manifest.base.size;
         let trainable = self.trainable_params();
-        let opt_bytes = self.opt_base.as_ref().map_or(0, |o| o.state_bytes())
-            + self.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
+        let opt_bytes = self.model.opt_base.as_ref().map_or(0, |o| o.state_bytes())
+            + self.model.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
         let grad_bytes = match self.controller.phase() {
             Phase::FullParam => n_base * 4,
             Phase::Warmup { .. } => (n_base + self.manifest.lora.size) * 4,
@@ -173,21 +182,13 @@ impl Trainer {
         MemoryBreakdown::new(n_base, self.manifest.lora.size, trainable, grad_bytes, opt_bytes)
     }
 
-    /// Run one epoch: steps, telemetry, controller decision, optional eval.
+    /// Run one epoch: steps (through the pipeline), telemetry, controller
+    /// decision, optional eval.
     pub fn run_epoch(&mut self) -> Result<EpochStats> {
         let epoch = self.history.epochs();
         if self.cfg.train.data.fresh_per_epoch {
             // infinite-data regime (see DataConfig::fresh_per_epoch)
-            let c = &self.manifest.config;
-            self.train_data = Dataset::generate(&SynthSpec {
-                samples: self.cfg.train.data.train_samples,
-                image_size: c.image_size,
-                channels: c.in_channels,
-                num_classes: c.num_classes,
-                noise: self.cfg.train.data.noise,
-                phase_jitter: self.cfg.train.data.phase_jitter,
-                seed: self.cfg.seed ^ 0xda7a_5eed_u64 ^ (epoch as u64).wrapping_mul(0x9e37_79b9),
-            });
+            self.train_data = Arc::new(Dataset::generate(&self.train_spec.fresh_epoch(epoch)));
         }
         let t0 = std::time::Instant::now();
         let steps = self.loader.steps_per_epoch(&self.train_data);
@@ -198,53 +199,24 @@ impl Trainer {
             Phase::Warmup { .. } => StepMode::Warmup,
             Phase::LoraOnly { .. } => StepMode::LoraOnly,
         };
-        let mut loss_acc = 0.0;
-        let mut correct = 0.0;
-        let mut samples = 0usize;
-        let mut exec_s = 0.0;
-        let mut grad_norm = 0.0f64;
-        for step in 0..steps {
-            let batches = self.loader.step_batches(&self.train_data, epoch, step);
-            let lora_pair = match (&self.lora, &self.adapter_cfg) {
-                (Some(l), Some(a)) => Some((l.as_slice(), a.values.as_slice())),
-                _ => None,
-            };
-            let mut r = self.engine.compute(mode, &self.base, lora_pair, batches)?;
-            loss_acc += r.loss;
-            correct += r.correct;
-            samples += r.samples;
-            exec_s += r.execute_seconds;
-            let clip = self.cfg.train.grad_clip;
-            if let Some(ref mut g) = r.d_base {
-                if clip > 0.0 {
-                    clip_by_global_norm(g, clip);
-                }
-                grad_norm = crate::tensor::l2_norm(g);
-                self.opt_base
-                    .as_mut()
-                    .ok_or_else(|| anyhow!("base optimizer missing"))?
-                    .step(&mut self.base, g, lr);
-            }
-            if let Some(ref mut g) = r.d_lora {
-                if clip > 0.0 {
-                    clip_by_global_norm(g, clip);
-                }
-                if r.d_base.is_none() {
-                    grad_norm = crate::tensor::l2_norm(g);
-                }
-                let lora = self.lora.as_mut().expect("lora params present");
-                self.opt_lora
-                    .as_mut()
-                    .ok_or_else(|| anyhow!("lora optimizer missing"))?
-                    .step(lora, g, lr);
-            }
-        }
+        let run = self.pipeline.run_epoch(
+            &mut self.engine,
+            &self.loader,
+            &self.train_data,
+            &mut self.model,
+            &self.update,
+            mode,
+            epoch,
+            steps,
+            lr,
+        )?;
         let epoch_seconds = t0.elapsed().as_secs_f64();
-        let train_loss = loss_acc / steps as f64;
-        let train_acc = correct / samples as f64;
+        let train_loss = run.loss_sum / steps as f64;
+        let train_acc = run.correct / run.samples as f64;
 
-        // telemetry + controller
-        let snapshot = NormSnapshot::measure(&self.manifest, epoch, &self.base);
+        // telemetry + controller (the epoch boundary is the pipeline's
+        // phase-switch barrier: every step above has drained)
+        let snapshot = NormSnapshot::measure(&self.manifest, epoch, &self.model.base);
         self.history.push(snapshot, train_loss);
         let decision = self.controller.on_epoch_end(&self.history);
         self.apply(decision)?;
@@ -266,11 +238,11 @@ impl Trainer {
             val_acc,
             lr: lr as f64,
             epoch_seconds,
-            execute_seconds: exec_s,
-            images_per_sec: samples as f64 / epoch_seconds,
+            execute_seconds: run.execute_seconds,
+            images_per_sec: run.samples as f64 / epoch_seconds,
             trainable_params: self.trainable_params(),
             memory_model_bytes: mem.model_bytes(),
-            grad_norm,
+            grad_norm: run.grad_norms.mean(),
         };
         self.stats.push(stats.clone());
         Ok(stats)
@@ -290,11 +262,9 @@ impl Trainer {
     /// Evaluate on the validation split.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
         let batches = self.loader.eval_batches(&self.val_data);
-        let lora_pair = match (&self.lora, &self.adapter_cfg) {
-            (Some(l), Some(a)) => Some((l.as_slice(), a.values.as_slice())),
-            _ => None,
-        };
-        let (loss, acc, _) = self.engine.evaluate(&self.base, lora_pair, batches)?;
+        let (loss, acc, _) =
+            self.engine
+                .evaluate(&self.model.base, self.model.lora_pair(), batches)?;
         Ok((loss, acc))
     }
 
@@ -318,9 +288,9 @@ impl Trainer {
                         rng.fill_normal(&mut lora[t.offset..t.offset + t.size], 0.02);
                     }
                 }
-                self.opt_lora = Some(optim::build(&self.cfg.train, lora.len()));
-                self.lora = Some(lora);
-                self.adapter_cfg = Some(acfg);
+                self.model.opt_lora = Some(optim::build(&self.cfg.train, lora.len()));
+                self.model.lora = Some(lora);
+                self.model.adapter_cfg = Some(acfg);
                 eprintln!(
                     "[prelora] epoch {}: convergence passed (max dW {:.3}%, max dL {:.3}%) -> warmup; ranks {:?}",
                     self.history.epochs(),
@@ -332,7 +302,7 @@ impl Trainer {
             Decision::FreezeBase => {
                 // frozen base keeps no optimizer state — the paper's memory
                 // saving made literal
-                self.opt_base = None;
+                self.model.opt_base = None;
                 eprintln!(
                     "[prelora] epoch {}: warmup done -> base frozen, LoRA-only ({} trainable params, {:.1}% of full)",
                     self.history.epochs(),
@@ -371,7 +341,7 @@ impl Trainer {
             &self.stats,
             self.controller.switch_epoch(),
             self.controller.freeze_epoch(),
-            self.adapter_cfg.as_ref(),
+            self.model.adapter_cfg.as_ref(),
         )
     }
 
@@ -379,19 +349,66 @@ impl Trainer {
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             epoch: self.history.epochs(),
-            base: self.base.clone(),
-            lora: self.lora.clone(),
-            adapter_cfg: self.adapter_cfg.as_ref().map(|a| a.values.clone()),
-            ranks: self.adapter_cfg.as_ref().map(|a| a.ranks.clone()),
+            base: self.model.base.clone(),
+            lora: self.model.lora.clone(),
+            adapter_cfg: self.model.adapter_cfg.as_ref().map(|a| a.values.clone()),
+            ranks: self.model.adapter_cfg.as_ref().map(|a| a.ranks.clone()),
         }
     }
 
-    /// Restore model state (phase machine state is not restored — used for
-    /// eval/analysis, not resumption mid-run).
+    /// Restore model state — base, LoRA params *and* the adapter config
+    /// that makes them meaningful (phase machine state is not restored —
+    /// used for eval/analysis, not resumption mid-run).
     pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
-        anyhow::ensure!(ckpt.base.len() == self.base.len(), "checkpoint size mismatch");
-        self.base.copy_from_slice(&ckpt.base);
-        self.lora = ckpt.lora.clone();
+        anyhow::ensure!(
+            ckpt.base.len() == self.model.base.len(),
+            "checkpoint base size {} != model {}",
+            ckpt.base.len(),
+            self.model.base.len()
+        );
+        match (&ckpt.lora, &ckpt.adapter_cfg, &ckpt.ranks) {
+            (None, None, None) => {
+                self.model.base.copy_from_slice(&ckpt.base);
+                self.model.lora = None;
+                self.model.adapter_cfg = None;
+            }
+            (Some(lora), Some(values), Some(ranks)) => {
+                anyhow::ensure!(
+                    lora.len() == self.manifest.lora.size,
+                    "checkpoint lora size {} != manifest {}",
+                    lora.len(),
+                    self.manifest.lora.size
+                );
+                anyhow::ensure!(
+                    values.len() == self.manifest.adapter_cfg_size,
+                    "checkpoint adapter_cfg size {} != manifest {}",
+                    values.len(),
+                    self.manifest.adapter_cfg_size
+                );
+                anyhow::ensure!(
+                    ranks.len() == self.manifest.adapters.len(),
+                    "checkpoint rank layout ({} adapters) does not match manifest ({})",
+                    ranks.len(),
+                    self.manifest.adapters.len()
+                );
+                let r_max = self.manifest.config.r_max;
+                anyhow::ensure!(
+                    ranks.iter().all(|&r| (1..=r_max).contains(&r)),
+                    "checkpoint rank outside [1, {r_max}]: {ranks:?}"
+                );
+                let trainable_params = self.manifest.lora_trainable(ranks);
+                self.model.base.copy_from_slice(&ckpt.base);
+                self.model.lora = Some(lora.clone());
+                self.model.adapter_cfg = Some(AdapterCfg {
+                    values: values.clone(),
+                    ranks: ranks.clone(),
+                    trainable_params,
+                });
+            }
+            _ => bail!(
+                "checkpoint has partial LoRA state (lora, adapter_cfg and ranks must all be present or all absent)"
+            ),
+        }
         Ok(())
     }
 }

@@ -134,6 +134,67 @@ fn threaded_two_worker_run_is_deterministic() {
 }
 
 #[test]
+fn pipeline_matches_sequential_bitwise_across_phase_switch() {
+    // the determinism contract: with a fixed seed the staged pipeline and
+    // the serial reference loop produce bit-identical per-epoch losses in
+    // every phase, and the controller switches on the same epochs
+    let run = |enabled: bool| {
+        let mut cfg = micro_config(16);
+        cfg.train.dp.workers = 2;
+        cfg.train.pipeline.enabled = enabled;
+        cfg.train.pipeline.prefetch_depth = 2;
+        cfg.train.pipeline.overlap_reduce = true;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..16 {
+            losses.push(t.run_epoch().unwrap().train_loss);
+        }
+        (losses, t.controller().switch_epoch(), t.controller().freeze_epoch())
+    };
+    let (pipelined, ps, pf) = run(true);
+    let (serial, ss, sf) = run(false);
+    assert_eq!(pipelined, serial, "pipelined losses must be bit-identical");
+    assert_eq!(ps, ss, "switch epoch must match");
+    assert_eq!(pf, sf, "freeze epoch must match");
+    assert!(
+        ps.is_some() && pf.is_some(),
+        "run must cross both phase boundaries to exercise the barrier"
+    );
+}
+
+#[test]
+fn restore_roundtrips_adapter_state() {
+    // drive past the switch so the checkpoint carries LoRA state
+    let mut t = Trainer::new(micro_config(16)).unwrap();
+    for _ in 0..16 {
+        t.run_epoch().unwrap();
+    }
+    assert!(t.adapter_cfg().is_some(), "run never switched");
+    let ck = t.checkpoint();
+    let (l1, a1) = t.evaluate().unwrap();
+
+    let mut fresh = Trainer::new(micro_config(16)).unwrap();
+    assert!(fresh.adapter_cfg().is_none());
+    fresh.restore(&ck).unwrap();
+    let acfg = fresh.adapter_cfg().expect("restore must rebuild the adapter cfg");
+    assert_eq!(acfg.ranks, t.adapter_cfg().unwrap().ranks);
+    assert_eq!(acfg.trainable_params, t.adapter_cfg().unwrap().trainable_params);
+    // the restored model must evaluate exactly like the source model
+    let (l2, a2) = fresh.evaluate().unwrap();
+    assert_eq!(l1, l2, "restored eval loss differs");
+    assert_eq!(a1, a2, "restored eval accuracy differs");
+
+    // a rank layout that disagrees with the manifest is rejected
+    let mut bad = ck.clone();
+    bad.ranks.as_mut().unwrap().pop();
+    assert!(fresh.restore(&bad).is_err(), "short rank list must be rejected");
+    // partial LoRA state is rejected too
+    let mut partial = ck.clone();
+    partial.adapter_cfg = None;
+    assert!(fresh.restore(&partial).is_err(), "partial state must be rejected");
+}
+
+#[test]
 fn checkpoint_roundtrip_through_trainer() {
     let mut t = Trainer::new(micro_config(2)).unwrap();
     t.run_epoch().unwrap();
@@ -287,6 +348,62 @@ fn prop_allreduce_algorithms_agree() {
             .zip(&tree[0])
             .zip(&ring[0])
             .all(|((&a, &b), &c)| (a - b).abs() < 1e-4 && (a - c).abs() < 1e-4)
+    });
+}
+
+/// Odd worker counts with buffer lengths the ring chunking does not
+/// divide evenly — the ragged-chunk schedule the fixed-size cases miss.
+#[derive(Debug, Clone)]
+struct OddReduceCase {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl Arbitrary for OddReduceCase {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let n = [3usize, 5, 7][rng.next_below(3)];
+        let mut len = 1 + rng.next_below(500);
+        if len % n == 0 {
+            len += 1; // force non-chunk-aligned
+        }
+        let bufs = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_f32() * 4.0 - 2.0).collect())
+            .collect();
+        OddReduceCase { bufs }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let len = self.bufs[0].len();
+        if len > 1 {
+            vec![OddReduceCase {
+                bufs: self.bufs.iter().map(|b| b[..len / 2].to_vec()).collect(),
+            }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_odd_worker_allreduce_agrees_tightly() {
+    check::<OddReduceCase, _>(404, 150, |case| {
+        let exact: Vec<f64> = (0..case.bufs[0].len())
+            .map(|i| {
+                case.bufs.iter().map(|b| b[i] as f64).sum::<f64>() / case.bufs.len() as f64
+            })
+            .collect();
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let mut bufs = case.bufs.clone();
+            reduce_mean(alg, &mut bufs);
+            // tight tolerance: a few f32 summation orders over <= 7 values
+            if !bufs[0]
+                .iter()
+                .zip(&exact)
+                .all(|(&got, &want)| (got as f64 - want).abs() < 1e-5)
+            {
+                return false;
+            }
+        }
+        true
     });
 }
 
