@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use prelora::config::{PreLoraConfig, TrainConfig};
 use prelora::convergence::{ConvergenceStrategy, WelchTTest, WindowedThreshold};
 use prelora::manifest::Manifest;
-use prelora::optim;
+use prelora::optim::{self, Optimizer as _};
 use prelora::rank::assign_ranks;
 use prelora::telemetry::{NormHistory, NormSnapshot};
 use prelora::tensor::{clip_by_global_norm, Pcg64};

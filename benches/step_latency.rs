@@ -3,9 +3,13 @@
 //! The paper's epoch-time/throughput gains come from the cheaper backward
 //! pass after the base is frozen. This bench measures exactly that at the
 //! step level: full_grads vs warmup_grads vs lora_grads vs eval, on every
-//! model with built artifacts. Expect lora < full < warmup.
+//! model with built artifacts. Expect lora < full < warmup. Also measures
+//! the staged pipeline vs the serial loop and ZeRO-1 optimizer-state
+//! sharding on vs off (same losses, ~1/N per-worker state).
 //!
-//! Writes results/bench_step_latency.csv.
+//! Writes results/bench_step_latency.csv and the CI artifact
+//! results/BENCH_step_latency.json. `PRELORA_BENCH_SMOKE=1` runs one
+//! iteration per case (CI smoke mode).
 
 use std::sync::Arc;
 
@@ -13,7 +17,7 @@ use prelora::config::{PipelineConfig, TrainConfig};
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
 use prelora::dp::{Algorithm, GradEngine, StepMode};
 use prelora::manifest::{Manifest, ADAPTED_MODULES};
-use prelora::optim;
+use prelora::optim::ShardedOptimizer;
 use prelora::pipeline::{ModelState, StepPipeline, UpdateStage};
 use prelora::rank::{build_adapter_cfg, uniform_ranks};
 use prelora::tensor::Pcg64;
@@ -102,8 +106,9 @@ fn bench_pipeline(b: &mut Bench, name: &str) {
     let mut means = [0.0f64; 2];
     for enabled in [false, true] {
         let pcfg = PipelineConfig { enabled, prefetch_depth: 2, overlap_reduce: true };
-        let mut pipe = StepPipeline::new(&pcfg, engine.algorithm()).unwrap();
-        let mut model = ModelState::new(base.clone(), optim::build(&tcfg, base.len()));
+        let mut pipe = StepPipeline::new(&pcfg, engine.algorithm(), 1).unwrap();
+        let mut model =
+            ModelState::new(base.clone(), ShardedOptimizer::new(&tcfg, base.len(), 1));
         let label = format!(
             "{name}/epoch_pipeline_{}",
             if enabled { "on" } else { "off" }
@@ -135,16 +140,105 @@ fn bench_pipeline(b: &mut Bench, name: &str) {
     );
 }
 
+/// ZeRO-1 on vs off: one full-phase epoch at 2 workers. The claim is the
+/// memory one, not a speed one — losses are bit-identical while the
+/// per-worker optimizer state drops to ~1/workers (chunk-rounded).
+fn bench_zero(b: &mut Bench, name: &str) {
+    let dir = std::path::Path::new("artifacts").join(name);
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("skipping {name} zero bench: no artifacts");
+        return;
+    };
+    let m = Arc::new(m);
+    let c = m.config.clone();
+    let workers = 2;
+    let epoch_steps = 4;
+    let data = Arc::new(Dataset::generate(&SynthSpec {
+        samples: c.batch_size * workers * epoch_steps,
+        image_size: c.image_size,
+        channels: c.in_channels,
+        num_classes: c.num_classes,
+        noise: 0.3,
+        phase_jitter: true,
+        seed: 3,
+    }));
+    let loader = EpochLoader::new(c.batch_size, workers, 0);
+    let steps = loader.steps_per_epoch(&data);
+    let mut engine = GradEngine::new(m.clone(), workers, true, Algorithm::Ring).unwrap();
+    let mut tcfg = TrainConfig::default();
+    tcfg.dp.workers = workers;
+    let base = m.load_init_base().unwrap();
+    let update = UpdateStage::new(tcfg.grad_clip);
+    let units = (c.batch_size * workers * steps) as f64;
+    let mut losses = [0.0f64; 2];
+    for zero in [false, true] {
+        tcfg.zero.enabled = zero;
+        let shards = tcfg.zero_shards();
+        let pcfg = PipelineConfig { enabled: true, prefetch_depth: 2, overlap_reduce: true };
+        let mut pipe = StepPipeline::new(&pcfg, engine.algorithm(), shards).unwrap();
+        let label = format!("{name}/epoch_zero_{}", if zero { "on" } else { "off" });
+        let mut last_loss = 0.0f64;
+        b.run_units(&label, units, || {
+            // fresh model per iteration: epoch 0 from init both ways, so
+            // the recorded losses are directly comparable
+            let mut model =
+                ModelState::new(base.clone(), ShardedOptimizer::new(&tcfg, base.len(), shards));
+            let run = pipe
+                .run_epoch(
+                    &mut engine,
+                    &loader,
+                    &data,
+                    &mut model,
+                    &update,
+                    StepMode::Full,
+                    0,
+                    steps,
+                    1e-3,
+                )
+                .unwrap();
+            last_loss = run.loss_sum;
+        });
+        losses[zero as usize] = last_loss;
+    }
+    let total = ShardedOptimizer::new(&tcfg, base.len(), 1).state_bytes();
+    let per_worker = ShardedOptimizer::new(&tcfg, base.len(), workers).per_worker_state_bytes();
+    println!(
+        "{name}: zero on/off epoch loss {} vs {} ({}), per-worker opt state {} B vs {} B ({:.3}x, expect ~1/{workers})",
+        losses[1],
+        losses[0],
+        if losses[1] == losses[0] { "bit-identical" } else { "MISMATCH" },
+        per_worker,
+        total,
+        per_worker as f64 / total as f64,
+    );
+    assert_eq!(losses[1], losses[0], "{name}: ZeRO changed the losses");
+    assert!(
+        per_worker as f64 <= total as f64 / workers as f64 + 16.0,
+        "{name}: per-worker optimizer state did not shrink to ~1/{workers}"
+    );
+}
+
 fn main() {
-    let mut b = Bench::heavy();
+    let smoke = std::env::var("PRELORA_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let mut b = if smoke { Bench::smoke() } else { Bench::heavy() };
     // PRELORA_BENCH_MODELS=vit-small,... restricts the sweep
     let models = std::env::var("PRELORA_BENCH_MODELS")
         .unwrap_or_else(|_| "vit-micro,vit-small,vit-base-sim".into());
     for model in models.split(',') {
         bench_model(&mut b, model);
         bench_pipeline(&mut b, model);
+        bench_zero(&mut b, model);
     }
     b.write_csv("results/bench_step_latency.csv").unwrap();
+    b.write_json(
+        "results/BENCH_step_latency.json",
+        &[
+            ("bench", "step_latency".to_string()),
+            ("mode", if smoke { "smoke" } else { "full" }.to_string()),
+            ("models", models.clone()),
+        ],
+    )
+    .unwrap();
     // Fig. 7 shape assertion: the frozen-base step must beat the full step
     // on every model where both ran.
     let r = b.results();

@@ -7,7 +7,7 @@ mod train;
 
 pub use prelora::{ConvergenceStrategyKind, PreLoraConfig, StrictnessPreset};
 pub use train::{
-    DataConfig, DpConfig, LrScheduleKind, OptimizerKind, PipelineConfig, TrainConfig,
+    DataConfig, DpConfig, LrScheduleKind, OptimizerKind, PipelineConfig, TrainConfig, ZeroConfig,
 };
 
 use std::path::Path;
@@ -97,6 +97,7 @@ impl RunConfig {
             "train.pipeline.enabled" => t.pipeline.enabled = v.as_bool()?,
             "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
             "train.pipeline.overlap_reduce" => t.pipeline.overlap_reduce = v.as_bool()?,
+            "train.zero.enabled" => t.zero.enabled = v.as_bool()?,
             "prelora.enabled" => p.enabled = v.as_bool()?,
             "prelora.windows" => p.windows = v.as_usize()?,
             "prelora.window_epochs" => p.window_epochs = v.as_usize()?,
@@ -110,6 +111,15 @@ impl RunConfig {
             "prelora.strategy" => p.strategy = v.as_str()?.parse()?,
             "prelora.ttest_alpha" => p.ttest_alpha = v.as_f64()?,
             "prelora.min_epochs_before_switch" => p.min_epochs_before_switch = v.as_usize()?,
+            // comma-separated list (the TOML subset has no arrays)
+            "prelora.convergence_modules" => {
+                p.convergence_modules = v
+                    .as_str()?
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+            }
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -154,6 +164,8 @@ impl RunConfig {
         s.push_str(&format!("enabled = {}\n", t.pipeline.enabled));
         s.push_str(&format!("prefetch_depth = {}\n", t.pipeline.prefetch_depth));
         s.push_str(&format!("overlap_reduce = {}\n\n", t.pipeline.overlap_reduce));
+        s.push_str("[train.zero]\n");
+        s.push_str(&format!("enabled = {}\n\n", t.zero.enabled));
         s.push_str("[prelora]\n");
         s.push_str(&format!("enabled = {}\n", p.enabled));
         s.push_str(&format!("windows = {}\n", p.windows));
@@ -175,6 +187,12 @@ impl RunConfig {
             "min_epochs_before_switch = {}\n",
             p.min_epochs_before_switch
         ));
+        if !p.convergence_modules.is_empty() {
+            s.push_str(&format!(
+                "convergence_modules = {}\n",
+                escape_str(&p.convergence_modules.join(","))
+            ));
+        }
         s
     }
 
@@ -237,6 +255,32 @@ mod tests {
         assert!(!cfg.train.pipeline.enabled);
         assert_eq!(cfg.train.pipeline.prefetch_depth, 4);
         assert!(!cfg.train.pipeline.overlap_reduce);
+    }
+
+    #[test]
+    fn zero_key_parses_and_roundtrips() {
+        let cfg =
+            RunConfig::from_toml_str("[train.zero]\nenabled = true\n[train.dp]\nworkers = 4\n")
+                .unwrap();
+        assert!(cfg.train.zero.enabled);
+        assert_eq!(cfg.train.zero_shards(), 4);
+        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert!(back.train.zero.enabled);
+        // off by default
+        assert!(!RunConfig::default().train.zero.enabled);
+    }
+
+    #[test]
+    fn convergence_modules_parse_as_comma_list() {
+        let cfg = RunConfig::from_toml_str(
+            "[prelora]\nconvergence_modules = \"query, value ,dense\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.prelora.convergence_modules, vec!["query", "value", "dense"]);
+        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.prelora.convergence_modules, cfg.prelora.convergence_modules);
+        // default: empty = the paper's alpha set
+        assert!(RunConfig::default().prelora.convergence_modules.is_empty());
     }
 
     #[test]

@@ -90,6 +90,13 @@ pub struct PreLoraConfig {
     /// Don't test for convergence before this many epochs (guards the
     /// highly non-stationary early phase, cf. paper's local-minima remark).
     pub min_epochs_before_switch: usize,
+    /// Modules whose windowed weight norms the convergence test watches.
+    /// Empty = the paper's target set alpha (restricted to what the model
+    /// manifest tracks). Every listed module must exist in the manifest's
+    /// telemetry set — an unknown name is a startup error, because a
+    /// missing module would otherwise read as norm 0 and trivially pass
+    /// the tau test.
+    pub convergence_modules: Vec<String>,
 }
 
 impl Default for PreLoraConfig {
@@ -108,6 +115,7 @@ impl Default for PreLoraConfig {
             strategy: ConvergenceStrategyKind::WindowedThreshold,
             ttest_alpha: 0.05,
             min_epochs_before_switch: 0,
+            convergence_modules: Vec::new(),
         }
     }
 }
@@ -126,6 +134,10 @@ impl PreLoraConfig {
             ensure!(lo <= hi, "r_min <= r_max");
             ensure!(lo.is_power_of_two() && hi.is_power_of_two(), "ranks are powers of two");
         }
+        ensure!(
+            self.convergence_modules.iter().all(|m| !m.trim().is_empty()),
+            "convergence_modules must not contain empty names"
+        );
         Ok(())
     }
 

@@ -102,6 +102,19 @@ impl Default for DpConfig {
     }
 }
 
+#[derive(Debug, Clone, Default)]
+pub struct ZeroConfig {
+    /// Shard optimizer state across the data-parallel workers (ZeRO
+    /// stage 1): gradients reduce-scatter instead of all-reduce, each
+    /// worker holds AdamW moments only for its owned partition, and the
+    /// parameter vector is re-assembled by all-gather after the shard
+    /// updates. Per-worker optimizer state drops to ~1/workers while
+    /// per-epoch losses stay bit-identical to the replicated path for a
+    /// fixed seed (the reduce-scatter reuses the all-reduce summation
+    /// schedule). A no-op at `workers = 1`. Off by default.
+    pub enabled: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     /// Drive epochs through the staged step pipeline
@@ -148,6 +161,7 @@ pub struct TrainConfig {
     pub data: DataConfig,
     pub dp: DpConfig,
     pub pipeline: PipelineConfig,
+    pub zero: ZeroConfig,
 }
 
 impl Default for TrainConfig {
@@ -169,6 +183,7 @@ impl Default for TrainConfig {
             data: DataConfig::default(),
             dp: DpConfig::default(),
             pipeline: PipelineConfig::default(),
+            zero: ZeroConfig::default(),
         }
     }
 }
@@ -189,6 +204,17 @@ impl TrainConfig {
             .map_err(|e| anyhow::anyhow!(e))?;
         ensure!(self.pipeline.prefetch_depth >= 1, "pipeline.prefetch_depth >= 1");
         Ok(())
+    }
+
+    /// Optimizer-state partition count the run's ZeRO setting implies:
+    /// one shard per data-parallel worker when sharding is on, a single
+    /// (unsharded) partition otherwise.
+    pub fn zero_shards(&self) -> usize {
+        if self.zero.enabled {
+            self.dp.workers
+        } else {
+            1
+        }
     }
 
     fn train_batchable(&self) -> bool {
@@ -213,6 +239,18 @@ mod tests {
         // case-insensitive spellings are fine (FromStr is the one parser)
         let mut cfg = TrainConfig::default();
         cfg.dp.allreduce = "Ring".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_shards_follow_workers_only_when_enabled() {
+        let mut cfg = TrainConfig::default();
+        cfg.dp.workers = 4;
+        assert_eq!(cfg.zero_shards(), 1, "off by default");
+        cfg.zero.enabled = true;
+        assert_eq!(cfg.zero_shards(), 4);
+        cfg.dp.workers = 1;
+        assert_eq!(cfg.zero_shards(), 1, "single worker: sharding degenerates");
         cfg.validate().unwrap();
     }
 

@@ -74,9 +74,16 @@ impl WindowedThreshold {
     }
 }
 
+/// Percentage change from `prev` to `cur`.
+///
+/// A window whose mean collapses to exactly zero (or is NaN-poisoned by an
+/// untracked module) carries no convergence evidence, so the zero-prev
+/// case reports an *infinite* delta — it must read as "not converged", not
+/// as the 0% = "fully converged" it used to return, which could fire the
+/// LoRA switch on a degenerate window.
 fn pct_change(prev: f64, cur: f64) -> f64 {
     if prev == 0.0 {
-        0.0
+        f64::INFINITY
     } else {
         (cur - prev) / prev * 100.0
     }
@@ -91,16 +98,23 @@ impl ConvergenceStrategy for WindowedThreshold {
         let mut max_l: f64 = 0.0;
         let mut fail: Option<String> = None;
 
-        // loss windows (module-independent, checked once)
+        // loss windows (module-independent, checked once). NaN deltas from
+        // a poisoned window are checked explicitly: `NaN > thr` is false,
+        // so a plain threshold comparison would silently pass them.
         let losses = self.loss_series(history, end);
         for t in 1..self.k {
             let dl = pct_change(losses[t - 1], losses[t]).abs();
             max_l = max_l.max(dl);
-            if dl > self.zeta && fail.is_none() {
-                fail = Some(format!(
-                    "loss window {t}: |dL|={dl:.3}% > zeta={:.3}%",
-                    self.zeta
-                ));
+            if (dl.is_nan() || dl > self.zeta) && fail.is_none() {
+                fail = Some(if dl.is_finite() {
+                    format!("loss window {t}: |dL|={dl:.3}% > zeta={:.3}%", self.zeta)
+                } else {
+                    format!(
+                        "loss window {t}: degenerate window (mean loss {} -> {}; zero or untracked evidence cannot certify convergence)",
+                        losses[t - 1],
+                        losses[t]
+                    )
+                });
             }
         }
         // per-module weight-norm windows
@@ -109,11 +123,19 @@ impl ConvergenceStrategy for WindowedThreshold {
             for t in 1..self.k {
                 let dw = pct_change(series[t - 1], series[t]).abs();
                 max_w = max_w.max(dw);
-                if dw > self.tau && fail.is_none() {
-                    fail = Some(format!(
-                        "module {module} window {t}: |dW|={dw:.3}% > tau={:.3}%",
-                        self.tau
-                    ));
+                if (dw.is_nan() || dw > self.tau) && fail.is_none() {
+                    fail = Some(if dw.is_finite() {
+                        format!(
+                            "module {module} window {t}: |dW|={dw:.3}% > tau={:.3}%",
+                            self.tau
+                        )
+                    } else {
+                        format!(
+                            "module {module} window {t}: degenerate window (norm {} -> {}; zero or untracked evidence cannot certify convergence)",
+                            series[t - 1],
+                            series[t]
+                        )
+                    });
                 }
             }
         }
@@ -194,6 +216,39 @@ mod tests {
         let strict = strat(0.25, 1.0).check(&h, 9); // Exp3
         assert!(relaxed.converged, "{:?}", relaxed.fail_reason);
         assert!(!strict.converged);
+    }
+
+    #[test]
+    fn zero_norm_window_is_not_converged() {
+        // regression: a window whose norm collapses to exactly 0 used to
+        // read as dW = 0% ("fully converged") and could fire the switch
+        let h = make_history(&[0.0; 9], &[2.0; 9]);
+        let r = strat(0.5, 2.5).check(&h, 9);
+        assert!(!r.converged, "zero-norm windows must never certify convergence");
+        assert!(r.max_weight_delta.is_infinite());
+        let reason = r.fail_reason.unwrap();
+        assert!(reason.contains("degenerate"), "{reason}");
+    }
+
+    #[test]
+    fn zero_loss_window_is_not_converged() {
+        let h = make_history(&[10.0; 9], &[0.0; 9]);
+        let r = strat(0.5, 2.5).check(&h, 9);
+        assert!(!r.converged, "zero-loss windows must never certify convergence");
+        assert!(r.max_loss_delta.is_infinite());
+        let reason = r.fail_reason.unwrap();
+        assert!(reason.contains("degenerate") && reason.contains("loss"), "{reason}");
+    }
+
+    #[test]
+    fn nan_poisoned_window_is_not_converged() {
+        // an untracked module makes window_module_norm NaN; the comparison
+        // must treat that as failure, not let `NaN > tau == false` pass it
+        let h = make_history(&[10.0; 9], &[2.0; 9]);
+        let s = WindowedThreshold::new(3, 3, 0.5, 2.5, vec!["qurey".into()]);
+        let r = s.check(&h, 9);
+        assert!(!r.converged, "NaN-poisoned module must fail the test");
+        assert!(r.fail_reason.unwrap().contains("qurey"));
     }
 
     #[test]

@@ -2,6 +2,8 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{ensure, Result};
+
 use crate::config::PreLoraConfig;
 use crate::convergence::{self, ConvergenceReport, ConvergenceStrategy};
 use crate::manifest::{Manifest, ADAPTED_MODULES};
@@ -40,16 +42,41 @@ pub struct PreLoraController {
 }
 
 impl PreLoraController {
-    pub fn new(cfg: PreLoraConfig, manifest: &Manifest) -> Self {
-        let target_modules: Vec<String> = ADAPTED_MODULES
-            .iter()
-            .map(|s| s.to_string())
-            .filter(|m| manifest.telemetry_modules().contains(m))
-            .collect();
+    /// Build the controller. Errors when `cfg.convergence_modules` names a
+    /// module the manifest's telemetry does not track: an untracked module
+    /// would otherwise contribute no norm signal and could silently pass
+    /// the tau test (a misspelling must fail at startup, not train for
+    /// hours and switch on garbage evidence). A disabled controller
+    /// (`prelora.enabled = false`) skips the validation — its strategy is
+    /// never consulted, and a baseline run must not fail on convergence
+    /// config it will not use.
+    pub fn new(cfg: PreLoraConfig, manifest: &Manifest) -> Result<Self> {
+        let tracked = manifest.telemetry_modules();
+        let target_modules: Vec<String> = if cfg.convergence_modules.is_empty() {
+            // default: the paper's alpha set, restricted to what this
+            // manifest exposes
+            ADAPTED_MODULES
+                .iter()
+                .map(|s| s.to_string())
+                .filter(|m| tracked.contains(m))
+                .collect()
+        } else {
+            for m in &cfg.convergence_modules {
+                ensure!(
+                    !cfg.enabled || tracked.contains(m),
+                    "convergence module {m:?} is not tracked by the manifest (telemetry set: {tracked:?})"
+                );
+            }
+            cfg.convergence_modules.clone()
+        };
+        ensure!(
+            !cfg.enabled || !target_modules.is_empty(),
+            "no convergence modules to watch"
+        );
         let strategy = convergence::build(&cfg, target_modules.clone());
         let r_min = cfg.r_min.unwrap_or(manifest.config.r_min);
         let r_max = cfg.r_max.unwrap_or(manifest.config.r_max);
-        Self {
+        Ok(Self {
             cfg,
             strategy,
             phase: Phase::FullParam,
@@ -60,7 +87,7 @@ impl PreLoraController {
             switch_epoch: None,
             freeze_epoch: None,
             checks: Vec::new(),
-        }
+        })
     }
 
     pub fn phase(&self) -> Phase {
@@ -175,9 +202,31 @@ mod tests {
     }
 
     #[test]
+    fn unknown_convergence_module_is_a_startup_error() {
+        let m = micro();
+        let mut c = cfg();
+        c.convergence_modules = vec!["query".into(), "qurey".into()]; // misspelled
+        let err = match PreLoraController::new(c, &m) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("misspelled module must be rejected at startup"),
+        };
+        assert!(err.contains("qurey"), "{err}");
+        // a correctly spelled explicit list is accepted
+        let mut c = cfg();
+        c.convergence_modules = vec!["query".into(), "dense".into()];
+        PreLoraController::new(c, &m).unwrap();
+        // a disabled controller never consults the strategy, so a
+        // baseline run must not fail on convergence config it won't use
+        let mut c = cfg();
+        c.enabled = false;
+        c.convergence_modules = vec!["qurey".into()];
+        PreLoraController::new(c, &m).unwrap();
+    }
+
+    #[test]
     fn stays_while_training_moves() {
         let m = micro();
-        let mut ctl = PreLoraController::new(cfg(), &m);
+        let mut ctl = PreLoraController::new(cfg(), &m).unwrap();
         let mut h = NormHistory::new();
         feed(&mut h, 12, 10.0, 0.5, 3.0, -0.2); // 5%/epoch norm growth
         for _ in 0..h.epochs() {
@@ -191,7 +240,7 @@ mod tests {
     #[test]
     fn full_lifecycle_switches_then_freezes() {
         let m = micro();
-        let mut ctl = PreLoraController::new(cfg(), &m);
+        let mut ctl = PreLoraController::new(cfg(), &m).unwrap();
         let mut h = NormHistory::new();
         // plateau from the start: converges at the first eligible boundary
         feed(&mut h, 9, 10.0, 0.0001, 2.0, -0.0001);
@@ -230,7 +279,7 @@ mod tests {
         let m = micro();
         let mut c = cfg();
         c.enabled = false;
-        let mut ctl = PreLoraController::new(c, &m);
+        let mut ctl = PreLoraController::new(c, &m).unwrap();
         let mut h = NormHistory::new();
         feed(&mut h, 20, 10.0, 0.0, 2.0, 0.0);
         assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
@@ -240,7 +289,7 @@ mod tests {
     #[test]
     fn only_checks_at_window_boundaries() {
         let m = micro();
-        let mut ctl = PreLoraController::new(cfg(), &m);
+        let mut ctl = PreLoraController::new(cfg(), &m).unwrap();
         let mut h = NormHistory::new();
         feed(&mut h, 10, 10.0, 0.0, 2.0, 0.0); // epoch 10: not a multiple of 3
         let _ = ctl.on_epoch_end(&h);
@@ -252,7 +301,7 @@ mod tests {
         let m = micro();
         let mut c = cfg();
         c.min_epochs_before_switch = 12;
-        let mut ctl = PreLoraController::new(c, &m);
+        let mut ctl = PreLoraController::new(c, &m).unwrap();
         let mut h = NormHistory::new();
         feed(&mut h, 9, 10.0, 0.0, 2.0, 0.0);
         assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
@@ -266,7 +315,7 @@ mod tests {
         let mut c = cfg();
         c.dynamic_ranks = false;
         c.uniform_rank = 4;
-        let mut ctl = PreLoraController::new(c, &m);
+        let mut ctl = PreLoraController::new(c, &m).unwrap();
         let mut h = NormHistory::new();
         feed(&mut h, 9, 10.0, 0.0, 2.0, 0.0);
         match ctl.on_epoch_end(&h) {

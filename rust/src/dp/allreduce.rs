@@ -56,6 +56,57 @@ impl FromStr for Algorithm {
     }
 }
 
+/// A reduced gradient buffer in one of its two distributed layouts.
+///
+/// `Full` is the classic DDP picture: every worker holds the whole mean
+/// vector. `Sharded` is the ZeRO-1 picture: worker `w` owns partition `w`
+/// of the same vector (the [`partition`] chunking), and the concatenation
+/// of the shards is **bitwise** the `Full` vector — both layouts run the
+/// same summation schedule, so which one a run uses cannot change losses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reduced {
+    Full(Vec<f32>),
+    /// One owned chunk per partition, in partition order; chunks may be
+    /// empty when there are more partitions than elements.
+    Sharded(Vec<Vec<f32>>),
+}
+
+impl Reduced {
+    /// Total element count across the layout.
+    pub fn len(&self) -> usize {
+        match self {
+            Reduced::Full(v) => v.len(),
+            Reduced::Sharded(chunks) => chunks.iter().map(Vec::len).sum(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the full vector (all-gather for the sharded layout).
+    pub fn into_full(self) -> Vec<f32> {
+        match self {
+            Reduced::Full(v) => v,
+            Reduced::Sharded(chunks) => all_gather(&chunks),
+        }
+    }
+}
+
+/// Contiguous `(lo, hi)` partition bounds of a length-`len` vector over
+/// `parts` owners — the ring algorithm's chunking (`ceil(len / parts)`
+/// sized chunks, a possibly ragged final chunk, empty chunks when
+/// `parts > len`). This is the one chunking used by [`reduce_scatter`],
+/// the ZeRO optimizer sharding and the checkpoint gather, so shard layouts
+/// agree everywhere by construction.
+pub fn partition(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts >= 1, "need at least one partition");
+    let chunk = len.div_ceil(parts);
+    (0..parts)
+        .map(|c| ((c * chunk).min(len), ((c + 1) * chunk).min(len)))
+        .collect()
+}
+
 /// Reduce `bufs` to their elementwise mean, left in `bufs[0]`.
 /// Returns early on a single buffer. Panics on length mismatch.
 pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
@@ -74,6 +125,68 @@ pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
     for v in bufs[0].iter_mut() {
         *v *= inv;
     }
+}
+
+/// Reduce-scatter: the elementwise mean of `bufs`, returned as `parts`
+/// owned chunks ([`partition`] layout) instead of one replicated vector.
+///
+/// **Bit contract:** concatenating the returned chunks yields exactly the
+/// vector [`reduce_owned`] would have produced for the same `alg` — the
+/// summation order per element is identical, only the final placement
+/// differs. For `Ring` with `parts == bufs.len()` this skips the gather
+/// phase entirely (the real ZeRO traffic saving: each worker keeps the
+/// chunk the ring schedule already completed on it); the other algorithms
+/// reduce fully and then scatter, which changes placement, not bits.
+pub fn reduce_scatter(
+    alg: Algorithm,
+    mut bufs: Vec<Vec<f32>>,
+    parts: usize,
+) -> Option<Vec<Vec<f32>>> {
+    let n = bufs.len();
+    if n == 0 {
+        return None;
+    }
+    let len = bufs[0].len();
+    if n > 1 && alg == Algorithm::Ring && parts == n {
+        assert!(bufs.iter().all(|b| b.len() == len), "buffer length mismatch");
+        ring_rounds(&mut bufs);
+        let inv = 1.0 / n as f32;
+        let out = partition(len, parts)
+            .into_iter()
+            .enumerate()
+            .map(|(c, (lo, hi))| {
+                // rank (c-1) mod n holds the fully-summed chunk c
+                let owner = (c + n - 1) % n;
+                let mut chunk = bufs[owner][lo..hi].to_vec();
+                for v in chunk.iter_mut() {
+                    *v *= inv;
+                }
+                chunk
+            })
+            .collect();
+        return Some(out);
+    }
+    let full = reduce_owned(alg, bufs)?;
+    Some(scatter(&full, parts))
+}
+
+/// Split a full vector into owned [`partition`] chunks (copies).
+pub fn scatter(full: &[f32], parts: usize) -> Vec<Vec<f32>> {
+    partition(full.len(), parts)
+        .into_iter()
+        .map(|(lo, hi)| full[lo..hi].to_vec())
+        .collect()
+}
+
+/// All-gather: reassemble the full vector from [`partition`]-ordered
+/// chunks — the inverse of [`scatter`], and the step that rebuilds the
+/// replicated parameter vector after each ZeRO shard update.
+pub fn all_gather(chunks: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+    for c in chunks {
+        out.extend_from_slice(c);
+    }
+    out
 }
 
 /// Owned-buffer variant: reduce to the mean and hand back the first
@@ -124,23 +237,42 @@ fn tree(bufs: &mut [Vec<f32>]) {
 }
 
 fn ring(bufs: &mut [Vec<f32>]) {
-    // reduce-scatter: rank i receives chunk (i - round - 1) mod N from its
-    // left neighbor each round, so after N-1 rounds rank i holds the fully
-    // summed chunk (i + 1) mod N — equivalently, chunk c completes on rank
-    // (c - 1) mod N. The gather phase then copies the owned chunks into
-    // rank 0 (we only need the full sum there) — the chunk schedule (which
-    // rank sums what, when) matches a textbook ring exactly.
+    // reduce-scatter rounds, then gather the owned chunks into rank 0 (we
+    // only need the full sum there) — the chunk schedule (which rank sums
+    // what, when) matches a textbook ring exactly.
+    ring_rounds(bufs);
     let n = bufs.len();
-    let len = bufs[0].len();
-    let chunk = len.div_ceil(n);
-    let bounds = |c: usize| (c * chunk, ((c + 1) * chunk).min(len));
-    // reduce-scatter rounds
+    let bounds = partition(bufs[0].len(), n);
+    // gather: rank (c-1) mod n owns the fully-reduced chunk c
+    for c in 0..n {
+        let owner = (c + n - 1) % n;
+        if owner == 0 {
+            continue;
+        }
+        let (lo, hi) = bounds[c];
+        if lo >= hi {
+            continue;
+        }
+        let (head, tail) = bufs.split_at_mut(1);
+        head[0][lo..hi].copy_from_slice(&tail[owner - 1][lo..hi]);
+    }
+}
+
+/// The ring's reduce-scatter phase: rank i receives chunk (i - round - 1)
+/// mod N from its left neighbor each round, so after N-1 rounds rank i
+/// holds the fully summed chunk (i + 1) mod N — equivalently, chunk c
+/// completes on rank (c - 1) mod N. Shared by the full all-reduce and
+/// [`reduce_scatter`], which is what keeps their summation orders (and
+/// therefore bits) identical.
+fn ring_rounds(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    let bounds = partition(bufs[0].len(), n);
     for round in 0..n - 1 {
         for rank in 0..n {
             // rank receives chunk (rank - round - 1) from its left neighbor
             let c = (rank + n - round - 1) % n;
             let src = (rank + n - 1) % n;
-            let (lo, hi) = bounds(c);
+            let (lo, hi) = bounds[c];
             if lo >= hi {
                 continue;
             }
@@ -158,19 +290,6 @@ fn ring(bufs: &mut [Vec<f32>]) {
                 dst_buf[i] += src_buf[i];
             }
         }
-    }
-    // gather: rank (c-1) mod n owns the fully-reduced chunk c
-    for c in 0..n {
-        let owner = (c + n - 1) % n;
-        if owner == 0 {
-            continue;
-        }
-        let (lo, hi) = bounds(c);
-        if lo >= hi {
-            continue;
-        }
-        let (head, tail) = bufs.split_at_mut(1);
-        head[0][lo..hi].copy_from_slice(&tail[owner - 1][lo..hi]);
     }
 }
 
@@ -269,5 +388,72 @@ mod tests {
     fn mismatched_lengths_panic() {
         let mut bufs = vec![vec![1.0; 4], vec![1.0; 5]];
         reduce_mean(Algorithm::Naive, &mut bufs);
+    }
+
+    #[test]
+    fn partition_covers_contiguously() {
+        for (len, parts) in [(10usize, 3usize), (7, 7), (3, 8), (0, 2), (1023, 5), (16, 1)] {
+            let b = partition(len, parts);
+            assert_eq!(b.len(), parts);
+            let mut at = 0;
+            for &(lo, hi) in &b {
+                assert_eq!(lo, at);
+                assert!(hi >= lo && hi <= len);
+                at = hi;
+            }
+            assert_eq!(at, len, "partition must cover [0, {len})");
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_concat_is_bitwise_reduce_owned() {
+        // the ZeRO bit contract: per algorithm, per ragged shape, the
+        // scattered chunks concatenate to *exactly* the all-reduce output
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            for n in [1usize, 2, 3, 5, 7, 8] {
+                for len in [1usize, 2, 17, 64, 101] {
+                    let (bufs, _) = make_bufs(n, len);
+                    let want = reduce_owned(alg, bufs.clone()).unwrap();
+                    let chunks = reduce_scatter(alg, bufs, n).unwrap();
+                    assert_eq!(chunks.len(), n);
+                    let got = all_gather(&chunks);
+                    assert_eq!(got, want, "{alg:?} n={n} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_part_count_independent_of_workers() {
+        // shard layout (parts) need not match the reducing worker count
+        let (bufs, _) = make_bufs(4, 33);
+        let want = reduce_owned(Algorithm::Ring, bufs.clone()).unwrap();
+        for parts in [1usize, 2, 3, 7, 40] {
+            let chunks = reduce_scatter(Algorithm::Ring, bufs.clone(), parts).unwrap();
+            assert_eq!(chunks.len(), parts);
+            assert_eq!(all_gather(&chunks), want, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let full: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 9.0).collect();
+        for parts in [1usize, 2, 5, 37, 50] {
+            let chunks = scatter(&full, parts);
+            assert_eq!(chunks.len(), parts);
+            assert_eq!(all_gather(&chunks), full);
+        }
+        assert!(reduce_scatter(Algorithm::Tree, Vec::new(), 3).is_none());
+    }
+
+    #[test]
+    fn reduced_layouts_agree_on_len_and_full() {
+        let full = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let sharded = Reduced::Sharded(scatter(&full, 3));
+        assert_eq!(sharded.len(), 5);
+        assert!(!sharded.is_empty());
+        assert_eq!(sharded.into_full(), full);
+        assert_eq!(Reduced::Full(full.clone()).len(), 5);
+        assert_eq!(Reduced::Full(full.clone()).into_full(), full);
     }
 }

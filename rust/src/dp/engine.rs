@@ -6,7 +6,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::allreduce::{reduce_owned, Algorithm};
+use super::allreduce::{reduce_owned, reduce_scatter, Algorithm, Reduced};
 use crate::data::Batch;
 use crate::manifest::Manifest;
 use crate::runtime::{Input, Runtime};
@@ -36,11 +36,14 @@ impl StepMode {
     }
 }
 
-/// All-reduced gradients + averaged scalars for one global step.
+/// All-reduced gradients + averaged scalars for one global step. The
+/// gradient buffers are [`Reduced`]: replicated full vectors on the
+/// classic path, per-worker owned partitions on the ZeRO path — bitwise
+/// the same values either way.
 #[derive(Debug, Clone)]
 pub struct GradResult {
-    pub d_base: Option<Vec<f32>>,
-    pub d_lora: Option<Vec<f32>>,
+    pub d_base: Option<Reduced>,
+    pub d_lora: Option<Reduced>,
     /// Mean loss across workers (each already batch-mean).
     pub loss: f64,
     /// Total top-1 hits across all shards.
@@ -75,8 +78,27 @@ impl StepOutputs {
     /// All-reduce both buffer sets inline (the non-overlapped path).
     pub fn reduce(self, algorithm: Algorithm) -> GradResult {
         GradResult {
-            d_base: reduce_owned(algorithm, self.base_grads),
-            d_lora: reduce_owned(algorithm, self.lora_grads),
+            d_base: reduce_owned(algorithm, self.base_grads).map(Reduced::Full),
+            d_lora: reduce_owned(algorithm, self.lora_grads).map(Reduced::Full),
+            loss: self.loss,
+            correct: self.correct,
+            samples: self.samples,
+            execute_seconds: self.execute_seconds,
+        }
+    }
+
+    /// Reduce-scatter both buffer sets into `parts` owned partitions
+    /// (ZeRO-1): each worker keeps only its chunk of the mean gradient.
+    /// `parts <= 1` degrades to the replicated [`reduce`](Self::reduce) —
+    /// both produce bitwise-identical values (see
+    /// [`reduce_scatter`](crate::dp::reduce_scatter)).
+    pub fn reduce_sharded(self, algorithm: Algorithm, parts: usize) -> GradResult {
+        if parts <= 1 {
+            return self.reduce(algorithm);
+        }
+        GradResult {
+            d_base: reduce_scatter(algorithm, self.base_grads, parts).map(Reduced::Sharded),
+            d_lora: reduce_scatter(algorithm, self.lora_grads, parts).map(Reduced::Sharded),
             loss: self.loss,
             correct: self.correct,
             samples: self.samples,
@@ -588,7 +610,7 @@ mod tests {
         let base = m.load_init_base().unwrap();
         let batches = loader.step_batches(&d, 0, 0);
         let r = eng.compute(StepMode::Full, &base, None, batches).unwrap();
-        let g = r.d_base.unwrap();
+        let g = r.d_base.unwrap().into_full();
         assert_eq!(g.len(), m.base.size);
         assert!(crate::tensor::l2_norm(&g) > 0.0);
         assert!(r.loss.is_finite() && r.loss > 0.0);
@@ -676,7 +698,7 @@ mod tests {
             .compute(StepMode::LoraOnly, &base, Some((&lora, &acfg.values)), batches)
             .unwrap();
         assert!(r.d_base.is_none());
-        let dl = r.d_lora.unwrap();
+        let dl = r.d_lora.unwrap().into_full();
         assert_eq!(dl.len(), m.lora.size);
         assert!(crate::tensor::l2_norm(&dl) > 0.0);
     }

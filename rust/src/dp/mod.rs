@@ -10,10 +10,15 @@
 //! split so the pipeline (`crate::pipeline`) can overlap its other stages
 //! with the workers' compute; `compute` is the one-shot wrapper. The
 //! all-reduce itself is implemented three ways (naive / tree / ring) and
-//! benchmarked in `benches/allreduce.rs`.
+//! benchmarked in `benches/allreduce.rs`. For ZeRO-1 runs the same
+//! summation schedules drive [`reduce_scatter`]/[`all_gather`], whose
+//! scattered chunks concatenate bitwise to the all-reduce output (the
+//! [`Reduced`] layout contract).
 
 pub mod allreduce;
 mod engine;
 
-pub use allreduce::{reduce_mean, reduce_owned, Algorithm};
+pub use allreduce::{
+    all_gather, partition, reduce_mean, reduce_owned, reduce_scatter, scatter, Algorithm, Reduced,
+};
 pub use engine::{GradEngine, GradResult, StepMode, StepOutputs};

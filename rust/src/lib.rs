@@ -38,10 +38,16 @@
 //! * **reduce** — `pipeline::ReduceStage`: with
 //!   `train.pipeline.overlap_reduce`, a warmup step's base gradients
 //!   all-reduce on the stage thread concurrently with its LoRA gradients
-//!   on the leader (a double-buffered accumulation pair).
+//!   on the leader (a double-buffered accumulation pair). With
+//!   `train.zero.enabled` the stage reduce-*scatters* instead (ZeRO-1):
+//!   each worker keeps only its owned partition of the mean gradient.
 //! * **update** — `pipeline::UpdateStage`: clip + optimizer step + per-step
 //!   pre-clip gradient-norm telemetry, shared by the pipelined and the
-//!   sequential (`train.pipeline.enabled = false`) paths.
+//!   sequential (`train.pipeline.enabled = false`) paths. Under ZeRO the
+//!   optimizer is an `optim::ShardedOptimizer` — AdamW moments live only
+//!   on the owning worker (~1/N state per worker), and the shard updates
+//!   re-assemble the replicated parameter vector in place (the
+//!   all-gather), with bit-identical losses either way.
 //!
 //! **Determinism contract:** for a fixed seed the two paths produce
 //! bit-identical per-epoch losses in every phase. Batches are pure

@@ -33,6 +33,10 @@ fn train_flags() -> Args {
         .flag("workers", "data-parallel worker count")
         .flag("allreduce", "gradient all-reduce algorithm: naive|tree|ring")
         .switch("no-pipeline", "run the serial reference loop instead of the step pipeline")
+        .switch(
+            "zero",
+            "shard optimizer state across workers (ZeRO-1): ~1/N state per worker, bit-identical losses",
+        )
         .flag("seed", "run seed")
         .flag("run-name", "label used in logs and output files")
         .flag("summary-out", "write the run summary JSON here")
@@ -80,6 +84,9 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
     }
     if a.get_switch("no-pipeline") {
         cfg.train.pipeline.enabled = false;
+    }
+    if a.get_switch("zero") {
+        cfg.train.zero.enabled = true;
     }
     if let Some(s) = a.get_parsed::<u64>("seed")? {
         cfg.seed = s;

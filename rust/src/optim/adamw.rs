@@ -44,6 +44,25 @@ impl Optimizer for AdamW {
     fn steps(&self) -> u64 {
         self.t
     }
+
+    fn state_bufs(&self) -> Vec<&[f32]> {
+        vec![&self.m, &self.v]
+    }
+
+    fn load_state(&mut self, bufs: &[&[f32]], t: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(bufs.len() == 2, "AdamW state is [m, v], got {} buffers", bufs.len());
+        anyhow::ensure!(
+            bufs[0].len() == self.m.len() && bufs[1].len() == self.v.len(),
+            "AdamW state length mismatch: got [{}, {}], expected {}",
+            bufs[0].len(),
+            bufs[1].len(),
+            self.m.len()
+        );
+        self.m.copy_from_slice(bufs[0]);
+        self.v.copy_from_slice(bufs[1]);
+        self.t = t;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -14,10 +14,12 @@
 mod adamw;
 mod lr;
 mod sgd;
+mod sharded;
 
 pub use adamw::AdamW;
 pub use lr::LrSchedule;
 pub use sgd::Sgd;
+pub use sharded::ShardedOptimizer;
 
 use crate::config::{OptimizerKind, TrainConfig};
 
@@ -31,6 +33,27 @@ pub trait Optimizer {
 
     /// Number of update steps taken.
     fn steps(&self) -> u64;
+
+    /// The state buffers in a fixed kind-specific order (AdamW: `[m, v]`;
+    /// SGD: `[velocity]`) — read by the sharded gather and checkpointing.
+    fn state_bufs(&self) -> Vec<&[f32]>;
+
+    /// Restore state from buffers laid out as [`state_bufs`](Self::state_bufs)
+    /// returns, plus the step counter. Buffer count and lengths must match.
+    fn load_state(&mut self, bufs: &[&[f32]], t: u64) -> anyhow::Result<()>;
+}
+
+/// Portable snapshot of an optimizer's *full* (unsharded) state. A
+/// sharded run gathers its shards into this before checkpointing, so a
+/// restore can re-scatter onto any shard layout — including a
+/// single-worker restore of an N-way sharded run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptState {
+    pub kind: OptimizerKind,
+    /// Update steps taken (bias-correction time for AdamW).
+    pub t: u64,
+    /// Kind-specific state buffers, each the full parameter length.
+    pub bufs: Vec<Vec<f32>>,
 }
 
 /// Construct the configured optimizer for a parameter vector of length `n`.

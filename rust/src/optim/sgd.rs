@@ -35,6 +35,23 @@ impl Optimizer for Sgd {
     fn steps(&self) -> u64 {
         self.t
     }
+
+    fn state_bufs(&self) -> Vec<&[f32]> {
+        vec![&self.velocity]
+    }
+
+    fn load_state(&mut self, bufs: &[&[f32]], t: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(bufs.len() == 1, "SGD state is [velocity], got {} buffers", bufs.len());
+        anyhow::ensure!(
+            bufs[0].len() == self.velocity.len(),
+            "SGD state length mismatch: got {}, expected {}",
+            bufs[0].len(),
+            self.velocity.len()
+        );
+        self.velocity.copy_from_slice(bufs[0]);
+        self.t = t;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,244 @@
+//! ZeRO-1 partitioned optimizer state.
+//!
+//! In classic data-parallel training every worker replicates the full
+//! AdamW `m`/`v` buffers — 8 bytes/param regardless of worker count. ZeRO
+//! stage 1 (Rajbhandari et al.) instead gives each worker the optimizer
+//! state for *its* contiguous partition of the parameter vector only, so
+//! per-worker state shrinks ~1/N while the union of shards is exactly the
+//! unsharded state. [`ShardedOptimizer`] is that layout: one inner
+//! [`Optimizer`] per shard over the [`partition`] chunking that
+//! `dp::reduce_scatter` also uses, so the gradient chunk a worker receives
+//! lines up with the state shard it owns by construction.
+//!
+//! **Bit contract.** Both optimizers here are elementwise, so updating a
+//! partition with the partition's gradient chunk performs exactly the
+//! per-element operations the unsharded optimizer would — sharded and
+//! unsharded training produce bit-identical parameters. A single shard
+//! (`shards == 1`) *is* the unsharded optimizer; the trainer uses that
+//! degenerate layout whenever `train.zero.enabled` is off.
+
+use anyhow::{ensure, Result};
+
+use super::{build, OptState, Optimizer};
+use crate::config::TrainConfig;
+use crate::dp::partition;
+
+/// Optimizer state partitioned over contiguous parameter chunks.
+pub struct ShardedOptimizer {
+    shards: Vec<Box<dyn Optimizer + Send>>,
+    bounds: Vec<(usize, usize)>,
+    len: usize,
+    kind: crate::config::OptimizerKind,
+}
+
+impl ShardedOptimizer {
+    /// Partition a length-`n` parameter vector into `shards` chunks, each
+    /// with its own optimizer instance built from `cfg`.
+    pub fn new(cfg: &TrainConfig, n: usize, shards: usize) -> Self {
+        let bounds = partition(n, shards);
+        let shards = bounds.iter().map(|&(lo, hi)| build(cfg, hi - lo)).collect();
+        Self { shards, bounds, len: n, kind: cfg.optimizer }
+    }
+
+    /// Number of state partitions (= simulated ZeRO workers).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Partition bounds, in shard order (the [`partition`] chunking).
+    pub fn bounds(&self) -> &[(usize, usize)] {
+        &self.bounds
+    }
+
+    /// Parameter-vector length this optimizer was built for.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Apply one update from a *full* (replicated) gradient: every shard
+    /// steps its slice. Bitwise identical to the unsharded optimizer.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.len, "param length mismatch");
+        assert_eq!(grads.len(), self.len, "grad length mismatch");
+        for (shard, &(lo, hi)) in self.shards.iter_mut().zip(&self.bounds) {
+            shard.step(&mut params[lo..hi], &grads[lo..hi], lr);
+        }
+    }
+
+    /// Apply one update from reduce-scattered gradient `chunks` (one per
+    /// shard, [`partition`] layout): worker `w` updates only its owned
+    /// slice of `params`. The caller's shared full vector plays the role
+    /// of the post-update all-gather — each shard writes its chunk back
+    /// into place, re-assembling the replicated parameters for the next
+    /// step's forward pass.
+    pub fn step_sharded(&mut self, params: &mut [f32], chunks: &[Vec<f32>], lr: f32) {
+        assert_eq!(params.len(), self.len, "param length mismatch");
+        assert_eq!(chunks.len(), self.shards.len(), "one gradient chunk per shard required");
+        for ((shard, &(lo, hi)), chunk) in self.shards.iter_mut().zip(&self.bounds).zip(chunks) {
+            assert_eq!(chunk.len(), hi - lo, "gradient chunk does not match shard bounds");
+            shard.step(&mut params[lo..hi], chunk, lr);
+        }
+    }
+
+    /// Total state bytes across all shards (= the unsharded footprint).
+    pub fn state_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.state_bytes()).sum()
+    }
+
+    /// State bytes the largest single worker holds — the quantity that
+    /// actually bounds accelerator memory per rank under ZeRO (~1/N of
+    /// [`state_bytes`](Self::state_bytes), plus chunk-rounding).
+    pub fn per_worker_state_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.state_bytes()).max().unwrap_or(0)
+    }
+
+    /// Update steps taken (shards advance in lockstep).
+    pub fn steps(&self) -> u64 {
+        self.shards.first().map_or(0, |s| s.steps())
+    }
+
+    /// Gather every shard's state into one full [`OptState`] (the
+    /// checkpoint representation — shard-layout independent).
+    pub fn export_state(&self) -> OptState {
+        let n_bufs = self.shards.first().map_or(0, |s| s.state_bufs().len());
+        let mut bufs = vec![Vec::with_capacity(self.len); n_bufs];
+        for shard in &self.shards {
+            for (full, part) in bufs.iter_mut().zip(shard.state_bufs()) {
+                full.extend_from_slice(part);
+            }
+        }
+        OptState { kind: self.kind, t: self.steps(), bufs }
+    }
+
+    /// Scatter a full [`OptState`] across this optimizer's shard layout.
+    /// The state may come from a run with any shard count (including 1).
+    pub fn import_state(&mut self, state: &OptState) -> Result<()> {
+        ensure!(
+            state.kind == self.kind,
+            "optimizer state kind {:?} does not match configured {:?}",
+            state.kind,
+            self.kind
+        );
+        ensure!(
+            state.bufs.iter().all(|b| b.len() == self.len),
+            "optimizer state length mismatch: expected {} per buffer",
+            self.len
+        );
+        for (shard, &(lo, hi)) in self.shards.iter_mut().zip(&self.bounds) {
+            let parts: Vec<&[f32]> = state.bufs.iter().map(|b| &b[lo..hi]).collect();
+            shard.load_state(&parts, state.t)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::dp::{all_gather, scatter};
+
+    fn grads(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::tensor::Pcg64::new(seed);
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 0.5);
+        g
+    }
+
+    #[test]
+    fn sharded_step_is_bitwise_identical_to_unsharded() {
+        // odd length + odd shard count: ragged final chunk
+        let n = 103;
+        let cfg = TrainConfig::default();
+        let mut full = ShardedOptimizer::new(&cfg, n, 1);
+        let mut sharded = ShardedOptimizer::new(&cfg, n, 3);
+        let mut p1 = vec![0.3f32; n];
+        let mut p2 = p1.clone();
+        for step in 0..5u64 {
+            let g = grads(n, step);
+            full.step(&mut p1, &g, 1e-3);
+            sharded.step_sharded(&mut p2, &scatter(&g, 3), 1e-3);
+            assert_eq!(p1, p2, "step {step}: sharded update diverged");
+        }
+        assert_eq!(full.steps(), 5);
+        assert_eq!(sharded.steps(), 5);
+    }
+
+    #[test]
+    fn per_worker_state_shrinks_with_shards() {
+        let cfg = TrainConfig::default();
+        let n = 10_000;
+        for workers in [1usize, 2, 4, 7] {
+            let opt = ShardedOptimizer::new(&cfg, n, workers);
+            let total = opt.state_bytes();
+            let per = opt.per_worker_state_bytes();
+            assert_eq!(total, ShardedOptimizer::new(&cfg, n, 1).state_bytes());
+            // <= (1/N + eps) of the unsharded total: ceil-chunking adds at
+            // most one element per state buffer
+            assert!(
+                per as f64 <= total as f64 / workers as f64 + 16.0,
+                "workers={workers}: per-worker {per} vs total {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn export_import_roundtrips_across_shard_layouts() {
+        let cfg = TrainConfig::default();
+        let n = 57;
+        let mut a = ShardedOptimizer::new(&cfg, n, 4);
+        let mut p = vec![0.1f32; n];
+        for step in 0..3u64 {
+            a.step(&mut p, &grads(n, step), 1e-3);
+        }
+        let st = a.export_state();
+        assert_eq!(st.t, 3);
+        assert_eq!(st.bufs.len(), 2, "AdamW exports [m, v]");
+        assert!(st.bufs.iter().all(|b| b.len() == n));
+
+        // single-worker restore of the 4-way sharded run
+        let mut b = ShardedOptimizer::new(&cfg, n, 1);
+        b.import_state(&st).unwrap();
+        // both must now take bit-identical future steps
+        let mut pa = p.clone();
+        let mut pb = p.clone();
+        let g = grads(n, 99);
+        a.step(&mut pa, &g, 1e-3);
+        b.step(&mut pb, &g, 1e-3);
+        assert_eq!(pa, pb, "restored optimizer diverged from source");
+        assert_eq!(b.export_state(), a.export_state());
+    }
+
+    #[test]
+    fn import_rejects_mismatches() {
+        let cfg = TrainConfig::default();
+        let mut opt = ShardedOptimizer::new(&cfg, 10, 2);
+        let mut st = opt.export_state();
+        st.bufs[0].pop();
+        assert!(opt.import_state(&st).is_err(), "short buffer must be rejected");
+        let mut st = opt.export_state();
+        st.kind = crate::config::OptimizerKind::Sgd;
+        assert!(opt.import_state(&st).is_err(), "kind mismatch must be rejected");
+    }
+
+    #[test]
+    fn bounds_line_up_with_gather() {
+        let cfg = TrainConfig::default();
+        let opt = ShardedOptimizer::new(&cfg, 23, 5);
+        assert_eq!(opt.shard_count(), 5);
+        assert_eq!(opt.len(), 23);
+        // the shard bounds are exactly the reduce_scatter partition
+        let chunks: Vec<Vec<f32>> = opt
+            .bounds()
+            .iter()
+            .map(|&(lo, hi)| (lo..hi).map(|i| i as f32).collect())
+            .collect();
+        let full = all_gather(&chunks);
+        assert_eq!(full.len(), 23);
+        assert!(full.iter().enumerate().all(|(i, &v)| v == i as f32));
+    }
+}

@@ -76,15 +76,23 @@ impl EpochRun {
 
 /// The staged step driver. Owns the reduce stage's worker thread; the
 /// prefetch thread is per-epoch (it terminates when the epoch drains).
+///
+/// `zero_shards > 1` switches the reduce stage to ZeRO-1 reduce-scatter:
+/// gradients arrive at the update stage as per-worker owned partitions
+/// and each optimizer shard updates its slice (see
+/// [`UpdateStage`]/[`crate::optim::ShardedOptimizer`]). Bitwise-identical
+/// losses either way — the scattered chunks are the replicated vector.
 pub struct StepPipeline {
     cfg: PipelineConfig,
+    zero_shards: usize,
     reduce: ReduceStage,
 }
 
 impl StepPipeline {
-    pub fn new(cfg: &PipelineConfig, algorithm: Algorithm) -> Result<Self> {
-        let reduce = ReduceStage::new(algorithm, cfg.enabled && cfg.overlap_reduce)?;
-        Ok(Self { cfg: cfg.clone(), reduce })
+    pub fn new(cfg: &PipelineConfig, algorithm: Algorithm, zero_shards: usize) -> Result<Self> {
+        let zero_shards = zero_shards.max(1);
+        let reduce = ReduceStage::new(algorithm, cfg.enabled && cfg.overlap_reduce, zero_shards)?;
+        Ok(Self { cfg: cfg.clone(), zero_shards, reduce })
     }
 
     /// Run one epoch of `steps` training steps in mode `mode`, dispatching
@@ -104,7 +112,18 @@ impl StepPipeline {
         lr: f32,
     ) -> Result<EpochRun> {
         if !self.cfg.enabled {
-            return Self::run_sequential(engine, loader, data, model, update, mode, epoch, steps, lr);
+            return Self::run_sequential_sharded(
+                engine,
+                loader,
+                data,
+                model,
+                update,
+                mode,
+                epoch,
+                steps,
+                lr,
+                self.zero_shards,
+            );
         }
         let mut prefetch = Prefetcher::spawn(
             loader.clone(),
@@ -140,11 +159,13 @@ impl StepPipeline {
         run.map(|()| out)
     }
 
-    /// The fully serial reference loop (pipeline disabled). Shares the
-    /// [`UpdateStage`] and the reduce summation schedule with the pipelined
-    /// path — this is the other half of the determinism contract.
+    /// The fully serial reference loop (pipeline disabled), with an
+    /// explicit ZeRO partition count (`zero_shards <= 1` = classic
+    /// replicated gradients). Shares the [`UpdateStage`] and the reduce
+    /// summation schedule with the pipelined path — this is the other
+    /// half of the determinism contract.
     #[allow(clippy::too_many_arguments)]
-    pub fn run_sequential(
+    pub fn run_sequential_sharded(
         engine: &mut GradEngine,
         loader: &EpochLoader,
         data: &Arc<Dataset>,
@@ -154,12 +175,15 @@ impl StepPipeline {
         epoch: usize,
         steps: usize,
         lr: f32,
+        zero_shards: usize,
     ) -> Result<EpochRun> {
         let order = loader.epoch_order(data, epoch);
+        let algorithm = engine.algorithm();
         let mut out = EpochRun::default();
         for step in 0..steps {
             let batches = loader.step_batches_in(data, &order, step);
-            let mut r = engine.compute(mode, &model.base, model.lora_pair(), batches)?;
+            engine.submit(mode, &model.base, model.lora_pair(), batches)?;
+            let mut r = engine.collect()?.reduce_sharded(algorithm, zero_shards);
             let norms = update.apply(model, &mut r, lr)?;
             out.ingest(&r, norms);
         }

@@ -8,48 +8,58 @@
 //! base + lora. Each reduce runs the exact same [`reduce_mean`] summation
 //! schedule as the serial path — which thread executes it cannot change
 //! the bits (the determinism contract in the module docs).
+//!
+//! With ZeRO enabled (`zero_shards > 1`) the stage reduce-*scatters*
+//! instead: each worker keeps only its owned partition of the mean
+//! gradient ([`Reduced::Sharded`]), which is what lets the optimizer hold
+//! 1/N state per worker. The scattered chunks concatenate bitwise to the
+//! replicated vector (see `dp::reduce_scatter`), so turning ZeRO on
+//! cannot change losses.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::dp::allreduce::reduce_owned;
-use crate::dp::{Algorithm, GradResult, StepOutputs};
+use crate::dp::{Algorithm, GradResult, Reduced, StepOutputs};
 
 /// Persistent reduce stage; the worker thread exists only when overlap is
 /// requested.
 pub struct ReduceStage {
     algorithm: Algorithm,
+    /// Partition count for ZeRO reduce-scatter; `<= 1` reduces to the
+    /// replicated full vector.
+    zero_shards: usize,
     tx: Option<mpsc::Sender<Vec<Vec<f32>>>>,
-    rx: Option<mpsc::Receiver<Option<Vec<f32>>>>,
+    rx: Option<mpsc::Receiver<Option<Reduced>>>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ReduceStage {
-    pub fn new(algorithm: Algorithm, overlap: bool) -> Result<Self> {
+    pub fn new(algorithm: Algorithm, overlap: bool, zero_shards: usize) -> Result<Self> {
+        let zero_shards = zero_shards.max(1);
         if !overlap {
-            return Ok(Self { algorithm, tx: None, rx: None, join: None });
+            return Ok(Self { algorithm, zero_shards, tx: None, rx: None, join: None });
         }
         let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
-        let (out_tx, rx) = mpsc::channel::<Option<Vec<f32>>>();
+        let (out_tx, rx) = mpsc::channel::<Option<Reduced>>();
         let join = std::thread::Builder::new()
             .name("reduce-stage".into())
             .spawn(move || {
                 while let Ok(bufs) = job_rx.recv() {
-                    if out_tx.send(reduce_owned(algorithm, bufs)).is_err() {
+                    if out_tx.send(reduce_one(algorithm, bufs, zero_shards)).is_err() {
                         break;
                     }
                 }
             })
             .context("spawning reduce-stage thread")?;
-        Ok(Self { algorithm, tx: Some(tx), rx: Some(rx), join: Some(join) })
+        Ok(Self { algorithm, zero_shards, tx: Some(tx), rx: Some(rx), join: Some(join) })
     }
 
     /// Reduce one step's worker outputs to mean gradients. Overlaps the
     /// base reduce with the LoRA reduce when both are present and a stage
-    /// thread exists; otherwise defers to [`StepOutputs::reduce`] — the
-    /// serial path's epilogue — so the two can never diverge.
+    /// thread exists; otherwise defers to [`StepOutputs::reduce_sharded`]
+    /// — the serial path's epilogue — so the two can never diverge.
     pub fn reduce(&mut self, outs: StepOutputs) -> Result<GradResult> {
         let (tx, rx) = match (&self.tx, &self.rx) {
             (Some(tx), Some(rx))
@@ -57,7 +67,7 @@ impl ReduceStage {
             {
                 (tx, rx)
             }
-            _ => return Ok(outs.reduce(self.algorithm)),
+            _ => return Ok(outs.reduce_sharded(self.algorithm, self.zero_shards)),
         };
         let StepOutputs {
             base_grads,
@@ -69,9 +79,18 @@ impl ReduceStage {
         } = outs;
         tx.send(base_grads)
             .map_err(|_| anyhow!("reduce stage hung up"))?;
-        let d_lora = reduce_owned(self.algorithm, lora_grads);
+        let d_lora = reduce_one(self.algorithm, lora_grads, self.zero_shards);
         let d_base = rx.recv().map_err(|_| anyhow!("reduce stage died"))?;
         Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
+    }
+}
+
+/// Reduce one buffer set into the stage's configured layout.
+fn reduce_one(algorithm: Algorithm, bufs: Vec<Vec<f32>>, zero_shards: usize) -> Option<Reduced> {
+    if zero_shards > 1 {
+        crate::dp::reduce_scatter(algorithm, bufs, zero_shards).map(Reduced::Sharded)
+    } else {
+        crate::dp::reduce_owned(algorithm, bufs).map(Reduced::Full)
     }
 }
 
@@ -104,8 +123,8 @@ mod tests {
     #[test]
     fn overlapped_reduce_is_bitwise_identical_to_inline() {
         for (nb, nl) in [(4usize, 4usize), (3, 3), (2, 0), (0, 5)] {
-            let mut overlapped = ReduceStage::new(Algorithm::Tree, true).unwrap();
-            let mut inline = ReduceStage::new(Algorithm::Tree, false).unwrap();
+            let mut overlapped = ReduceStage::new(Algorithm::Tree, true, 1).unwrap();
+            let mut inline = ReduceStage::new(Algorithm::Tree, false, 1).unwrap();
             let a = overlapped.reduce(outs(nb, nl, 97)).unwrap();
             let b = inline.reduce(outs(nb, nl, 97)).unwrap();
             assert_eq!(a.d_base, b.d_base);
@@ -115,8 +134,38 @@ mod tests {
     }
 
     #[test]
+    fn zero_sharded_reduce_matches_full_bitwise() {
+        // with ZeRO the overlapped and inline paths must both produce the
+        // sharded layout, and its gather must equal the full reduce
+        for (nb, nl) in [(3usize, 3usize), (4, 0)] {
+            let mut full = ReduceStage::new(Algorithm::Ring, false, 1).unwrap();
+            let mut inline = ReduceStage::new(Algorithm::Ring, false, 3).unwrap();
+            let mut overlapped = ReduceStage::new(Algorithm::Ring, true, 3).unwrap();
+            let want = full.reduce(outs(nb, nl, 101)).unwrap();
+            let a = inline.reduce(outs(nb, nl, 101)).unwrap();
+            let b = overlapped.reduce(outs(nb, nl, 101)).unwrap();
+            for got in [a, b] {
+                match (&got.d_base, &want.d_base) {
+                    (Some(Reduced::Sharded(chunks)), Some(Reduced::Full(v))) => {
+                        assert_eq!(chunks.len(), 3);
+                        assert_eq!(&crate::dp::all_gather(chunks), v);
+                    }
+                    (None, None) => {}
+                    other => panic!("unexpected layouts: {other:?}"),
+                }
+                if nl > 0 {
+                    assert_eq!(
+                        got.d_lora.clone().map(Reduced::into_full),
+                        want.d_lora.clone().map(Reduced::into_full)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn scalars_pass_through() {
-        let mut stage = ReduceStage::new(Algorithm::Naive, false).unwrap();
+        let mut stage = ReduceStage::new(Algorithm::Naive, false, 1).unwrap();
         let r = stage.reduce(outs(2, 0, 8)).unwrap();
         assert_eq!(r.loss, 1.5);
         assert_eq!(r.correct, 3.0);

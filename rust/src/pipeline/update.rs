@@ -5,28 +5,39 @@
 //! divergence here would break the bit-equivalence contract. Also owns
 //! [`ModelState`], the mutable parameter/optimizer bundle the stage
 //! operates on.
+//!
+//! The stage accepts gradients in either [`Reduced`] layout. For the
+//! ZeRO-sharded layout each worker's chunk updates only that worker's
+//! owned parameter slice through its optimizer shard; because the slices
+//! of the shared full vector are disjoint, writing them back *is* the
+//! post-update all-gather — the replicated parameter vector the next
+//! step's forward pass needs is re-assembled in place. The clip scale is
+//! computed from the global norm accumulated sequentially across chunks,
+//! which is bitwise the full-vector [`l2_norm`] (f64 left-fold over a
+//! concatenation equals the fold over the chunks carried in order), so
+//! sharded and replicated updates clip — and therefore train — identically.
 
 use anyhow::{anyhow, Result};
 
-use crate::dp::GradResult;
-use crate::optim::Optimizer;
+use crate::dp::{GradResult, Reduced};
+use crate::optim::ShardedOptimizer;
 use crate::rank::AdapterCfg;
 use crate::tensor::{clip_by_global_norm, l2_norm};
 
 /// The mutable model the update stage advances: flat parameter vectors
-/// plus their optimizers. `lora`/`adapter_cfg`/`opt_lora` appear at the
-/// warmup switch; `opt_base` is dropped at the freeze (the paper's memory
-/// saving made literal).
+/// plus their (possibly ZeRO-sharded) optimizers. `lora`/`adapter_cfg`/
+/// `opt_lora` appear at the warmup switch; `opt_base` is dropped at the
+/// freeze (the paper's memory saving made literal).
 pub struct ModelState {
     pub base: Vec<f32>,
     pub lora: Option<Vec<f32>>,
     pub adapter_cfg: Option<AdapterCfg>,
-    pub opt_base: Option<Box<dyn Optimizer + Send>>,
-    pub opt_lora: Option<Box<dyn Optimizer + Send>>,
+    pub opt_base: Option<ShardedOptimizer>,
+    pub opt_lora: Option<ShardedOptimizer>,
 }
 
 impl ModelState {
-    pub fn new(base: Vec<f32>, opt_base: Box<dyn Optimizer + Send>) -> Self {
+    pub fn new(base: Vec<f32>, opt_base: ShardedOptimizer) -> Self {
         Self { base, lora: None, adapter_cfg: None, opt_base: Some(opt_base), opt_lora: None }
     }
 
@@ -63,6 +74,46 @@ impl UpdateStage {
         Self { grad_clip }
     }
 
+    /// Clip one buffer (either layout) by global norm in place, returning
+    /// its pre-clip norm. Mirrors [`clip_by_global_norm`] bit-for-bit on
+    /// the sharded layout: same accumulated norm, same `(max/norm) as f32`
+    /// scale applied per element.
+    fn clip(&self, g: &mut Reduced) -> f64 {
+        match g {
+            Reduced::Full(v) => {
+                if self.grad_clip > 0.0 {
+                    clip_by_global_norm(v, self.grad_clip)
+                } else {
+                    l2_norm(v)
+                }
+            }
+            Reduced::Sharded(chunks) => {
+                let mut sq = 0.0f64;
+                for c in chunks.iter() {
+                    for &x in c {
+                        sq += (x as f64) * (x as f64);
+                    }
+                }
+                let norm = sq.sqrt();
+                if self.grad_clip > 0.0 && norm > self.grad_clip && norm > 0.0 {
+                    let s = (self.grad_clip / norm) as f32;
+                    for c in chunks.iter_mut() {
+                        crate::tensor::scale(c, s);
+                    }
+                }
+                norm
+            }
+        }
+    }
+
+    /// Step `opt` on `params` with the clipped gradient in either layout.
+    fn step(opt: &mut ShardedOptimizer, params: &mut [f32], g: &Reduced, lr: f32) {
+        match g {
+            Reduced::Full(v) => opt.step(params, v, lr),
+            Reduced::Sharded(chunks) => opt.step_sharded(params, chunks, lr),
+        }
+    }
+
     /// Apply one reduced step to the model. Buffers are clipped
     /// independently (base and LoRA live on different scales), matching
     /// the pre-pipeline trainer numerics exactly.
@@ -70,36 +121,28 @@ impl UpdateStage {
         let mut sq = 0.0f64;
         let mut clipped = false;
         if let Some(ref mut g) = r.d_base {
-            let pre = if self.grad_clip > 0.0 {
-                clip_by_global_norm(g, self.grad_clip)
-            } else {
-                l2_norm(g)
-            };
+            let pre = self.clip(g);
             clipped |= self.grad_clip > 0.0 && pre > self.grad_clip;
             sq += pre * pre;
-            model
+            let opt = model
                 .opt_base
                 .as_mut()
-                .ok_or_else(|| anyhow!("base optimizer missing"))?
-                .step(&mut model.base, g, lr);
+                .ok_or_else(|| anyhow!("base optimizer missing"))?;
+            Self::step(opt, &mut model.base, g, lr);
         }
         if let Some(ref mut g) = r.d_lora {
-            let pre = if self.grad_clip > 0.0 {
-                clip_by_global_norm(g, self.grad_clip)
-            } else {
-                l2_norm(g)
-            };
+            let pre = self.clip(g);
             clipped |= self.grad_clip > 0.0 && pre > self.grad_clip;
             sq += pre * pre;
             let lora = model
                 .lora
                 .as_mut()
                 .ok_or_else(|| anyhow!("lora params missing"))?;
-            model
+            let opt = model
                 .opt_lora
                 .as_mut()
-                .ok_or_else(|| anyhow!("lora optimizer missing"))?
-                .step(lora, g, lr);
+                .ok_or_else(|| anyhow!("lora optimizer missing"))?;
+            Self::step(opt, lora, g, lr);
         }
         Ok(StepNorms { pre_clip: sq.sqrt(), clipped })
     }
@@ -109,11 +152,27 @@ impl UpdateStage {
 mod tests {
     use super::*;
     use crate::config::TrainConfig;
-    use crate::optim;
+    use crate::dp::scatter;
+    use crate::optim::ShardedOptimizer;
+
+    fn model_sharded(n: usize, shards: usize) -> ModelState {
+        let cfg = TrainConfig::default();
+        ModelState::new(vec![0.5; n], ShardedOptimizer::new(&cfg, n, shards))
+    }
 
     fn model(n: usize) -> ModelState {
-        let cfg = TrainConfig::default();
-        ModelState::new(vec![0.5; n], optim::build(&cfg, n))
+        model_sharded(n, 1)
+    }
+
+    fn result(d_base: Option<Reduced>) -> GradResult {
+        GradResult {
+            d_base,
+            d_lora: None,
+            loss: 1.0,
+            correct: 0.0,
+            samples: 4,
+            execute_seconds: 0.0,
+        }
     }
 
     #[test]
@@ -121,34 +180,22 @@ mod tests {
         let mut m = model(4);
         let before = m.base.clone();
         let stage = UpdateStage::new(1.0);
-        let mut r = GradResult {
-            d_base: Some(vec![3.0, 4.0, 0.0, 0.0]), // norm 5 -> clipped
-            d_lora: None,
-            loss: 1.0,
-            correct: 0.0,
-            samples: 4,
-            execute_seconds: 0.0,
-        };
+        // norm 5 -> clipped
+        let mut r = result(Some(Reduced::Full(vec![3.0, 4.0, 0.0, 0.0])));
         let norms = stage.apply(&mut m, &mut r, 0.1).unwrap();
         assert!((norms.pre_clip - 5.0).abs() < 1e-9, "pre-clip, not post-clip");
         assert!(norms.clipped);
         assert_ne!(m.base, before, "optimizer must have stepped");
         // the applied gradient was the clipped one
-        assert!((l2_norm(r.d_base.as_ref().unwrap()) - 1.0).abs() < 1e-6);
+        let Some(Reduced::Full(g)) = &r.d_base else { panic!("layout changed") };
+        assert!((l2_norm(g) - 1.0).abs() < 1e-6);
     }
 
     #[test]
     fn no_clip_reports_raw_norm() {
         let mut m = model(2);
         let stage = UpdateStage::new(0.0);
-        let mut r = GradResult {
-            d_base: Some(vec![3.0, 4.0]),
-            d_lora: None,
-            loss: 1.0,
-            correct: 0.0,
-            samples: 2,
-            execute_seconds: 0.0,
-        };
+        let mut r = result(Some(Reduced::Full(vec![3.0, 4.0])));
         let norms = stage.apply(&mut m, &mut r, 0.1).unwrap();
         assert!((norms.pre_clip - 5.0).abs() < 1e-9);
         assert!(!norms.clipped);
@@ -159,14 +206,32 @@ mod tests {
         let mut m = model(2);
         m.opt_base = None;
         let stage = UpdateStage::new(1.0);
-        let mut r = GradResult {
-            d_base: Some(vec![1.0, 1.0]),
-            d_lora: None,
-            loss: 1.0,
-            correct: 0.0,
-            samples: 2,
-            execute_seconds: 0.0,
-        };
+        let mut r = result(Some(Reduced::Full(vec![1.0, 1.0])));
         assert!(stage.apply(&mut m, &mut r, 0.1).is_err());
+    }
+
+    #[test]
+    fn sharded_apply_is_bitwise_identical_to_full() {
+        // same gradient through both layouts (ragged 3-way split of 7),
+        // with a clip that engages: parameters and norms must match bitwise
+        let n = 7;
+        let g: Vec<f32> = vec![1.5, -2.0, 0.25, 3.0, -0.5, 2.25, -1.0];
+        let stage = UpdateStage::new(1.0);
+
+        let mut mf = model(n);
+        let mut rf = result(Some(Reduced::Full(g.clone())));
+        let nf = stage.apply(&mut mf, &mut rf, 0.1).unwrap();
+
+        let mut ms = model_sharded(n, 3);
+        let mut rs = result(Some(Reduced::Sharded(scatter(&g, 3))));
+        let ns = stage.apply(&mut ms, &mut rs, 0.1).unwrap();
+
+        assert_eq!(nf.pre_clip, ns.pre_clip, "norms must match bitwise");
+        assert_eq!(nf.clipped, ns.clipped);
+        assert_eq!(mf.base, ms.base, "sharded update diverged from full");
+        // clipped gradients agree across layouts too
+        let Some(Reduced::Full(gf)) = rf.d_base else { panic!() };
+        let Some(gs) = rs.d_base.map(Reduced::into_full) else { panic!() };
+        assert_eq!(gf, gs);
     }
 }

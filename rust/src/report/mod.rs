@@ -17,6 +17,9 @@ pub struct PhaseAggregate {
     pub mean_epoch_seconds: f64,
     pub mean_images_per_sec: f64,
     pub mean_memory_bytes: f64,
+    /// Optimizer state a single worker held (ZeRO: ~1/workers of the
+    /// total; the run summary's evidence for the sharding claim).
+    pub mean_opt_state_bytes_per_worker: f64,
     pub final_train_loss: f64,
 }
 
@@ -58,6 +61,7 @@ impl RunSummary {
             agg.mean_epoch_seconds += s.epoch_seconds;
             agg.mean_images_per_sec += s.images_per_sec;
             agg.mean_memory_bytes += s.memory_model_bytes as f64;
+            agg.mean_opt_state_bytes_per_worker += s.opt_state_bytes_per_worker as f64;
             agg.final_train_loss = s.train_loss;
         }
         for agg in by_phase.values_mut() {
@@ -65,6 +69,7 @@ impl RunSummary {
             agg.mean_epoch_seconds /= n;
             agg.mean_images_per_sec /= n;
             agg.mean_memory_bytes /= n;
+            agg.mean_opt_state_bytes_per_worker /= n;
         }
         let last = stats.last();
         let last_val = stats.iter().rev().find(|s| !s.val_loss.is_nan());
@@ -140,11 +145,12 @@ impl RunSummary {
         }
         for (phase, agg) in &self.by_phase {
             out.push_str(&format!(
-                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem\n",
+                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem, {:.2} MiB opt-state/worker\n",
                 agg.epochs,
                 agg.mean_epoch_seconds,
                 agg.mean_images_per_sec,
                 agg.mean_memory_bytes / (1 << 20) as f64,
+                agg.mean_opt_state_bytes_per_worker / (1 << 20) as f64,
             ));
         }
         if let Some(r) = self.epoch_time_ratio {
@@ -177,6 +183,10 @@ impl RunSummary {
                             ("mean_epoch_seconds", Json::Num(a.mean_epoch_seconds)),
                             ("mean_images_per_sec", Json::Num(a.mean_images_per_sec)),
                             ("mean_memory_bytes", Json::Num(a.mean_memory_bytes)),
+                            (
+                                "mean_opt_state_bytes_per_worker",
+                                Json::Num(a.mean_opt_state_bytes_per_worker),
+                            ),
                             ("final_train_loss", Json::Num(a.final_train_loss)),
                         ]),
                     )
@@ -230,6 +240,7 @@ mod tests {
             images_per_sec: 1000.0 / secs,
             trainable_params: 1000,
             memory_model_bytes: mem,
+            opt_state_bytes_per_worker: mem / 2,
             grad_norm: 1.0,
         }
     }
@@ -258,6 +269,12 @@ mod tests {
         assert!((s.memory_saving_frac.unwrap() - 0.4).abs() < 1e-9);
         assert_eq!(s.by_phase["full"].epochs, 4);
         assert_eq!(s.by_phase["lora"].epochs, 2);
+        // per-worker optimizer state flows through to the aggregates
+        // (stat() sets it to mem/2)
+        assert!((s.by_phase["full"].mean_opt_state_bytes_per_worker - 500.0).abs() < 1e-9);
+        assert!((s.by_phase["lora"].mean_opt_state_bytes_per_worker - 300.0).abs() < 1e-9);
+        let j = s.to_json();
+        assert!(j.contains("mean_opt_state_bytes_per_worker"), "{j}");
     }
 
     #[test]

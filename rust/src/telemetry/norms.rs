@@ -77,10 +77,20 @@ impl NormHistory {
 
     /// Module-level windowed weight norm W_t^a: per-layer norms averaged
     /// across layers, then across the window's epochs.
+    ///
+    /// A module missing from any snapshot (misspelled or untracked by the
+    /// manifest) returns NaN rather than silently contributing 0 — a zero
+    /// norm would make the tau test trivially pass, so the poison value
+    /// guarantees downstream comparisons read as *not* converged.
+    /// Configured module lists are additionally validated against the
+    /// manifest at startup (`PreLoraController::new`).
     pub fn window_module_norm(&self, module: &str, end: usize, m: usize) -> f64 {
         let mut acc = 0.0;
         for snap in &self.snapshots[end - m..end] {
-            acc += snap.module_mean(module).unwrap_or(0.0);
+            match snap.module_mean(module) {
+                Some(v) => acc += v,
+                None => return f64::NAN,
+            }
         }
         acc / m as f64
     }
@@ -159,6 +169,15 @@ mod tests {
         assert_eq!(h.window_module_norm("dense", 6, 3), 5.0);
         let loss = h.window_loss(6, 3);
         assert!((loss - (2.7 + 2.6 + 2.5) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn untracked_module_window_norm_is_nan_not_zero() {
+        // regression: this used to read 0.0, which made the convergence
+        // test's |dW| = 0 and trivially passed tau for a misspelled module
+        let h = history(6);
+        let w = h.window_module_norm("qurey", 6, 3);
+        assert!(w.is_nan(), "missing module must poison the window, got {w}");
     }
 
     #[test]

@@ -1,15 +1,31 @@
 //! Checkpointing: flat vectors + a JSON header in one file.
 //!
-//! Format: one JSON header line (sizes, epoch, ranks) followed by the raw
-//! little-endian f32 payloads in header order. Self-describing enough for
-//! the analysis binaries and stable across runs.
+//! Format (v2, see `docs/checkpoint-format.md`): one JSON header line
+//! (sizes, epoch, ranks, optimizer-state descriptors, ZeRO shard
+//! metadata) followed by the raw little-endian f32 payloads in header
+//! order: base, lora, adapter_cfg, then each optimizer state buffer.
+//! Optimizer state is always written *gathered* (full-length buffers,
+//! shard-layout independent), so a checkpoint from an N-way ZeRO run
+//! restores onto any worker count — including a single worker. v1 files
+//! (no optimizer state) still load.
+//!
+//! Durability: `save` writes to a temp file in the destination directory
+//! and atomically renames it into place, so a crash mid-write can never
+//! leave a partially-written file under the checkpoint's name. `load`
+//! rejects files whose payload is truncated *or* that carry trailing
+//! bytes beyond what the header declares.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::config::OptimizerKind;
+use crate::optim::OptState;
 use crate::util::json::Json;
+
+const MAGIC_V2: &str = "prelora-ckpt-v2";
+const MAGIC_V1: &str = "prelora-ckpt-v1";
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -18,6 +34,14 @@ pub struct Checkpoint {
     pub lora: Option<Vec<f32>>,
     pub adapter_cfg: Option<Vec<f32>>,
     pub ranks: Option<Vec<usize>>,
+    /// Gathered (full-length) base optimizer state, if the phase held one.
+    pub opt_base: Option<OptState>,
+    /// Gathered LoRA optimizer state, present after the switch.
+    pub opt_lora: Option<OptState>,
+    /// ZeRO shard count of the run that saved this checkpoint (1 =
+    /// unsharded). Metadata only: the payload is always gathered, and a
+    /// restore re-scatters onto the restoring run's own layout.
+    pub zero_shards: usize,
 }
 
 struct Header {
@@ -27,10 +51,44 @@ struct Header {
     lora_len: usize,
     adapter_cfg_len: usize,
     ranks: Option<Vec<usize>>,
+    zero_shards: usize,
+    opt_base: Option<OptDescriptor>,
+    opt_lora: Option<OptDescriptor>,
+}
+
+/// Header description of one serialized optimizer state: the payload
+/// carries `bufs` buffers of the owning section's length.
+struct OptDescriptor {
+    kind: OptimizerKind,
+    steps: u64,
+    bufs: usize,
+}
+
+impl OptDescriptor {
+    fn of(state: &OptState) -> Self {
+        Self { kind: state.kind, steps: state.t, bufs: state.bufs.len() }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            ("steps", Json::from_usize(self.steps as usize)),
+            ("bufs", Json::from_usize(self.bufs)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            kind: v.req("kind")?.as_str()?.parse()?,
+            steps: v.req("steps")?.as_usize()? as u64,
+            bufs: v.req("bufs")?.as_usize()?,
+        })
+    }
 }
 
 impl Header {
     fn to_json(&self) -> Json {
+        let opt = |d: &Option<OptDescriptor>| d.as_ref().map_or(Json::Null, |d| d.to_json());
         Json::obj(vec![
             ("magic", Json::Str(self.magic.clone())),
             ("epoch", Json::from_usize(self.epoch)),
@@ -44,6 +102,9 @@ impl Header {
                     None => Json::Null,
                 },
             ),
+            ("zero_shards", Json::from_usize(self.zero_shards)),
+            ("opt_base", opt(&self.opt_base)),
+            ("opt_lora", opt(&self.opt_lora)),
         ])
     }
 
@@ -52,13 +113,28 @@ impl Header {
             Json::Null => None,
             arr => Some(arr.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?),
         };
+        let magic = v.req("magic")?.as_str()?.to_string();
+        // v1 headers have no optimizer/shard fields
+        let opt = |key: &str| -> Result<Option<OptDescriptor>> {
+            match v.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(d) => Ok(Some(OptDescriptor::from_json(d)?)),
+            }
+        };
+        let zero_shards = match v.get("zero_shards") {
+            None => 1,
+            Some(x) => x.as_usize()?.max(1),
+        };
         Ok(Self {
-            magic: v.req("magic")?.as_str()?.to_string(),
+            magic,
             epoch: v.req("epoch")?.as_usize()?,
             base_len: v.req("base_len")?.as_usize()?,
             lora_len: v.req("lora_len")?.as_usize()?,
             adapter_cfg_len: v.req("adapter_cfg_len")?.as_usize()?,
             ranks,
+            zero_shards,
+            opt_base: opt("opt_base")?,
+            opt_lora: opt("opt_lora")?,
         })
     }
 }
@@ -74,39 +150,103 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
 
 fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
+    r.read_exact(&mut buf)
+        .context("checkpoint payload truncated")?;
     Ok(buf
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
 }
 
+fn read_opt_state(
+    r: &mut impl Read,
+    desc: &Option<OptDescriptor>,
+    len: usize,
+) -> Result<Option<OptState>> {
+    let Some(d) = desc else { return Ok(None) };
+    let bufs = (0..d.bufs)
+        .map(|_| read_f32s(r, len))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Some(OptState { kind: d.kind, t: d.steps, bufs }))
+}
+
 impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(dir) = path.as_ref().parent() {
+        let path = path.as_ref();
+        if let Some(st) = &self.opt_base {
+            ensure!(
+                st.bufs.iter().all(|b| b.len() == self.base.len()),
+                "opt_base state buffers must be base-length (gathered)"
+            );
+        }
+        if let Some(st) = &self.opt_lora {
+            let lora_len = self.lora.as_ref().map_or(0, |v| v.len());
+            ensure!(
+                st.bufs.iter().all(|b| b.len() == lora_len),
+                "opt_lora state buffers must be lora-length (gathered)"
+            );
+        }
+        if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let file = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {}", path.as_ref().display()))?;
-        let mut w = BufWriter::new(file);
-        let header = Header {
-            magic: "prelora-ckpt-v1".into(),
-            epoch: self.epoch,
-            base_len: self.base.len(),
-            lora_len: self.lora.as_ref().map_or(0, |v| v.len()),
-            adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
-            ranks: self.ranks.clone(),
-        };
-        w.write_all(header.to_json().dump().as_bytes())?;
-        w.write_all(b"\n")?;
-        write_f32s(&mut w, &self.base)?;
-        if let Some(l) = &self.lora {
-            write_f32s(&mut w, l)?;
+        // write-to-temp + atomic rename: a crash mid-write leaves only a
+        // stale .tmp, never a corrupt file under the checkpoint's name
+        let tmp = path.with_file_name(format!(
+            "{}.{}.tmp",
+            path.file_name().and_then(|n| n.to_str()).unwrap_or("ckpt"),
+            std::process::id()
+        ));
+        let write = (|| -> Result<()> {
+            let file = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            let mut w = BufWriter::new(file);
+            let header = Header {
+                magic: MAGIC_V2.into(),
+                epoch: self.epoch,
+                base_len: self.base.len(),
+                lora_len: self.lora.as_ref().map_or(0, |v| v.len()),
+                adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
+                ranks: self.ranks.clone(),
+                zero_shards: self.zero_shards.max(1),
+                opt_base: self.opt_base.as_ref().map(OptDescriptor::of),
+                opt_lora: self.opt_lora.as_ref().map(OptDescriptor::of),
+            };
+            w.write_all(header.to_json().dump().as_bytes())?;
+            w.write_all(b"\n")?;
+            write_f32s(&mut w, &self.base)?;
+            if let Some(l) = &self.lora {
+                write_f32s(&mut w, l)?;
+            }
+            if let Some(a) = &self.adapter_cfg {
+                write_f32s(&mut w, a)?;
+            }
+            for st in [&self.opt_base, &self.opt_lora].into_iter().flatten() {
+                for b in &st.bufs {
+                    write_f32s(&mut w, b)?;
+                }
+            }
+            // durability, not just process-crash safety: the data blocks
+            // must be on disk before the rename is allowed to replace the
+            // previous good checkpoint
+            let file = w
+                .into_inner()
+                .map_err(|e| anyhow::anyhow!("flushing checkpoint: {e}"))?;
+            file.sync_all().context("syncing checkpoint to disk")?;
+            Ok(())
+        })();
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
         }
-        if let Some(a) = &self.adapter_cfg {
-            write_f32s(&mut w, a)?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        // make the rename itself durable (best-effort: directory fsync is
+        // not supported on every platform)
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
         }
-        w.flush()?;
         Ok(())
     }
 
@@ -126,7 +266,16 @@ impl Checkpoint {
             ensure!(header_line.len() < 1 << 20, "header too large");
         }
         let header = Header::from_json(&Json::parse(std::str::from_utf8(&header_line)?)?)?;
-        ensure!(header.magic == "prelora-ckpt-v1", "bad checkpoint magic");
+        match header.magic.as_str() {
+            MAGIC_V2 => {}
+            MAGIC_V1 => {
+                ensure!(
+                    header.opt_base.is_none() && header.opt_lora.is_none(),
+                    "v1 checkpoint cannot declare optimizer state"
+                );
+            }
+            other => bail!("bad checkpoint magic {other:?}"),
+        }
         let base = read_f32s(&mut r, header.base_len)?;
         let lora = if header.lora_len > 0 {
             Some(read_f32s(&mut r, header.lora_len)?)
@@ -138,7 +287,25 @@ impl Checkpoint {
         } else {
             None
         };
-        Ok(Self { epoch: header.epoch, base, lora, adapter_cfg, ranks: header.ranks })
+        let opt_base = read_opt_state(&mut r, &header.opt_base, header.base_len)?;
+        let opt_lora = read_opt_state(&mut r, &header.opt_lora, header.lora_len)?;
+        // strict bounds: anything after the declared payload means the
+        // file is not what the header says it is
+        let mut probe = [0u8; 1];
+        ensure!(
+            r.read(&mut probe)? == 0,
+            "checkpoint has trailing bytes beyond the header-declared payload"
+        );
+        Ok(Self {
+            epoch: header.epoch,
+            base,
+            lora,
+            adapter_cfg,
+            ranks: header.ranks,
+            opt_base,
+            opt_lora,
+            zero_shards: header.zero_shards,
+        })
     }
 }
 
@@ -150,32 +317,52 @@ mod tests {
         std::env::temp_dir().join(format!("prelora_{}_{}", std::process::id(), name))
     }
 
-    #[test]
-    fn roundtrip_full_phase() {
-        let c = Checkpoint {
+    fn full_ckpt() -> Checkpoint {
+        Checkpoint {
             epoch: 7,
             base: vec![1.0, -2.5, 3.25],
             lora: None,
             adapter_cfg: None,
             ranks: None,
-        };
+            opt_base: None,
+            opt_lora: None,
+            zero_shards: 1,
+        }
+    }
+
+    #[test]
+    fn roundtrip_full_phase() {
+        let c = full_ckpt();
         let p = tmp("full.ckpt");
         c.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back.epoch, 7);
         assert_eq!(back.base, c.base);
         assert!(back.lora.is_none() && back.adapter_cfg.is_none());
+        assert!(back.opt_base.is_none() && back.opt_lora.is_none());
+        assert_eq!(back.zero_shards, 1);
         std::fs::remove_file(p).unwrap();
     }
 
     #[test]
-    fn roundtrip_lora_phase() {
+    fn roundtrip_lora_phase_with_optimizer_state() {
         let c = Checkpoint {
             epoch: 42,
             base: vec![0.5; 10],
             lora: Some(vec![0.25; 6]),
             adapter_cfg: Some(vec![1.0, 0.0, 4.0]),
             ranks: Some(vec![2, 4]),
+            opt_base: Some(OptState {
+                kind: OptimizerKind::AdamW,
+                t: 9,
+                bufs: vec![vec![0.1; 10], vec![0.2; 10]],
+            }),
+            opt_lora: Some(OptState {
+                kind: OptimizerKind::AdamW,
+                t: 3,
+                bufs: vec![vec![0.3; 6], vec![0.4; 6]],
+            }),
+            zero_shards: 4,
         };
         let p = tmp("lora.ckpt");
         c.save(&p).unwrap();
@@ -183,6 +370,14 @@ mod tests {
         assert_eq!(back.lora.unwrap(), vec![0.25; 6]);
         assert_eq!(back.adapter_cfg.unwrap(), vec![1.0, 0.0, 4.0]);
         assert_eq!(back.ranks.unwrap(), vec![2, 4]);
+        assert_eq!(back.zero_shards, 4);
+        let ob = back.opt_base.unwrap();
+        assert_eq!(ob.kind, OptimizerKind::AdamW);
+        assert_eq!(ob.t, 9);
+        assert_eq!(ob.bufs, vec![vec![0.1; 10], vec![0.2; 10]]);
+        let ol = back.opt_lora.unwrap();
+        assert_eq!(ol.t, 3);
+        assert_eq!(ol.bufs[1], vec![0.4; 6]);
         std::fs::remove_file(p).unwrap();
     }
 
@@ -192,5 +387,81 @@ mod tests {
         std::fs::write(&p, b"{\"magic\":\"nope\"}\n").unwrap();
         assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn loads_v1_checkpoints_without_optimizer_state() {
+        // a file written by the v1 code: header without the v2 fields
+        let p = tmp("v1.ckpt");
+        let header = "{\"magic\":\"prelora-ckpt-v1\",\"epoch\":3,\"base_len\":2,\
+                      \"lora_len\":0,\"adapter_cfg_len\":0,\"ranks\":null}";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.push(b'\n');
+        for x in [1.5f32, -2.0] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.base, vec![1.5, -2.0]);
+        assert!(back.opt_base.is_none());
+        assert_eq!(back.zero_shards, 1);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let c = full_ckpt();
+        let p = tmp("trunc.ckpt");
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let c = full_ckpt();
+        let p = tmp("oversize.ckpt");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(&[0u8; 3]);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_file() {
+        let dir = std::env::temp_dir().join(format!("prelora_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        // overwriting an existing checkpoint goes through the temp file too
+        full_ckpt().save(&p).unwrap();
+        full_ckpt().save(&p).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["model.ckpt".to_string()], "stray files: {names:?}");
+        assert!(Checkpoint::load(&p).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_rejects_ungathered_optimizer_state() {
+        let mut c = full_ckpt();
+        c.opt_base = Some(OptState {
+            kind: OptimizerKind::AdamW,
+            t: 1,
+            bufs: vec![vec![0.0; 2], vec![0.0; 2]], // base is 3 long
+        });
+        let p = tmp("badopt.ckpt");
+        assert!(c.save(&p).is_err(), "shard-length state must be rejected");
+        let _ = std::fs::remove_file(p);
     }
 }

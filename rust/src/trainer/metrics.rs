@@ -19,6 +19,9 @@ pub struct EpochStats {
     pub trainable_params: usize,
     /// Semantic accelerator-memory model in bytes (see MemoryBreakdown).
     pub memory_model_bytes: usize,
+    /// Optimizer state bytes a single worker holds. Equal to the full
+    /// state without ZeRO; ~1/workers of it with `train.zero.enabled`.
+    pub opt_state_bytes_per_worker: usize,
     pub grad_norm: f64,
 }
 
@@ -36,8 +39,13 @@ pub struct MemoryBreakdown {
     pub lora_param_bytes: usize,
     /// Gradient buffer bytes for the current phase.
     pub grad_bytes: usize,
-    /// Optimizer state bytes currently held.
+    /// Optimizer state bytes *this rank* holds. Without ZeRO every rank
+    /// replicates the full state; with `train.zero.enabled` this is the
+    /// largest shard (~1/workers of the total).
     pub optimizer_bytes: usize,
+    /// Optimizer state bytes summed over all shards (the unsharded
+    /// footprint; equals `optimizer_bytes` when state is not sharded).
+    pub optimizer_total_bytes: usize,
     /// Trainable parameter count (assigned ranks).
     pub trainable_params: usize,
 }
@@ -49,12 +57,14 @@ impl MemoryBreakdown {
         trainable: usize,
         grad_bytes: usize,
         optimizer_bytes: usize,
+        optimizer_total_bytes: usize,
     ) -> Self {
         Self {
             base_param_bytes: n_base * 4,
             lora_param_bytes: n_lora * 4,
             grad_bytes,
             optimizer_bytes,
+            optimizer_total_bytes,
             trainable_params: trainable,
         }
     }
@@ -73,13 +83,23 @@ mod tests {
     fn lora_phase_is_smaller_than_full_phase() {
         let n = 1_000_000usize;
         // full: grads n*4, adam 8n
-        let full = MemoryBreakdown::new(n, 0, n, n * 4, n * 8);
+        let full = MemoryBreakdown::new(n, 0, n, n * 4, n * 8, n * 8);
         // lora at 10%: grads 0.1n*4, adam 0.8n, lora weights 0.1n*4
         let nl = n / 10;
-        let lora = MemoryBreakdown::new(n, nl, nl, nl * 4, nl * 8);
+        let lora = MemoryBreakdown::new(n, nl, nl, nl * 4, nl * 8, nl * 8);
         assert!(lora.model_bytes() < full.model_bytes());
         let saving = 1.0 - lora.model_bytes() as f64 / full.model_bytes() as f64;
         // dropping grads+opt of 90% of params saves a large fraction
         assert!(saving > 0.5, "saving {saving}");
+    }
+
+    #[test]
+    fn zero_sharding_shrinks_per_rank_memory() {
+        let n = 1_000_000usize;
+        let replicated = MemoryBreakdown::new(n, 0, n, n * 4, n * 8, n * 8);
+        // 4-way ZeRO: the rank holds its shard of the moments only
+        let sharded = MemoryBreakdown::new(n, 0, n, n * 4, n * 2, n * 8);
+        assert_eq!(sharded.optimizer_total_bytes, replicated.optimizer_total_bytes);
+        assert!(sharded.model_bytes() < replicated.model_bytes());
     }
 }

@@ -23,7 +23,7 @@ use crate::coordinator::{Decision, Phase, PreLoraController};
 use crate::data::{Dataset, EpochLoader, SynthSpec};
 use crate::dp::{Algorithm, GradEngine, StepMode};
 use crate::manifest::Manifest;
-use crate::optim::{self, LrSchedule, Optimizer};
+use crate::optim::{LrSchedule, ShardedOptimizer};
 use crate::pipeline::{ModelState, StepPipeline, UpdateStage};
 use crate::rank::{build_adapter_cfg, AdapterCfg};
 use crate::report::RunSummary;
@@ -67,8 +67,11 @@ impl Trainer {
             algorithm,
         )?;
         // the pipeline's reduce stage must use the engine's exact algorithm
-        // (same summation schedule => the bit-equivalence contract)
-        let pipeline = StepPipeline::new(&cfg.train.pipeline, engine.algorithm())?;
+        // (same summation schedule => the bit-equivalence contract); with
+        // train.zero.enabled it reduce-scatters into one partition per
+        // worker instead of replicating the mean gradient
+        let zero_shards = cfg.train.zero_shards();
+        let pipeline = StepPipeline::new(&cfg.train.pipeline, engine.algorithm(), zero_shards)?;
         let update = UpdateStage::new(cfg.train.grad_clip);
         let loader = EpochLoader::new(c.batch_size, cfg.train.dp.workers, cfg.seed);
         let train_spec = SynthSpec {
@@ -91,10 +94,10 @@ impl Trainer {
             seed: cfg.seed ^ 0x7a1_5eed_u64,
         }));
         let base = manifest.load_init_base()?;
-        let opt_base = optim::build(&cfg.train, base.len());
+        let opt_base = ShardedOptimizer::new(&cfg.train, base.len(), zero_shards);
         let model = ModelState::new(base, opt_base);
         let lr = LrSchedule::new(&cfg.train);
-        let controller = PreLoraController::new(cfg.prelora.clone(), &manifest);
+        let controller = PreLoraController::new(cfg.prelora.clone(), &manifest)?;
         Ok(Self {
             cfg,
             manifest,
@@ -168,18 +171,37 @@ impl Trainer {
         }
     }
 
-    /// Current memory accounting (see `MemoryBreakdown` docs).
+    /// Current memory accounting (see `MemoryBreakdown` docs). Optimizer
+    /// bytes are per-rank: with ZeRO sharding a worker holds only its
+    /// partition of the moments (~1/workers of the total).
     pub fn memory(&self) -> MemoryBreakdown {
         let n_base = self.manifest.base.size;
         let trainable = self.trainable_params();
-        let opt_bytes = self.model.opt_base.as_ref().map_or(0, |o| o.state_bytes())
+        let opt_bytes = self
+            .model
+            .opt_base
+            .as_ref()
+            .map_or(0, |o| o.per_worker_state_bytes())
+            + self
+                .model
+                .opt_lora
+                .as_ref()
+                .map_or(0, |o| o.per_worker_state_bytes());
+        let opt_total = self.model.opt_base.as_ref().map_or(0, |o| o.state_bytes())
             + self.model.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
         let grad_bytes = match self.controller.phase() {
             Phase::FullParam => n_base * 4,
             Phase::Warmup { .. } => (n_base + self.manifest.lora.size) * 4,
             Phase::LoraOnly { .. } => self.manifest.lora.size * 4,
         };
-        MemoryBreakdown::new(n_base, self.manifest.lora.size, trainable, grad_bytes, opt_bytes)
+        MemoryBreakdown::new(
+            n_base,
+            self.manifest.lora.size,
+            trainable,
+            grad_bytes,
+            opt_bytes,
+            opt_total,
+        )
     }
 
     /// Run one epoch: steps (through the pipeline), telemetry, controller
@@ -242,6 +264,7 @@ impl Trainer {
             images_per_sec: run.samples as f64 / epoch_seconds,
             trainable_params: self.trainable_params(),
             memory_model_bytes: mem.model_bytes(),
+            opt_state_bytes_per_worker: mem.optimizer_bytes,
             grad_norm: run.grad_norms.mean(),
         };
         self.stats.push(stats.clone());
@@ -288,7 +311,13 @@ impl Trainer {
                         rng.fill_normal(&mut lora[t.offset..t.offset + t.size], 0.02);
                     }
                 }
-                self.model.opt_lora = Some(optim::build(&self.cfg.train, lora.len()));
+                // the LoRA shard layout is new at the switch: a fresh
+                // partition of the (much smaller) adapter vector
+                self.model.opt_lora = Some(ShardedOptimizer::new(
+                    &self.cfg.train,
+                    lora.len(),
+                    self.cfg.train.zero_shards(),
+                ));
                 self.model.lora = Some(lora);
                 self.model.adapter_cfg = Some(acfg);
                 eprintln!(
@@ -345,7 +374,9 @@ impl Trainer {
         )
     }
 
-    /// Save current model state.
+    /// Save current model state. Optimizer state is gathered from the
+    /// ZeRO shards into full-length buffers (shard-layout independent),
+    /// so the checkpoint restores onto any worker count.
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             epoch: self.history.epochs(),
@@ -353,12 +384,18 @@ impl Trainer {
             lora: self.model.lora.clone(),
             adapter_cfg: self.model.adapter_cfg.as_ref().map(|a| a.values.clone()),
             ranks: self.model.adapter_cfg.as_ref().map(|a| a.ranks.clone()),
+            opt_base: self.model.opt_base.as_ref().map(|o| o.export_state()),
+            opt_lora: self.model.opt_lora.as_ref().map(|o| o.export_state()),
+            zero_shards: self.cfg.train.zero_shards(),
         }
     }
 
     /// Restore model state — base, LoRA params *and* the adapter config
     /// that makes them meaningful (phase machine state is not restored —
-    /// used for eval/analysis, not resumption mid-run).
+    /// used for eval/analysis, not resumption mid-run). Checkpointed
+    /// optimizer state, when present, is re-scattered onto *this* run's
+    /// ZeRO layout — the saving run's shard count is irrelevant, so a
+    /// single-worker trainer restores an N-way sharded run unchanged.
     pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
         anyhow::ensure!(
             ckpt.base.len() == self.model.base.len(),
@@ -408,6 +445,29 @@ impl Trainer {
             _ => bail!(
                 "checkpoint has partial LoRA state (lora, adapter_cfg and ranks must all be present or all absent)"
             ),
+        }
+        // optimizer state: rebuild on this run's shard layout and scatter
+        // the gathered buffers into it. Absent state (v1 checkpoints, or a
+        // phase that held no optimizer) leaves the current optimizers
+        // untouched — the pre-v2 eval/analysis semantics.
+        let shards = self.cfg.train.zero_shards();
+        if let Some(st) = &ckpt.opt_base {
+            let mut opt = ShardedOptimizer::new(&self.cfg.train, self.model.base.len(), shards);
+            opt.import_state(st)
+                .map_err(|e| anyhow!("restoring base optimizer state: {e}"))?;
+            self.model.opt_base = Some(opt);
+        }
+        if let Some(st) = &ckpt.opt_lora {
+            let lora_len = self
+                .model
+                .lora
+                .as_ref()
+                .map(|l| l.len())
+                .ok_or_else(|| anyhow!("checkpoint has LoRA optimizer state but no LoRA params"))?;
+            let mut opt = ShardedOptimizer::new(&self.cfg.train, lora_len, shards);
+            opt.import_state(st)
+                .map_err(|e| anyhow!("restoring lora optimizer state: {e}"))?;
+            self.model.opt_lora = Some(opt);
         }
         Ok(())
     }

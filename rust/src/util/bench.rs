@@ -74,6 +74,18 @@ impl Bench {
         }
     }
 
+    /// Smoke mode: one iteration per case, no warmup — CI runs this to
+    /// keep the bench trajectory populated without paying bench latency.
+    pub fn smoke() -> Self {
+        Self {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time: Duration::ZERO,
+            results: Vec::new(),
+        }
+    }
+
     /// Time `f`, which must perform one full iteration per call.
     pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
         self.run_with_units(name, None, &mut f)
@@ -140,6 +152,40 @@ impl Bench {
         }
         std::fs::write(path, out)
     }
+
+    /// Write results as a JSON array (CI artifact format: one object per
+    /// measurement, seconds as numbers), plus free-form metadata pairs.
+    pub fn write_json(&self, path: &str, metadata: &[(&str, String)]) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let results = Json::Arr(
+            self.results
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("name", Json::Str(m.name.clone())),
+                        ("iters", Json::from_usize(m.iters)),
+                        ("mean_s", Json::Num(m.mean.as_secs_f64())),
+                        ("p50_s", Json::Num(m.p50.as_secs_f64())),
+                        ("p95_s", Json::Num(m.p95.as_secs_f64())),
+                        (
+                            "units_per_s",
+                            m.throughput().map_or(Json::Null, Json::Num),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let mut top = vec![("results", results)];
+        let meta: Vec<(&str, Json)> = metadata
+            .iter()
+            .map(|(k, v)| (*k, Json::Str(v.clone())))
+            .collect();
+        top.extend(meta);
+        std::fs::write(path, Json::obj(top).dump_pretty())
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +211,31 @@ mod tests {
         assert!(m.p50 <= m.p95);
         assert!(m.mean > Duration::ZERO);
         std::hint::black_box(x);
+    }
+
+    #[test]
+    fn smoke_mode_runs_each_case_once() {
+        let mut b = Bench::smoke();
+        let mut calls = 0usize;
+        b.run("once", || calls += 1);
+        assert_eq!(calls, 1, "smoke mode must not warm up or repeat");
+    }
+
+    #[test]
+    fn json_output_contains_results_and_metadata() {
+        let mut b = Bench::smoke();
+        b.run_units("case_a", 10.0, || {});
+        let path = std::env::temp_dir()
+            .join(format!("prelora_bench_{}.json", std::process::id()));
+        b.write_json(path.to_str().unwrap(), &[("mode", "smoke".to_string())])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let results = doc.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req("name").unwrap().as_str().unwrap(), "case_a");
+        assert_eq!(doc.req("mode").unwrap().as_str().unwrap(), "smoke");
+        std::fs::remove_file(path).unwrap();
     }
 
     #[test]

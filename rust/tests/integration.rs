@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 use prelora::config::{RunConfig, StrictnessPreset};
 use prelora::coordinator::Phase;
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
-use prelora::dp::{reduce_mean, Algorithm};
+use prelora::dp::{all_gather, reduce_mean, reduce_scatter, Algorithm};
 use prelora::rank::{assign_ranks, rank_buckets};
 use prelora::tensor::Pcg64;
 use prelora::trainer::{Checkpoint, Trainer};
@@ -160,6 +160,89 @@ fn pipeline_matches_sequential_bitwise_across_phase_switch() {
         ps.is_some() && pf.is_some(),
         "run must cross both phase boundaries to exercise the barrier"
     );
+}
+
+#[test]
+fn zero_sharding_matches_unsharded_bitwise_across_phase_switch() {
+    // the ZeRO-1 acceptance contract: with train.zero.enabled, fixed-seed
+    // per-epoch losses are bit-identical to the unsharded path across the
+    // Full -> Warmup -> LoraOnly lifecycle (the LoRA shard layout changes
+    // at the switch), while per-worker optimizer state is <= (1/N + eps)
+    // of the unsharded total
+    let workers = 2;
+    let run = |zero: bool| {
+        let mut cfg = micro_config(16);
+        cfg.train.dp.workers = workers;
+        cfg.train.zero.enabled = zero;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        let mut per_worker = Vec::new();
+        let mut total = Vec::new();
+        for _ in 0..16 {
+            losses.push(t.run_epoch().unwrap().train_loss);
+            let mem = t.memory();
+            per_worker.push(mem.optimizer_bytes);
+            total.push(mem.optimizer_total_bytes);
+        }
+        (losses, t.controller().switch_epoch(), t.controller().freeze_epoch(), per_worker, total)
+    };
+    let (zl, zs, zf, z_per, z_tot) = run(true);
+    let (ul, us, uf, u_per, u_tot) = run(false);
+    assert_eq!(zl, ul, "ZeRO losses must be bit-identical to unsharded");
+    assert_eq!(zs, us, "switch epoch must match");
+    assert_eq!(zf, uf, "freeze epoch must match");
+    assert!(
+        zs.is_some() && zf.is_some(),
+        "run must cross both phase boundaries to exercise the shard-layout change"
+    );
+    // total state is layout-independent; without ZeRO a worker holds it all
+    assert_eq!(z_tot, u_tot);
+    assert_eq!(u_per, u_tot);
+    for (epoch, (&per, &tot)) in z_per.iter().zip(&z_tot).enumerate() {
+        // eps: ceil-chunking rounds each state buffer up by at most one
+        // element per shard (two optimizers of two buffers in warmup)
+        assert!(
+            per as f64 <= tot as f64 / workers as f64 + 32.0,
+            "epoch {epoch}: per-worker state {per} B exceeds total {tot} B / {workers} + eps"
+        );
+        assert!(per > 0, "epoch {epoch}: optimizer state vanished");
+    }
+}
+
+#[test]
+fn sharded_checkpoint_restores_on_single_worker() {
+    // a 2-way ZeRO run's checkpoint gathers optimizer shards to full
+    // state; an unsharded single-worker trainer must restore it exactly
+    let mut cfg = micro_config(16);
+    cfg.train.dp.workers = 2;
+    cfg.train.zero.enabled = true;
+    let mut t = Trainer::new(cfg).unwrap();
+    for _ in 0..16 {
+        t.run_epoch().unwrap();
+    }
+    assert!(t.adapter_cfg().is_some(), "run never switched");
+    let ck = t.checkpoint();
+    assert_eq!(ck.zero_shards, 2);
+    assert!(ck.opt_lora.is_some(), "post-switch checkpoint must carry LoRA optimizer state");
+
+    let path = std::env::temp_dir().join(format!("prelora_zero_{}.ckpt", std::process::id()));
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.zero_shards, 2);
+    assert_eq!(back.opt_lora, ck.opt_lora, "optimizer state must survive disk");
+
+    let mut solo = Trainer::new(micro_config(16)).unwrap(); // 1 worker, no ZeRO
+    solo.restore(&back).unwrap();
+    let (l1, a1) = t.evaluate().unwrap();
+    let (l2, a2) = solo.evaluate().unwrap();
+    assert_eq!(l1, l2, "restored eval loss differs");
+    assert_eq!(a1, a2, "restored eval accuracy differs");
+    // re-gathering the restored (now 1-shard) state reproduces the saved
+    // buffers exactly: gather(scatter(state)) is the identity
+    let re = solo.checkpoint();
+    assert_eq!(re.zero_shards, 1);
+    assert_eq!(re.opt_lora, ck.opt_lora, "re-scattered state must gather back identically");
+    std::fs::remove_file(path).unwrap();
 }
 
 #[test]
@@ -381,6 +464,30 @@ impl Arbitrary for OddReduceCase {
             Vec::new()
         }
     }
+}
+
+#[test]
+fn prop_reduce_scatter_all_gather_composes_to_reduce_mean() {
+    // the ZeRO bit contract, property-tested over odd worker counts and
+    // non-chunk-aligned lengths: for every algorithm, gathering the
+    // scattered chunks reproduces the all-reduce output *bitwise*
+    check::<OddReduceCase, _>(505, 150, |case| {
+        let n = case.bufs.len();
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let want = {
+                let mut bufs = case.bufs.clone();
+                reduce_mean(alg, &mut bufs);
+                bufs.swap_remove(0)
+            };
+            let Some(chunks) = reduce_scatter(alg, case.bufs.clone(), n) else {
+                return false;
+            };
+            if chunks.len() != n || all_gather(&chunks) != want {
+                return false;
+            }
+        }
+        true
+    });
 }
 
 #[test]
