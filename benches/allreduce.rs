@@ -1,9 +1,18 @@
 //! All-reduce algorithm comparison: naive vs tree vs ring across worker
-//! counts and gradient sizes (the DP substrate ablation in DESIGN.md).
+//! counts and gradient sizes (the DP substrate ablation in DESIGN.md),
+//! plus reduce-scatter vs full reduce — the ZeRO-2 hot-path question:
+//! what does ending the reduce at the scattered layout (each worker keeps
+//! only its owned chunk, nothing full-length materialized) save over
+//! producing the replicated mean vector?
+//!
+//! The owned-buffer cases (`full_owned` / `scatter`) clone the input set
+//! every iteration because `reduce_scatter` consumes its buffers (that
+//! consumption *is* the ZeRO-2 free of the non-owned chunks), so compare
+//! them against each other, not against the in-place `inplace` cases.
 //!
 //! Writes results/bench_allreduce.csv.
 
-use prelora::dp::{reduce_mean, Algorithm};
+use prelora::dp::{reduce_mean, reduce_owned, reduce_scatter, Algorithm};
 use prelora::tensor::Pcg64;
 use prelora::util::bench::Bench;
 
@@ -16,17 +25,27 @@ fn main() {
             let proto: Vec<Vec<f32>> = (0..workers)
                 .map(|_| (0..len).map(|_| rng.next_f32()).collect())
                 .collect();
+            let units = (len * workers) as f64;
             for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
                 let mut bufs = proto.clone();
-                b.run_units(
-                    &format!("{alg:?}/w{workers}/n{len}"),
-                    (len * workers) as f64,
-                    || {
-                        // reduce in place; buffers drift but stay finite and
-                        // the arithmetic per iteration is identical
-                        reduce_mean(alg, &mut bufs);
-                    },
-                );
+                b.run_units(&format!("{alg:?}/w{workers}/n{len}/inplace"), units, || {
+                    // reduce in place; buffers drift but stay finite and
+                    // the arithmetic per iteration is identical
+                    reduce_mean(alg, &mut bufs);
+                });
+                // full reduce with the per-iteration clone both owned
+                // cases pay (the replicated-output reference point)
+                b.run_units(&format!("{alg:?}/w{workers}/n{len}/full_owned"), units, || {
+                    let out = reduce_owned(alg, proto.clone()).unwrap();
+                    std::hint::black_box(out.len());
+                });
+                // terminal reduce-scatter into one chunk per worker: the
+                // ZeRO-2 hot-path op (genuinely scattered schedules for
+                // naive/tree, gather-free ring)
+                b.run_units(&format!("{alg:?}/w{workers}/n{len}/scatter"), units, || {
+                    let chunks = reduce_scatter(alg, proto.clone(), workers).unwrap();
+                    std::hint::black_box(chunks.len());
+                });
             }
         }
     }

@@ -69,6 +69,8 @@ fn main() -> Result<()> {
             "images_per_sec",
             "trainable_params",
             "memory_bytes",
+            "opt_state_bytes_per_worker",
+            "grad_bytes_per_worker",
         ],
     )?;
     for _ in 0..epochs {
@@ -89,6 +91,8 @@ fn main() -> Result<()> {
             s.images_per_sec,
             s.trainable_params as f64,
             s.memory_model_bytes as f64,
+            s.opt_state_bytes_per_worker as f64,
+            s.grad_bytes_per_worker as f64,
         ])?;
         eprintln!(
             "epoch {:>3} [{}] loss {:.4} acc {:.3} val {:.4}/{:.3} {:.1}s {:.0} img/s",

@@ -98,6 +98,13 @@ impl RunConfig {
             "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
             "train.pipeline.overlap_reduce" => t.pipeline.overlap_reduce = v.as_bool()?,
             "train.zero.enabled" => t.zero.enabled = v.as_bool()?,
+            "train.zero.stage" => {
+                let s = v.as_usize()?;
+                if s == 0 || s > 2 {
+                    bail!("train.zero.stage must be 1 or 2, got {s}");
+                }
+                t.zero.stage = s as u8;
+            }
             "prelora.enabled" => p.enabled = v.as_bool()?,
             "prelora.windows" => p.windows = v.as_usize()?,
             "prelora.window_epochs" => p.window_epochs = v.as_usize()?,
@@ -165,7 +172,8 @@ impl RunConfig {
         s.push_str(&format!("prefetch_depth = {}\n", t.pipeline.prefetch_depth));
         s.push_str(&format!("overlap_reduce = {}\n\n", t.pipeline.overlap_reduce));
         s.push_str("[train.zero]\n");
-        s.push_str(&format!("enabled = {}\n\n", t.zero.enabled));
+        s.push_str(&format!("enabled = {}\n", t.zero.enabled));
+        s.push_str(&format!("stage = {}\n\n", t.zero.stage));
         s.push_str("[prelora]\n");
         s.push_str(&format!("enabled = {}\n", p.enabled));
         s.push_str(&format!("windows = {}\n", p.windows));
@@ -263,11 +271,31 @@ mod tests {
             RunConfig::from_toml_str("[train.zero]\nenabled = true\n[train.dp]\nworkers = 4\n")
                 .unwrap();
         assert!(cfg.train.zero.enabled);
+        assert_eq!(cfg.train.zero.stage, 2, "stage defaults to 2");
         assert_eq!(cfg.train.zero_shards(), 4);
+        assert_eq!(cfg.train.zero_grad_parts(), 4);
         let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
         assert!(back.train.zero.enabled);
+        assert_eq!(back.train.zero.stage, 2);
         // off by default
         assert!(!RunConfig::default().train.zero.enabled);
+    }
+
+    #[test]
+    fn zero_stage_key_parses_and_validates() {
+        let cfg = RunConfig::from_toml_str(
+            "[train.zero]\nenabled = true\nstage = 1\n[train.dp]\nworkers = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.zero.stage, 1);
+        assert_eq!(cfg.train.zero_shards(), 4, "stage 1 shards optimizer state");
+        assert_eq!(cfg.train.zero_grad_parts(), 1, "stage 1 keeps gradients replicated");
+        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.train.zero.stage, 1);
+        assert!(
+            RunConfig::from_toml_str("[train.zero]\nstage = 3\n").is_err(),
+            "stage outside 1..=2 must be rejected"
+        );
     }
 
     #[test]

@@ -102,17 +102,36 @@ impl Default for DpConfig {
     }
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ZeroConfig {
-    /// Shard optimizer state across the data-parallel workers (ZeRO
-    /// stage 1): gradients reduce-scatter instead of all-reduce, each
-    /// worker holds AdamW moments only for its owned partition, and the
-    /// parameter vector is re-assembled by all-gather after the shard
-    /// updates. Per-worker optimizer state drops to ~1/workers while
-    /// per-epoch losses stay bit-identical to the replicated path for a
-    /// fixed seed (the reduce-scatter reuses the all-reduce summation
-    /// schedule). A no-op at `workers = 1`. Off by default.
+    /// Shard training state across the data-parallel workers (ZeRO,
+    /// Rajbhandari et al.). Per-epoch losses stay bit-identical to the
+    /// replicated path for a fixed seed regardless of `stage` (the
+    /// reduce-scatter reuses the all-reduce summation schedule). A no-op
+    /// at `workers = 1`. Off by default.
     pub enabled: bool,
+    /// Which state is sharded when `enabled`:
+    ///
+    /// * `1` — optimizer state only: gradients all-reduce to replicated
+    ///   full buffers, each worker holds AdamW moments for its owned
+    ///   contiguous partition (~1/workers of the total).
+    /// * `2` — optimizer state *and* gradient buffers: the reduce is a
+    ///   terminal reduce-scatter (no replicated mean-gradient vector is
+    ///   ever materialized), each worker keeps only its owned gradient
+    ///   partition, updates its parameter slice in place, and the
+    ///   replicated parameters are rebuilt by the all-gather the disjoint
+    ///   slice writes amount to. `MemoryBreakdown.grad_bytes` shrinks to
+    ///   ~1/workers of `grad_total_bytes`.
+    pub stage: u8,
+}
+
+impl Default for ZeroConfig {
+    fn default() -> Self {
+        // stage 2 is the default for `enabled = true`: it is what the
+        // pre-`stage` `--zero` flag did (terminal reduce-scatter), so old
+        // configs keep their exact behavior
+        Self { enabled: false, stage: 2 }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -203,14 +222,31 @@ impl TrainConfig {
             .parse::<crate::dp::Algorithm>()
             .map_err(|e| anyhow::anyhow!(e))?;
         ensure!(self.pipeline.prefetch_depth >= 1, "pipeline.prefetch_depth >= 1");
+        ensure!(
+            matches!(self.zero.stage, 1 | 2),
+            "zero.stage must be 1 (optimizer state) or 2 (+ gradients), got {}",
+            self.zero.stage
+        );
         Ok(())
     }
 
     /// Optimizer-state partition count the run's ZeRO setting implies:
     /// one shard per data-parallel worker when sharding is on, a single
-    /// (unsharded) partition otherwise.
+    /// (unsharded) partition otherwise. Stages 1 and 2 both shard the
+    /// optimizer state.
     pub fn zero_shards(&self) -> usize {
         if self.zero.enabled {
+            self.dp.workers
+        } else {
+            1
+        }
+    }
+
+    /// Gradient-buffer partition count: one owned partition per worker at
+    /// ZeRO stage 2 (reduce-scatter is terminal), a single replicated
+    /// buffer otherwise (stage 1 or sharding off).
+    pub fn zero_grad_parts(&self) -> usize {
+        if self.zero.enabled && self.zero.stage >= 2 {
             self.dp.workers
         } else {
             1
@@ -247,11 +283,31 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.dp.workers = 4;
         assert_eq!(cfg.zero_shards(), 1, "off by default");
+        assert_eq!(cfg.zero_grad_parts(), 1);
         cfg.zero.enabled = true;
         assert_eq!(cfg.zero_shards(), 4);
+        assert_eq!(cfg.zero_grad_parts(), 4, "default stage is 2");
         cfg.dp.workers = 1;
         assert_eq!(cfg.zero_shards(), 1, "single worker: sharding degenerates");
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_stage_gates_gradient_sharding() {
+        let mut cfg = TrainConfig::default();
+        cfg.dp.workers = 4;
+        cfg.zero.enabled = true;
+        cfg.zero.stage = 1;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.zero_shards(), 4, "stage 1 still shards optimizer state");
+        assert_eq!(cfg.zero_grad_parts(), 1, "stage 1 keeps gradients replicated");
+        cfg.zero.stage = 2;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.zero_grad_parts(), 4);
+        for bad in [0u8, 3] {
+            cfg.zero.stage = bad;
+            assert!(cfg.validate().is_err(), "stage {bad} must be rejected");
+        }
     }
 
     #[test]

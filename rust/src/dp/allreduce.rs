@@ -59,10 +59,12 @@ impl FromStr for Algorithm {
 /// A reduced gradient buffer in one of its two distributed layouts.
 ///
 /// `Full` is the classic DDP picture: every worker holds the whole mean
-/// vector. `Sharded` is the ZeRO-1 picture: worker `w` owns partition `w`
-/// of the same vector (the [`partition`] chunking), and the concatenation
-/// of the shards is **bitwise** the `Full` vector — both layouts run the
-/// same summation schedule, so which one a run uses cannot change losses.
+/// vector. `Sharded` is the ZeRO-2 picture: worker `w` owns partition `w`
+/// of the same vector (the [`partition`] chunking) and nothing else —
+/// the non-owned chunks are freed at the reduce, so per-rank gradient
+/// memory is ~1/parts of the buffer. The concatenation of the shards is
+/// **bitwise** the `Full` vector — both layouts run the same summation
+/// schedule, so which one a run uses cannot change losses.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reduced {
     Full(Vec<f32>),
@@ -89,6 +91,16 @@ impl Reduced {
         match self {
             Reduced::Full(v) => v,
             Reduced::Sharded(chunks) => all_gather(&chunks),
+        }
+    }
+
+    /// Elements a single rank retains in this layout: the whole buffer
+    /// when replicated, the largest owned partition when sharded (the
+    /// quantity behind `MemoryBreakdown.grad_bytes` under ZeRO-2).
+    pub fn per_rank_elems(&self) -> usize {
+        match self {
+            Reduced::Full(v) => v.len(),
+            Reduced::Sharded(chunks) => chunks.iter().map(Vec::len).max().unwrap_or(0),
         }
     }
 }
@@ -129,14 +141,25 @@ pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
 
 /// Reduce-scatter: the elementwise mean of `bufs`, returned as `parts`
 /// owned chunks ([`partition`] layout) instead of one replicated vector.
+/// This is the **terminal** op on the ZeRO-2 hot path: no full-length
+/// mean-gradient buffer is materialized afterward, and the per-worker
+/// input buffers are consumed (dropped) here — what survives the reduce
+/// is exactly one owned chunk per partition.
 ///
 /// **Bit contract:** concatenating the returned chunks yields exactly the
 /// vector [`reduce_owned`] would have produced for the same `alg` — the
-/// summation order per element is identical, only the final placement
-/// differs. For `Ring` with `parts == bufs.len()` this skips the gather
-/// phase entirely (the real ZeRO traffic saving: each worker keeps the
-/// chunk the ring schedule already completed on it); the other algorithms
-/// reduce fully and then scatter, which changes placement, not bits.
+/// per-element summation order is identical, only the final placement
+/// differs.
+///
+/// * `Ring` with `parts == bufs.len()` skips the gather phase entirely
+///   (the real ZeRO traffic saving: each worker keeps the chunk the ring
+///   schedule already completed on it). Other `parts` counts don't line
+///   up with the ring's chunking, so the ring reduces fully and then
+///   scatters (placement-only).
+/// * `Naive` and `Tree` run their schedule *per owned chunk* — the
+///   sequential leader sum and the pairwise stride-doubling rounds
+///   restricted to the chunk's element range — so the largest live
+///   temporary is one chunk, never a full-length reduced vector.
 pub fn reduce_scatter(
     alg: Algorithm,
     mut bufs: Vec<Vec<f32>>,
@@ -147,10 +170,14 @@ pub fn reduce_scatter(
         return None;
     }
     let len = bufs[0].len();
-    if n > 1 && alg == Algorithm::Ring && parts == n {
-        assert!(bufs.iter().all(|b| b.len() == len), "buffer length mismatch");
+    if n == 1 {
+        let full = bufs.swap_remove(0);
+        return Some(scatter(&full, parts));
+    }
+    assert!(bufs.iter().all(|b| b.len() == len), "buffer length mismatch");
+    let inv = 1.0 / n as f32;
+    if alg == Algorithm::Ring && parts == n {
         ring_rounds(&mut bufs);
-        let inv = 1.0 / n as f32;
         let out = partition(len, parts)
             .into_iter()
             .enumerate()
@@ -166,8 +193,85 @@ pub fn reduce_scatter(
             .collect();
         return Some(out);
     }
-    let full = reduce_owned(alg, bufs)?;
-    Some(scatter(&full, parts))
+    let reduce_range: fn(&[Vec<f32>], usize, usize) -> Vec<f32> = match alg {
+        Algorithm::Naive => naive_range,
+        Algorithm::Tree => tree_range,
+        Algorithm::Ring => {
+            // the ring schedule's chunking is tied to the worker count;
+            // for a foreign partition count reduce fully, then scatter
+            // (placement changes, bits don't)
+            let full = reduce_owned(alg, bufs)?;
+            return Some(scatter(&full, parts));
+        }
+    };
+    let out = partition(len, parts)
+        .into_iter()
+        .map(|(lo, hi)| {
+            let mut chunk = reduce_range(&bufs, lo, hi);
+            for v in chunk.iter_mut() {
+                *v *= inv;
+            }
+            chunk
+        })
+        .collect();
+    Some(out)
+}
+
+/// The naive schedule restricted to one chunk: the leader's sequential
+/// worker-order sum over `bufs[..][lo..hi]`. Per element this performs
+/// the identical additions as [`naive`], so the result is bitwise the
+/// full naive reduce's slice.
+fn naive_range(bufs: &[Vec<f32>], lo: usize, hi: usize) -> Vec<f32> {
+    let mut acc = bufs[0][lo..hi].to_vec();
+    for b in &bufs[1..] {
+        crate::tensor::add_assign(&mut acc, &b[lo..hi]);
+    }
+    acc
+}
+
+/// The tree schedule restricted to one chunk: pairwise stride-doubling
+/// rounds over `bufs[..][lo..hi]`. The pairs are exactly [`tree`]'s
+/// (dst `base`, src `base + stride`), so per element the balanced-tree
+/// additions are identical and the result is bitwise the full tree
+/// reduce's slice; running the disjoint pairs sequentially instead of on
+/// scoped threads cannot change the bits.
+fn tree_range(bufs: &[Vec<f32>], lo: usize, hi: usize) -> Vec<f32> {
+    let n = bufs.len();
+    let mut chunks: Vec<Vec<f32>> = bufs.iter().map(|b| b[lo..hi].to_vec()).collect();
+    let mut stride = 1;
+    while stride < n {
+        let step = stride * 2;
+        let mut base = 0;
+        while base + stride < n {
+            let (head, tail) = chunks.split_at_mut(base + stride);
+            crate::tensor::add_assign(&mut head[base], &tail[0]);
+            base += step;
+        }
+        stride = step;
+    }
+    chunks.swap_remove(0)
+}
+
+/// Ordered scalar reduction for the ZeRO-2 global gradient norm: fold the
+/// squared elements of [`partition`]-ordered chunks into one f64 sum, in
+/// chunk-then-element order. This is **bitwise** the accumulation
+/// [`sq_norm`] performs over the concatenated full buffer (an f64 left
+/// fold over a concatenation equals the fold over the chunks carried in
+/// order), which is what keeps sharded clipping — and therefore sharded
+/// training — bit-identical to the full-buffer path. A real cluster
+/// would all-reduce independent per-shard partial sums, which is cheaper
+/// but regroups the f64 additions (not associative); we deliberately keep
+/// the chained order so turning ZeRO on can never change losses.
+///
+/// [`sq_norm`]: crate::tensor::sq_norm
+pub fn sq_sum_in_order(chunks: &[Vec<f32>]) -> f64 {
+    let mut acc = 0.0f64;
+    for c in chunks {
+        for &x in c {
+            acc += (x as f64) * (x as f64);
+        }
+    }
+    acc
 }
 
 /// Split a full vector into owned [`partition`] chunks (copies).
@@ -426,13 +530,63 @@ mod tests {
     #[test]
     fn reduce_scatter_part_count_independent_of_workers() {
         // shard layout (parts) need not match the reducing worker count
-        let (bufs, _) = make_bufs(4, 33);
-        let want = reduce_owned(Algorithm::Ring, bufs.clone()).unwrap();
-        for parts in [1usize, 2, 3, 7, 40] {
-            let chunks = reduce_scatter(Algorithm::Ring, bufs.clone(), parts).unwrap();
-            assert_eq!(chunks.len(), parts);
-            assert_eq!(all_gather(&chunks), want, "parts={parts}");
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let (bufs, _) = make_bufs(4, 33);
+            let want = reduce_owned(alg, bufs.clone()).unwrap();
+            for parts in [1usize, 2, 3, 7, 40] {
+                let chunks = reduce_scatter(alg, bufs.clone(), parts).unwrap();
+                assert_eq!(chunks.len(), parts);
+                assert_eq!(all_gather(&chunks), want, "{alg:?} parts={parts}");
+            }
         }
+    }
+
+    #[test]
+    fn scattered_tree_and_naive_schedules_match_full_reduce_bitwise() {
+        // the genuinely-scattered per-chunk schedules (no full-length
+        // temporary) must reproduce the full reduce bit-for-bit, including
+        // odd worker counts and ragged/empty chunks
+        for alg in [Algorithm::Naive, Algorithm::Tree] {
+            for n in [2usize, 3, 5, 7, 8, 16] {
+                for len in [1usize, 2, 17, 101, 1023] {
+                    for parts in [1usize, 2, 3, n, 2 * n, len + 3] {
+                        let (bufs, _) = make_bufs(n, len);
+                        let want = reduce_owned(alg, bufs.clone()).unwrap();
+                        let chunks = reduce_scatter(alg, bufs, parts).unwrap();
+                        assert_eq!(
+                            all_gather(&chunks),
+                            want,
+                            "{alg:?} n={n} len={len} parts={parts}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq_sum_in_order_is_bitwise_the_full_fold() {
+        // ragged 3-way and 5-way splits of an awkward length: the chained
+        // chunk fold must equal tensor::sq_norm on the concatenation
+        let full: Vec<f32> = (0..103).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.37).collect();
+        for parts in [1usize, 2, 3, 5, 103, 200] {
+            let chunks = scatter(&full, parts);
+            assert_eq!(
+                sq_sum_in_order(&chunks),
+                crate::tensor::sq_norm(&full),
+                "parts={parts}"
+            );
+        }
+        assert_eq!(sq_sum_in_order(&[]), 0.0);
+    }
+
+    #[test]
+    fn per_rank_elems_reports_largest_owned_chunk() {
+        let full = vec![0.5f32; 10];
+        assert_eq!(Reduced::Full(full.clone()).per_rank_elems(), 10);
+        // 10 over 4 parts: chunks of 3,3,3,1 -> largest is 3
+        assert_eq!(Reduced::Sharded(scatter(&full, 4)).per_rank_elems(), 3);
+        assert_eq!(Reduced::Sharded(Vec::new()).per_rank_elems(), 0);
     }
 
     #[test]

@@ -55,6 +55,25 @@ pub struct GradResult {
     pub execute_seconds: f64,
 }
 
+impl GradResult {
+    /// Gradient bytes a single rank retains after the reduce: everything
+    /// when the layout is replicated, the largest owned partition per
+    /// buffer under ZeRO-2 (the number `MemoryBreakdown.grad_bytes`
+    /// reports per rank).
+    pub fn grad_bytes_per_rank(&self) -> usize {
+        let elems = |g: &Option<Reduced>| g.as_ref().map_or(0, Reduced::per_rank_elems);
+        (elems(&self.d_base) + elems(&self.d_lora)) * 4
+    }
+
+    /// Gradient bytes across the whole step, layout-independent (the
+    /// replicated footprint; `grad_bytes_per_rank` times the partition
+    /// count up to chunk rounding).
+    pub fn grad_total_bytes(&self) -> usize {
+        let elems = |g: &Option<Reduced>| g.as_ref().map_or(0, Reduced::len);
+        (elems(&self.d_base) + elems(&self.d_lora)) * 4
+    }
+}
+
 /// Raw per-worker gradients of one global step (worker order), scalars
 /// already aggregated. Produced by [`GradEngine::collect`]; the reduce
 /// stage (or [`StepOutputs::reduce`]) turns it into a [`GradResult`].
@@ -88,9 +107,11 @@ impl StepOutputs {
     }
 
     /// Reduce-scatter both buffer sets into `parts` owned partitions
-    /// (ZeRO-1): each worker keeps only its chunk of the mean gradient.
-    /// `parts <= 1` degrades to the replicated [`reduce`](Self::reduce) —
-    /// both produce bitwise-identical values (see
+    /// (ZeRO-2): each worker keeps only its chunk of the mean gradient,
+    /// the per-worker full buffers are consumed by the reduce, and no
+    /// replicated mean vector is materialized. `parts <= 1` degrades to
+    /// the replicated [`reduce`](Self::reduce) — both produce
+    /// bitwise-identical values (see
     /// [`reduce_scatter`](crate::dp::reduce_scatter)).
     pub fn reduce_sharded(self, algorithm: Algorithm, parts: usize) -> GradResult {
         if parts <= 1 {

@@ -19,6 +19,7 @@ pub mod allreduce;
 mod engine;
 
 pub use allreduce::{
-    all_gather, partition, reduce_mean, reduce_owned, reduce_scatter, scatter, Algorithm, Reduced,
+    all_gather, partition, reduce_mean, reduce_owned, reduce_scatter, scatter, sq_sum_in_order,
+    Algorithm, Reduced,
 };
 pub use engine::{GradEngine, GradResult, StepMode, StepOutputs};

@@ -35,7 +35,11 @@ fn train_flags() -> Args {
         .switch("no-pipeline", "run the serial reference loop instead of the step pipeline")
         .switch(
             "zero",
-            "shard optimizer state across workers (ZeRO-1): ~1/N state per worker, bit-identical losses",
+            "shard optimizer state (and, at the default stage 2, gradient buffers) across workers: ~1/N state per worker, bit-identical losses",
+        )
+        .flag(
+            "zero-stage",
+            "ZeRO stage: 1 = optimizer state only, 2 = + gradient buffers (implies --zero)",
         )
         .flag("seed", "run seed")
         .flag("run-name", "label used in logs and output files")
@@ -87,6 +91,10 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
     }
     if a.get_switch("zero") {
         cfg.train.zero.enabled = true;
+    }
+    if let Some(stage) = a.get_parsed::<u8>("zero-stage")? {
+        cfg.train.zero.enabled = true;
+        cfg.train.zero.stage = stage;
     }
     if let Some(s) = a.get_parsed::<u64>("seed")? {
         cfg.seed = s;

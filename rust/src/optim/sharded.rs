@@ -1,14 +1,20 @@
-//! ZeRO-1 partitioned optimizer state.
+//! ZeRO partitioned optimizer state (stages 1 and 2).
 //!
 //! In classic data-parallel training every worker replicates the full
 //! AdamW `m`/`v` buffers — 8 bytes/param regardless of worker count. ZeRO
-//! stage 1 (Rajbhandari et al.) instead gives each worker the optimizer
-//! state for *its* contiguous partition of the parameter vector only, so
-//! per-worker state shrinks ~1/N while the union of shards is exactly the
-//! unsharded state. [`ShardedOptimizer`] is that layout: one inner
-//! [`Optimizer`] per shard over the [`partition`] chunking that
-//! `dp::reduce_scatter` also uses, so the gradient chunk a worker receives
-//! lines up with the state shard it owns by construction.
+//! (Rajbhandari et al.) instead gives each worker the optimizer state for
+//! *its* contiguous partition of the parameter vector only, so per-worker
+//! state shrinks ~1/N while the union of shards is exactly the unsharded
+//! state. [`ShardedOptimizer`] is that layout: one inner [`Optimizer`]
+//! per shard over the [`partition`] chunking that `dp::reduce_scatter`
+//! also uses, so the gradient chunk a worker receives lines up with the
+//! state shard it owns by construction. At stage 1 the gradient arrives
+//! replicated ([`Reduced::Full`]) and every shard reads its slice; at
+//! stage 2 it arrives as owned partitions ([`Reduced::Sharded`]) and each
+//! shard consumes exactly its chunk — [`step_reduced`] dispatches on the
+//! layout.
+//!
+//! [`step_reduced`]: ShardedOptimizer::step_reduced
 //!
 //! **Bit contract.** Both optimizers here are elementwise, so updating a
 //! partition with the partition's gradient chunk performs exactly the
@@ -21,7 +27,7 @@ use anyhow::{ensure, Result};
 
 use super::{build, OptState, Optimizer};
 use crate::config::TrainConfig;
-use crate::dp::partition;
+use crate::dp::{partition, Reduced};
 
 /// Optimizer state partitioned over contiguous parameter chunks.
 pub struct ShardedOptimizer {
@@ -69,12 +75,25 @@ impl ShardedOptimizer {
         }
     }
 
+    /// Apply one update with the gradient in either [`Reduced`] layout —
+    /// the one entry point the update stage uses, so the layout dispatch
+    /// lives next to the shard layout it must agree with.
+    pub fn step_reduced(&mut self, params: &mut [f32], grad: &Reduced, lr: f32) {
+        match grad {
+            Reduced::Full(v) => self.step(params, v, lr),
+            Reduced::Sharded(chunks) => self.step_sharded(params, chunks, lr),
+        }
+    }
+
     /// Apply one update from reduce-scattered gradient `chunks` (one per
     /// shard, [`partition`] layout): worker `w` updates only its owned
-    /// slice of `params`. The caller's shared full vector plays the role
-    /// of the post-update all-gather — each shard writes its chunk back
-    /// into place, re-assembling the replicated parameters for the next
-    /// step's forward pass.
+    /// slice of `params` — the ZeRO-2 step. The caller's shared full
+    /// vector plays the role of the post-update **parameter all-gather**
+    /// (parameters, not gradients: the scattered gradient chunks are
+    /// dropped after this step): each shard writes its updated slice back
+    /// into place, and because the slices are disjoint and cover the
+    /// vector, the replicated parameters the next step's forward pass
+    /// needs are re-assembled exactly.
     pub fn step_sharded(&mut self, params: &mut [f32], chunks: &[Vec<f32>], lr: f32) {
         assert_eq!(params.len(), self.len, "param length mismatch");
         assert_eq!(chunks.len(), self.shards.len(), "one gradient chunk per shard required");
@@ -184,6 +203,23 @@ mod tests {
                 "workers={workers}: per-worker {per} vs total {total}"
             );
         }
+    }
+
+    #[test]
+    fn step_reduced_dispatches_on_layout_bitwise() {
+        // the same gradient through both Reduced layouts must move the
+        // parameters identically (ragged 3-way split of 23)
+        let n = 23;
+        let cfg = TrainConfig::default();
+        let g = grads(n, 1);
+        let mut a = ShardedOptimizer::new(&cfg, n, 3);
+        let mut b = ShardedOptimizer::new(&cfg, n, 3);
+        let mut pa = vec![0.2f32; n];
+        let mut pb = pa.clone();
+        a.step_reduced(&mut pa, &Reduced::Full(g.clone()), 1e-3);
+        b.step_reduced(&mut pb, &Reduced::Sharded(scatter(&g, 3)), 1e-3);
+        assert_eq!(pa, pb, "layout dispatch diverged");
+        assert_eq!(a.export_state(), b.export_state());
     }
 
     #[test]

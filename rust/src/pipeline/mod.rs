@@ -77,22 +77,28 @@ impl EpochRun {
 /// The staged step driver. Owns the reduce stage's worker thread; the
 /// prefetch thread is per-epoch (it terminates when the epoch drains).
 ///
-/// `zero_shards > 1` switches the reduce stage to ZeRO-1 reduce-scatter:
-/// gradients arrive at the update stage as per-worker owned partitions
-/// and each optimizer shard updates its slice (see
-/// [`UpdateStage`]/[`crate::optim::ShardedOptimizer`]). Bitwise-identical
-/// losses either way — the scattered chunks are the replicated vector.
+/// `grad_parts > 1` switches the reduce stage to the ZeRO-2 terminal
+/// reduce-scatter: gradients arrive at the update stage as per-worker
+/// owned partitions (no replicated mean vector exists after the reduce)
+/// and each optimizer shard updates its parameter slice, rebuilding the
+/// replicas by the disjoint writes' implicit parameter all-gather (see
+/// [`UpdateStage`]/[`crate::optim::ShardedOptimizer`]).
+/// Bitwise-identical losses either way — the scattered chunks are the
+/// replicated vector. ZeRO-1 passes `grad_parts == 1` (replicated
+/// gradients, sharded optimizer state only); the gradient partition is
+/// re-derived per buffer length, so the LoRA buffer appearing at the
+/// phase switch re-partitions automatically.
 pub struct StepPipeline {
     cfg: PipelineConfig,
-    zero_shards: usize,
+    grad_parts: usize,
     reduce: ReduceStage,
 }
 
 impl StepPipeline {
-    pub fn new(cfg: &PipelineConfig, algorithm: Algorithm, zero_shards: usize) -> Result<Self> {
-        let zero_shards = zero_shards.max(1);
-        let reduce = ReduceStage::new(algorithm, cfg.enabled && cfg.overlap_reduce, zero_shards)?;
-        Ok(Self { cfg: cfg.clone(), zero_shards, reduce })
+    pub fn new(cfg: &PipelineConfig, algorithm: Algorithm, grad_parts: usize) -> Result<Self> {
+        let grad_parts = grad_parts.max(1);
+        let reduce = ReduceStage::new(algorithm, cfg.enabled && cfg.overlap_reduce, grad_parts)?;
+        Ok(Self { cfg: cfg.clone(), grad_parts, reduce })
     }
 
     /// Run one epoch of `steps` training steps in mode `mode`, dispatching
@@ -122,7 +128,7 @@ impl StepPipeline {
                 epoch,
                 steps,
                 lr,
-                self.zero_shards,
+                self.grad_parts,
             );
         }
         let mut prefetch = Prefetcher::spawn(
@@ -160,10 +166,11 @@ impl StepPipeline {
     }
 
     /// The fully serial reference loop (pipeline disabled), with an
-    /// explicit ZeRO partition count (`zero_shards <= 1` = classic
-    /// replicated gradients). Shares the [`UpdateStage`] and the reduce
-    /// summation schedule with the pipelined path — this is the other
-    /// half of the determinism contract.
+    /// explicit gradient partition count (`grad_parts <= 1` = classic
+    /// replicated gradients; `> 1` = ZeRO-2 terminal reduce-scatter).
+    /// Shares the [`UpdateStage`] and the reduce summation schedule with
+    /// the pipelined path — this is the other half of the determinism
+    /// contract.
     #[allow(clippy::too_many_arguments)]
     pub fn run_sequential_sharded(
         engine: &mut GradEngine,
@@ -175,7 +182,7 @@ impl StepPipeline {
         epoch: usize,
         steps: usize,
         lr: f32,
-        zero_shards: usize,
+        grad_parts: usize,
     ) -> Result<EpochRun> {
         let order = loader.epoch_order(data, epoch);
         let algorithm = engine.algorithm();
@@ -183,7 +190,7 @@ impl StepPipeline {
         for step in 0..steps {
             let batches = loader.step_batches_in(data, &order, step);
             engine.submit(mode, &model.base, model.lora_pair(), batches)?;
-            let mut r = engine.collect()?.reduce_sharded(algorithm, zero_shards);
+            let mut r = engine.collect()?.reduce_sharded(algorithm, grad_parts);
             let norms = update.apply(model, &mut r, lr)?;
             out.ingest(&r, norms);
         }

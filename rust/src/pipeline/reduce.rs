@@ -9,12 +9,15 @@
 //! schedule as the serial path — which thread executes it cannot change
 //! the bits (the determinism contract in the module docs).
 //!
-//! With ZeRO enabled (`zero_shards > 1`) the stage reduce-*scatters*
-//! instead: each worker keeps only its owned partition of the mean
-//! gradient ([`Reduced::Sharded`]), which is what lets the optimizer hold
-//! 1/N state per worker. The scattered chunks concatenate bitwise to the
+//! With ZeRO-2 enabled (`grad_parts > 1`) the stage reduce-*scatters*
+//! instead, and the scatter is **terminal**: each worker keeps only its
+//! owned partition of the mean gradient ([`Reduced::Sharded`]), no
+//! replicated mean vector is materialized after the reduce, and the
+//! per-worker input buffers are consumed by it — per-rank gradient memory
+//! drops to ~1/parts. The scattered chunks concatenate bitwise to the
 //! replicated vector (see `dp::reduce_scatter`), so turning ZeRO on
-//! cannot change losses.
+//! cannot change losses. At ZeRO-1 (`grad_parts == 1`) gradients stay
+//! replicated and only the optimizer state is sharded downstream.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -27,19 +30,19 @@ use crate::dp::{Algorithm, GradResult, Reduced, StepOutputs};
 /// requested.
 pub struct ReduceStage {
     algorithm: Algorithm,
-    /// Partition count for ZeRO reduce-scatter; `<= 1` reduces to the
-    /// replicated full vector.
-    zero_shards: usize,
+    /// Gradient partition count for the ZeRO-2 terminal reduce-scatter;
+    /// `<= 1` reduces to the replicated full vector.
+    grad_parts: usize,
     tx: Option<mpsc::Sender<Vec<Vec<f32>>>>,
     rx: Option<mpsc::Receiver<Option<Reduced>>>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ReduceStage {
-    pub fn new(algorithm: Algorithm, overlap: bool, zero_shards: usize) -> Result<Self> {
-        let zero_shards = zero_shards.max(1);
+    pub fn new(algorithm: Algorithm, overlap: bool, grad_parts: usize) -> Result<Self> {
+        let grad_parts = grad_parts.max(1);
         if !overlap {
-            return Ok(Self { algorithm, zero_shards, tx: None, rx: None, join: None });
+            return Ok(Self { algorithm, grad_parts, tx: None, rx: None, join: None });
         }
         let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
         let (out_tx, rx) = mpsc::channel::<Option<Reduced>>();
@@ -47,13 +50,13 @@ impl ReduceStage {
             .name("reduce-stage".into())
             .spawn(move || {
                 while let Ok(bufs) = job_rx.recv() {
-                    if out_tx.send(reduce_one(algorithm, bufs, zero_shards)).is_err() {
+                    if out_tx.send(reduce_one(algorithm, bufs, grad_parts)).is_err() {
                         break;
                     }
                 }
             })
             .context("spawning reduce-stage thread")?;
-        Ok(Self { algorithm, zero_shards, tx: Some(tx), rx: Some(rx), join: Some(join) })
+        Ok(Self { algorithm, grad_parts, tx: Some(tx), rx: Some(rx), join: Some(join) })
     }
 
     /// Reduce one step's worker outputs to mean gradients. Overlaps the
@@ -67,7 +70,7 @@ impl ReduceStage {
             {
                 (tx, rx)
             }
-            _ => return Ok(outs.reduce_sharded(self.algorithm, self.zero_shards)),
+            _ => return Ok(outs.reduce_sharded(self.algorithm, self.grad_parts)),
         };
         let StepOutputs {
             base_grads,
@@ -79,16 +82,18 @@ impl ReduceStage {
         } = outs;
         tx.send(base_grads)
             .map_err(|_| anyhow!("reduce stage hung up"))?;
-        let d_lora = reduce_one(self.algorithm, lora_grads, self.zero_shards);
+        let d_lora = reduce_one(self.algorithm, lora_grads, self.grad_parts);
         let d_base = rx.recv().map_err(|_| anyhow!("reduce stage died"))?;
         Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
     }
 }
 
-/// Reduce one buffer set into the stage's configured layout.
-fn reduce_one(algorithm: Algorithm, bufs: Vec<Vec<f32>>, zero_shards: usize) -> Option<Reduced> {
-    if zero_shards > 1 {
-        crate::dp::reduce_scatter(algorithm, bufs, zero_shards).map(Reduced::Sharded)
+/// Reduce one buffer set into the stage's configured layout. With
+/// `grad_parts > 1` the reduce-scatter is the terminal op: `bufs` is
+/// consumed, and only the owned partitions survive.
+fn reduce_one(algorithm: Algorithm, bufs: Vec<Vec<f32>>, grad_parts: usize) -> Option<Reduced> {
+    if grad_parts > 1 {
+        crate::dp::reduce_scatter(algorithm, bufs, grad_parts).map(Reduced::Sharded)
     } else {
         crate::dp::reduce_owned(algorithm, bufs).map(Reduced::Full)
     }

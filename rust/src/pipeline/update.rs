@@ -7,15 +7,21 @@
 //! operates on.
 //!
 //! The stage accepts gradients in either [`Reduced`] layout. For the
-//! ZeRO-sharded layout each worker's chunk updates only that worker's
+//! ZeRO-2 sharded layout each worker's chunk updates only that worker's
 //! owned parameter slice through its optimizer shard; because the slices
 //! of the shared full vector are disjoint, writing them back *is* the
-//! post-update all-gather — the replicated parameter vector the next
-//! step's forward pass needs is re-assembled in place. The clip scale is
-//! computed from the global norm accumulated sequentially across chunks,
-//! which is bitwise the full-vector [`l2_norm`] (f64 left-fold over a
+//! post-update **parameter** all-gather (gradients are never gathered —
+//! the scattered chunks are dropped once applied) — the replicated
+//! parameter vector the next step's forward pass needs is re-assembled in
+//! place. The clip scale is computed from the global pre-clip norm, which
+//! the sharded path assembles from the shards' squared sums through the
+//! ordered scalar reduction [`sq_sum_in_order`]; that fold is bitwise the
+//! full-vector [`l2_norm`] accumulation (f64 left-fold over a
 //! concatenation equals the fold over the chunks carried in order), so
-//! sharded and replicated updates clip — and therefore train — identically.
+//! sharded and replicated updates clip — and therefore train — identically
+//! even for odd worker counts and ragged partition lengths.
+//!
+//! [`sq_sum_in_order`]: crate::dp::sq_sum_in_order
 
 use anyhow::{anyhow, Result};
 
@@ -88,13 +94,11 @@ impl UpdateStage {
                 }
             }
             Reduced::Sharded(chunks) => {
-                let mut sq = 0.0f64;
-                for c in chunks.iter() {
-                    for &x in c {
-                        sq += (x as f64) * (x as f64);
-                    }
-                }
-                let norm = sq.sqrt();
+                // ZeRO-2: every rank needs the *global* norm to compute
+                // the clip scale; the shards' squared sums combine through
+                // the ordered scalar reduce (see the module docs for why
+                // the order is pinned)
+                let norm = crate::dp::sq_sum_in_order(chunks).sqrt();
                 if self.grad_clip > 0.0 && norm > self.grad_clip && norm > 0.0 {
                     let s = (self.grad_clip / norm) as f32;
                     for c in chunks.iter_mut() {
@@ -103,14 +107,6 @@ impl UpdateStage {
                 }
                 norm
             }
-        }
-    }
-
-    /// Step `opt` on `params` with the clipped gradient in either layout.
-    fn step(opt: &mut ShardedOptimizer, params: &mut [f32], g: &Reduced, lr: f32) {
-        match g {
-            Reduced::Full(v) => opt.step(params, v, lr),
-            Reduced::Sharded(chunks) => opt.step_sharded(params, chunks, lr),
         }
     }
 
@@ -128,7 +124,7 @@ impl UpdateStage {
                 .opt_base
                 .as_mut()
                 .ok_or_else(|| anyhow!("base optimizer missing"))?;
-            Self::step(opt, &mut model.base, g, lr);
+            opt.step_reduced(&mut model.base, g, lr);
         }
         if let Some(ref mut g) = r.d_lora {
             let pre = self.clip(g);
@@ -142,7 +138,7 @@ impl UpdateStage {
                 .opt_lora
                 .as_mut()
                 .ok_or_else(|| anyhow!("lora optimizer missing"))?;
-            Self::step(opt, lora, g, lr);
+            opt.step_reduced(lora, g, lr);
         }
         Ok(StepNorms { pre_clip: sq.sqrt(), clipped })
     }

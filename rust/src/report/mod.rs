@@ -20,6 +20,10 @@ pub struct PhaseAggregate {
     /// Optimizer state a single worker held (ZeRO: ~1/workers of the
     /// total; the run summary's evidence for the sharding claim).
     pub mean_opt_state_bytes_per_worker: f64,
+    /// Gradient buffer bytes a single worker held after the reduce
+    /// (ZeRO-2: ~1/workers of the replicated footprint — the summary's
+    /// evidence for the gradient-sharding claim).
+    pub mean_grad_bytes_per_worker: f64,
     pub final_train_loss: f64,
 }
 
@@ -62,6 +66,7 @@ impl RunSummary {
             agg.mean_images_per_sec += s.images_per_sec;
             agg.mean_memory_bytes += s.memory_model_bytes as f64;
             agg.mean_opt_state_bytes_per_worker += s.opt_state_bytes_per_worker as f64;
+            agg.mean_grad_bytes_per_worker += s.grad_bytes_per_worker as f64;
             agg.final_train_loss = s.train_loss;
         }
         for agg in by_phase.values_mut() {
@@ -70,6 +75,7 @@ impl RunSummary {
             agg.mean_images_per_sec /= n;
             agg.mean_memory_bytes /= n;
             agg.mean_opt_state_bytes_per_worker /= n;
+            agg.mean_grad_bytes_per_worker /= n;
         }
         let last = stats.last();
         let last_val = stats.iter().rev().find(|s| !s.val_loss.is_nan());
@@ -145,12 +151,13 @@ impl RunSummary {
         }
         for (phase, agg) in &self.by_phase {
             out.push_str(&format!(
-                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem, {:.2} MiB opt-state/worker\n",
+                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem, {:.2} MiB opt-state/worker, {:.2} MiB grads/worker\n",
                 agg.epochs,
                 agg.mean_epoch_seconds,
                 agg.mean_images_per_sec,
                 agg.mean_memory_bytes / (1 << 20) as f64,
                 agg.mean_opt_state_bytes_per_worker / (1 << 20) as f64,
+                agg.mean_grad_bytes_per_worker / (1 << 20) as f64,
             ));
         }
         if let Some(r) = self.epoch_time_ratio {
@@ -186,6 +193,10 @@ impl RunSummary {
                             (
                                 "mean_opt_state_bytes_per_worker",
                                 Json::Num(a.mean_opt_state_bytes_per_worker),
+                            ),
+                            (
+                                "mean_grad_bytes_per_worker",
+                                Json::Num(a.mean_grad_bytes_per_worker),
                             ),
                             ("final_train_loss", Json::Num(a.final_train_loss)),
                         ]),
@@ -241,6 +252,7 @@ mod tests {
             trainable_params: 1000,
             memory_model_bytes: mem,
             opt_state_bytes_per_worker: mem / 2,
+            grad_bytes_per_worker: mem / 4,
             grad_norm: 1.0,
         }
     }
@@ -273,8 +285,12 @@ mod tests {
         // (stat() sets it to mem/2)
         assert!((s.by_phase["full"].mean_opt_state_bytes_per_worker - 500.0).abs() < 1e-9);
         assert!((s.by_phase["lora"].mean_opt_state_bytes_per_worker - 300.0).abs() < 1e-9);
+        // per-worker gradient bytes too (stat() sets them to mem/4)
+        assert!((s.by_phase["full"].mean_grad_bytes_per_worker - 250.0).abs() < 1e-9);
+        assert!((s.by_phase["lora"].mean_grad_bytes_per_worker - 150.0).abs() < 1e-9);
         let j = s.to_json();
         assert!(j.contains("mean_opt_state_bytes_per_worker"), "{j}");
+        assert!(j.contains("mean_grad_bytes_per_worker"), "{j}");
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //! `m` epochs; Algorithm 2 additionally needs the per-layer norm deltas
 //! between the final two windows. [`NormHistory`] owns those series;
 //! [`GradNormStats`] accumulates per-step pre-clip gradient norms inside
-//! an epoch (fed by the pipeline's update stage); [`recorder`] persists
-//! everything as CSV for the figure harnesses.
+//! an epoch (fed by the pipeline's update stage — the norm it records is
+//! the same ordered-fold global norm for replicated and ZeRO-sharded
+//! gradient layouts, see `dp::sq_sum_in_order`, so the series is
+//! layout-independent by construction); [`recorder`] persists everything
+//! as CSV for the figure harnesses.
 
 mod grad;
 mod norms;

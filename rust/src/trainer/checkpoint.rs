@@ -1,8 +1,9 @@
 //! Checkpointing: flat vectors + a JSON header in one file.
 //!
 //! Format (v2, see `docs/checkpoint-format.md`): one JSON header line
-//! (sizes, epoch, ranks, optimizer-state descriptors, ZeRO shard
-//! metadata) followed by the raw little-endian f32 payloads in header
+//! (sizes, epoch, ranks, optimizer-state descriptors, ZeRO shard/stage
+//! metadata — see also `docs/zero.md`) followed by the raw little-endian
+//! f32 payloads in header
 //! order: base, lora, adapter_cfg, then each optimizer state buffer.
 //! Optimizer state is always written *gathered* (full-length buffers,
 //! shard-layout independent), so a checkpoint from an N-way ZeRO run
@@ -42,6 +43,12 @@ pub struct Checkpoint {
     /// unsharded). Metadata only: the payload is always gathered, and a
     /// restore re-scatters onto the restoring run's own layout.
     pub zero_shards: usize,
+    /// ZeRO stage of the saving run (1 = optimizer state sharded, 2 = +
+    /// gradient buffers; 1 also for unsharded runs). Metadata only, like
+    /// `zero_shards`: gradient shards are transient within a step and are
+    /// never checkpointed, so the payload is stage-independent. Absent in
+    /// files written before the stage knob existed — read as 1.
+    pub zero_stage: u8,
 }
 
 struct Header {
@@ -52,6 +59,7 @@ struct Header {
     adapter_cfg_len: usize,
     ranks: Option<Vec<usize>>,
     zero_shards: usize,
+    zero_stage: u8,
     opt_base: Option<OptDescriptor>,
     opt_lora: Option<OptDescriptor>,
 }
@@ -103,6 +111,7 @@ impl Header {
                 },
             ),
             ("zero_shards", Json::from_usize(self.zero_shards)),
+            ("zero_stage", Json::from_usize(self.zero_stage as usize)),
             ("opt_base", opt(&self.opt_base)),
             ("opt_lora", opt(&self.opt_lora)),
         ])
@@ -125,6 +134,12 @@ impl Header {
             None => 1,
             Some(x) => x.as_usize()?.max(1),
         };
+        // absent in v1 files and in v2 files written before the stage
+        // knob; those runs sharded at most the optimizer state
+        let zero_stage = match v.get("zero_stage") {
+            None => 1,
+            Some(x) => x.as_usize()?.clamp(1, 2) as u8,
+        };
         Ok(Self {
             magic,
             epoch: v.req("epoch")?.as_usize()?,
@@ -133,6 +148,7 @@ impl Header {
             adapter_cfg_len: v.req("adapter_cfg_len")?.as_usize()?,
             ranks,
             zero_shards,
+            zero_stage,
             opt_base: opt("opt_base")?,
             opt_lora: opt("opt_lora")?,
         })
@@ -208,6 +224,7 @@ impl Checkpoint {
                 adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
                 ranks: self.ranks.clone(),
                 zero_shards: self.zero_shards.max(1),
+                zero_stage: self.zero_stage.clamp(1, 2),
                 opt_base: self.opt_base.as_ref().map(OptDescriptor::of),
                 opt_lora: self.opt_lora.as_ref().map(OptDescriptor::of),
             };
@@ -305,6 +322,7 @@ impl Checkpoint {
             opt_base,
             opt_lora,
             zero_shards: header.zero_shards,
+            zero_stage: header.zero_stage,
         })
     }
 }
@@ -327,6 +345,7 @@ mod tests {
             opt_base: None,
             opt_lora: None,
             zero_shards: 1,
+            zero_stage: 1,
         }
     }
 
@@ -341,6 +360,7 @@ mod tests {
         assert!(back.lora.is_none() && back.adapter_cfg.is_none());
         assert!(back.opt_base.is_none() && back.opt_lora.is_none());
         assert_eq!(back.zero_shards, 1);
+        assert_eq!(back.zero_stage, 1);
         std::fs::remove_file(p).unwrap();
     }
 
@@ -363,6 +383,7 @@ mod tests {
                 bufs: vec![vec![0.3; 6], vec![0.4; 6]],
             }),
             zero_shards: 4,
+            zero_stage: 2,
         };
         let p = tmp("lora.ckpt");
         c.save(&p).unwrap();
@@ -371,6 +392,7 @@ mod tests {
         assert_eq!(back.adapter_cfg.unwrap(), vec![1.0, 0.0, 4.0]);
         assert_eq!(back.ranks.unwrap(), vec![2, 4]);
         assert_eq!(back.zero_shards, 4);
+        assert_eq!(back.zero_stage, 2, "stage metadata must roundtrip");
         let ob = back.opt_base.unwrap();
         assert_eq!(ob.kind, OptimizerKind::AdamW);
         assert_eq!(ob.t, 9);
@@ -407,6 +429,7 @@ mod tests {
         assert_eq!(back.base, vec![1.5, -2.0]);
         assert!(back.opt_base.is_none());
         assert_eq!(back.zero_shards, 1);
+        assert_eq!(back.zero_stage, 1, "pre-stage files read as stage 1");
         std::fs::remove_file(p).unwrap();
     }
 

@@ -22,6 +22,10 @@ pub struct EpochStats {
     /// Optimizer state bytes a single worker holds. Equal to the full
     /// state without ZeRO; ~1/workers of it with `train.zero.enabled`.
     pub opt_state_bytes_per_worker: usize,
+    /// Gradient buffer bytes a single worker holds after the reduce.
+    /// Equal to the live buffers' full size except at ZeRO stage 2, where
+    /// the terminal reduce-scatter leaves each worker ~1/workers of it.
+    pub grad_bytes_per_worker: usize,
     pub grad_norm: f64,
 }
 
@@ -37,8 +41,14 @@ pub struct MemoryBreakdown {
     pub base_param_bytes: usize,
     /// LoRA weights at r_max as actually allocated.
     pub lora_param_bytes: usize,
-    /// Gradient buffer bytes for the current phase.
+    /// Gradient buffer bytes *this rank* holds for the current phase.
+    /// Without ZeRO-2 every rank keeps the full buffers; at stage 2 the
+    /// reduce-scatter is terminal and this is the largest owned partition
+    /// (~1/workers of `grad_total_bytes`, plus chunk rounding).
     pub grad_bytes: usize,
+    /// Gradient buffer bytes summed over all partitions (the replicated
+    /// footprint; equals `grad_bytes` when gradients are not sharded).
+    pub grad_total_bytes: usize,
     /// Optimizer state bytes *this rank* holds. Without ZeRO every rank
     /// replicates the full state; with `train.zero.enabled` this is the
     /// largest shard (~1/workers of the total).
@@ -51,11 +61,13 @@ pub struct MemoryBreakdown {
 }
 
 impl MemoryBreakdown {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         n_base: usize,
         n_lora: usize,
         trainable: usize,
         grad_bytes: usize,
+        grad_total_bytes: usize,
         optimizer_bytes: usize,
         optimizer_total_bytes: usize,
     ) -> Self {
@@ -63,13 +75,15 @@ impl MemoryBreakdown {
             base_param_bytes: n_base * 4,
             lora_param_bytes: n_lora * 4,
             grad_bytes,
+            grad_total_bytes,
             optimizer_bytes,
             optimizer_total_bytes,
             trainable_params: trainable,
         }
     }
 
-    /// The paper-comparable total: weights + grads + optimizer state.
+    /// The paper-comparable per-rank total: weights + the grads and
+    /// optimizer state *this rank* holds.
     pub fn model_bytes(&self) -> usize {
         self.base_param_bytes + self.lora_param_bytes + self.grad_bytes + self.optimizer_bytes
     }
@@ -83,10 +97,10 @@ mod tests {
     fn lora_phase_is_smaller_than_full_phase() {
         let n = 1_000_000usize;
         // full: grads n*4, adam 8n
-        let full = MemoryBreakdown::new(n, 0, n, n * 4, n * 8, n * 8);
+        let full = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 8, n * 8);
         // lora at 10%: grads 0.1n*4, adam 0.8n, lora weights 0.1n*4
         let nl = n / 10;
-        let lora = MemoryBreakdown::new(n, nl, nl, nl * 4, nl * 8, nl * 8);
+        let lora = MemoryBreakdown::new(n, nl, nl, nl * 4, nl * 4, nl * 8, nl * 8);
         assert!(lora.model_bytes() < full.model_bytes());
         let saving = 1.0 - lora.model_bytes() as f64 / full.model_bytes() as f64;
         // dropping grads+opt of 90% of params saves a large fraction
@@ -94,12 +108,25 @@ mod tests {
     }
 
     #[test]
-    fn zero_sharding_shrinks_per_rank_memory() {
+    fn zero1_sharding_shrinks_per_rank_optimizer_memory() {
         let n = 1_000_000usize;
-        let replicated = MemoryBreakdown::new(n, 0, n, n * 4, n * 8, n * 8);
-        // 4-way ZeRO: the rank holds its shard of the moments only
-        let sharded = MemoryBreakdown::new(n, 0, n, n * 4, n * 2, n * 8);
+        let replicated = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 8, n * 8);
+        // 4-way ZeRO-1: the rank holds its shard of the moments only;
+        // gradients stay replicated
+        let sharded = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 2, n * 8);
         assert_eq!(sharded.optimizer_total_bytes, replicated.optimizer_total_bytes);
+        assert_eq!(sharded.grad_bytes, sharded.grad_total_bytes);
         assert!(sharded.model_bytes() < replicated.model_bytes());
+    }
+
+    #[test]
+    fn zero2_sharding_shrinks_per_rank_gradient_memory_too() {
+        let n = 1_000_000usize;
+        let zero1 = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 2, n * 8);
+        // 4-way ZeRO-2: grads per rank drop to ~1/4 of the total as well
+        let zero2 = MemoryBreakdown::new(n, 0, n, n, n * 4, n * 2, n * 8);
+        assert_eq!(zero2.grad_total_bytes, zero1.grad_total_bytes);
+        assert_eq!(zero2.grad_bytes * 4, zero2.grad_total_bytes);
+        assert!(zero2.model_bytes() < zero1.model_bytes());
     }
 }

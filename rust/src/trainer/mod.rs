@@ -67,11 +67,13 @@ impl Trainer {
             algorithm,
         )?;
         // the pipeline's reduce stage must use the engine's exact algorithm
-        // (same summation schedule => the bit-equivalence contract); with
-        // train.zero.enabled it reduce-scatters into one partition per
-        // worker instead of replicating the mean gradient
+        // (same summation schedule => the bit-equivalence contract). ZeRO
+        // stage 2 makes the reduce-scatter terminal (one owned gradient
+        // partition per worker, no replicated mean vector); stage 1 keeps
+        // gradients replicated and shards only the optimizer state below.
         let zero_shards = cfg.train.zero_shards();
-        let pipeline = StepPipeline::new(&cfg.train.pipeline, engine.algorithm(), zero_shards)?;
+        let grad_parts = cfg.train.zero_grad_parts();
+        let pipeline = StepPipeline::new(&cfg.train.pipeline, engine.algorithm(), grad_parts)?;
         let update = UpdateStage::new(cfg.train.grad_clip);
         let loader = EpochLoader::new(c.batch_size, cfg.train.dp.workers, cfg.seed);
         let train_spec = SynthSpec {
@@ -172,10 +174,13 @@ impl Trainer {
     }
 
     /// Current memory accounting (see `MemoryBreakdown` docs). Optimizer
-    /// bytes are per-rank: with ZeRO sharding a worker holds only its
-    /// partition of the moments (~1/workers of the total).
+    /// *and* gradient bytes are per-rank: with ZeRO a worker holds only
+    /// its partition of the moments (stages 1+2, ~1/workers of the
+    /// total), and at stage 2 only its partition of each live gradient
+    /// buffer as well (the reduce-scatter is terminal).
     pub fn memory(&self) -> MemoryBreakdown {
         let n_base = self.manifest.base.size;
+        let n_lora = self.manifest.lora.size;
         let trainable = self.trainable_params();
         let opt_bytes = self
             .model
@@ -189,16 +194,22 @@ impl Trainer {
                 .map_or(0, |o| o.per_worker_state_bytes());
         let opt_total = self.model.opt_base.as_ref().map_or(0, |o| o.state_bytes())
             + self.model.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
-        let grad_bytes = match self.controller.phase() {
-            Phase::FullParam => n_base * 4,
-            Phase::Warmup { .. } => (n_base + self.manifest.lora.size) * 4,
-            Phase::LoraOnly { .. } => self.manifest.lora.size * 4,
+        let (base_live, lora_live) = match self.controller.phase() {
+            Phase::FullParam => (n_base, 0),
+            Phase::Warmup { .. } => (n_base, n_lora),
+            Phase::LoraOnly { .. } => (0, n_lora),
         };
+        let grad_total_bytes = (base_live + lora_live) * 4;
+        // per-rank: the largest partition() chunk of each live buffer,
+        // which is ceil(len / parts) for non-empty buffers
+        let parts = self.cfg.train.zero_grad_parts().max(1);
+        let grad_bytes = (base_live.div_ceil(parts) + lora_live.div_ceil(parts)) * 4;
         MemoryBreakdown::new(
             n_base,
-            self.manifest.lora.size,
+            n_lora,
             trainable,
             grad_bytes,
+            grad_total_bytes,
             opt_bytes,
             opt_total,
         )
@@ -265,6 +276,7 @@ impl Trainer {
             trainable_params: self.trainable_params(),
             memory_model_bytes: mem.model_bytes(),
             opt_state_bytes_per_worker: mem.optimizer_bytes,
+            grad_bytes_per_worker: mem.grad_bytes,
             grad_norm: run.grad_norms.mean(),
         };
         self.stats.push(stats.clone());
@@ -387,6 +399,11 @@ impl Trainer {
             opt_base: self.model.opt_base.as_ref().map(|o| o.export_state()),
             opt_lora: self.model.opt_lora.as_ref().map(|o| o.export_state()),
             zero_shards: self.cfg.train.zero_shards(),
+            zero_stage: if self.cfg.train.zero.enabled {
+                self.cfg.train.zero.stage
+            } else {
+                1
+            },
         }
     }
 

@@ -5,10 +5,12 @@
 
 use std::collections::BTreeMap;
 
-use prelora::config::{RunConfig, StrictnessPreset};
+use prelora::config::{RunConfig, StrictnessPreset, TrainConfig};
 use prelora::coordinator::Phase;
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
-use prelora::dp::{all_gather, reduce_mean, reduce_scatter, Algorithm};
+use prelora::dp::{all_gather, reduce_mean, reduce_scatter, scatter, Algorithm, GradResult, Reduced};
+use prelora::optim::ShardedOptimizer;
+use prelora::pipeline::{ModelState, UpdateStage};
 use prelora::rank::{assign_ranks, rank_buckets};
 use prelora::tensor::Pcg64;
 use prelora::trainer::{Checkpoint, Trainer};
@@ -163,49 +165,91 @@ fn pipeline_matches_sequential_bitwise_across_phase_switch() {
 }
 
 #[test]
-fn zero_sharding_matches_unsharded_bitwise_across_phase_switch() {
-    // the ZeRO-1 acceptance contract: with train.zero.enabled, fixed-seed
-    // per-epoch losses are bit-identical to the unsharded path across the
-    // Full -> Warmup -> LoraOnly lifecycle (the LoRA shard layout changes
-    // at the switch), while per-worker optimizer state is <= (1/N + eps)
-    // of the unsharded total
+fn zero_stages_match_unsharded_bitwise_across_phase_switch() {
+    // the ZeRO acceptance contract, both stages: with train.zero.enabled
+    // at stage 1 (optimizer state sharded) or stage 2 (+ gradient buffers
+    // reduce-scattered terminally), fixed-seed per-epoch losses are
+    // bit-identical to the unsharded path across the Full -> Warmup ->
+    // LoraOnly lifecycle (the shard AND gradient-partition layouts
+    // re-partition at the switch), while per-worker optimizer state is
+    // <= (1/N + eps) of the unsharded total — and at stage 2 the
+    // per-worker gradient bytes are ~1/N of grad_total_bytes as well
     let workers = 2;
-    let run = |zero: bool| {
+    struct ZeroRun {
+        losses: Vec<f64>,
+        switch: Option<usize>,
+        freeze: Option<usize>,
+        opt_per: Vec<usize>,
+        opt_tot: Vec<usize>,
+        grad_per: Vec<usize>,
+        grad_tot: Vec<usize>,
+    }
+    let run = |stage: Option<u8>| {
         let mut cfg = micro_config(16);
         cfg.train.dp.workers = workers;
-        cfg.train.zero.enabled = zero;
-        let mut t = Trainer::new(cfg).unwrap();
-        let mut losses = Vec::new();
-        let mut per_worker = Vec::new();
-        let mut total = Vec::new();
-        for _ in 0..16 {
-            losses.push(t.run_epoch().unwrap().train_loss);
-            let mem = t.memory();
-            per_worker.push(mem.optimizer_bytes);
-            total.push(mem.optimizer_total_bytes);
+        if let Some(s) = stage {
+            cfg.train.zero.enabled = true;
+            cfg.train.zero.stage = s;
         }
-        (losses, t.controller().switch_epoch(), t.controller().freeze_epoch(), per_worker, total)
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut out = ZeroRun {
+            losses: Vec::new(),
+            switch: None,
+            freeze: None,
+            opt_per: Vec::new(),
+            opt_tot: Vec::new(),
+            grad_per: Vec::new(),
+            grad_tot: Vec::new(),
+        };
+        for _ in 0..16 {
+            out.losses.push(t.run_epoch().unwrap().train_loss);
+            let mem = t.memory();
+            out.opt_per.push(mem.optimizer_bytes);
+            out.opt_tot.push(mem.optimizer_total_bytes);
+            out.grad_per.push(mem.grad_bytes);
+            out.grad_tot.push(mem.grad_total_bytes);
+        }
+        out.switch = t.controller().switch_epoch();
+        out.freeze = t.controller().freeze_epoch();
+        out
     };
-    let (zl, zs, zf, z_per, z_tot) = run(true);
-    let (ul, us, uf, u_per, u_tot) = run(false);
-    assert_eq!(zl, ul, "ZeRO losses must be bit-identical to unsharded");
-    assert_eq!(zs, us, "switch epoch must match");
-    assert_eq!(zf, uf, "freeze epoch must match");
+    let off = run(None);
+    let s1 = run(Some(1));
+    let s2 = run(Some(2));
+    for (name, z) in [("stage 1", &s1), ("stage 2", &s2)] {
+        assert_eq!(z.losses, off.losses, "{name}: losses must be bit-identical to unsharded");
+        assert_eq!(z.switch, off.switch, "{name}: switch epoch must match");
+        assert_eq!(z.freeze, off.freeze, "{name}: freeze epoch must match");
+        // total state is layout-independent
+        assert_eq!(z.opt_tot, off.opt_tot, "{name}: optimizer total changed");
+        assert_eq!(z.grad_tot, off.grad_tot, "{name}: gradient total changed");
+        for (epoch, (&per, &tot)) in z.opt_per.iter().zip(&z.opt_tot).enumerate() {
+            // eps: ceil-chunking rounds each state buffer up by at most
+            // one element per shard (two optimizers of two bufs in warmup)
+            assert!(
+                per as f64 <= tot as f64 / workers as f64 + 32.0,
+                "{name} epoch {epoch}: per-worker state {per} B exceeds total {tot} B / {workers} + eps"
+            );
+            assert!(per > 0, "{name} epoch {epoch}: optimizer state vanished");
+        }
+    }
     assert!(
-        zs.is_some() && zf.is_some(),
+        off.switch.is_some() && off.freeze.is_some(),
         "run must cross both phase boundaries to exercise the shard-layout change"
     );
-    // total state is layout-independent; without ZeRO a worker holds it all
-    assert_eq!(z_tot, u_tot);
-    assert_eq!(u_per, u_tot);
-    for (epoch, (&per, &tot)) in z_per.iter().zip(&z_tot).enumerate() {
-        // eps: ceil-chunking rounds each state buffer up by at most one
-        // element per shard (two optimizers of two buffers in warmup)
+    // without ZeRO (and at stage 1) a worker holds the full buffers
+    assert_eq!(off.opt_per, off.opt_tot);
+    assert_eq!(off.grad_per, off.grad_tot);
+    assert_eq!(s1.grad_per, s1.grad_tot, "stage 1 must keep gradients replicated");
+    // stage 2: per-worker gradient bytes are ~1/N of the replicated
+    // footprint in every phase (ceil-chunked per live buffer: base and/or
+    // LoRA, so at most 2 * 4-byte rounding)
+    for (epoch, (&per, &tot)) in s2.grad_per.iter().zip(&s2.grad_tot).enumerate() {
         assert!(
-            per as f64 <= tot as f64 / workers as f64 + 32.0,
-            "epoch {epoch}: per-worker state {per} B exceeds total {tot} B / {workers} + eps"
+            per as f64 <= tot as f64 / workers as f64 + 8.0,
+            "stage 2 epoch {epoch}: per-worker grads {per} B exceed total {tot} B / {workers} + eps"
         );
-        assert!(per > 0, "epoch {epoch}: optimizer state vanished");
+        assert!(per > 0, "stage 2 epoch {epoch}: gradient accounting vanished");
     }
 }
 
@@ -223,12 +267,14 @@ fn sharded_checkpoint_restores_on_single_worker() {
     assert!(t.adapter_cfg().is_some(), "run never switched");
     let ck = t.checkpoint();
     assert_eq!(ck.zero_shards, 2);
+    assert_eq!(ck.zero_stage, 2, "default ZeRO stage is 2");
     assert!(ck.opt_lora.is_some(), "post-switch checkpoint must carry LoRA optimizer state");
 
     let path = std::env::temp_dir().join(format!("prelora_zero_{}.ckpt", std::process::id()));
     ck.save(&path).unwrap();
     let back = Checkpoint::load(&path).unwrap();
     assert_eq!(back.zero_shards, 2);
+    assert_eq!(back.zero_stage, 2, "stage metadata must survive disk");
     assert_eq!(back.opt_lora, ck.opt_lora, "optimizer state must survive disk");
 
     let mut solo = Trainer::new(micro_config(16)).unwrap(); // 1 worker, no ZeRO
@@ -487,6 +533,85 @@ fn prop_reduce_scatter_all_gather_composes_to_reduce_mean() {
             }
         }
         true
+    });
+}
+
+/// Ragged clip inputs: a gradient vector, an odd partition count that
+/// does not divide its length, and a clip threshold that sometimes
+/// engages (0 = clipping off).
+#[derive(Debug, Clone)]
+struct ClipCase {
+    grads: Vec<f32>,
+    parts: usize,
+    clip: f64,
+}
+
+impl Arbitrary for ClipCase {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let parts = [3usize, 5, 7][rng.next_below(3)];
+        let mut len = 1 + rng.next_below(200);
+        if len % parts == 0 {
+            len += 1; // force a ragged final chunk
+        }
+        let grads = (0..len).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let clip = if rng.next_below(4) == 0 {
+            0.0
+        } else {
+            0.25 + rng.next_f64() * 8.0
+        };
+        ClipCase { grads, parts, clip }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.grads.len() > 1 {
+            let mut c = self.clone();
+            c.grads.truncate(self.grads.len() / 2);
+            out.push(c);
+        }
+        if self.clip != 0.0 {
+            let mut c = self.clone();
+            c.clip = 0.0;
+            out.push(c);
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_sharded_partial_norm_clip_is_bitwise_full_clip() {
+    // the ZeRO-2 clip contract, property-tested: clipping through
+    // per-shard chunks (whose squared sums combine via the ordered scalar
+    // reduce) must equal the full-buffer clip *bitwise* — pre-clip norm,
+    // clipped flag, clipped gradient AND the optimizer step it feeds —
+    // for odd worker counts and ragged partition lengths
+    check::<ClipCase, _>(606, 150, |case| {
+        let n = case.grads.len();
+        let tcfg = TrainConfig::default();
+        let stage = UpdateStage::new(case.clip);
+        let mk = |d: Reduced| GradResult {
+            d_base: Some(d),
+            d_lora: None,
+            loss: 0.0,
+            correct: 0.0,
+            samples: 1,
+            execute_seconds: 0.0,
+        };
+        let mut mf = ModelState::new(vec![0.4f32; n], ShardedOptimizer::new(&tcfg, n, 1));
+        let mut rf = mk(Reduced::Full(case.grads.clone()));
+        let Ok(nf) = stage.apply(&mut mf, &mut rf, 1e-3) else { return false };
+
+        let mut ms = ModelState::new(
+            vec![0.4f32; n],
+            ShardedOptimizer::new(&tcfg, n, case.parts),
+        );
+        let mut rs = mk(Reduced::Sharded(scatter(&case.grads, case.parts)));
+        let Ok(ns) = stage.apply(&mut ms, &mut rs, 1e-3) else { return false };
+
+        nf.pre_clip == ns.pre_clip
+            && nf.clipped == ns.clipped
+            && mf.base == ms.base
+            && rf.d_base.map(Reduced::into_full) == rs.d_base.map(Reduced::into_full)
     });
 }
 

@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Bench regression gate: diff a fresh BENCH_step_latency.json against the
+committed baseline and fail on step-latency or memory-bytes regressions.
+
+Usage:
+    python scripts/bench_gate.py \
+        --fresh rust/results/BENCH_step_latency.json \
+        --baseline results/baseline.json
+    python scripts/bench_gate.py --fresh ... --baseline ... --update
+
+Both files use the bench harness's JSON schema (``util::bench::Bench::
+write_json``): a ``results`` array of ``{name, iters, mean_s, p50_s,
+p95_s, units_per_s}`` measurements plus free-form string metadata keys.
+
+Checks, in order:
+
+1. **Coverage** — every case named in the baseline must be present in the
+   fresh results. A case disappearing means the bench started *skipping*
+   work (e.g. the model-skip path when artifacts are missing), which is
+   exactly the silent regression this gate exists to catch. Fails hard.
+2. **Memory bytes** — metadata keys ending in ``_bytes`` / ``_bytes_
+   per_rank`` / ``_bytes_per_worker`` are compared numerically; a fresh
+   value above ``baseline * (1 + tol)`` fails. These are deterministic
+   (they derive from the model manifest and the shard arithmetic), so in
+   practice any growth is a real accounting regression.
+3. **Step latency** — per case, ``fresh.mean_s > baseline.mean_s *
+   (1 + tol)`` fails, unless the baseline's ``mean_s`` is null (a seeded
+   baseline that has not yet recorded real CI timings — reported, not
+   failed) or the baseline mean is below the noise floor (smoke-mode
+   timings under a few ms flap far beyond any useful tolerance).
+
+Environment:
+    PRELORA_BENCH_TOL_PCT     latency/bytes tolerance in percent (default 15)
+    PRELORA_BENCH_MIN_S       latency noise floor in seconds (default 0.002);
+                              baseline means below it are coverage-checked
+                              but not latency-gated
+
+``--update`` rewrites the baseline from the fresh file (keeping it in the
+same schema) instead of gating — run it locally and commit the result to
+ratify an intended change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BYTE_KEY_SUFFIXES = ("_bytes", "_bytes_per_rank", "_bytes_per_worker")
+
+
+def load(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if "results" not in doc or not isinstance(doc["results"], list):
+        sys.exit(f"bench_gate: {path} has no 'results' array (not a bench JSON?)")
+    return doc
+
+
+def by_name(doc: dict) -> dict[str, dict]:
+    out = {}
+    for m in doc["results"]:
+        out[m["name"]] = m
+    return out
+
+
+def byte_metadata(doc: dict) -> dict[str, int]:
+    out = {}
+    for key, value in doc.items():
+        if key == "results" or not any(key.endswith(s) for s in BYTE_KEY_SUFFIXES):
+            continue
+        try:
+            out[key] = int(str(value))
+        except ValueError:
+            sys.exit(f"bench_gate: metadata key {key!r} is not an integer: {value!r}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly produced bench JSON")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the fresh results instead of gating",
+    )
+    args = ap.parse_args()
+
+    tol = float(os.environ.get("PRELORA_BENCH_TOL_PCT", "15")) / 100.0
+    min_s = float(os.environ.get("PRELORA_BENCH_MIN_S", "0.002"))
+
+    fresh = load(args.fresh)
+
+    if args.update:
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            json.dump(fresh, f, indent=1)
+            f.write("\n")
+        print(f"bench_gate: baseline {args.baseline} updated from {args.fresh}")
+        return
+
+    base = load(args.baseline)
+    fresh_cases = by_name(fresh)
+    base_cases = by_name(base)
+    failures: list[str] = []
+    notes: list[str] = []
+
+    # 1. coverage: the bench must still run everything the baseline ran
+    missing = sorted(set(base_cases) - set(fresh_cases))
+    for name in missing:
+        failures.append(
+            f"case {name!r} present in baseline but missing from fresh results "
+            "(did the bench start skipping models?)"
+        )
+    for name in sorted(set(fresh_cases) - set(base_cases)):
+        notes.append(f"new case {name!r} (not in baseline; run --update to ratify)")
+
+    # 2. deterministic memory metadata
+    fresh_bytes = byte_metadata(fresh)
+    for key, want in sorted(byte_metadata(base).items()):
+        got = fresh_bytes.get(key)
+        if got is None:
+            failures.append(f"byte metadata {key!r} missing from fresh results")
+        elif got > want * (1.0 + tol):
+            failures.append(
+                f"{key}: {got} B exceeds baseline {want} B by more than {tol:.0%}"
+            )
+        elif got != want:
+            notes.append(f"{key}: {got} B vs baseline {want} B (within tolerance)")
+
+    # 3. latency per case
+    for name in sorted(set(base_cases) & set(fresh_cases)):
+        want = base_cases[name].get("mean_s")
+        got = fresh_cases[name].get("mean_s")
+        if want is None:
+            notes.append(
+                f"{name}: baseline has no recorded latency (seeded); fresh mean "
+                f"{got:.6f}s — run --update to start gating it"
+            )
+            continue
+        if got is None:
+            failures.append(f"{name}: fresh result has no mean_s")
+            continue
+        if want < min_s:
+            notes.append(
+                f"{name}: baseline mean {want:.6f}s below noise floor {min_s}s, "
+                "latency not gated"
+            )
+            continue
+        if got > want * (1.0 + tol):
+            failures.append(
+                f"{name}: mean {got:.6f}s regressed vs baseline {want:.6f}s "
+                f"(+{(got / want - 1.0):.1%}, tolerance {tol:.0%})"
+            )
+
+    for n in notes:
+        print(f"bench_gate: note: {n}")
+    if failures:
+        print(f"bench_gate: {len(failures)} regression(s):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"bench_gate: OK — {len(base_cases)} baseline case(s) covered, "
+        f"tolerance {tol:.0%}"
+    )
+
+
+if __name__ == "__main__":
+    main()
