@@ -8,6 +8,13 @@
 //! (L2) driven by the Rust coordinator, optimizer, convergence test, rank
 //! assignment and all-reduce (L3), with Python nowhere on the path.
 //!
+//! The run is deliberately **preempted halfway**: the first trainer is
+//! dropped at the midpoint after saving a v3 checkpoint, and a second
+//! trainer resumes it via `Trainer::restore` — the same path as
+//! `prelora train --resume <ckpt>` — proving end-to-end that the phase
+//! machine, history and optimizer state continue mid-trajectory
+//! (spot-instance training, made literal).
+//!
 //! * `results/e2e_loss.csv`  — epoch, step, train_loss
 //! * `results/e2e_epochs.csv` — per-epoch stats
 //!
@@ -47,13 +54,16 @@ fn main() -> Result<()> {
         "e2e: model={model} epochs={epochs} workers={workers} (ring all-reduce)"
     );
     let t0 = std::time::Instant::now();
-    let mut trainer = Trainer::new(cfg)?;
+    let mut trainer = Trainer::new(cfg.clone())?;
     eprintln!(
         "setup done in {:.1}s ({} base params, {} adapters)",
         t0.elapsed().as_secs_f64(),
         trainer.manifest.base.size,
         trainer.manifest.adapters.len()
     );
+    // simulate a preemption at the midpoint: save, drop, resume
+    let preempt_at = (epochs / 2).max(1);
+    let ckpt_path = std::path::Path::new("results").join("e2e_mid.ckpt");
 
     let mut epochs_csv = CsvRecorder::create(
         "results",
@@ -73,8 +83,28 @@ fn main() -> Result<()> {
             "grad_bytes_per_worker",
         ],
     )?;
-    for _ in 0..epochs {
+    for epoch in 0..epochs {
+        if epoch == preempt_at {
+            trainer.checkpoint().save(&ckpt_path)?;
+            drop(trainer);
+            eprintln!(
+                "--- preempted after epoch {} (checkpoint {}); resuming in a fresh trainer ---",
+                preempt_at - 1,
+                ckpt_path.display()
+            );
+            // the `prelora train --resume <ckpt>` path: fresh trainer,
+            // restore, continue mid-trajectory
+            let restored = prelora::trainer::Checkpoint::load(&ckpt_path)?;
+            trainer = Trainer::new(cfg.clone())?;
+            trainer.restore(&restored)?;
+            anyhow::ensure!(
+                trainer.stats.len() == preempt_at,
+                "resume must restore the completed epochs' stats"
+            );
+            eprintln!("resumed at epoch {} ({})", preempt_at, trainer.phase());
+        }
         let s = trainer.run_epoch()?;
+        anyhow::ensure!(s.epoch == epoch, "epoch cursor drifted across the resume");
         let phase_id = match s.phase {
             "full" => 0.0,
             "warmup" => 1.0,

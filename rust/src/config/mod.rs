@@ -86,6 +86,7 @@ impl RunConfig {
             "train.grad_clip" => t.grad_clip = v.as_f64()?,
             "train.eval_every" => t.eval_every = v.as_usize()?,
             "train.checkpoint_every" => t.checkpoint_every = v.as_usize()?,
+            "train.resume" => t.resume = Some(v.as_str()?.to_string()),
             "train.data.train_samples" => t.data.train_samples = v.as_usize()?,
             "train.data.val_samples" => t.data.val_samples = v.as_usize()?,
             "train.data.noise" => t.data.noise = v.as_f32()?,
@@ -156,7 +157,11 @@ impl RunConfig {
         s.push_str(&format!("eps = {:e}\n", t.eps));
         s.push_str(&format!("grad_clip = {}\n", fmt_f64(t.grad_clip)));
         s.push_str(&format!("eval_every = {}\n", t.eval_every));
-        s.push_str(&format!("checkpoint_every = {}\n\n", t.checkpoint_every));
+        s.push_str(&format!("checkpoint_every = {}\n", t.checkpoint_every));
+        if let Some(r) = &t.resume {
+            s.push_str(&format!("resume = {}\n", escape_str(r)));
+        }
+        s.push('\n');
         s.push_str("[train.data]\n");
         s.push_str(&format!("train_samples = {}\n", t.data.train_samples));
         s.push_str(&format!("val_samples = {}\n", t.data.val_samples));
@@ -309,6 +314,21 @@ mod tests {
         assert_eq!(back.prelora.convergence_modules, cfg.prelora.convergence_modules);
         // default: empty = the paper's alpha set
         assert!(RunConfig::default().prelora.convergence_modules.is_empty());
+    }
+
+    #[test]
+    fn resume_key_parses_and_roundtrips() {
+        let cfg = RunConfig::from_toml_str(
+            "[train]\nresume = \"results/run.ckpt\"\ncheckpoint_every = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.resume.as_deref(), Some("results/run.ckpt"));
+        assert_eq!(cfg.train.checkpoint_every, 5);
+        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.train.resume, cfg.train.resume);
+        // absent by default, and absent keys stay out of the TOML
+        assert!(RunConfig::default().train.resume.is_none());
+        assert!(!RunConfig::default().to_toml().contains("resume"));
     }
 
     #[test]

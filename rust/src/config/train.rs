@@ -175,8 +175,15 @@ pub struct TrainConfig {
     pub grad_clip: f64,
     /// Evaluate on the validation set every this many epochs.
     pub eval_every: usize,
-    /// Checkpoint every this many epochs; 0 disables.
+    /// Checkpoint every this many epochs; 0 disables. Checkpoints are v3
+    /// (full trajectory: phase machine, norm history, LR position, data
+    /// seed) and land atomically at `<results_dir>/<run_name>.ckpt`, so a
+    /// preempted run resumes bitwise via `--resume` / `train.resume`.
     pub checkpoint_every: usize,
+    /// Checkpoint file to resume from before training (the CLI `--resume`
+    /// flag overrides this). The restored run continues mid-trajectory;
+    /// see `docs/checkpoint-format.md` § Resuming a run.
+    pub resume: Option<String>,
     pub data: DataConfig,
     pub dp: DpConfig,
     pub pipeline: PipelineConfig,
@@ -199,6 +206,7 @@ impl Default for TrainConfig {
             grad_clip: 1.0,
             eval_every: 1,
             checkpoint_every: 0,
+            resume: None,
             data: DataConfig::default(),
             dp: DpConfig::default(),
             pipeline: PipelineConfig::default(),

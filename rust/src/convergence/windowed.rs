@@ -13,8 +13,11 @@
 //! (k, m) and decreasing (tau, zeta) makes the criterion stricter
 //! (Table 1's Exp1..Exp3).
 
+use anyhow::Result;
+
 use super::ConvergenceStrategy;
 use crate::telemetry::NormHistory;
+use crate::util::json::Json;
 
 /// Outcome of one convergence check, with the evidence that produced it
 /// (logged by the controller and surfaced in run summaries).
@@ -37,6 +40,38 @@ impl ConvergenceReport {
             max_loss_delta: f64::NAN,
             fail_reason: Some("insufficient history".into()),
         }
+    }
+
+    /// Serialize for the v3 checkpoint's trajectory block. The deltas are
+    /// legitimately NaN (insufficient history) or +inf (degenerate
+    /// window), so they use the bit-exact f64 encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("converged", Json::Bool(self.converged)),
+            ("max_weight_delta", Json::from_f64_bits(self.max_weight_delta)),
+            ("max_loss_delta", Json::from_f64_bits(self.max_loss_delta)),
+            (
+                "fail_reason",
+                match &self.fail_reason {
+                    Some(r) => Json::Str(r.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Parse a value written by [`to_json`](Self::to_json).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let fail_reason = match v.req("fail_reason")? {
+            Json::Null => None,
+            s => Some(s.as_str()?.to_string()),
+        };
+        Ok(Self {
+            converged: v.req("converged")?.as_bool()?,
+            max_weight_delta: v.req("max_weight_delta")?.as_f64_bits()?,
+            max_loss_delta: v.req("max_loss_delta")?.as_f64_bits()?,
+            fail_reason,
+        })
     }
 }
 
@@ -175,6 +210,33 @@ mod tests {
 
     fn strat(tau: f64, zeta: f64) -> WindowedThreshold {
         WindowedThreshold::new(3, 3, tau, zeta, vec!["query".into()])
+    }
+
+    #[test]
+    fn report_json_roundtrips_bitwise_including_nan_and_inf() {
+        let reports = [
+            ConvergenceReport {
+                converged: true,
+                max_weight_delta: 0.123456789,
+                max_loss_delta: 2.5,
+                fail_reason: None,
+            },
+            ConvergenceReport {
+                converged: false,
+                max_weight_delta: f64::INFINITY,
+                max_loss_delta: f64::NAN,
+                fail_reason: Some("module query window 1: degenerate window".into()),
+            },
+            ConvergenceReport::not_enough_history(),
+        ];
+        for r in reports {
+            let text = r.to_json().dump();
+            let back = ConvergenceReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.converged, r.converged, "{text}");
+            assert_eq!(back.max_weight_delta.to_bits(), r.max_weight_delta.to_bits());
+            assert_eq!(back.max_loss_delta.to_bits(), r.max_loss_delta.to_bits());
+            assert_eq!(back.fail_reason, r.fail_reason);
+        }
     }
 
     #[test]

@@ -24,6 +24,40 @@ pub enum Decision {
     FreezeBase,
 }
 
+/// Resolve the module watch list the convergence test will observe.
+/// Errors when an explicitly configured module is not tracked by the
+/// manifest's telemetry, or when the resolved list is empty — unless
+/// `strict` is false, which skips the failures (a disabled controller
+/// never consults its strategy, so a baseline run must not fail on
+/// convergence config it will not use). `prelora config-lint` calls this
+/// with `strict = true` to surface the same validation without a run.
+pub fn resolve_watch_modules(
+    cfg: &PreLoraConfig,
+    manifest: &Manifest,
+    strict: bool,
+) -> Result<Vec<String>> {
+    let tracked = manifest.telemetry_modules();
+    let target_modules: Vec<String> = if cfg.convergence_modules.is_empty() {
+        // default: the paper's alpha set, restricted to what this
+        // manifest exposes
+        ADAPTED_MODULES
+            .iter()
+            .map(|s| s.to_string())
+            .filter(|m| tracked.contains(m))
+            .collect()
+    } else {
+        for m in &cfg.convergence_modules {
+            ensure!(
+                !strict || tracked.contains(m),
+                "convergence module {m:?} is not tracked by the manifest (telemetry set: {tracked:?})"
+            );
+        }
+        cfg.convergence_modules.clone()
+    };
+    ensure!(!strict || !target_modules.is_empty(), "no convergence modules to watch");
+    Ok(target_modules)
+}
+
 /// Drives the Full -> Warmup -> LoraOnly phase machine from telemetry.
 pub struct PreLoraController {
     cfg: PreLoraConfig,
@@ -51,28 +85,7 @@ impl PreLoraController {
     /// never consulted, and a baseline run must not fail on convergence
     /// config it will not use.
     pub fn new(cfg: PreLoraConfig, manifest: &Manifest) -> Result<Self> {
-        let tracked = manifest.telemetry_modules();
-        let target_modules: Vec<String> = if cfg.convergence_modules.is_empty() {
-            // default: the paper's alpha set, restricted to what this
-            // manifest exposes
-            ADAPTED_MODULES
-                .iter()
-                .map(|s| s.to_string())
-                .filter(|m| tracked.contains(m))
-                .collect()
-        } else {
-            for m in &cfg.convergence_modules {
-                ensure!(
-                    !cfg.enabled || tracked.contains(m),
-                    "convergence module {m:?} is not tracked by the manifest (telemetry set: {tracked:?})"
-                );
-            }
-            cfg.convergence_modules.clone()
-        };
-        ensure!(
-            !cfg.enabled || !target_modules.is_empty(),
-            "no convergence modules to watch"
-        );
+        let target_modules = resolve_watch_modules(&cfg, manifest, cfg.enabled)?;
         let strategy = convergence::build(&cfg, target_modules.clone());
         let r_min = cfg.r_min.unwrap_or(manifest.config.r_min);
         let r_max = cfg.r_max.unwrap_or(manifest.config.r_max);
@@ -104,6 +117,53 @@ impl PreLoraController {
 
     pub fn strategy_name(&self) -> &'static str {
         self.strategy.name()
+    }
+
+    /// Restore the phase machine from a checkpoint's trajectory block so
+    /// a resumed run continues mid-trajectory instead of replaying
+    /// convergence detection. Validates the phase/epoch invariants the
+    /// state machine maintains (a warmup phase *is* its switch epoch, a
+    /// frozen phase carries both cursors) — a checkpoint that violates
+    /// them would make `on_epoch_end` schedule the freeze off the wrong
+    /// epoch.
+    pub fn restore_state(
+        &mut self,
+        phase: Phase,
+        switch_epoch: Option<usize>,
+        freeze_epoch: Option<usize>,
+        checks: Vec<(usize, ConvergenceReport)>,
+    ) -> Result<()> {
+        match phase {
+            Phase::FullParam => ensure!(
+                switch_epoch.is_none() && freeze_epoch.is_none(),
+                "full-param phase cannot carry switch/freeze epochs ({switch_epoch:?}/{freeze_epoch:?})"
+            ),
+            Phase::Warmup { since_epoch } => {
+                ensure!(
+                    switch_epoch == Some(since_epoch),
+                    "warmup since epoch {since_epoch} disagrees with switch epoch {switch_epoch:?}"
+                );
+                ensure!(
+                    freeze_epoch.is_none(),
+                    "warmup phase cannot already carry a freeze epoch ({freeze_epoch:?})"
+                );
+            }
+            Phase::LoraOnly { since_epoch } => {
+                ensure!(
+                    freeze_epoch == Some(since_epoch),
+                    "lora-only since epoch {since_epoch} disagrees with freeze epoch {freeze_epoch:?}"
+                );
+                ensure!(
+                    switch_epoch.is_some_and(|s| s <= since_epoch),
+                    "lora-only phase needs a switch epoch <= {since_epoch}, got {switch_epoch:?}"
+                );
+            }
+        }
+        self.phase = phase;
+        self.switch_epoch = switch_epoch;
+        self.freeze_epoch = freeze_epoch;
+        self.checks = checks;
+        Ok(())
     }
 
     /// Consult the controller after `history` has absorbed an epoch.
@@ -307,6 +367,81 @@ mod tests {
         assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
         feed(&mut h, 3, 10.0, 0.0, 2.0, 0.0);
         assert!(matches!(ctl.on_epoch_end(&h), Decision::SwitchToWarmup { .. }));
+    }
+
+    #[test]
+    fn resolve_watch_modules_lint_cases() {
+        let m = micro();
+        // ok: explicit list of tracked modules resolves verbatim
+        let mut c = cfg();
+        c.convergence_modules = vec!["query".into(), "dense".into()];
+        let mods = resolve_watch_modules(&c, &m, true).unwrap();
+        assert_eq!(mods, vec!["query".to_string(), "dense".to_string()]);
+        // ok: empty list resolves to the paper's alpha set (non-empty)
+        let c = cfg();
+        let mods = resolve_watch_modules(&c, &m, true).unwrap();
+        assert!(!mods.is_empty(), "default alpha set must resolve");
+        // unknown module is an error in strict mode, named in the message
+        let mut c = cfg();
+        c.convergence_modules = vec!["qurey".into()];
+        let err = resolve_watch_modules(&c, &m, true).unwrap_err().to_string();
+        assert!(err.contains("qurey"), "{err}");
+        // ...but tolerated when not strict (disabled controller)
+        resolve_watch_modules(&c, &m, false).unwrap();
+    }
+
+    #[test]
+    fn restore_state_resumes_mid_trajectory() {
+        let m = micro();
+        // restore into mid-warmup: the freeze must fire exactly
+        // warmup_epochs after the restored switch epoch
+        let mut ctl = PreLoraController::new(cfg(), &m).unwrap(); // warmup_epochs = 2
+        ctl.restore_state(Phase::Warmup { since_epoch: 9 }, Some(9), None, Vec::new())
+            .unwrap();
+        assert!(ctl.phase().is_warmup());
+        assert_eq!(ctl.switch_epoch(), Some(9));
+        let mut h = NormHistory::new();
+        feed(&mut h, 10, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay), "epoch 10: warmup continues");
+        feed(&mut h, 1, 10.0, 0.0, 2.0, 0.0);
+        assert!(
+            matches!(ctl.on_epoch_end(&h), Decision::FreezeBase),
+            "epoch 11 = switch + w: freeze"
+        );
+        assert_eq!(ctl.freeze_epoch(), Some(11));
+        // restore into lora-only: no further transitions
+        let mut ctl = PreLoraController::new(cfg(), &m).unwrap();
+        ctl.restore_state(Phase::LoraOnly { since_epoch: 11 }, Some(9), Some(11), Vec::new())
+            .unwrap();
+        assert!(ctl.phase().is_lora_only());
+        feed(&mut h, 1, 10.0, 0.0, 2.0, 0.0);
+        assert!(matches!(ctl.on_epoch_end(&h), Decision::Stay));
+    }
+
+    #[test]
+    fn restore_state_rejects_inconsistent_cursors() {
+        let m = micro();
+        let mut ctl = PreLoraController::new(cfg(), &m).unwrap();
+        // full phase with a switch epoch
+        assert!(ctl.restore_state(Phase::FullParam, Some(3), None, Vec::new()).is_err());
+        // warmup whose since_epoch disagrees with the switch cursor
+        assert!(ctl
+            .restore_state(Phase::Warmup { since_epoch: 5 }, Some(4), None, Vec::new())
+            .is_err());
+        // warmup that already carries a freeze epoch
+        assert!(ctl
+            .restore_state(Phase::Warmup { since_epoch: 5 }, Some(5), Some(7), Vec::new())
+            .is_err());
+        // lora-only without a switch epoch, or with switch after freeze
+        assert!(ctl
+            .restore_state(Phase::LoraOnly { since_epoch: 7 }, None, Some(7), Vec::new())
+            .is_err());
+        assert!(ctl
+            .restore_state(Phase::LoraOnly { since_epoch: 7 }, Some(9), Some(7), Vec::new())
+            .is_err());
+        // the failed restores must not have mutated the machine
+        assert!(ctl.phase().is_full());
+        assert_eq!(ctl.switch_epoch(), None);
     }
 
     #[test]

@@ -16,5 +16,5 @@
 mod controller;
 mod phase;
 
-pub use controller::{Decision, PreLoraController};
+pub use controller::{resolve_watch_modules, Decision, PreLoraController};
 pub use phase::Phase;

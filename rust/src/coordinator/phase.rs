@@ -2,6 +2,10 @@
 
 use std::fmt;
 
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
 /// The three phases of a PreLoRA run (paper Figure 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -34,6 +38,35 @@ impl Phase {
             Phase::LoraOnly { .. } => "lora",
         }
     }
+
+    /// Serialize for the v3 checkpoint's trajectory block: the [`label`]
+    /// plus `since_epoch` for the phases that carry one.
+    ///
+    /// [`label`]: Self::label
+    pub fn to_json(&self) -> Json {
+        match self {
+            Phase::FullParam => Json::obj(vec![("kind", Json::Str("full".into()))]),
+            Phase::Warmup { since_epoch } => Json::obj(vec![
+                ("kind", Json::Str("warmup".into())),
+                ("since_epoch", Json::from_usize(*since_epoch)),
+            ]),
+            Phase::LoraOnly { since_epoch } => Json::obj(vec![
+                ("kind", Json::Str("lora".into())),
+                ("since_epoch", Json::from_usize(*since_epoch)),
+            ]),
+        }
+    }
+
+    /// Parse a value written by [`to_json`](Self::to_json).
+    pub fn from_json(v: &Json) -> Result<Phase> {
+        let kind = v.req("kind")?.as_str()?;
+        match kind {
+            "full" => Ok(Phase::FullParam),
+            "warmup" => Ok(Phase::Warmup { since_epoch: v.req("since_epoch")?.as_usize()? }),
+            "lora" => Ok(Phase::LoraOnly { since_epoch: v.req("since_epoch")?.as_usize()? }),
+            other => bail!("unknown phase kind {other:?}"),
+        }
+    }
 }
 
 impl fmt::Display for Phase {
@@ -49,6 +82,24 @@ impl fmt::Display for Phase {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_roundtrips_every_phase() {
+        for p in [
+            Phase::FullParam,
+            Phase::Warmup { since_epoch: 9 },
+            Phase::LoraOnly { since_epoch: 14 },
+        ] {
+            let text = p.to_json().dump();
+            let back = Phase::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, p, "{text}");
+        }
+        let bad = Json::obj(vec![("kind", Json::Str("frozen".into()))]);
+        assert!(Phase::from_json(&bad).is_err());
+        // warmup/lora without since_epoch are malformed
+        let partial = Json::obj(vec![("kind", Json::Str("warmup".into()))]);
+        assert!(Phase::from_json(&partial).is_err());
+    }
 
     #[test]
     fn labels_and_predicates() {

@@ -151,11 +151,13 @@ pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
 /// per-element summation order is identical, only the final placement
 /// differs.
 ///
-/// * `Ring` with `parts == bufs.len()` skips the gather phase entirely
-///   (the real ZeRO traffic saving: each worker keeps the chunk the ring
-///   schedule already completed on it). Other `parts` counts don't line
-///   up with the ring's chunking, so the ring reduces fully and then
-///   scatters (placement-only).
+/// * `Ring` runs its reduce-scatter rounds and then assembles each owned
+///   output chunk straight from the ranks the schedule completed it on —
+///   with `parts == bufs.len()` each output chunk *is* one ring chunk
+///   (the real ZeRO traffic saving: the gather phase is skipped
+///   entirely), and a foreign `parts` count just stitches each output
+///   chunk from the ring chunks it overlaps. Either way no full-length
+///   reduced vector is ever materialized.
 /// * `Naive` and `Tree` run their schedule *per owned chunk* — the
 ///   sequential leader sum and the pairwise stride-doubling rounds
 ///   restricted to the chunk's element range — so the largest live
@@ -176,15 +178,29 @@ pub fn reduce_scatter(
     }
     assert!(bufs.iter().all(|b| b.len() == len), "buffer length mismatch");
     let inv = 1.0 / n as f32;
-    if alg == Algorithm::Ring && parts == n {
+    if alg == Algorithm::Ring {
+        // the ring's summation schedule is tied to the worker count, not
+        // the output partition: run the rounds over the ring's own
+        // chunking, then assemble each output chunk from the rank(s)
+        // holding the completed ring chunks it overlaps. The additions
+        // are exactly the full all-reduce's, so the concatenation of the
+        // output chunks is bitwise the all-reduce result for *any*
+        // `parts` (this used to reduce fully then split when
+        // `parts != n` — same bits, but it materialized the full vector).
         ring_rounds(&mut bufs);
+        let ring_bounds = partition(len, n);
         let out = partition(len, parts)
             .into_iter()
-            .enumerate()
-            .map(|(c, (lo, hi))| {
-                // rank (c-1) mod n holds the fully-summed chunk c
-                let owner = (c + n - 1) % n;
-                let mut chunk = bufs[owner][lo..hi].to_vec();
+            .map(|(lo, hi)| {
+                let mut chunk = Vec::with_capacity(hi - lo);
+                for (c, &(rlo, rhi)) in ring_bounds.iter().enumerate() {
+                    let (s, e) = (lo.max(rlo), hi.min(rhi));
+                    if s < e {
+                        // rank (c-1) mod n holds the fully-summed chunk c
+                        chunk.extend_from_slice(&bufs[(c + n - 1) % n][s..e]);
+                    }
+                }
+                debug_assert_eq!(chunk.len(), hi - lo);
                 for v in chunk.iter_mut() {
                     *v *= inv;
                 }
@@ -196,13 +212,7 @@ pub fn reduce_scatter(
     let reduce_range: fn(&[Vec<f32>], usize, usize) -> Vec<f32> = match alg {
         Algorithm::Naive => naive_range,
         Algorithm::Tree => tree_range,
-        Algorithm::Ring => {
-            // the ring schedule's chunking is tied to the worker count;
-            // for a foreign partition count reduce fully, then scatter
-            // (placement changes, bits don't)
-            let full = reduce_owned(alg, bufs)?;
-            return Some(scatter(&full, parts));
-        }
+        Algorithm::Ring => unreachable!("handled above"),
     };
     let out = partition(len, parts)
         .into_iter()
@@ -542,11 +552,13 @@ mod tests {
     }
 
     #[test]
-    fn scattered_tree_and_naive_schedules_match_full_reduce_bitwise() {
+    fn scattered_schedules_match_full_reduce_bitwise() {
         // the genuinely-scattered per-chunk schedules (no full-length
         // temporary) must reproduce the full reduce bit-for-bit, including
-        // odd worker counts and ragged/empty chunks
-        for alg in [Algorithm::Naive, Algorithm::Tree] {
+        // odd worker counts and ragged/empty chunks. Ring included: its
+        // foreign-`parts` path used to reduce fully then split, and now
+        // stitches output chunks from the ring chunks' owning ranks.
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
             for n in [2usize, 3, 5, 7, 8, 16] {
                 for len in [1usize, 2, 17, 101, 1023] {
                     for parts in [1usize, 2, 3, n, 2 * n, len + 3] {

@@ -2,23 +2,27 @@
 //!
 //! ```text
 //! prelora train --model vit-small --epochs 60 --preset exp2
+//! prelora train --resume results/run.ckpt
 //! prelora baseline --model vit-small --epochs 60
 //! prelora inspect --model vit-small
+//! prelora config-lint --config run.toml
 //! prelora gen-config > run.toml ; prelora train --config run.toml
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use prelora::config::{RunConfig, StrictnessPreset};
+use prelora::coordinator::resolve_watch_modules;
 use prelora::manifest::Manifest;
-use prelora::trainer::Trainer;
+use prelora::trainer::{Checkpoint, Trainer};
 use prelora::util::args::Args;
 
-const USAGE: &str = "usage: prelora <train|baseline|inspect|gen-config> [flags]
-  train       run with the PreLoRA controller enabled
-  baseline    run the full-parameter baseline (controller disabled)
-  inspect     print a model's manifest summary
-  gen-config  emit a default TOML config to stdout
+const USAGE: &str = "usage: prelora <train|baseline|inspect|config-lint|gen-config> [flags]
+  train        run with the PreLoRA controller enabled (--resume <ckpt> continues a run)
+  baseline     run the full-parameter baseline (controller disabled)
+  inspect      print a model's manifest summary
+  config-lint  validate a run config against the model manifest without training
+  gen-config   emit a default TOML config to stdout
 (use `prelora <cmd> --help` for per-command flags)";
 
 fn train_flags() -> Args {
@@ -42,6 +46,10 @@ fn train_flags() -> Args {
             "ZeRO stage: 1 = optimizer state only, 2 = + gradient buffers (implies --zero)",
         )
         .flag("seed", "run seed")
+        .flag(
+            "resume",
+            "checkpoint to resume from (true mid-run continuation: restores the phase machine and adopts the checkpoint's seed)",
+        )
         .flag("run-name", "label used in logs and output files")
         .flag("summary-out", "write the run summary JSON here")
         .flag("train-samples", "synthetic train-set size")
@@ -111,15 +119,104 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
 
 fn run_training(raw: &[String], cmd: &str, enabled: bool) -> Result<()> {
     let a = train_flags().parse(cmd, raw)?;
-    let cfg = build_config(&a, enabled)?;
+    let mut cfg = build_config(&a, enabled)?;
+    let resume_path = a
+        .get("resume")
+        .map(str::to_string)
+        .or_else(|| cfg.train.resume.clone());
+    let resume_ckpt = match &resume_path {
+        Some(p) => Some(Checkpoint::load(p)?),
+        None => None,
+    };
+    if let Some(ck) = &resume_ckpt {
+        match &ck.trajectory {
+            Some(tr) => {
+                // the checkpoint's seed IS the serialized data-order RNG
+                // state; a conflicting explicit seed cannot be honored
+                if let Some(s) = a.get_parsed::<u64>("seed")? {
+                    ensure!(
+                        s == tr.seed,
+                        "--seed {s} conflicts with the checkpoint's seed {} — resuming must \
+                         keep the saving run's RNG streams (drop --seed to adopt it)",
+                        tr.seed
+                    );
+                }
+                if cfg.seed != tr.seed {
+                    // a config-file seed is overridden too, but loudly: a
+                    // silent override of an explicitly-written key would
+                    // be inconsistent with the hard errors the restore
+                    // raises for config epoch/schedule disagreements
+                    eprintln!(
+                        "warning: config seed {} overridden by the checkpoint's seed {} (the \
+                         seed is the saved run's data-order RNG state)",
+                        cfg.seed, tr.seed
+                    );
+                }
+                cfg.seed = tr.seed;
+            }
+            None => eprintln!(
+                "warning: {} predates checkpoint v3 — parameters and optimizer state restore, \
+                 but the phase machine does not; convergence detection replays from scratch",
+                resume_path.as_deref().unwrap_or("checkpoint")
+            ),
+        }
+    }
     let summary_out = a.get("summary-out").map(str::to_string);
     let mut trainer = Trainer::new(cfg)?;
+    if let Some(ck) = &resume_ckpt {
+        trainer.restore(ck)?;
+        eprintln!(
+            "[{}] resumed from {} at epoch {} ({})",
+            trainer.cfg.run_name,
+            resume_path.as_deref().unwrap_or("?"),
+            ck.epoch,
+            trainer.phase()
+        );
+        // only meaningful for trajectory-carrying checkpoints: a pre-v3
+        // file restores no epoch cursor, so the run still trains from
+        // scratch whatever its saved epoch says
+        if ck.trajectory.is_some() && ck.epoch >= trainer.cfg.train.epochs {
+            eprintln!(
+                "[{}] checkpoint already covers all {} configured epochs — nothing to train",
+                trainer.cfg.run_name, trainer.cfg.train.epochs
+            );
+        }
+    }
     let summary = trainer.run()?;
     println!("{}", summary.render());
     if let Some(path) = summary_out {
         std::fs::write(&path, summary.to_json())?;
         eprintln!("summary written to {path}");
     }
+    Ok(())
+}
+
+/// Surface the startup validation (`prelora.convergence_modules` against
+/// the manifest's telemetry set, plus the regular config checks) without
+/// starting a run — a misspelled module should cost seconds, not a
+/// training job. Validates strictly even when the controller is disabled.
+fn config_lint(raw: &[String]) -> Result<()> {
+    let a = Args::new()
+        .flag("config", "TOML config file to lint (default: built-in defaults)")
+        .flag("model", "model name under artifacts/ (overrides the config)")
+        .flag("artifacts-dir", "artifacts root (overrides the config)")
+        .parse("config-lint", raw)?;
+    let mut cfg = match a.get("config") {
+        Some(p) => RunConfig::from_toml_file(p)?,
+        None => RunConfig::default(),
+    };
+    cfg.model = a.get_or("model", &cfg.model);
+    cfg.artifacts_dir = a.get_or("artifacts-dir", &cfg.artifacts_dir);
+    cfg.validate()?;
+    let manifest = Manifest::load(cfg.model_dir())?;
+    let modules = resolve_watch_modules(&cfg.prelora, &manifest, true)?;
+    println!(
+        "config ok: model {}, strategy {}, convergence test watches {} module(s): {}",
+        cfg.model,
+        cfg.prelora.strategy.as_str(),
+        modules.len(),
+        modules.join(", ")
+    );
     Ok(())
 }
 
@@ -179,6 +276,7 @@ fn main() -> Result<()> {
         "train" => run_training(rest, "train", true),
         "baseline" => run_training(rest, "baseline", false),
         "inspect" => inspect(rest),
+        "config-lint" => config_lint(rest),
         "gen-config" => {
             println!("{}", RunConfig::default().to_toml());
             Ok(())

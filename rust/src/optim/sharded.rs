@@ -51,6 +51,12 @@ impl ShardedOptimizer {
         self.shards.len()
     }
 
+    /// Optimizer kind every shard runs ([`import_state`](Self::import_state)
+    /// rejects state of any other kind before touching a shard).
+    pub fn kind(&self) -> crate::config::OptimizerKind {
+        self.kind
+    }
+
     /// Partition bounds, in shard order (the [`partition`] chunking).
     pub fn bounds(&self) -> &[(usize, usize)] {
         &self.bounds
@@ -247,6 +253,32 @@ mod tests {
         b.step(&mut pb, &g, 1e-3);
         assert_eq!(pa, pb, "restored optimizer diverged from source");
         assert_eq!(b.export_state(), a.export_state());
+    }
+
+    #[test]
+    fn worker_count_change_re_partitions_bitwise() {
+        // the resume contract's layout-change leg: state gathered from a
+        // 2-way run imports onto a ragged 5-way layout (and back), and
+        // every layout takes bit-identical future steps
+        let cfg = TrainConfig::default();
+        let n = 103;
+        let mut two = ShardedOptimizer::new(&cfg, n, 2);
+        assert_eq!(two.kind(), cfg.optimizer);
+        let mut p = vec![0.2f32; n];
+        for step in 0..4u64 {
+            two.step(&mut p, &grads(n, step), 1e-3);
+        }
+        let st = two.export_state();
+        let mut five = ShardedOptimizer::new(&cfg, n, 5);
+        five.import_state(&st).unwrap();
+        assert_eq!(five.steps(), 4, "step counter must survive the re-partition");
+        // gather(scatter(state)) is the identity regardless of layout
+        assert_eq!(five.export_state(), st);
+        let mut p2 = p.clone();
+        let g = grads(n, 77);
+        two.step(&mut p, &g, 1e-3);
+        five.step(&mut p2, &g, 1e-3);
+        assert_eq!(p, p2, "re-partitioned optimizer diverged");
     }
 
     #[test]

@@ -55,6 +55,16 @@ impl ModelState {
             _ => None,
         }
     }
+
+    /// Freeze the base: drop its optimizer state entirely (the paper's
+    /// memory saving made literal) — the controller's FreezeBase
+    /// decision. Checkpoint restores reach the same end state
+    /// differently: they clear *both* optimizers and rebuild whichever
+    /// states the checkpoint carries, so a lora-only restore leaves
+    /// `opt_base` at `None` without going through this transition.
+    pub fn freeze_base(&mut self) {
+        self.opt_base = None;
+    }
 }
 
 /// One step's gradient-norm observation.

@@ -47,6 +47,12 @@ pub struct RunSummary {
     pub epoch_time_ratio: Option<f64>,
     pub throughput_ratio: Option<f64>,
     pub memory_saving_frac: Option<f64>,
+    /// Epoch this run was resumed from (v3 checkpoint), if it was — the
+    /// per-epoch aggregates above still cover the *whole* trajectory
+    /// (restored epochs ride the checkpoint's stats), so a resumed run's
+    /// summary is comparable to an uninterrupted one; this field is the
+    /// provenance note. `None` for runs that started from scratch.
+    pub resumed_from: Option<usize>,
 }
 
 impl RunSummary {
@@ -121,6 +127,7 @@ impl RunSummary {
             epoch_time_ratio,
             throughput_ratio,
             memory_saving_frac,
+            resumed_from: None,
         }
     }
 
@@ -131,6 +138,11 @@ impl RunSummary {
             "run {} (model {}) — {} epochs\n",
             self.run_name, self.model, self.epochs
         ));
+        if let Some(k) = self.resumed_from {
+            out.push_str(&format!(
+                "  resumed from a checkpoint at epoch {k} (trajectory restored)\n"
+            ));
+        }
         match (self.switch_epoch, self.freeze_epoch) {
             (Some(s), Some(f)) => {
                 out.push_str(&format!("  switch->warmup at epoch {s}, base frozen at {f}\n"))
@@ -228,6 +240,7 @@ impl RunSummary {
             ("epoch_time_ratio", opt_f(self.epoch_time_ratio)),
             ("throughput_ratio", opt_f(self.throughput_ratio)),
             ("memory_saving_frac", opt_f(self.memory_saving_frac)),
+            ("resumed_from", opt_num(self.resumed_from)),
         ])
         .dump_pretty()
     }
@@ -299,7 +312,18 @@ mod tests {
         let text = s.render();
         assert!(text.contains("epoch-time ratio"));
         assert!(text.contains("switch->warmup at epoch 4"));
+        assert!(!text.contains("resumed from"), "fresh runs carry no resume note");
         let j = s.to_json();
         assert!(j.contains("\"epoch_time_ratio\""));
+    }
+
+    #[test]
+    fn resumed_runs_carry_a_provenance_note() {
+        let mut s = summary();
+        s.resumed_from = Some(3);
+        let text = s.render();
+        assert!(text.contains("resumed from a checkpoint at epoch 3"), "{text}");
+        let j = s.to_json();
+        assert!(j.contains("\"resumed_from\": 3"), "{j}");
     }
 }

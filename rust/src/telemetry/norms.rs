@@ -47,6 +47,33 @@ impl NormHistory {
         Self::default()
     }
 
+    /// Rebuild a history from serialized parts (the v3 checkpoint's
+    /// trajectory block). Validates the invariants `push` maintains:
+    /// one loss per snapshot and contiguous epoch numbering from 0 —
+    /// a resumed controller reading a history with holes would compute
+    /// windows over the wrong epochs.
+    pub fn from_parts(snapshots: Vec<NormSnapshot>, losses: Vec<f64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            snapshots.len() == losses.len(),
+            "history has {} snapshots but {} losses",
+            snapshots.len(),
+            losses.len()
+        );
+        for (i, s) in snapshots.iter().enumerate() {
+            anyhow::ensure!(
+                s.epoch == i,
+                "history snapshot {i} carries epoch {} (must be contiguous from 0)",
+                s.epoch
+            );
+        }
+        Ok(Self { snapshots, losses })
+    }
+
+    /// All snapshots in epoch order (serialized by checkpoints).
+    pub fn snapshots(&self) -> &[NormSnapshot] {
+        &self.snapshots
+    }
+
     pub fn push(&mut self, snapshot: NormSnapshot, epoch_loss: f64) {
         debug_assert_eq!(snapshot.epoch, self.snapshots.len());
         self.snapshots.push(snapshot);
@@ -178,6 +205,22 @@ mod tests {
         let h = history(6);
         let w = h.window_module_norm("qurey", 6, 3);
         assert!(w.is_nan(), "missing module must poison the window, got {w}");
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_validates() {
+        let h = history(6);
+        let back =
+            NormHistory::from_parts(h.snapshots().to_vec(), h.losses().to_vec()).unwrap();
+        assert_eq!(back.epochs(), 6);
+        assert_eq!(back.losses(), h.losses());
+        assert_eq!(back.snapshot(3), h.snapshot(3));
+        // mismatched lengths rejected
+        assert!(NormHistory::from_parts(h.snapshots().to_vec(), vec![1.0]).is_err());
+        // non-contiguous epochs rejected
+        let mut snaps = h.snapshots().to_vec();
+        snaps[2].epoch = 7;
+        assert!(NormHistory::from_parts(snaps, h.losses().to_vec()).is_err());
     }
 
     #[test]

@@ -1,32 +1,79 @@
 //! Checkpointing: flat vectors + a JSON header in one file.
 //!
-//! Format (v2, see `docs/checkpoint-format.md`): one JSON header line
+//! Format (v3, see `docs/checkpoint-format.md`): one JSON header line
 //! (sizes, epoch, ranks, optimizer-state descriptors, ZeRO shard/stage
-//! metadata — see also `docs/zero.md`) followed by the raw little-endian
-//! f32 payloads in header
-//! order: base, lora, adapter_cfg, then each optimizer state buffer.
-//! Optimizer state is always written *gathered* (full-length buffers,
-//! shard-layout independent), so a checkpoint from an N-way ZeRO run
-//! restores onto any worker count — including a single worker. v1 files
-//! (no optimizer state) still load.
+//! metadata, a payload CRC-32 and the **trajectory block** — the phase
+//! machine, norm/loss history layout, LR-schedule position, data-order
+//! seed and per-epoch stats) followed by the raw little-endian payloads
+//! in header order: base, lora, adapter_cfg, each optimizer state buffer
+//! (all `f32`), then the trajectory's loss and per-module norm series
+//! (`f64`, bit-exact). Optimizer state is always written *gathered*
+//! (full-length buffers, shard-layout independent), so a checkpoint from
+//! an N-way ZeRO run restores onto any worker count. v1 files (no
+//! optimizer state) and v2 files (no trajectory, no checksum) still load.
 //!
 //! Durability: `save` writes to a temp file in the destination directory
 //! and atomically renames it into place, so a crash mid-write can never
 //! leave a partially-written file under the checkpoint's name. `load`
 //! rejects files whose payload is truncated *or* that carry trailing
-//! bytes beyond what the header declares.
+//! bytes beyond what the header declares, and (v3) whose payload fails
+//! the header's CRC-32 — single-byte corruption is an error, not a
+//! silently-wrong restore.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::OptimizerKind;
+use crate::convergence::ConvergenceReport;
+use crate::coordinator::Phase;
 use crate::optim::OptState;
+use crate::telemetry::NormSnapshot;
+use crate::trainer::EpochStats;
+use crate::util::crc::Crc32;
 use crate::util::json::Json;
 
+/// Load-side cap on the header line; enforced at save time too, so a
+/// long run can never write a rolling checkpoint it cannot read back
+/// (the header grows O(epochs) through the per-epoch stats).
+const MAX_HEADER_BYTES: usize = 1 << 22;
+
+const MAGIC_V3: &str = "prelora-ckpt-v3";
 const MAGIC_V2: &str = "prelora-ckpt-v2";
 const MAGIC_V1: &str = "prelora-ckpt-v1";
+
+/// Everything beyond the parameters that makes resumption a true
+/// continuation: the controller's phase machine, the telemetry history it
+/// decides from, the LR-schedule position and the data-order seed. A v3
+/// checkpoint always carries this; restoring it makes `Trainer::restore`
+/// resume mid-trajectory instead of replaying convergence detection.
+#[derive(Debug, Clone)]
+pub struct TrajectoryState {
+    /// Seed of the saving run. All RNG streams (epoch shuffles, dataset
+    /// generation, LoRA init at the switch) are pure functions of
+    /// `(seed, epoch)`, so the seed *is* the serialized data-order RNG
+    /// state; a resuming run must use the same one.
+    pub seed: u64,
+    /// Controller phase at the save point.
+    pub phase: Phase,
+    pub switch_epoch: Option<usize>,
+    pub freeze_epoch: Option<usize>,
+    /// LR schedule kind of the saving run (`LrScheduleKind::as_str`).
+    /// The schedule is a pure function of `(kind, total epochs, epoch)`,
+    /// so position = the epoch cursor — but only if kind and total match.
+    pub lr_schedule: String,
+    /// Total epochs the saving run's schedule was built for.
+    pub lr_epochs_total: usize,
+    /// The controller's convergence-check evidence log.
+    pub checks: Vec<(usize, ConvergenceReport)>,
+    /// Per-epoch norm snapshots (the controller's window evidence).
+    pub snapshots: Vec<NormSnapshot>,
+    /// Per-epoch training losses, index-aligned with `snapshots`.
+    pub losses: Vec<f64>,
+    /// Per-epoch stats of the completed epochs (summary continuity).
+    pub stats: Vec<EpochStats>,
+}
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -49,6 +96,10 @@ pub struct Checkpoint {
     /// never checkpointed, so the payload is stage-independent. Absent in
     /// files written before the stage knob existed — read as 1.
     pub zero_stage: u8,
+    /// Phase-machine / telemetry trajectory (v3). `None` in v1/v2 files:
+    /// those restore parameters and optimizer state but replay phase
+    /// detection from scratch.
+    pub trajectory: Option<TrajectoryState>,
 }
 
 struct Header {
@@ -62,6 +113,13 @@ struct Header {
     zero_stage: u8,
     opt_base: Option<OptDescriptor>,
     opt_lora: Option<OptDescriptor>,
+    /// CRC-32 of the whole file in canonical form — the header line
+    /// re-serialized with this field zeroed, the newline, then the
+    /// binary payload (v3 only). Covering the header too means a bit
+    /// flip in a rank, a stats float or any other header field is a
+    /// loud checksum error, not a silently-wrong restore.
+    file_crc32: Option<u32>,
+    trajectory: Option<TrajHeader>,
 }
 
 /// Header description of one serialized optimizer state: the payload
@@ -70,6 +128,22 @@ struct OptDescriptor {
     kind: OptimizerKind,
     steps: u64,
     bufs: usize,
+}
+
+/// The trajectory block's header half: everything except the f64 series,
+/// which live in the binary payload laid out per `modules`.
+struct TrajHeader {
+    seed: u64,
+    phase: Phase,
+    switch_epoch: Option<usize>,
+    freeze_epoch: Option<usize>,
+    lr_schedule: String,
+    lr_epochs_total: usize,
+    checks: Vec<(usize, ConvergenceReport)>,
+    /// `(module name, layer count)` in serialization order; each module
+    /// contributes `epoch * layers` f64s to the payload.
+    modules: Vec<(String, usize)>,
+    stats: Vec<EpochStats>,
 }
 
 impl OptDescriptor {
@@ -94,6 +168,151 @@ impl OptDescriptor {
     }
 }
 
+fn opt_usize(x: Option<usize>) -> Json {
+    x.map_or(Json::Null, Json::from_usize)
+}
+
+fn usize_opt(v: &Json) -> Result<Option<usize>> {
+    match v {
+        Json::Null => Ok(None),
+        x => Ok(Some(x.as_usize()?)),
+    }
+}
+
+impl TrajHeader {
+    /// Derive the header half from a full trajectory, validating the
+    /// invariants the payload layout relies on (one loss/snapshot/stat
+    /// row per completed epoch, identical module layout in every
+    /// snapshot) — a malformed trajectory must fail at save time, not
+    /// produce a file that cannot be read back.
+    fn of(tr: &TrajectoryState, epoch: usize) -> Result<Self> {
+        ensure!(
+            tr.snapshots.len() == epoch && tr.losses.len() == epoch && tr.stats.len() == epoch,
+            "trajectory length mismatch: {} snapshots / {} losses / {} stats for epoch {epoch}",
+            tr.snapshots.len(),
+            tr.losses.len(),
+            tr.stats.len()
+        );
+        let modules: Vec<(String, usize)> = tr.snapshots.first().map_or_else(Vec::new, |s| {
+            s.by_module.iter().map(|(k, v)| (k.clone(), v.len())).collect()
+        });
+        for (i, s) in tr.snapshots.iter().enumerate() {
+            ensure!(s.epoch == i, "snapshot {i} carries epoch {}", s.epoch);
+            ensure!(
+                s.by_module.len() == modules.len()
+                    && modules
+                        .iter()
+                        .all(|(name, layers)| s.by_module.get(name).map(Vec::len) == Some(*layers)),
+                "snapshot {i} does not match the module layout of snapshot 0"
+            );
+        }
+        Ok(Self {
+            seed: tr.seed,
+            phase: tr.phase,
+            switch_epoch: tr.switch_epoch,
+            freeze_epoch: tr.freeze_epoch,
+            lr_schedule: tr.lr_schedule.clone(),
+            lr_epochs_total: tr.lr_epochs_total,
+            checks: tr.checks.clone(),
+            modules,
+            stats: tr.stats.clone(),
+        })
+    }
+
+    /// f64 count of the trajectory's binary payload. Checked: a crafted
+    /// header with huge layer counts must not wrap into a small total.
+    fn payload_f64s(&self, epoch: usize) -> Option<usize> {
+        let mut layers = 0usize;
+        for (_, l) in &self.modules {
+            layers = layers.checked_add(*l)?;
+        }
+        epoch.checked_mul(layers)?.checked_add(epoch)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // decimal string: u64 seeds can exceed f64's exact-integer range
+            ("seed", Json::Str(self.seed.to_string())),
+            ("phase", self.phase.to_json()),
+            ("switch_epoch", opt_usize(self.switch_epoch)),
+            ("freeze_epoch", opt_usize(self.freeze_epoch)),
+            ("lr_schedule", Json::Str(self.lr_schedule.clone())),
+            ("lr_epochs_total", Json::from_usize(self.lr_epochs_total)),
+            (
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|(e, r)| {
+                            Json::obj(vec![
+                                ("epoch", Json::from_usize(*e)),
+                                ("report", r.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "history_modules",
+                Json::Arr(
+                    self.modules
+                        .iter()
+                        .map(|(name, layers)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(name.clone())),
+                                ("layers", Json::from_usize(*layers)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("stats", Json::Arr(self.stats.iter().map(EpochStats::to_json).collect())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let seed = v
+            .req("seed")?
+            .as_str()?
+            .parse::<u64>()
+            .context("trajectory seed must be a decimal u64 string")?;
+        let checks = v
+            .req("checks")?
+            .as_arr()?
+            .iter()
+            .map(|c| {
+                Ok((
+                    c.req("epoch")?.as_usize()?,
+                    ConvergenceReport::from_json(c.req("report")?)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let modules = v
+            .req("history_modules")?
+            .as_arr()?
+            .iter()
+            .map(|m| Ok((m.req("name")?.as_str()?.to_string(), m.req("layers")?.as_usize()?)))
+            .collect::<Result<Vec<_>>>()?;
+        let stats = v
+            .req("stats")?
+            .as_arr()?
+            .iter()
+            .map(EpochStats::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            seed,
+            phase: Phase::from_json(v.req("phase")?)?,
+            switch_epoch: usize_opt(v.req("switch_epoch")?)?,
+            freeze_epoch: usize_opt(v.req("freeze_epoch")?)?,
+            lr_schedule: v.req("lr_schedule")?.as_str()?.to_string(),
+            lr_epochs_total: v.req("lr_epochs_total")?.as_usize()?,
+            checks,
+            modules,
+            stats,
+        })
+    }
+}
+
 impl Header {
     fn to_json(&self) -> Json {
         let opt = |d: &Option<OptDescriptor>| d.as_ref().map_or(Json::Null, |d| d.to_json());
@@ -114,6 +333,14 @@ impl Header {
             ("zero_stage", Json::from_usize(self.zero_stage as usize)),
             ("opt_base", opt(&self.opt_base)),
             ("opt_lora", opt(&self.opt_lora)),
+            (
+                "file_crc32",
+                self.file_crc32.map_or(Json::Null, |c| Json::from_usize(c as usize)),
+            ),
+            (
+                "trajectory",
+                self.trajectory.as_ref().map_or(Json::Null, TrajHeader::to_json),
+            ),
         ])
     }
 
@@ -130,15 +357,41 @@ impl Header {
                 Some(d) => Ok(Some(OptDescriptor::from_json(d)?)),
             }
         };
+        // strict range checks rather than clamping: no writer ever
+        // produced out-of-range values (save normalizes them), so an
+        // out-of-range read is corruption — and clamping would let a
+        // single-bit flip (e.g. stage '2' -> '3') round-trip to a
+        // canonical form identical to the original, slipping past the
+        // file checksum
         let zero_shards = match v.get("zero_shards") {
             None => 1,
-            Some(x) => x.as_usize()?.max(1),
+            Some(x) => {
+                let s = x.as_usize()?;
+                ensure!(s >= 1, "zero_shards must be >= 1");
+                s
+            }
         };
         // absent in v1 files and in v2 files written before the stage
         // knob; those runs sharded at most the optimizer state
         let zero_stage = match v.get("zero_stage") {
             None => 1,
-            Some(x) => x.as_usize()?.clamp(1, 2) as u8,
+            Some(x) => {
+                let s = x.as_usize()?;
+                ensure!((1..=2).contains(&s), "zero_stage must be 1 or 2, got {s}");
+                s as u8
+            }
+        };
+        let file_crc32 = match v.get("file_crc32") {
+            None | Some(Json::Null) => None,
+            Some(x) => {
+                let c = x.as_usize()?;
+                ensure!(c <= u32::MAX as usize, "file_crc32 out of range");
+                Some(c as u32)
+            }
+        };
+        let trajectory = match v.get("trajectory") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TrajHeader::from_json(t)?),
         };
         Ok(Self {
             magic,
@@ -151,42 +404,114 @@ impl Header {
             zero_stage,
             opt_base: opt("opt_base")?,
             opt_lora: opt("opt_lora")?,
+            file_crc32,
+            trajectory,
         })
+    }
+
+    /// The canonical checksum over this header (with its crc field
+    /// zeroed), the newline separator, and the binary payload. Our JSON
+    /// writer is canonical — sorted keys, integer numbers, bit-exact
+    /// float strings, deterministic escapes — so `dump(parse(header))`
+    /// reproduces the written header byte-for-byte and save/load compute
+    /// the identical value over an intact file. Any single-bit flip
+    /// anywhere in the file either breaks parsing outright or changes
+    /// the canonical bytes, and therefore this checksum.
+    fn file_crc(&mut self, payload: &[u8]) -> u32 {
+        let declared = self.file_crc32.take();
+        self.file_crc32 = Some(0);
+        let mut crc = Crc32::new();
+        crc.update(self.to_json().dump().as_bytes());
+        crc.update(b"\n");
+        crc.update(payload);
+        self.file_crc32 = declared;
+        crc.finish()
+    }
+
+    /// Exact byte count the header declares for the binary payload.
+    /// `None` when the declared sizes overflow `usize` — a crafted header
+    /// must degrade to a clean rejection, not a wrapped total that lets
+    /// the cursor reads slice out of bounds.
+    fn payload_bytes(&self) -> Option<usize> {
+        let mut f32s = self.base_len;
+        f32s = f32s.checked_add(self.lora_len)?;
+        f32s = f32s.checked_add(self.adapter_cfg_len)?;
+        if let Some(d) = &self.opt_base {
+            f32s = f32s.checked_add(d.bufs.checked_mul(self.base_len)?)?;
+        }
+        if let Some(d) = &self.opt_lora {
+            f32s = f32s.checked_add(d.bufs.checked_mul(self.lora_len)?)?;
+        }
+        let f64s = match &self.trajectory {
+            Some(t) => t.payload_f64s(self.epoch)?,
+            None => 0,
+        };
+        f32s.checked_mul(4)?.checked_add(f64s.checked_mul(8)?)
     }
 }
 
-fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    let mut buf = Vec::with_capacity(xs.len() * 4);
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
-    w.write_all(&buf)?;
-    Ok(())
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)
-        .context("checkpoint payload truncated")?;
-    Ok(buf
+fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    buf.reserve(xs.len() * 8);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Cursor reads over the (length-prevalidated) payload buffer.
+fn take_f32s(buf: &[u8], pos: &mut usize, n: usize) -> Vec<f32> {
+    let bytes = &buf[*pos..*pos + n * 4];
+    *pos += n * 4;
+    bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+        .collect()
 }
 
-fn read_opt_state(
-    r: &mut impl Read,
-    desc: &Option<OptDescriptor>,
-    len: usize,
-) -> Result<Option<OptState>> {
-    let Some(d) = desc else { return Ok(None) };
-    let bufs = (0..d.bufs)
-        .map(|_| read_f32s(r, len))
-        .collect::<Result<Vec<_>>>()?;
-    Ok(Some(OptState { kind: d.kind, t: d.steps, bufs }))
+fn take_f64s(buf: &[u8], pos: &mut usize, n: usize) -> Vec<f64> {
+    let bytes = &buf[*pos..*pos + n * 8];
+    *pos += n * 8;
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
 }
 
 impl Checkpoint {
+    /// Serialize the binary payload (everything after the header line).
+    fn payload(&self, traj: &Option<TrajHeader>) -> Vec<u8> {
+        let mut buf = Vec::new();
+        push_f32s(&mut buf, &self.base);
+        if let Some(l) = &self.lora {
+            push_f32s(&mut buf, l);
+        }
+        if let Some(a) = &self.adapter_cfg {
+            push_f32s(&mut buf, a);
+        }
+        for st in [&self.opt_base, &self.opt_lora].into_iter().flatten() {
+            for b in &st.bufs {
+                push_f32s(&mut buf, b);
+            }
+        }
+        if let (Some(tr), Some(th)) = (&self.trajectory, traj) {
+            push_f64s(&mut buf, &tr.losses);
+            // module-major: each watched module's full per-epoch,
+            // per-layer series is contiguous
+            for (name, _layers) in &th.modules {
+                for snap in &tr.snapshots {
+                    push_f64s(&mut buf, &snap.by_module[name]);
+                }
+            }
+        }
+        buf
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(st) = &self.opt_base {
@@ -202,6 +527,39 @@ impl Checkpoint {
                 "opt_lora state buffers must be lora-length (gathered)"
             );
         }
+        let traj = match &self.trajectory {
+            Some(tr) => Some(TrajHeader::of(tr, self.epoch)?),
+            None => None,
+        };
+        let payload = self.payload(&traj);
+        let mut header = Header {
+            magic: MAGIC_V3.into(),
+            epoch: self.epoch,
+            base_len: self.base.len(),
+            lora_len: self.lora.as_ref().map_or(0, |v| v.len()),
+            adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
+            ranks: self.ranks.clone(),
+            zero_shards: self.zero_shards.max(1),
+            zero_stage: self.zero_stage.clamp(1, 2),
+            opt_base: self.opt_base.as_ref().map(OptDescriptor::of),
+            opt_lora: self.opt_lora.as_ref().map(OptDescriptor::of),
+            file_crc32: None,
+            trajectory: traj,
+        };
+        header.file_crc32 = Some(header.file_crc(&payload));
+        debug_assert_eq!(header.payload_bytes(), Some(payload.len()));
+        let header_json = header.to_json().dump();
+        // mirror the load-side cap: a rolling checkpoint that could not
+        // be read back must fail loudly *before* the atomic rename
+        // replaces the previous good file
+        ensure!(
+            header_json.len() < MAX_HEADER_BYTES,
+            "checkpoint header is {} bytes, over the {} byte load limit (a very long run's \
+             per-epoch stats no longer fit — raise MAX_HEADER_BYTES in a coordinated format \
+             change)",
+            header_json.len(),
+            MAX_HEADER_BYTES
+        );
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -216,32 +574,9 @@ impl Checkpoint {
             let file = std::fs::File::create(&tmp)
                 .with_context(|| format!("creating {}", tmp.display()))?;
             let mut w = BufWriter::new(file);
-            let header = Header {
-                magic: MAGIC_V2.into(),
-                epoch: self.epoch,
-                base_len: self.base.len(),
-                lora_len: self.lora.as_ref().map_or(0, |v| v.len()),
-                adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
-                ranks: self.ranks.clone(),
-                zero_shards: self.zero_shards.max(1),
-                zero_stage: self.zero_stage.clamp(1, 2),
-                opt_base: self.opt_base.as_ref().map(OptDescriptor::of),
-                opt_lora: self.opt_lora.as_ref().map(OptDescriptor::of),
-            };
-            w.write_all(header.to_json().dump().as_bytes())?;
+            w.write_all(header_json.as_bytes())?;
             w.write_all(b"\n")?;
-            write_f32s(&mut w, &self.base)?;
-            if let Some(l) = &self.lora {
-                write_f32s(&mut w, l)?;
-            }
-            if let Some(a) = &self.adapter_cfg {
-                write_f32s(&mut w, a)?;
-            }
-            for st in [&self.opt_base, &self.opt_lora].into_iter().flatten() {
-                for b in &st.bufs {
-                    write_f32s(&mut w, b)?;
-                }
-            }
+            w.write_all(&payload)?;
             // durability, not just process-crash safety: the data blocks
             // must be on disk before the rename is allowed to replace the
             // previous good checkpoint
@@ -270,49 +605,136 @@ impl Checkpoint {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let file = std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let mut r = BufReader::new(file);
+        let mut r = std::io::BufReader::new(file);
         let mut header_line = Vec::new();
         // read until newline
         let mut byte = [0u8; 1];
         loop {
-            r.read_exact(&mut byte)?;
+            r.read_exact(&mut byte).context("checkpoint header truncated")?;
             if byte[0] == b'\n' {
                 break;
             }
             header_line.push(byte[0]);
-            ensure!(header_line.len() < 1 << 20, "header too large");
+            ensure!(header_line.len() < MAX_HEADER_BYTES, "header too large");
         }
-        let header = Header::from_json(&Json::parse(std::str::from_utf8(&header_line)?)?)?;
+        let mut header = Header::from_json(&Json::parse(std::str::from_utf8(&header_line)?)?)?;
         match header.magic.as_str() {
-            MAGIC_V2 => {}
+            MAGIC_V3 => {
+                ensure!(
+                    header.file_crc32.is_some(),
+                    "v3 checkpoint is missing its file checksum"
+                );
+            }
+            MAGIC_V2 => {
+                ensure!(
+                    header.trajectory.is_none(),
+                    "v2 checkpoint cannot declare a trajectory block"
+                );
+            }
             MAGIC_V1 => {
                 ensure!(
-                    header.opt_base.is_none() && header.opt_lora.is_none(),
-                    "v1 checkpoint cannot declare optimizer state"
+                    header.opt_base.is_none()
+                        && header.opt_lora.is_none()
+                        && header.trajectory.is_none(),
+                    "v1 checkpoint cannot declare optimizer or trajectory state"
                 );
             }
             other => bail!("bad checkpoint magic {other:?}"),
         }
-        let base = read_f32s(&mut r, header.base_len)?;
+        if let Some(th) = &header.trajectory {
+            ensure!(
+                th.stats.len() == header.epoch,
+                "trajectory carries {} epoch stats for epoch {}",
+                th.stats.len(),
+                header.epoch
+            );
+        }
+        // strict bounds: the payload must be byte-for-byte what the
+        // header declares — shorter is truncation, longer is trailing
+        // garbage, and (v3) a checksum mismatch is corruption
+        let want = header.payload_bytes().ok_or_else(|| {
+            anyhow::anyhow!("checkpoint header declares payload sizes that overflow")
+        })?;
+        let mut payload = Vec::with_capacity(want.min(1 << 30));
+        r.read_to_end(&mut payload)?;
+        ensure!(
+            payload.len() >= want,
+            "checkpoint payload truncated: {} bytes, header declares {}",
+            payload.len(),
+            want
+        );
+        ensure!(
+            payload.len() == want,
+            "checkpoint has trailing bytes beyond the header-declared payload ({} > {})",
+            payload.len(),
+            want
+        );
+        if let Some(crc) = header.file_crc32 {
+            // recompute over the canonical re-serialization (crc zeroed)
+            // + payload; a flip in *either* region fails here if it got
+            // past parsing at all
+            let got = header.file_crc(&payload);
+            ensure!(
+                got == crc,
+                "checkpoint checksum mismatch (crc32 {got:#010x}, header declares {crc:#010x}) — the file is corrupt"
+            );
+        }
+        let mut pos = 0usize;
+        let base = take_f32s(&payload, &mut pos, header.base_len);
         let lora = if header.lora_len > 0 {
-            Some(read_f32s(&mut r, header.lora_len)?)
+            Some(take_f32s(&payload, &mut pos, header.lora_len))
         } else {
             None
         };
         let adapter_cfg = if header.adapter_cfg_len > 0 {
-            Some(read_f32s(&mut r, header.adapter_cfg_len)?)
+            Some(take_f32s(&payload, &mut pos, header.adapter_cfg_len))
         } else {
             None
         };
-        let opt_base = read_opt_state(&mut r, &header.opt_base, header.base_len)?;
-        let opt_lora = read_opt_state(&mut r, &header.opt_lora, header.lora_len)?;
-        // strict bounds: anything after the declared payload means the
-        // file is not what the header says it is
-        let mut probe = [0u8; 1];
-        ensure!(
-            r.read(&mut probe)? == 0,
-            "checkpoint has trailing bytes beyond the header-declared payload"
-        );
+        let mut opt_state = |desc: &Option<OptDescriptor>, len: usize| -> Option<OptState> {
+            let d = desc.as_ref()?;
+            let bufs = (0..d.bufs).map(|_| take_f32s(&payload, &mut pos, len)).collect();
+            Some(OptState { kind: d.kind, t: d.steps, bufs })
+        };
+        let opt_base = opt_state(&header.opt_base, header.base_len);
+        let opt_lora = opt_state(&header.opt_lora, header.lora_len);
+        let trajectory = match &header.trajectory {
+            None => None,
+            Some(th) => {
+                let losses = take_f64s(&payload, &mut pos, header.epoch);
+                // module-major payload -> per-epoch snapshots
+                let mut series: Vec<Vec<Vec<f64>>> = Vec::with_capacity(th.modules.len());
+                for (_, layers) in &th.modules {
+                    let per_epoch =
+                        (0..header.epoch).map(|_| take_f64s(&payload, &mut pos, *layers)).collect();
+                    series.push(per_epoch);
+                }
+                let snapshots = (0..header.epoch)
+                    .map(|e| NormSnapshot {
+                        epoch: e,
+                        by_module: th
+                            .modules
+                            .iter()
+                            .zip(&mut series)
+                            .map(|((name, _), s)| (name.clone(), std::mem::take(&mut s[e])))
+                            .collect(),
+                    })
+                    .collect();
+                Some(TrajectoryState {
+                    seed: th.seed,
+                    phase: th.phase,
+                    switch_epoch: th.switch_epoch,
+                    freeze_epoch: th.freeze_epoch,
+                    lr_schedule: th.lr_schedule.clone(),
+                    lr_epochs_total: th.lr_epochs_total,
+                    checks: th.checks.clone(),
+                    snapshots,
+                    losses,
+                    stats: th.stats.clone(),
+                })
+            }
+        };
+        debug_assert_eq!(pos, payload.len());
         Ok(Self {
             epoch: header.epoch,
             base,
@@ -323,6 +745,7 @@ impl Checkpoint {
             opt_lora,
             zero_shards: header.zero_shards,
             zero_stage: header.zero_stage,
+            trajectory,
         })
     }
 }
@@ -330,6 +753,8 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, Arbitrary};
+    use std::collections::BTreeMap;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("prelora_{}_{}", std::process::id(), name))
@@ -346,28 +771,42 @@ mod tests {
             opt_lora: None,
             zero_shards: 1,
             zero_stage: 1,
+            trajectory: None,
         }
     }
 
-    #[test]
-    fn roundtrip_full_phase() {
-        let c = full_ckpt();
-        let p = tmp("full.ckpt");
-        c.save(&p).unwrap();
-        let back = Checkpoint::load(&p).unwrap();
-        assert_eq!(back.epoch, 7);
-        assert_eq!(back.base, c.base);
-        assert!(back.lora.is_none() && back.adapter_cfg.is_none());
-        assert!(back.opt_base.is_none() && back.opt_lora.is_none());
-        assert_eq!(back.zero_shards, 1);
-        assert_eq!(back.zero_stage, 1);
-        std::fs::remove_file(p).unwrap();
+    fn stat(epoch: usize, phase: &'static str) -> EpochStats {
+        EpochStats {
+            epoch,
+            phase,
+            train_loss: 2.0 - 0.125 * epoch as f64,
+            train_acc: 0.25 + 0.01 * epoch as f64,
+            val_loss: if epoch % 2 == 0 { 2.1 } else { f64::NAN },
+            val_acc: if epoch % 2 == 0 { 0.3 } else { f64::NAN },
+            lr: 1e-3,
+            epoch_seconds: 0.5,
+            execute_seconds: 0.25,
+            images_per_sec: 100.0,
+            trainable_params: 1000,
+            memory_model_bytes: 4096,
+            opt_state_bytes_per_worker: 2048,
+            grad_bytes_per_worker: 1024,
+            grad_norm: 0.5 + epoch as f64,
+        }
     }
 
-    #[test]
-    fn roundtrip_lora_phase_with_optimizer_state() {
-        let c = Checkpoint {
-            epoch: 42,
+    fn snapshot(epoch: usize) -> NormSnapshot {
+        let mut by_module = BTreeMap::new();
+        by_module.insert("dense".to_string(), vec![5.0 + epoch as f64, 5.5]);
+        by_module.insert("query".to_string(), vec![10.0, 10.0 + 0.25 * epoch as f64]);
+        NormSnapshot { epoch, by_module }
+    }
+
+    /// A post-switch checkpoint carrying the full trajectory block.
+    fn traj_ckpt() -> Checkpoint {
+        let epoch = 4;
+        Checkpoint {
+            epoch,
             base: vec![0.5; 10],
             lora: Some(vec![0.25; 6]),
             adapter_cfg: Some(vec![1.0, 0.0, 4.0]),
@@ -384,7 +823,50 @@ mod tests {
             }),
             zero_shards: 4,
             zero_stage: 2,
-        };
+            trajectory: Some(TrajectoryState {
+                seed: u64::MAX - 12345, // beyond f64's exact-integer range
+                phase: Phase::Warmup { since_epoch: 3 },
+                switch_epoch: Some(3),
+                freeze_epoch: None,
+                lr_schedule: "warmup_cosine".into(),
+                lr_epochs_total: 16,
+                checks: vec![(
+                    3,
+                    ConvergenceReport {
+                        converged: true,
+                        max_weight_delta: 0.125,
+                        max_loss_delta: f64::INFINITY,
+                        fail_reason: None,
+                    },
+                )],
+                snapshots: (0..epoch).map(snapshot).collect(),
+                losses: vec![2.0, 1.5, 1.25, f64::NAN],
+                stats: (0..epoch)
+                    .map(|e| stat(e, if e < 3 { "full" } else { "warmup" }))
+                    .collect(),
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_full_phase() {
+        let c = full_ckpt();
+        let p = tmp("full.ckpt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.base, c.base);
+        assert!(back.lora.is_none() && back.adapter_cfg.is_none());
+        assert!(back.opt_base.is_none() && back.opt_lora.is_none());
+        assert!(back.trajectory.is_none());
+        assert_eq!(back.zero_shards, 1);
+        assert_eq!(back.zero_stage, 1);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_lora_phase_with_optimizer_state() {
+        let c = traj_ckpt();
         let p = tmp("lora.ckpt");
         c.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
@@ -404,6 +886,60 @@ mod tests {
     }
 
     #[test]
+    fn trajectory_roundtrips_bitwise() {
+        let c = traj_ckpt();
+        let want = c.trajectory.as_ref().unwrap();
+        let p = tmp("traj.ckpt");
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        let tr = back.trajectory.expect("trajectory must survive disk");
+        assert_eq!(tr.seed, want.seed, "seed beyond 2^53 must be exact");
+        assert_eq!(tr.phase, Phase::Warmup { since_epoch: 3 });
+        assert_eq!(tr.switch_epoch, Some(3));
+        assert_eq!(tr.freeze_epoch, None);
+        assert_eq!(tr.lr_schedule, "warmup_cosine");
+        assert_eq!(tr.lr_epochs_total, 16);
+        // losses bitwise, including the NaN
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&tr.losses), bits(&want.losses));
+        // snapshots bitwise, module layout preserved
+        assert_eq!(tr.snapshots.len(), 4);
+        for (got, want) in tr.snapshots.iter().zip(&want.snapshots) {
+            assert_eq!(got, want);
+        }
+        // checks with ±inf deltas
+        assert_eq!(tr.checks.len(), 1);
+        assert_eq!(tr.checks[0].0, 3);
+        assert!(tr.checks[0].1.max_loss_delta.is_infinite());
+        // stats bitwise (NaN val columns included)
+        assert_eq!(tr.stats.len(), 4);
+        for (got, want) in tr.stats.iter().zip(&want.stats) {
+            assert_eq!(got.phase, want.phase);
+            assert_eq!(got.train_loss.to_bits(), want.train_loss.to_bits());
+            assert_eq!(got.val_loss.to_bits(), want.val_loss.to_bits());
+            assert_eq!(got.grad_norm.to_bits(), want.grad_norm.to_bits());
+        }
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn malformed_trajectory_is_a_save_error() {
+        // lengths disagreeing with the epoch counter must fail at save
+        let mut c = traj_ckpt();
+        c.trajectory.as_mut().unwrap().losses.pop();
+        assert!(c.save(tmp("badtraj1.ckpt")).is_err(), "short losses must be rejected");
+        let mut c = traj_ckpt();
+        c.trajectory.as_mut().unwrap().snapshots[2].epoch = 9;
+        assert!(c.save(tmp("badtraj2.ckpt")).is_err(), "epoch holes must be rejected");
+        let mut c = traj_ckpt();
+        c.trajectory.as_mut().unwrap().snapshots[1].by_module.remove("dense");
+        assert!(c.save(tmp("badtraj3.ckpt")).is_err(), "layout drift must be rejected");
+        let mut c = traj_ckpt();
+        c.trajectory.as_mut().unwrap().stats.pop();
+        assert!(c.save(tmp("badtraj4.ckpt")).is_err(), "short stats must be rejected");
+    }
+
+    #[test]
     fn rejects_garbage() {
         let p = tmp("garbage.ckpt");
         std::fs::write(&p, b"{\"magic\":\"nope\"}\n").unwrap();
@@ -411,26 +947,71 @@ mod tests {
         std::fs::remove_file(p).unwrap();
     }
 
+    /// The back-compat load matrix: files written by every prior format
+    /// version, byte-crafted the way the old writers laid them out.
     #[test]
-    fn loads_v1_checkpoints_without_optimizer_state() {
-        // a file written by the v1 code: header without the v2 fields
-        let p = tmp("v1.ckpt");
-        let header = "{\"magic\":\"prelora-ckpt-v1\",\"epoch\":3,\"base_len\":2,\
-                      \"lora_len\":0,\"adapter_cfg_len\":0,\"ranks\":null}";
-        let mut bytes = Vec::new();
-        bytes.extend_from_slice(header.as_bytes());
-        bytes.push(b'\n');
-        for x in [1.5f32, -2.0] {
-            bytes.extend_from_slice(&x.to_le_bytes());
+    fn loads_v1_and_v2_checkpoints() {
+        struct Case {
+            name: &'static str,
+            header: &'static str,
+            f32s: &'static [f32],
+            epoch: usize,
+            has_opt: bool,
         }
-        std::fs::write(&p, &bytes).unwrap();
-        let back = Checkpoint::load(&p).unwrap();
-        assert_eq!(back.epoch, 3);
-        assert_eq!(back.base, vec![1.5, -2.0]);
-        assert!(back.opt_base.is_none());
-        assert_eq!(back.zero_shards, 1);
-        assert_eq!(back.zero_stage, 1, "pre-stage files read as stage 1");
-        std::fs::remove_file(p).unwrap();
+        let cases = [
+            Case {
+                // v1: no optimizer/shard fields at all
+                name: "v1-minimal",
+                header: "{\"magic\":\"prelora-ckpt-v1\",\"epoch\":3,\"base_len\":2,\
+                         \"lora_len\":0,\"adapter_cfg_len\":0,\"ranks\":null}",
+                f32s: &[1.5, -2.0],
+                epoch: 3,
+                has_opt: false,
+            },
+            Case {
+                // v2 without optimizer state (a frozen-base save)
+                name: "v2-no-opt",
+                header: "{\"magic\":\"prelora-ckpt-v2\",\"epoch\":5,\"base_len\":2,\
+                         \"lora_len\":0,\"adapter_cfg_len\":0,\"ranks\":null,\
+                         \"zero_shards\":2,\"opt_base\":null,\"opt_lora\":null}",
+                f32s: &[0.5, 0.25],
+                epoch: 5,
+                has_opt: false,
+            },
+            Case {
+                // v2 with gathered SGD state (1 buffer of base_len)
+                name: "v2-with-opt",
+                header: "{\"magic\":\"prelora-ckpt-v2\",\"epoch\":8,\"base_len\":2,\
+                         \"lora_len\":0,\"adapter_cfg_len\":0,\"ranks\":null,\
+                         \"zero_shards\":1,\"zero_stage\":2,\
+                         \"opt_base\":{\"kind\":\"sgd\",\"steps\":4,\"bufs\":1},\
+                         \"opt_lora\":null}",
+                f32s: &[0.5, 0.25, 0.125, -0.125],
+                epoch: 8,
+                has_opt: true,
+            },
+        ];
+        for case in cases {
+            let p = tmp(case.name);
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(case.header.as_bytes());
+            bytes.push(b'\n');
+            for x in case.f32s {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            std::fs::write(&p, &bytes).unwrap();
+            let back = Checkpoint::load(&p)
+                .unwrap_or_else(|e| panic!("{} must still load: {e:#}", case.name));
+            assert_eq!(back.epoch, case.epoch, "{}", case.name);
+            assert_eq!(back.base, case.f32s[..2], "{}", case.name);
+            assert_eq!(back.opt_base.is_some(), case.has_opt, "{}", case.name);
+            assert!(back.trajectory.is_none(), "{}: pre-v3 files have no trajectory", case.name);
+            if case.name == "v1-minimal" {
+                assert_eq!(back.zero_shards, 1);
+                assert_eq!(back.zero_stage, 1, "pre-stage files read as stage 1");
+            }
+            std::fs::remove_file(p).unwrap();
+        }
     }
 
     #[test]
@@ -455,6 +1036,115 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = Checkpoint::load(&p).unwrap_err().to_string();
         assert!(err.contains("trailing"), "{err}");
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn rejects_corrupted_payload_via_checksum() {
+        let c = traj_ckpt();
+        let p = tmp("corrupt.ckpt");
+        c.save(&p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        let payload_start = clean.iter().position(|&b| b == b'\n').unwrap() + 1;
+        // flip one bit in the middle of the f32 payload: without the crc
+        // this would silently restore a wrong parameter
+        let mut bytes = clean.clone();
+        bytes[payload_start + 9] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn rejects_corrupted_header_via_checksum() {
+        // the insidious header case: change one hex digit of a bit-exact
+        // stats float — the JSON still parses, every length still lines
+        // up, and without the header-covering crc the restore would
+        // silently carry a wrong loss. The checksum spans the canonical
+        // header, so this must be a loud error.
+        let c = traj_ckpt();
+        let p = tmp("corrupt_header.ckpt");
+        c.save(&p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        let newline = clean.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&clean[..newline]).unwrap();
+        // locate a train_loss hex field and flip a digit inside it
+        let at = header.find("\"train_loss\":\"").unwrap() + "\"train_loss\":\"".len();
+        let mut bytes = clean.clone();
+        bytes[at] = if bytes[at] == b'0' { b'1' } else { b'0' };
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "header corruption must be detected: {err}");
+        std::fs::remove_file(p).unwrap();
+    }
+
+    /// Random fuzz positions over a v3 file image: byte index and bit to
+    /// flip, truncation length, trailing-garbage length.
+    #[derive(Debug, Clone)]
+    struct FuzzCase {
+        flip_at: usize,
+        flip_bit: u8,
+        keep: usize,
+        extra: usize,
+    }
+
+    impl Arbitrary for FuzzCase {
+        fn generate(rng: &mut crate::tensor::Pcg64) -> Self {
+            FuzzCase {
+                flip_at: rng.next_below(1 << 16),
+                flip_bit: rng.next_below(8) as u8,
+                keep: rng.next_below(1 << 16),
+                extra: 1 + rng.next_below(16),
+            }
+        }
+
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.flip_at > 0 {
+                let mut c = self.clone();
+                c.flip_at /= 2;
+                out.push(c);
+            }
+            if self.keep > 0 {
+                let mut c = self.clone();
+                c.keep /= 2;
+                out.push(c);
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_v3_rejects_truncation_trailing_and_corruption_anywhere() {
+        let p = tmp("fuzz.ckpt");
+        traj_ckpt().save(&p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        let total = clean.len();
+        check::<FuzzCase, _>(707, 200, |case| {
+            // truncation anywhere strictly inside the file must fail
+            let keep = case.keep % total;
+            std::fs::write(&p, &clean[..keep]).unwrap();
+            if Checkpoint::load(&p).is_ok() {
+                return false;
+            }
+            // trailing bytes must fail
+            let mut longer = clean.clone();
+            longer.extend(std::iter::repeat(0xAB_u8).take(case.extra));
+            std::fs::write(&p, &longer).unwrap();
+            if Checkpoint::load(&p).is_ok() {
+                return false;
+            }
+            // single-bit corruption anywhere in the file — header bytes
+            // included — must fail: either the JSON/length validation
+            // breaks, or the file checksum (computed over the canonical
+            // header + payload) mismatches
+            let at = case.flip_at % total;
+            let mut corrupt = clean.clone();
+            corrupt[at] ^= 1 << case.flip_bit;
+            std::fs::write(&p, &corrupt).unwrap();
+            Checkpoint::load(&p).is_err()
+        });
         std::fs::remove_file(p).unwrap();
     }
 

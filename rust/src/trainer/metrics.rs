@@ -1,5 +1,9 @@
 //! Per-epoch measurements + memory accounting.
 
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
 /// One epoch's measurements (one CSV row in the figure harnesses).
 #[derive(Debug, Clone)]
 pub struct EpochStats {
@@ -27,6 +31,63 @@ pub struct EpochStats {
     /// the terminal reduce-scatter leaves each worker ~1/workers of it.
     pub grad_bytes_per_worker: usize,
     pub grad_norm: f64,
+}
+
+impl EpochStats {
+    /// Serialize for the v3 checkpoint's trajectory block, so a resumed
+    /// run's final summary covers the whole trajectory and the resume
+    /// harness can compare restored epochs bitwise. Floats use the
+    /// bit-exact encoding (`val_loss`/`val_acc` are NaN on epochs that
+    /// skipped evaluation).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::from_usize(self.epoch)),
+            ("phase", Json::Str(self.phase.to_string())),
+            ("train_loss", Json::from_f64_bits(self.train_loss)),
+            ("train_acc", Json::from_f64_bits(self.train_acc)),
+            ("val_loss", Json::from_f64_bits(self.val_loss)),
+            ("val_acc", Json::from_f64_bits(self.val_acc)),
+            ("lr", Json::from_f64_bits(self.lr)),
+            ("epoch_seconds", Json::from_f64_bits(self.epoch_seconds)),
+            ("execute_seconds", Json::from_f64_bits(self.execute_seconds)),
+            ("images_per_sec", Json::from_f64_bits(self.images_per_sec)),
+            ("trainable_params", Json::from_usize(self.trainable_params)),
+            ("memory_model_bytes", Json::from_usize(self.memory_model_bytes)),
+            (
+                "opt_state_bytes_per_worker",
+                Json::from_usize(self.opt_state_bytes_per_worker),
+            ),
+            ("grad_bytes_per_worker", Json::from_usize(self.grad_bytes_per_worker)),
+            ("grad_norm", Json::from_f64_bits(self.grad_norm)),
+        ])
+    }
+
+    /// Parse a value written by [`to_json`](Self::to_json).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let phase: &'static str = match v.req("phase")?.as_str()? {
+            "full" => "full",
+            "warmup" => "warmup",
+            "lora" => "lora",
+            other => bail!("unknown epoch phase label {other:?}"),
+        };
+        Ok(Self {
+            epoch: v.req("epoch")?.as_usize()?,
+            phase,
+            train_loss: v.req("train_loss")?.as_f64_bits()?,
+            train_acc: v.req("train_acc")?.as_f64_bits()?,
+            val_loss: v.req("val_loss")?.as_f64_bits()?,
+            val_acc: v.req("val_acc")?.as_f64_bits()?,
+            lr: v.req("lr")?.as_f64_bits()?,
+            epoch_seconds: v.req("epoch_seconds")?.as_f64_bits()?,
+            execute_seconds: v.req("execute_seconds")?.as_f64_bits()?,
+            images_per_sec: v.req("images_per_sec")?.as_f64_bits()?,
+            trainable_params: v.req("trainable_params")?.as_usize()?,
+            memory_model_bytes: v.req("memory_model_bytes")?.as_usize()?,
+            opt_state_bytes_per_worker: v.req("opt_state_bytes_per_worker")?.as_usize()?,
+            grad_bytes_per_worker: v.req("grad_bytes_per_worker")?.as_usize()?,
+            grad_norm: v.req("grad_norm")?.as_f64_bits()?,
+        })
+    }
 }
 
 /// Accelerator-memory accounting, mirroring what DDP training would hold
@@ -92,6 +153,41 @@ impl MemoryBreakdown {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn epoch_stats_json_roundtrips_bitwise() {
+        let s = EpochStats {
+            epoch: 7,
+            phase: "warmup",
+            train_loss: 1.234567890123,
+            train_acc: 0.5,
+            val_loss: f64::NAN, // skipped-eval epoch
+            val_acc: f64::NAN,
+            lr: 1e-3,
+            epoch_seconds: 2.25,
+            execute_seconds: 1.75,
+            images_per_sec: 1234.5,
+            trainable_params: 19496,
+            memory_model_bytes: 1 << 20,
+            opt_state_bytes_per_worker: 4096,
+            grad_bytes_per_worker: 2048,
+            grad_norm: 0.75,
+        };
+        let text = s.to_json().dump();
+        let back = EpochStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.phase, "warmup");
+        assert_eq!(back.train_loss.to_bits(), s.train_loss.to_bits());
+        assert_eq!(back.val_loss.to_bits(), s.val_loss.to_bits(), "NaN must survive");
+        assert_eq!(back.grad_norm.to_bits(), s.grad_norm.to_bits());
+        assert_eq!(back.trainable_params, s.trainable_params);
+        // unknown labels rejected (the label becomes a &'static str)
+        let mut j = s.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("phase".into(), Json::Str("thawed".into()));
+        }
+        assert!(EpochStats::from_json(&j).is_err());
+    }
 
     #[test]
     fn lora_phase_is_smaller_than_full_phase() {

@@ -11,7 +11,7 @@
 mod checkpoint;
 mod metrics;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, TrajectoryState};
 pub use metrics::{EpochStats, MemoryBreakdown};
 
 use std::sync::Arc;
@@ -45,6 +45,9 @@ pub struct Trainer {
     controller: PreLoraController,
     history: NormHistory,
     model: ModelState,
+    /// Epoch a v3 checkpoint was restored at, if this run resumed one
+    /// (surfaces as the summary's provenance note).
+    resumed_from: Option<usize>,
 
     pub stats: Vec<EpochStats>,
 }
@@ -114,6 +117,7 @@ impl Trainer {
             controller,
             history: NormHistory::new(),
             model,
+            resumed_from: None,
             stats: Vec::new(),
         })
     }
@@ -341,9 +345,7 @@ impl Trainer {
                 );
             }
             Decision::FreezeBase => {
-                // frozen base keeps no optimizer state — the paper's memory
-                // saving made literal
-                self.model.opt_base = None;
+                self.model.freeze_base();
                 eprintln!(
                     "[prelora] epoch {}: warmup done -> base frozen, LoRA-only ({} trainable params, {:.1}% of full)",
                     self.history.epochs(),
@@ -355,9 +357,16 @@ impl Trainer {
         Ok(())
     }
 
-    /// Run the configured number of epochs and summarize.
+    /// Run up to the configured number of epochs and summarize. Counts
+    /// from the epochs already completed — a freshly built trainer runs
+    /// all of them, a restored one continues mid-trajectory from the
+    /// checkpoint's epoch cursor. With `train.checkpoint_every > 0`, a
+    /// checkpoint is (atomically) saved to [`checkpoint_path`] at that
+    /// interval, so a preempted run resumes via `prelora train --resume`.
+    ///
+    /// [`checkpoint_path`]: Self::checkpoint_path
     pub fn run(&mut self) -> Result<RunSummary> {
-        for _ in 0..self.cfg.train.epochs {
+        while self.history.epochs() < self.cfg.train.epochs {
             let s = self.run_epoch()?;
             eprintln!(
                 "[{}] epoch {:>3} [{}] loss {:.4} acc {:.3} val_loss {:.4} val_acc {:.3} {:.2}s {:.0} img/s",
@@ -371,24 +380,47 @@ impl Trainer {
                 s.epoch_seconds,
                 s.images_per_sec,
             );
+            let every = self.cfg.train.checkpoint_every;
+            if every > 0 && self.history.epochs() % every == 0 {
+                let path = self.checkpoint_path();
+                self.checkpoint().save(&path)?;
+                eprintln!(
+                    "[{}] checkpoint saved to {} (epoch {})",
+                    self.cfg.run_name,
+                    path.display(),
+                    self.history.epochs()
+                );
+            }
         }
         Ok(self.summary())
     }
 
+    /// Where periodic checkpoints land: `<results_dir>/<run_name>.ckpt`.
+    /// One rolling file — the atomic save makes overwriting safe.
+    pub fn checkpoint_path(&self) -> std::path::PathBuf {
+        std::path::Path::new(&self.cfg.results_dir).join(format!("{}.ckpt", self.cfg.run_name))
+    }
+
     pub fn summary(&self) -> RunSummary {
-        RunSummary::from_stats(
+        let mut s = RunSummary::from_stats(
             &self.cfg,
             &self.manifest,
             &self.stats,
             self.controller.switch_epoch(),
             self.controller.freeze_epoch(),
             self.model.adapter_cfg.as_ref(),
-        )
+        );
+        s.resumed_from = self.resumed_from;
+        s
     }
 
     /// Save current model state. Optimizer state is gathered from the
     /// ZeRO shards into full-length buffers (shard-layout independent),
-    /// so the checkpoint restores onto any worker count.
+    /// so the checkpoint restores onto any worker count. The trajectory
+    /// block carries the phase machine (controller cursors + convergence
+    /// evidence), the full norm/loss history, the LR-schedule position
+    /// and the data-order seed — everything `restore` needs to make the
+    /// resumed run a true bitwise continuation.
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             epoch: self.history.epochs(),
@@ -404,15 +436,37 @@ impl Trainer {
             } else {
                 1
             },
+            trajectory: Some(TrajectoryState {
+                seed: self.cfg.seed,
+                phase: self.controller.phase(),
+                switch_epoch: self.controller.switch_epoch(),
+                freeze_epoch: self.controller.freeze_epoch(),
+                lr_schedule: self.cfg.train.lr_schedule.as_str().to_string(),
+                lr_epochs_total: self.cfg.train.epochs,
+                checks: self.controller.checks.clone(),
+                snapshots: self.history.snapshots().to_vec(),
+                losses: self.history.losses().to_vec(),
+                stats: self.stats.clone(),
+            }),
         }
     }
 
     /// Restore model state — base, LoRA params *and* the adapter config
-    /// that makes them meaningful (phase machine state is not restored —
-    /// used for eval/analysis, not resumption mid-run). Checkpointed
-    /// optimizer state, when present, is re-scattered onto *this* run's
-    /// ZeRO layout — the saving run's shard count is irrelevant, so a
-    /// single-worker trainer restores an N-way sharded run unchanged.
+    /// that makes them meaningful. Checkpointed optimizer state, when
+    /// present, is re-scattered onto *this* run's ZeRO layout — the
+    /// saving run's shard count is irrelevant, so a single-worker trainer
+    /// restores an N-way sharded run unchanged (and a worker-count change
+    /// on restore re-partitions both optimizers and, at stage 2, the
+    /// gradient partitions derived from them).
+    ///
+    /// A v3 checkpoint additionally carries the trajectory block; this
+    /// rebuilds the phase machine (controller cursors + convergence
+    /// evidence), the norm/loss history, the per-epoch stats and the
+    /// LR-schedule position, making the resumed run a *true mid-run
+    /// continuation*: for a fixed seed, resuming is bitwise-identical to
+    /// never having stopped (asserted by `rust/tests/resume.rs`). v1/v2
+    /// checkpoints keep the old eval/analysis semantics — parameters and
+    /// optimizer state load, phase detection replays from scratch.
     pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
         anyhow::ensure!(
             ckpt.base.len() == self.model.base.len(),
@@ -420,6 +474,65 @@ impl Trainer {
             ckpt.base.len(),
             self.model.base.len()
         );
+        // validate the trajectory against this run's config *before* any
+        // mutation: a half-restored trainer must not be reachable through
+        // a config mismatch
+        if let Some(tr) = &ckpt.trajectory {
+            anyhow::ensure!(
+                tr.seed == self.cfg.seed,
+                "checkpoint was trained with seed {} but this run uses {} — every RNG stream \
+                 (epoch shuffles, dataset, LoRA init) keys off the seed, so the trajectories \
+                 would diverge; rerun with --seed {} (prelora train --resume adopts it \
+                 automatically)",
+                tr.seed,
+                self.cfg.seed,
+                tr.seed
+            );
+            anyhow::ensure!(
+                tr.lr_schedule == self.cfg.train.lr_schedule.as_str(),
+                "checkpoint used LR schedule {:?} but this run is configured for {:?}",
+                tr.lr_schedule,
+                self.cfg.train.lr_schedule.as_str()
+            );
+            anyhow::ensure!(
+                tr.lr_epochs_total == self.cfg.train.epochs,
+                "checkpoint's LR schedule spans {} total epochs but this run is configured for \
+                 {} — the warmup/decay shape is a function of the total, so resuming would \
+                 change the schedule mid-run",
+                tr.lr_epochs_total,
+                self.cfg.train.epochs
+            );
+            // a disabled controller can never continue a warmup/freeze
+            // schedule: its on_epoch_end is a constant Stay, so a
+            // mid-warmup checkpoint would train base+LoRA forever —
+            // silently neither the baseline nor the PreLoRA continuation
+            anyhow::ensure!(
+                self.cfg.prelora.enabled || tr.phase.is_full(),
+                "checkpoint was saved mid-trajectory ({}) but this run's PreLoRA controller is \
+                 disabled — the warmup/freeze schedule cannot continue; resume with `prelora \
+                 train` (controller enabled) instead",
+                tr.phase
+            );
+            // the phase must agree with the state the payload carries
+            match tr.phase {
+                Phase::FullParam => anyhow::ensure!(
+                    ckpt.lora.is_none() && ckpt.opt_base.is_some(),
+                    "full-param trajectory with inconsistent payload (lora present: {}, base \
+                     optimizer present: {})",
+                    ckpt.lora.is_some(),
+                    ckpt.opt_base.is_some()
+                ),
+                Phase::Warmup { .. } => anyhow::ensure!(
+                    ckpt.lora.is_some() && ckpt.opt_base.is_some() && ckpt.opt_lora.is_some(),
+                    "warmup trajectory must carry LoRA params and both optimizer states"
+                ),
+                Phase::LoraOnly { .. } => anyhow::ensure!(
+                    ckpt.lora.is_some() && ckpt.opt_base.is_none() && ckpt.opt_lora.is_some(),
+                    "lora-only trajectory must carry LoRA params + LoRA optimizer state and no \
+                     base optimizer state (the frozen base keeps none)"
+                ),
+            }
+        }
         match (&ckpt.lora, &ckpt.adapter_cfg, &ckpt.ranks) {
             (None, None, None) => {
                 self.model.base.copy_from_slice(&ckpt.base);
@@ -463,10 +576,47 @@ impl Trainer {
                 "checkpoint has partial LoRA state (lora, adapter_cfg and ranks must all be present or all absent)"
             ),
         }
+        // the phase machine, before the optimizers: a failure here leaves
+        // the parameters restored but no optimizer replaced
+        if let Some(tr) = &ckpt.trajectory {
+            self.history = NormHistory::from_parts(tr.snapshots.clone(), tr.losses.clone())?;
+            anyhow::ensure!(
+                self.history.epochs() == ckpt.epoch,
+                "trajectory history spans {} epochs but the checkpoint was saved at epoch {}",
+                self.history.epochs(),
+                ckpt.epoch
+            );
+            self.controller.restore_state(
+                tr.phase,
+                tr.switch_epoch,
+                tr.freeze_epoch,
+                tr.checks.clone(),
+            )?;
+            self.stats = tr.stats.clone();
+            self.resumed_from = Some(ckpt.epoch);
+            // compile the restored phase's artifacts now, like the live
+            // switch does — outside epoch timing, and so a resumed
+            // LoraOnly run never compiles the warmup artifact at all
+            match tr.phase {
+                Phase::FullParam => {}
+                Phase::Warmup { .. } => {
+                    self.engine.precompile(&["warmup_grads", "lora_grads", "eval_lora"])?;
+                }
+                Phase::LoraOnly { .. } => {
+                    self.engine.precompile(&["lora_grads", "eval_lora"])?;
+                }
+            }
+        }
         // optimizer state: rebuild on this run's shard layout and scatter
-        // the gathered buffers into it. Absent state (v1 checkpoints, or a
-        // phase that held no optimizer) leaves the current optimizers
-        // untouched — the pre-v2 eval/analysis semantics.
+        // the gathered buffers into it. With a trajectory, absence is
+        // authoritative — a lora-only checkpoint restores to a frozen
+        // base with *no* optimizer state. Without one (v1/v2), absent
+        // state leaves the current optimizers untouched — the pre-v2
+        // eval/analysis semantics.
+        if ckpt.trajectory.is_some() {
+            self.model.opt_base = None;
+            self.model.opt_lora = None;
+        }
         let shards = self.cfg.train.zero_shards();
         if let Some(st) = &ckpt.opt_base {
             let mut opt = ShardedOptimizer::new(&self.cfg.train, self.model.base.len(), shards);

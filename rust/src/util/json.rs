@@ -103,6 +103,31 @@ impl Json {
         Json::Num(x as f64)
     }
 
+    /// Encode an `f64` as its exact bit pattern (16 lowercase hex digits).
+    /// `Json::Num` round-trips through the shortest-decimal formatter,
+    /// which is exact for finite values but cannot represent NaN or the
+    /// infinities JSON lacks — the checkpoint trajectory block (losses,
+    /// convergence deltas that are legitimately ±inf/NaN) therefore uses
+    /// this bit-exact encoding instead.
+    pub fn from_f64_bits(x: f64) -> Json {
+        Json::Str(format!("{:016x}", x.to_bits()))
+    }
+
+    /// Decode a value written by [`from_f64_bits`]. Strictly lowercase:
+    /// `from_str_radix` would also accept uppercase hex, which has a
+    /// different byte representation for the same value — a corrupted
+    /// byte ('a' -> 'A' is a single bit) could then canonicalize back to
+    /// the original and slip past a content checksum.
+    pub fn as_f64_bits(&self) -> Result<f64> {
+        let s = self.as_str()?;
+        if s.len() != 16 || !s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f')) {
+            bail!("expected 16 lowercase hex digits of f64 bits, got {s:?}");
+        }
+        let bits = u64::from_str_radix(s, 16)
+            .map_err(|e| anyhow!("bad f64 bit pattern {s:?}: {e}"))?;
+        Ok(f64::from_bits(bits))
+    }
+
     // ---------- parse ----------
 
     pub fn parse(text: &str) -> Result<Json> {
@@ -445,5 +470,34 @@ mod tests {
         assert!(Json::Num(-1.0).as_usize().is_err());
         assert!(Json::Num(1.5).as_usize().is_err());
         assert!(Json::Num(2.0).as_i64().is_ok());
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_including_nan_and_inf() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -2.5e-300,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            std::f64::consts::PI,
+        ] {
+            let j = Json::from_f64_bits(x);
+            let back = Json::parse(&j.dump()).unwrap().as_f64_bits().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        // NaN payload bits survive too (== would fail, bits must not)
+        let nan = f64::from_bits(0x7ff8_0000_dead_beef);
+        let back = Json::from_f64_bits(nan).as_f64_bits().unwrap();
+        assert_eq!(back.to_bits(), nan.to_bits());
+        // malformed encodings are rejected
+        assert!(Json::Str("123".into()).as_f64_bits().is_err());
+        assert!(Json::Str("zzzzzzzzzzzzzzzz".into()).as_f64_bits().is_err());
+        assert!(Json::Num(1.0).as_f64_bits().is_err());
+        // uppercase hex is rejected: it decodes to the same bits but has
+        // different bytes, which would defeat canonical-form checksums
+        assert!(Json::Str("3FF0000000000000".into()).as_f64_bits().is_err());
     }
 }

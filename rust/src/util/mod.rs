@@ -7,9 +7,11 @@
 //! * [`args`]    — CLI flag parser (the `prelora` binary)
 //! * [`bench`]   — micro-benchmark harness (`benches/*.rs`, harness = false)
 //! * [`prop`]    — property-testing driver with shrinking (invariant tests)
+//! * [`crc`]     — CRC-32 payload checksums (v3 checkpoint integrity)
 
 pub mod args;
 pub mod bench;
+pub mod crc;
 pub mod json;
 pub mod prop;
 pub mod tomlish;

@@ -536,6 +536,76 @@ fn prop_reduce_scatter_all_gather_composes_to_reduce_mean() {
     });
 }
 
+/// Ragged reduce-scatter layouts: a worker count and an *independent*
+/// output partition count that deliberately never match — the foreign-
+/// `parts` path (ring stitches output chunks from its schedule's owning
+/// ranks; this used to reduce fully then split).
+#[derive(Debug, Clone)]
+struct RaggedScatterCase {
+    bufs: Vec<Vec<f32>>,
+    parts: usize,
+}
+
+impl Arbitrary for RaggedScatterCase {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let n = 2 + rng.next_below(7); // 2..=8 workers
+        let mut len = 1 + rng.next_below(300);
+        if len % n == 0 {
+            len += 1; // force a ragged ring chunking
+        }
+        let mut parts = 1 + rng.next_below(2 * n + 4); // may exceed len (empty chunks)
+        if parts == n {
+            parts += 1; // the parts == workers case has its own coverage
+        }
+        let bufs = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_f32() * 4.0 - 2.0).collect())
+            .collect();
+        RaggedScatterCase { bufs, parts }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let len = self.bufs[0].len();
+        if len > 1 {
+            out.push(RaggedScatterCase {
+                bufs: self.bufs.iter().map(|b| b[..len / 2].to_vec()).collect(),
+                parts: self.parts,
+            });
+        }
+        if self.parts > 1 {
+            let mut c = self.clone();
+            c.parts = 1 + self.parts / 2;
+            if c.parts != self.bufs.len() {
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_reduce_scatter_foreign_parts_is_bitwise_allreduce() {
+    // ROADMAP item closed: for every algorithm — ring included — a
+    // partition count that does not match the worker count still yields
+    // chunks that concatenate *bitwise* to the all-reduce output
+    check::<RaggedScatterCase, _>(808, 150, |case| {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let want = {
+                let mut bufs = case.bufs.clone();
+                reduce_mean(alg, &mut bufs);
+                bufs.swap_remove(0)
+            };
+            let Some(chunks) = reduce_scatter(alg, case.bufs.clone(), case.parts) else {
+                return false;
+            };
+            if chunks.len() != case.parts || all_gather(&chunks) != want {
+                return false;
+            }
+        }
+        true
+    });
+}
+
 /// Ragged clip inputs: a gradient vector, an odd partition count that
 /// does not divide its length, and a clip threshold that sometimes
 /// engages (0 = clipping off).

@@ -1,0 +1,361 @@
+//! The resume-equals-continuous harness: saving a v3 checkpoint at epoch
+//! k and restoring it must be indistinguishable — **bitwise** — from
+//! never having stopped.
+//!
+//! For a fixed seed the uninterrupted reference run and every
+//! save-at-k + resume run must agree on per-epoch train losses, mean
+//! grad norms, LR values, phase labels, the switch/freeze epochs and the
+//! assigned per-adapter ranks. The sweep covers:
+//!
+//! * interruption inside every phase — Full, *inside* Warmup (the phase
+//!   whose schedule position was historically dropped), and LoraOnly;
+//! * ZeRO off / stage 1 / stage 2 on either side of the interruption
+//!   (save sharded, resume unsharded and vice versa — the v3 payload is
+//!   gathered, so layouts may change freely);
+//! * pipeline on/off on either side (both drivers are bit-identical, so
+//!   a checkpoint must be too);
+//! * a worker-count change on restore. Changing `dp.workers` changes the
+//!   global batch (worker count × per-worker batch), so a bitwise *loss*
+//!   comparison against the old-worker-count run is not defined — what
+//!   must survive bitwise is the **state**: parameters, gathered
+//!   optimizer state (re-partitioned onto the new layout), the phase
+//!   machine and the history, plus the schedule semantics (the freeze
+//!   still fires exactly `warmup_epochs` after the restored switch).
+//!
+//! Every case round-trips the checkpoint through disk, so the format —
+//! not just the in-memory struct — is what's being proven.
+//!
+//! Requires `make artifacts` (vit-micro) to have run.
+
+use std::sync::OnceLock;
+
+use prelora::config::RunConfig;
+use prelora::trainer::{Checkpoint, Trainer};
+
+const EPOCHS: usize = 16;
+
+fn micro_config() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "vit-micro".into();
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    cfg.run_name = "resume".into();
+    cfg.train.epochs = EPOCHS;
+    cfg.train.data.train_samples = 192;
+    cfg.train.data.val_samples = 64;
+    cfg.train.eval_every = 4; // leaves NaN val columns in most stats rows
+    cfg.train.dp.workers = 2;
+    // relaxed thresholds so the micro run crosses both phase boundaries
+    cfg.prelora.tau = 6.0;
+    cfg.prelora.zeta = 25.0;
+    cfg.prelora.windows = 2;
+    cfg.prelora.window_epochs = 2;
+    cfg.prelora.warmup_epochs = 2;
+    cfg
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Zero {
+    Off,
+    Stage1,
+    Stage2,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Variant {
+    zero: Zero,
+    pipeline: bool,
+}
+
+const DEFAULT: Variant = Variant { zero: Zero::Off, pipeline: true };
+
+fn config_of(v: Variant) -> RunConfig {
+    let mut cfg = micro_config();
+    cfg.train.pipeline.enabled = v.pipeline;
+    match v.zero {
+        Zero::Off => {}
+        Zero::Stage1 => {
+            cfg.train.zero.enabled = true;
+            cfg.train.zero.stage = 1;
+        }
+        Zero::Stage2 => {
+            cfg.train.zero.enabled = true;
+            cfg.train.zero.stage = 2;
+        }
+    }
+    cfg
+}
+
+/// Everything the bitwise comparison covers, with floats as raw bits so
+/// equality is exact and NaN-proof.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Fingerprint {
+    losses: Vec<u64>,
+    grad_norms: Vec<u64>,
+    lrs: Vec<u64>,
+    phases: Vec<&'static str>,
+    switch_epoch: Option<usize>,
+    freeze_epoch: Option<usize>,
+    ranks: Option<Vec<usize>>,
+}
+
+fn fingerprint(t: &Trainer) -> Fingerprint {
+    Fingerprint {
+        losses: t.stats.iter().map(|s| s.train_loss.to_bits()).collect(),
+        grad_norms: t.stats.iter().map(|s| s.grad_norm.to_bits()).collect(),
+        lrs: t.stats.iter().map(|s| s.lr.to_bits()).collect(),
+        phases: t.stats.iter().map(|s| s.phase).collect(),
+        switch_epoch: t.controller().switch_epoch(),
+        freeze_epoch: t.controller().freeze_epoch(),
+        ranks: t.adapter_cfg().map(|a| a.ranks.clone()),
+    }
+}
+
+fn drive(t: &mut Trainer, upto: usize) {
+    while t.history().epochs() < upto {
+        t.run_epoch().expect("epoch failed");
+    }
+}
+
+struct Reference {
+    fp: Fingerprint,
+    base: Vec<f32>,
+    /// First epoch of the warmup phase + 1 — an interruption point
+    /// strictly inside warmup.
+    k_warm: usize,
+    k_lora: usize,
+}
+
+/// The uninterrupted reference run (computed once, shared by every case).
+fn reference() -> &'static Reference {
+    static REF: OnceLock<Reference> = OnceLock::new();
+    REF.get_or_init(|| {
+        let mut t = Trainer::new(config_of(DEFAULT)).unwrap();
+        drive(&mut t, EPOCHS);
+        let fp = fingerprint(&t);
+        let (Some(switch), Some(freeze)) = (fp.switch_epoch, fp.freeze_epoch) else {
+            panic!("reference run must cross both phase boundaries; got {fp:?}");
+        };
+        assert!(switch + 1 < freeze, "need an epoch strictly inside warmup");
+        assert!(freeze + 1 < EPOCHS, "need epochs after the freeze");
+        Reference {
+            fp,
+            base: t.base_params().to_vec(),
+            k_warm: switch + 1,
+            k_lora: freeze + 1,
+        }
+    })
+}
+
+/// Run `save_variant` for `k` epochs, checkpoint through disk, restore
+/// into a fresh `resume_variant` trainer, finish the run, and return the
+/// resumed trainer.
+fn save_and_resume(save_variant: Variant, resume_variant: Variant, k: usize, tag: &str) -> Trainer {
+    let mut a = Trainer::new(config_of(save_variant)).unwrap();
+    drive(&mut a, k);
+    let path = std::env::temp_dir().join(format!(
+        "prelora_resume_{}_{tag}.ckpt",
+        std::process::id()
+    ));
+    a.checkpoint().save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(back.epoch, k);
+    let mut b = Trainer::new(config_of(resume_variant)).unwrap();
+    b.restore(&back).unwrap();
+    assert_eq!(b.history().epochs(), k, "{tag}: epoch cursor must restore");
+    drive(&mut b, EPOCHS);
+    assert_eq!(
+        b.summary().resumed_from,
+        Some(k),
+        "{tag}: summary must carry the resume provenance note"
+    );
+    b
+}
+
+fn assert_resume_matches(save_variant: Variant, resume_variant: Variant, k: usize, tag: &str) {
+    let resumed = save_and_resume(save_variant, resume_variant, k, tag);
+    let want = &reference().fp;
+    let got = fingerprint(&resumed);
+    assert_eq!(got.losses, want.losses, "{tag}: per-epoch losses must be bitwise identical");
+    assert_eq!(got.grad_norms, want.grad_norms, "{tag}: grad norms must be bitwise identical");
+    assert_eq!(got.lrs, want.lrs, "{tag}: LR trajectory must match");
+    assert_eq!(got.phases, want.phases, "{tag}: phase labels must match");
+    assert_eq!(got.switch_epoch, want.switch_epoch, "{tag}: switch epoch must match");
+    assert_eq!(got.freeze_epoch, want.freeze_epoch, "{tag}: freeze epoch must match");
+    assert_eq!(got.ranks, want.ranks, "{tag}: assigned ranks must match");
+}
+
+// ---------------------------------------------------------------------------
+// interruption point inside every phase (default config both sides)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_from_full_phase_is_bitwise_continuous() {
+    // epoch 2 is before any window boundary: the resumed run must redo
+    // convergence detection from the restored history and switch on the
+    // reference's epoch
+    assert_resume_matches(DEFAULT, DEFAULT, 2, "full");
+}
+
+#[test]
+fn resume_from_inside_warmup_is_bitwise_continuous() {
+    // strictly inside warmup: the restored controller must freeze exactly
+    // warmup_epochs after the *restored* switch epoch, not re-detect
+    let k = reference().k_warm;
+    assert_resume_matches(DEFAULT, DEFAULT, k, "warmup");
+}
+
+#[test]
+fn resume_from_lora_phase_is_bitwise_continuous() {
+    let k = reference().k_lora;
+    let resumed = save_and_resume(DEFAULT, DEFAULT, k, "lora");
+    let want = &reference().fp;
+    assert_eq!(fingerprint(&resumed), *want, "lora: fingerprint must be bitwise identical");
+    // the strongest claim: the final parameter vectors agree bit-for-bit
+    assert_eq!(
+        resumed.base_params(),
+        &reference().base[..],
+        "lora: final base params must be bitwise identical"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ZeRO / pipeline layout changes across the interruption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_across_zero_stage_changes_is_bitwise_continuous() {
+    let k = reference().k_warm;
+    // save sharded (stage 1), resume stage 2: the gathered optimizer
+    // state re-scatters onto the gradient-sharded layout
+    assert_resume_matches(
+        Variant { zero: Zero::Stage1, pipeline: true },
+        Variant { zero: Zero::Stage2, pipeline: true },
+        k,
+        "zero1->zero2",
+    );
+    // save stage 2, resume unsharded
+    assert_resume_matches(
+        Variant { zero: Zero::Stage2, pipeline: true },
+        DEFAULT,
+        k,
+        "zero2->off",
+    );
+}
+
+#[test]
+fn resume_across_pipeline_toggle_is_bitwise_continuous() {
+    // save pipelined, resume through the serial reference loop...
+    let k = reference().k_warm;
+    assert_resume_matches(
+        DEFAULT,
+        Variant { zero: Zero::Off, pipeline: false },
+        k,
+        "pipe->serial",
+    );
+    // ...and the other way round, interrupted back in the full phase
+    assert_resume_matches(
+        Variant { zero: Zero::Off, pipeline: false },
+        DEFAULT,
+        2,
+        "serial->pipe",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// worker-count change on restore
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_count_change_restores_state_bitwise_and_keeps_the_schedule() {
+    // a 2-worker ZeRO-2 run, preempted inside warmup...
+    let k = reference().k_warm;
+    let mut a = Trainer::new(config_of(Variant { zero: Zero::Stage2, pipeline: true })).unwrap();
+    drive(&mut a, k);
+    let ck = a.checkpoint();
+    assert_eq!(ck.zero_shards, 2);
+    let path = std::env::temp_dir().join(format!("prelora_resume_wc_{}.ckpt", std::process::id()));
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    // a disabled-controller (baseline) run must refuse a mid-warmup
+    // checkpoint: its phase machine could never continue the schedule
+    let mut baseline_cfg = micro_config();
+    baseline_cfg.prelora.enabled = false;
+    let mut baseline = Trainer::new(baseline_cfg).unwrap();
+    let err = baseline.restore(&back).unwrap_err().to_string();
+    assert!(err.contains("controller"), "{err}");
+
+    // ...restores onto a single unsharded worker
+    let mut cfg = micro_config();
+    cfg.train.dp.workers = 1;
+    let mut b = Trainer::new(cfg).unwrap();
+    b.restore(&back).unwrap();
+
+    // the phase machine and history restore exactly
+    assert_eq!(b.history().epochs(), k);
+    assert_eq!(b.phase(), a.phase(), "restored phase must match");
+    assert_eq!(b.controller().switch_epoch(), a.controller().switch_epoch());
+    assert_eq!(
+        b.adapter_cfg().map(|x| x.ranks.clone()),
+        a.adapter_cfg().map(|x| x.ranks.clone()),
+        "assigned ranks must survive the worker-count change"
+    );
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(b.history().losses()),
+        bits(a.history().losses()),
+        "loss history must be bitwise identical"
+    );
+    // the parameters and the (re-partitioned) optimizer state are bitwise
+    // the saved ones: re-gathering reproduces the checkpoint exactly
+    assert_eq!(b.base_params(), a.base_params());
+    let re = b.checkpoint();
+    assert_eq!(re.zero_shards, 1);
+    assert_eq!(re.opt_base, back.opt_base, "1-way re-gather must equal the 2-way save");
+    assert_eq!(re.opt_lora, back.opt_lora);
+    // evaluation is bitwise identical (eval order is worker-count free)
+    let (la, aa) = a.evaluate().unwrap();
+    let (lb, ab) = b.evaluate().unwrap();
+    assert_eq!(la.to_bits(), lb.to_bits(), "restored eval loss differs");
+    assert_eq!(aa.to_bits(), ab.to_bits(), "restored eval accuracy differs");
+
+    // a different global batch means a different loss trajectory — but
+    // the *schedule* semantics must continue: warmup still ends exactly
+    // warmup_epochs after the restored switch, and training proceeds
+    drive(&mut b, EPOCHS);
+    let switch = b.controller().switch_epoch().unwrap();
+    assert_eq!(
+        b.controller().freeze_epoch(),
+        Some(switch + 2), // micro_config's warmup_epochs
+        "freeze must fire warmup_epochs after the restored switch"
+    );
+    assert!(b.phase().is_lora_only());
+    for s in &b.stats {
+        assert!(s.train_loss.is_finite(), "epoch {}: loss diverged", s.epoch);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// guard rails: config mismatches must be loud errors, not silent drift
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_rejects_seed_and_schedule_mismatches() {
+    let mut a = Trainer::new(config_of(DEFAULT)).unwrap();
+    drive(&mut a, 2);
+    let ck = a.checkpoint();
+
+    let mut cfg = config_of(DEFAULT);
+    cfg.seed = 1; // reference seed is 0
+    let mut b = Trainer::new(cfg).unwrap();
+    let err = b.restore(&ck).unwrap_err().to_string();
+    assert!(err.contains("seed"), "{err}");
+
+    let mut cfg = config_of(DEFAULT);
+    cfg.train.epochs = EPOCHS + 4; // would reshape the cosine schedule
+    let mut b = Trainer::new(cfg).unwrap();
+    let err = b.restore(&ck).unwrap_err().to_string();
+    assert!(err.contains("LR schedule"), "{err}");
+}

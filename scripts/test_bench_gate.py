@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Tests for scripts/bench_gate.py (run in CI: ``python3 scripts/test_bench_gate.py``).
+
+Covers the three behaviors the gate exists for:
+
+1. a step-latency regression beyond the tolerance fails the gate;
+2. a case present in the baseline but missing from the fresh results (a
+   bench that silently started skipping work) hard-fails;
+3. ``--update`` ratifies the fresh results as the new baseline, after
+   which the gate passes on them.
+
+Plus the supporting contracts: seeded (null-latency) baselines report
+instead of failing, byte-metadata growth beyond tolerance fails, and
+within-tolerance drift passes. Uses only the standard library so it runs
+in the same bare CI interpreter as the gate itself.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import copy
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_gate  # noqa: E402
+
+
+def bench_doc() -> dict:
+    """A minimal bench JSON in the harness schema."""
+    return {
+        "results": [
+            {
+                "name": "vit-micro/full/zero-off",
+                "iters": 1,
+                "mean_s": 0.100,
+                "p50_s": 0.100,
+                "p95_s": 0.110,
+                "units_per_s": 10.0,
+            },
+            {
+                "name": "vit-micro/full/zero-2",
+                "iters": 1,
+                "mean_s": 0.120,
+                "p50_s": 0.120,
+                "p95_s": 0.130,
+                "units_per_s": 8.3,
+            },
+        ],
+        "opt_state_bytes_per_worker": "1024",
+        "grad_bytes_per_worker": "512",
+        "model": "vit-micro",
+    }
+
+
+class GateHarness(unittest.TestCase):
+    def setUp(self) -> None:
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+        self.fresh_path = os.path.join(self.dir.name, "fresh.json")
+        self.base_path = os.path.join(self.dir.name, "baseline.json")
+
+    def write(self, path: str, doc: dict) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(doc, f)
+
+    def run_gate(self, *extra: str) -> tuple[int, str, str]:
+        """Run bench_gate.main() with patched argv; returns (exit code, stdout, stderr)."""
+        argv = [
+            "bench_gate.py",
+            "--fresh",
+            self.fresh_path,
+            "--baseline",
+            self.base_path,
+            *extra,
+        ]
+        out, err = io.StringIO(), io.StringIO()
+        old_argv = sys.argv
+        sys.argv = argv
+        try:
+            with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+                try:
+                    bench_gate.main()
+                    code = 0
+                except SystemExit as e:
+                    code = e.code if isinstance(e.code, int) else 1
+        finally:
+            sys.argv = old_argv
+        return code, out.getvalue(), err.getvalue()
+
+
+class TestToleranceBreach(GateHarness):
+    def test_latency_regression_beyond_tolerance_fails(self) -> None:
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["results"][0]["mean_s"] = 0.100 * 1.20  # +20% > default 15%
+        self.write(self.fresh_path, fresh)
+        code, _, err = self.run_gate()
+        self.assertEqual(code, 1)
+        self.assertIn("regressed", err)
+        self.assertIn("vit-micro/full/zero-off", err)
+
+    def test_within_tolerance_passes(self) -> None:
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["results"][0]["mean_s"] = 0.100 * 1.10  # +10% < 15%
+        self.write(self.fresh_path, fresh)
+        code, out, _ = self.run_gate()
+        self.assertEqual(code, 0, out)
+        self.assertIn("OK", out)
+
+    def test_tolerance_env_override_tightens_the_gate(self) -> None:
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["results"][0]["mean_s"] = 0.100 * 1.10
+        self.write(self.fresh_path, fresh)
+        os.environ["PRELORA_BENCH_TOL_PCT"] = "5"
+        self.addCleanup(os.environ.pop, "PRELORA_BENCH_TOL_PCT", None)
+        code, _, err = self.run_gate()
+        self.assertEqual(code, 1, "+10% must fail a 5% tolerance")
+        self.assertIn("tolerance 5%", err)
+
+    def test_byte_metadata_growth_beyond_tolerance_fails(self) -> None:
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["grad_bytes_per_worker"] = "2048"  # 4x the baseline 512
+        self.write(self.fresh_path, fresh)
+        code, _, err = self.run_gate()
+        self.assertEqual(code, 1)
+        self.assertIn("grad_bytes_per_worker", err)
+
+    def test_seeded_null_baseline_reports_but_passes(self) -> None:
+        base = bench_doc()
+        for m in base["results"]:
+            m["mean_s"] = None  # the shipped seeded baseline
+        self.write(self.base_path, base)
+        self.write(self.fresh_path, bench_doc())
+        code, out, _ = self.run_gate()
+        self.assertEqual(code, 0, out)
+        self.assertIn("no recorded latency", out)
+
+
+class TestVanishedCase(GateHarness):
+    def test_case_missing_from_fresh_hard_fails(self) -> None:
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        del fresh["results"][1]  # the bench "started skipping" zero-2
+        self.write(self.fresh_path, fresh)
+        code, _, err = self.run_gate()
+        self.assertEqual(code, 1)
+        self.assertIn("missing from fresh results", err)
+        self.assertIn("vit-micro/full/zero-2", err)
+
+    def test_new_case_is_a_note_not_a_failure(self) -> None:
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["results"].append(dict(fresh["results"][0], name="vit-micro/new-case"))
+        self.write(self.fresh_path, fresh)
+        code, out, _ = self.run_gate()
+        self.assertEqual(code, 0, out)
+        self.assertIn("new case", out)
+
+
+class TestUpdateRatification(GateHarness):
+    def test_update_rewrites_baseline_then_gate_passes(self) -> None:
+        # a fresh file that would fail against the old baseline...
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["results"][0]["mean_s"] = 0.200
+        self.write(self.fresh_path, fresh)
+        code, _, err = self.run_gate()
+        self.assertEqual(code, 1, "sanity: the regression must fail pre-update")
+
+        # ...is ratified by --update...
+        code, out, _ = self.run_gate("--update")
+        self.assertEqual(code, 0, out)
+        self.assertIn("updated", out)
+        with open(self.base_path, encoding="utf-8") as f:
+            ratified = json.load(f)
+        self.assertEqual(ratified["results"][0]["mean_s"], 0.200)
+
+        # ...after which the same fresh results gate green
+        code, out, _ = self.run_gate()
+        self.assertEqual(code, 0, out)
+
+    def test_update_does_not_read_the_old_baseline(self) -> None:
+        # ratifying must work even when no baseline exists yet
+        self.write(self.fresh_path, bench_doc())
+        self.assertFalse(os.path.exists(self.base_path))
+        code, out, _ = self.run_gate("--update")
+        self.assertEqual(code, 0, out)
+        self.assertTrue(os.path.exists(self.base_path))
+
+
+class TestMalformedInput(GateHarness):
+    def test_non_bench_json_is_rejected(self) -> None:
+        self.write(self.fresh_path, {"not": "a bench file"})
+        self.write(self.base_path, bench_doc())
+        code, _, _ = self.run_gate()
+        self.assertNotEqual(code, 0)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
