@@ -4,8 +4,9 @@
 //! pass after the base is frozen. This bench measures exactly that at the
 //! step level: full_grads vs warmup_grads vs lora_grads vs eval, on every
 //! model with built artifacts. Expect lora < full < warmup. Also measures
-//! the staged pipeline vs the serial loop and ZeRO-1 optimizer-state
-//! sharding on vs off (same losses, ~1/N per-worker state).
+//! the staged pipeline vs the serial loop and the `dist::Strategy` sweep
+//! (ZeRO off / stage 1 / stage 2 / stage 3 — same losses, per-rank
+//! optimizer, gradient and parameter bytes shrinking stage by stage).
 //!
 //! Writes results/bench_step_latency.csv and the CI artifact
 //! results/BENCH_step_latency.json. `PRELORA_BENCH_SMOKE=1` runs one
@@ -15,6 +16,7 @@ use std::sync::Arc;
 
 use prelora::config::{PipelineConfig, TrainConfig};
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
+use prelora::dist::{self, ZeroStage};
 use prelora::dp::{Algorithm, GradEngine, StepMode};
 use prelora::manifest::{Manifest, ADAPTED_MODULES};
 use prelora::optim::ShardedOptimizer;
@@ -104,12 +106,16 @@ fn bench_pipeline(b: &mut Bench, name: &str) {
     let base = m.load_init_base().unwrap();
     let update = UpdateStage::new(tcfg.grad_clip);
     let units = (c.batch_size * workers * steps) as f64;
+    let strategy =
+        dist::strategy_for(ZeroStage::Off, workers, dist::collective_for(engine.algorithm()));
     let mut means = [0.0f64; 2];
     for enabled in [false, true] {
         let pcfg = PipelineConfig { enabled, prefetch_depth: 2, overlap_reduce: true };
-        let mut pipe = StepPipeline::new(&pcfg, engine.algorithm(), 1).unwrap();
-        let mut model =
-            ModelState::new(base.clone(), ShardedOptimizer::new(&tcfg, base.len(), 1));
+        let mut pipe = StepPipeline::new(&pcfg, strategy.clone()).unwrap();
+        let mut model = ModelState::new(
+            strategy.park_params(base.clone()),
+            strategy.optimizer(&tcfg, base.len()),
+        );
         let label = format!(
             "{name}/epoch_pipeline_{}",
             if enabled { "on" } else { "off" }
@@ -141,13 +147,15 @@ fn bench_pipeline(b: &mut Bench, name: &str) {
     );
 }
 
-/// ZeRO off vs stage 1 vs stage 2: one full-phase epoch at 2 workers.
-/// The claim is the memory one, not a speed one — losses are
-/// bit-identical across all three while per-worker optimizer state
-/// (stages 1+2) and per-worker gradient bytes (stage 2: terminal
-/// reduce-scatter) drop to ~1/workers (chunk-rounded). The per-rank
-/// `MemoryBreakdown` numbers are asserted and exported as bench metadata
-/// for the CI regression gate (`scripts/bench_gate.py`).
+/// The `dist::Strategy` sweep — ZeRO off vs stages 1/2/3: one full-phase
+/// epoch at 2 workers per strategy. The claim is the memory one, not a
+/// speed one — losses are bit-identical across all four while per-worker
+/// optimizer state (stages 1+), per-worker gradient bytes (stages 2+:
+/// terminal reduce-scatter) and per-worker parameter bytes (stage 3:
+/// owned partitions, per-step gathered view) drop to ~1/workers
+/// (chunk-rounded). The per-rank `MemoryBreakdown` numbers are asserted
+/// and exported as bench metadata for the CI regression gate
+/// (`scripts/bench_gate.py`).
 fn bench_zero(b: &mut Bench, name: &str) {
     let dir = std::path::Path::new("artifacts").join(name);
     let Ok(m) = Manifest::load(&dir) else {
@@ -175,27 +183,25 @@ fn bench_zero(b: &mut Bench, name: &str) {
     let base = m.load_init_base().unwrap();
     let update = UpdateStage::new(tcfg.grad_clip);
     let units = (c.batch_size * workers * steps) as f64;
-    // modes: ZeRO off, stage 1 (optimizer state), stage 2 (+ gradients)
-    let mut losses = [0.0f64; 3];
-    for (mode, stage) in [None, Some(1u8), Some(2u8)].into_iter().enumerate() {
-        tcfg.zero.enabled = stage.is_some();
-        if let Some(s) = stage {
-            tcfg.zero.stage = s;
-        }
-        let shards = tcfg.zero_shards();
-        let grad_parts = tcfg.zero_grad_parts();
+    let stages = [ZeroStage::Off, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3];
+    let mut losses = [0.0f64; 4];
+    for (i, stage) in stages.into_iter().enumerate() {
+        let strategy =
+            dist::strategy_for(stage, workers, dist::collective_for(engine.algorithm()));
         let pcfg = PipelineConfig { enabled: true, prefetch_depth: 2, overlap_reduce: true };
-        let mut pipe = StepPipeline::new(&pcfg, engine.algorithm(), grad_parts).unwrap();
+        let mut pipe = StepPipeline::new(&pcfg, strategy.clone()).unwrap();
         let label = match stage {
-            None => format!("{name}/epoch_zero_off"),
-            Some(s) => format!("{name}/epoch_zero_stage{s}"),
+            ZeroStage::Off => format!("{name}/epoch_zero_off"),
+            s => format!("{name}/epoch_zero_stage{s}"),
         };
         let mut last_loss = 0.0f64;
         b.run_units(&label, units, || {
             // fresh model per iteration: epoch 0 from init every mode, so
             // the recorded losses are directly comparable
-            let mut model =
-                ModelState::new(base.clone(), ShardedOptimizer::new(&tcfg, base.len(), shards));
+            let mut model = ModelState::new(
+                strategy.park_params(base.clone()),
+                strategy.optimizer(&tcfg, base.len()),
+            );
             let run = pipe
                 .run_epoch(
                     &mut engine,
@@ -211,26 +217,26 @@ fn bench_zero(b: &mut Bench, name: &str) {
                 .unwrap();
             last_loss = run.loss_sum;
         });
-        losses[mode] = last_loss;
+        losses[i] = last_loss;
     }
-    assert_eq!(losses[1], losses[0], "{name}: ZeRO stage 1 changed the losses");
-    assert_eq!(losses[2], losses[0], "{name}: ZeRO stage 2 changed the losses");
+    for (i, stage) in stages.iter().enumerate().skip(1) {
+        assert_eq!(losses[i], losses[0], "{name}: ZeRO stage {stage} changed the losses");
+    }
     let opt_total = ShardedOptimizer::new(&tcfg, base.len(), 1).state_bytes();
     let opt_per = ShardedOptimizer::new(&tcfg, base.len(), workers).per_worker_state_bytes();
-    // Measure the layout an actual stage-2 reduce produces — one explicit
-    // step through the terminal reduce-scatter — rather than asserting a
-    // formula against itself: if the reduce ever stopped scattering (fell
-    // back to a replicated Reduced::Full), grad_bytes_per_rank() would
-    // report the full buffer and these assertions would fail.
-    tcfg.zero.enabled = true;
-    tcfg.zero.stage = 2;
+    // Measure the layouts the actual strategies produce — one explicit
+    // step through the stage-2 terminal reduce-scatter and the stage-3
+    // parked parameter store — rather than asserting a formula against
+    // itself: if the strategy ever stopped scattering, these would fail.
+    let z2 = dist::strategy_for(
+        ZeroStage::Zero2,
+        workers,
+        dist::collective_for(engine.algorithm()),
+    );
     engine
         .submit(StepMode::Full, &base, None, loader.step_batches(&data, 0, 0))
         .unwrap();
-    let measured = engine
-        .collect()
-        .unwrap()
-        .reduce_sharded(engine.algorithm(), tcfg.zero_grad_parts());
+    let measured = z2.reduce_step(engine.collect().unwrap());
     let grad_per = measured.grad_bytes_per_rank();
     let grad_total = measured.grad_total_bytes();
     assert_eq!(grad_total, base.len() * 4, "{name}: full gradient footprint");
@@ -240,22 +246,36 @@ fn bench_zero(b: &mut Bench, name: &str) {
         "{name}: measured per-rank bytes must equal the partition formula \
          (the baseline.json metadata relies on it)"
     );
-    // the reported per-rank accounting, built from the measured layout
+    let z3 = dist::strategy_for(
+        ZeroStage::Zero3,
+        workers,
+        dist::collective_for(engine.algorithm()),
+    );
+    let parked = z3.park_params(base.clone());
+    let param_per = parked.per_rank_elems() * 4;
+    assert_eq!(
+        param_per,
+        base.len().div_ceil(workers) * 4,
+        "{name}: stage-3 per-rank parameter bytes must equal the partition formula"
+    );
+    // the reported per-rank accounting, built from the measured layouts
     let mem = MemoryBreakdown::new(
         base.len(),
         m.lora.size,
         base.len(),
+        (base.len() + m.lora.size) * 4,
         grad_per,
         grad_total,
         opt_per,
         opt_total,
     );
     println!(
-        "{name}: zero off/s1/s2 epoch loss {} / {} / {} ({}), opt {} B vs {} B/worker, grads {} B vs {} B/rank ({:.3}x, expect ~1/{workers})",
+        "{name}: zero off/s1/s2/s3 epoch loss {} / {} / {} / {} ({}), opt {} B vs {} B/worker, grads {} B vs {} B/rank, params {} B vs {} B/rank (expect ~1/{workers})",
         losses[0],
         losses[1],
         losses[2],
-        if losses[0] == losses[1] && losses[0] == losses[2] {
+        losses[3],
+        if losses.iter().all(|&l| l == losses[0]) {
             "bit-identical"
         } else {
             "MISMATCH"
@@ -264,7 +284,8 @@ fn bench_zero(b: &mut Bench, name: &str) {
         mem.optimizer_bytes,
         mem.grad_total_bytes,
         mem.grad_bytes,
-        mem.grad_bytes as f64 / mem.grad_total_bytes as f64,
+        base.len() * 4,
+        param_per,
     );
     assert!(
         opt_per as f64 <= opt_total as f64 / workers as f64 + 16.0,
@@ -278,6 +299,11 @@ fn bench_zero(b: &mut Bench, name: &str) {
         mem.grad_total_bytes,
     );
     assert!(mem.grad_bytes > 0, "{name}: gradient accounting vanished");
+    // the ZeRO-3 acceptance claim: param bytes per rank ~ param_total / N
+    assert!(
+        param_per as f64 <= (base.len() * 4) as f64 / workers as f64 + 8.0,
+        "{name}: per-rank parameter bytes {param_per} did not shrink to ~1/{workers}"
+    );
 }
 
 fn main() {
@@ -298,8 +324,9 @@ fn main() {
         ("models", models.clone()),
     ];
     // deterministic memory metadata for the CI regression gate: the
-    // per-rank vs total grad/opt bytes of a 2-worker ZeRO-2 vit-micro run
-    // (scripts/bench_gate.py compares them exactly against the baseline)
+    // per-rank vs total grad/opt/param bytes of a 2-worker vit-micro run
+    // under ZeRO stages 2 and 3 (scripts/bench_gate.py compares them
+    // exactly against the baseline)
     if let Ok(m) = Manifest::load(std::path::Path::new("artifacts").join("vit-micro")) {
         let workers = 2usize;
         let tcfg = TrainConfig::default();
@@ -311,6 +338,11 @@ fn main() {
             (m.base.size.div_ceil(workers) * 4).to_string(),
         ));
         meta.push(("zero_grad_total_bytes", (m.base.size * 4).to_string()));
+        meta.push((
+            "zero3_param_bytes_per_rank",
+            (m.base.size.div_ceil(workers) * 4).to_string(),
+        ));
+        meta.push(("zero_param_total_bytes", (m.base.size * 4).to_string()));
         meta.push(("zero_opt_bytes_per_worker", opt_per.to_string()));
         meta.push(("zero_opt_total_bytes", opt_total.to_string()));
     }

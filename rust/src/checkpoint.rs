@@ -7,9 +7,12 @@
 //! seed and per-epoch stats) followed by the raw little-endian payloads
 //! in header order: base, lora, adapter_cfg, each optimizer state buffer
 //! (all `f32`), then the trajectory's loss and per-module norm series
-//! (`f64`, bit-exact). Optimizer state is always written *gathered*
-//! (full-length buffers, shard-layout independent), so a checkpoint from
-//! an N-way ZeRO run restores onto any worker count. v1 files (no
+//! (`f64`, bit-exact). The payload is always written **gathered** — full
+//! parameter vectors and full-length optimizer state buffers, whatever
+//! `dist::Strategy` the saving run partitioned them with (parameters
+//! included: a ZeRO-3 run's owned partitions are all-gathered on save) —
+//! so files stay shard-layout independent and a checkpoint from an N-way
+//! sharded run restores onto any stage and worker count. v1 files (no
 //! optimizer state) and v2 files (no trajectory, no checksum) still load.
 //!
 //! Durability: `save` writes to a temp file in the destination directory
@@ -28,6 +31,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::config::OptimizerKind;
 use crate::convergence::ConvergenceReport;
 use crate::coordinator::Phase;
+use crate::dist::ZeroStage;
 use crate::optim::OptState;
 use crate::telemetry::NormSnapshot;
 use crate::trainer::EpochStats;
@@ -90,12 +94,14 @@ pub struct Checkpoint {
     /// unsharded). Metadata only: the payload is always gathered, and a
     /// restore re-scatters onto the restoring run's own layout.
     pub zero_shards: usize,
-    /// ZeRO stage of the saving run (1 = optimizer state sharded, 2 = +
-    /// gradient buffers; 1 also for unsharded runs). Metadata only, like
-    /// `zero_shards`: gradient shards are transient within a step and are
-    /// never checkpointed, so the payload is stage-independent. Absent in
-    /// files written before the stage knob existed — read as 1.
-    pub zero_stage: u8,
+    /// `dist::Strategy` stage of the saving run. Metadata only, like
+    /// `zero_shards`: gradient shards are transient within a step, and
+    /// parameters/optimizer state are gathered on save, so the payload is
+    /// stage-independent — a stage-3 file restores under stage 0 and vice
+    /// versa. Serialized as the `zero_stage` header integer; absent in
+    /// files written before the stage knob existed — read as stage 1
+    /// (those runs sharded at most the optimizer state).
+    pub stage: ZeroStage,
     /// Phase-machine / telemetry trajectory (v3). `None` in v1/v2 files:
     /// those restore parameters and optimizer state but replay phase
     /// detection from scratch.
@@ -358,11 +364,11 @@ impl Header {
             }
         };
         // strict range checks rather than clamping: no writer ever
-        // produced out-of-range values (save normalizes them), so an
-        // out-of-range read is corruption — and clamping would let a
-        // single-bit flip (e.g. stage '2' -> '3') round-trip to a
-        // canonical form identical to the original, slipping past the
-        // file checksum
+        // produced out-of-range values, so an out-of-range read is
+        // corruption — and clamping would let a corrupted byte round-trip
+        // to a canonical form identical to the original, slipping past
+        // the file checksum (in-range flips re-serialize faithfully and
+        // fail the checksum instead)
         let zero_shards = match v.get("zero_shards") {
             None => 1,
             Some(x) => {
@@ -372,12 +378,14 @@ impl Header {
             }
         };
         // absent in v1 files and in v2 files written before the stage
-        // knob; those runs sharded at most the optimizer state
+        // knob; those runs sharded at most the optimizer state. Files
+        // written before ZeRO-3 / the `dist` API carry 1 or 2; current
+        // files carry the full 0..=3 range (0 = unsharded)
         let zero_stage = match v.get("zero_stage") {
             None => 1,
             Some(x) => {
                 let s = x.as_usize()?;
-                ensure!((1..=2).contains(&s), "zero_stage must be 1 or 2, got {s}");
+                ensure!(s <= 3, "zero_stage must be 0..=3, got {s}");
                 s as u8
             }
         };
@@ -540,7 +548,7 @@ impl Checkpoint {
             adapter_cfg_len: self.adapter_cfg.as_ref().map_or(0, |v| v.len()),
             ranks: self.ranks.clone(),
             zero_shards: self.zero_shards.max(1),
-            zero_stage: self.zero_stage.clamp(1, 2),
+            zero_stage: self.stage.as_u8(),
             opt_base: self.opt_base.as_ref().map(OptDescriptor::of),
             opt_lora: self.opt_lora.as_ref().map(OptDescriptor::of),
             file_crc32: None,
@@ -744,7 +752,8 @@ impl Checkpoint {
             opt_base,
             opt_lora,
             zero_shards: header.zero_shards,
-            zero_stage: header.zero_stage,
+            stage: ZeroStage::from_usize(header.zero_stage as usize)
+                .map_err(|e| anyhow::anyhow!(e))?,
             trajectory,
         })
     }
@@ -770,7 +779,7 @@ mod tests {
             opt_base: None,
             opt_lora: None,
             zero_shards: 1,
-            zero_stage: 1,
+            stage: ZeroStage::Off,
             trajectory: None,
         }
     }
@@ -822,7 +831,7 @@ mod tests {
                 bufs: vec![vec![0.3; 6], vec![0.4; 6]],
             }),
             zero_shards: 4,
-            zero_stage: 2,
+            stage: ZeroStage::Zero2,
             trajectory: Some(TrajectoryState {
                 seed: u64::MAX - 12345, // beyond f64's exact-integer range
                 phase: Phase::Warmup { since_epoch: 3 },
@@ -860,7 +869,7 @@ mod tests {
         assert!(back.opt_base.is_none() && back.opt_lora.is_none());
         assert!(back.trajectory.is_none());
         assert_eq!(back.zero_shards, 1);
-        assert_eq!(back.zero_stage, 1);
+        assert_eq!(back.stage, ZeroStage::Off);
         std::fs::remove_file(p).unwrap();
     }
 
@@ -874,7 +883,7 @@ mod tests {
         assert_eq!(back.adapter_cfg.unwrap(), vec![1.0, 0.0, 4.0]);
         assert_eq!(back.ranks.unwrap(), vec![2, 4]);
         assert_eq!(back.zero_shards, 4);
-        assert_eq!(back.zero_stage, 2, "stage metadata must roundtrip");
+        assert_eq!(back.stage, ZeroStage::Zero2, "stage metadata must roundtrip");
         let ob = back.opt_base.unwrap();
         assert_eq!(ob.kind, OptimizerKind::AdamW);
         assert_eq!(ob.t, 9);
@@ -1008,7 +1017,7 @@ mod tests {
             assert!(back.trajectory.is_none(), "{}: pre-v3 files have no trajectory", case.name);
             if case.name == "v1-minimal" {
                 assert_eq!(back.zero_shards, 1);
-                assert_eq!(back.zero_stage, 1, "pre-stage files read as stage 1");
+                assert_eq!(back.stage, ZeroStage::Zero1, "pre-stage files read as stage 1");
             }
             std::fs::remove_file(p).unwrap();
         }

@@ -98,13 +98,16 @@ impl RunConfig {
             "train.pipeline.enabled" => t.pipeline.enabled = v.as_bool()?,
             "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
             "train.pipeline.overlap_reduce" => t.pipeline.overlap_reduce = v.as_bool()?,
-            "train.zero.enabled" => t.zero.enabled = v.as_bool()?,
+            // deprecated shim; the deprecation warning is surfaced once
+            // through TrainConfig::lint() (printed by `prelora train` at
+            // startup and by `prelora config-lint`), not at parse time —
+            // parsing happens in contexts that print lint anyway
+            "train.zero.enabled" => t.zero.enabled = Some(v.as_bool()?),
             "train.zero.stage" => {
-                let s = v.as_usize()?;
-                if s == 0 || s > 2 {
-                    bail!("train.zero.stage must be 1 or 2, got {s}");
-                }
-                t.zero.stage = s as u8;
+                t.zero.stage = Some(
+                    crate::dist::ZeroStage::from_usize(v.as_usize()?)
+                        .map_err(|e| anyhow::anyhow!("train.zero.stage: {e}"))?,
+                );
             }
             "prelora.enabled" => p.enabled = v.as_bool()?,
             "prelora.windows" => p.windows = v.as_usize()?,
@@ -176,9 +179,10 @@ impl RunConfig {
         s.push_str(&format!("enabled = {}\n", t.pipeline.enabled));
         s.push_str(&format!("prefetch_depth = {}\n", t.pipeline.prefetch_depth));
         s.push_str(&format!("overlap_reduce = {}\n\n", t.pipeline.overlap_reduce));
+        // canonical form only: the deprecated `enabled` shim is resolved
+        // into the stage it means, so re-emitted configs never carry it
         s.push_str("[train.zero]\n");
-        s.push_str(&format!("enabled = {}\n", t.zero.enabled));
-        s.push_str(&format!("stage = {}\n\n", t.zero.stage));
+        s.push_str(&format!("stage = {}\n\n", t.zero.effective_stage().as_u8()));
         s.push_str("[prelora]\n");
         s.push_str(&format!("enabled = {}\n", p.enabled));
         s.push_str(&format!("windows = {}\n", p.windows));
@@ -271,36 +275,59 @@ mod tests {
     }
 
     #[test]
-    fn zero_key_parses_and_roundtrips() {
+    fn deprecated_zero_enabled_key_still_means_stage_2() {
         let cfg =
             RunConfig::from_toml_str("[train.zero]\nenabled = true\n[train.dp]\nworkers = 4\n")
                 .unwrap();
-        assert!(cfg.train.zero.enabled);
-        assert_eq!(cfg.train.zero.stage, 2, "stage defaults to 2");
+        assert_eq!(cfg.train.zero.enabled, Some(true));
+        assert_eq!(
+            cfg.train.zero.effective_stage(),
+            crate::dist::ZeroStage::Zero2,
+            "legacy enable = stage 2"
+        );
         assert_eq!(cfg.train.zero_shards(), 4);
         assert_eq!(cfg.train.zero_grad_parts(), 4);
-        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
-        assert!(back.train.zero.enabled);
-        assert_eq!(back.train.zero.stage, 2);
+        // the canonical re-emission resolves the shim away
+        let text = cfg.to_toml();
+        assert!(!text.contains("enabled"), "deprecated key must not be re-emitted: {text}");
+        let back = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.train.zero.enabled, None);
+        assert_eq!(back.train.zero.effective_stage(), crate::dist::ZeroStage::Zero2);
         // off by default
-        assert!(!RunConfig::default().train.zero.enabled);
+        assert_eq!(RunConfig::default().train.zero.effective_stage(), crate::dist::ZeroStage::Off);
+        // the contradiction is rejected at validate
+        assert!(
+            RunConfig::from_toml_str("[train.zero]\nenabled = true\nstage = 0\n").is_err(),
+            "enabled = true + stage = 0 must be rejected"
+        );
     }
 
     #[test]
-    fn zero_stage_key_parses_and_validates() {
-        let cfg = RunConfig::from_toml_str(
-            "[train.zero]\nenabled = true\nstage = 1\n[train.dp]\nworkers = 4\n",
-        )
-        .unwrap();
-        assert_eq!(cfg.train.zero.stage, 1);
+    fn zero_stage_key_parses_the_full_range_and_roundtrips() {
+        use crate::dist::ZeroStage;
+        for (n, stage) in [
+            (0usize, ZeroStage::Off),
+            (1, ZeroStage::Zero1),
+            (2, ZeroStage::Zero2),
+            (3, ZeroStage::Zero3),
+        ] {
+            let cfg = RunConfig::from_toml_str(&format!(
+                "[train.zero]\nstage = {n}\n[train.dp]\nworkers = 4\n"
+            ))
+            .unwrap();
+            assert_eq!(cfg.train.zero.effective_stage(), stage);
+            let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+            assert_eq!(back.train.zero.effective_stage(), stage, "stage {n} must roundtrip");
+        }
+        let cfg = RunConfig::from_toml_str("[train.zero]\nstage = 1\n[train.dp]\nworkers = 4\n")
+            .unwrap();
         assert_eq!(cfg.train.zero_shards(), 4, "stage 1 shards optimizer state");
         assert_eq!(cfg.train.zero_grad_parts(), 1, "stage 1 keeps gradients replicated");
-        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
-        assert_eq!(back.train.zero.stage, 1);
-        assert!(
-            RunConfig::from_toml_str("[train.zero]\nstage = 3\n").is_err(),
-            "stage outside 1..=2 must be rejected"
-        );
+        let cfg = RunConfig::from_toml_str("[train.zero]\nstage = 3\n[train.dp]\nworkers = 4\n")
+            .unwrap();
+        assert_eq!(cfg.train.zero_param_parts(), 4, "stage 3 shards the parameters");
+        let err = RunConfig::from_toml_str("[train.zero]\nstage = 4\n").unwrap_err().to_string();
+        assert!(err.contains("ZeRO stage"), "stage outside 0..=3 must be rejected: {err}");
     }
 
     #[test]

@@ -102,35 +102,49 @@ impl Default for DpConfig {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ZeroConfig {
-    /// Shard training state across the data-parallel workers (ZeRO,
-    /// Rajbhandari et al.). Per-epoch losses stay bit-identical to the
-    /// replicated path for a fixed seed regardless of `stage` (the
-    /// reduce-scatter reuses the all-reduce summation schedule). A no-op
-    /// at `workers = 1`. Off by default.
-    pub enabled: bool,
-    /// Which state is sharded when `enabled`:
+    /// **Deprecated** legacy knob, kept only so old configs and the old
+    /// `--zero` flag still work: `true` means "shard at the default
+    /// stage 2" (exactly what it always meant), `false` forces sharding
+    /// off even when `stage` is set. Setting it is called out loudly by
+    /// [`TrainConfig::lint`] (printed at `prelora train` startup and by
+    /// `prelora config-lint`) — write `stage = 0|1|2|3` instead.
+    pub enabled: Option<bool>,
+    /// The canonical knob: which training state is sharded across the
+    /// data-parallel workers (ZeRO, Rajbhandari et al.; the
+    /// `dist::Strategy` the run is built with). Stages are cumulative:
     ///
-    /// * `1` — optimizer state only: gradients all-reduce to replicated
-    ///   full buffers, each worker holds AdamW moments for its owned
-    ///   contiguous partition (~1/workers of the total).
-    /// * `2` — optimizer state *and* gradient buffers: the reduce is a
-    ///   terminal reduce-scatter (no replicated mean-gradient vector is
-    ///   ever materialized), each worker keeps only its owned gradient
-    ///   partition, updates its parameter slice in place, and the
-    ///   replicated parameters are rebuilt by the all-gather the disjoint
-    ///   slice writes amount to. `MemoryBreakdown.grad_bytes` shrinks to
-    ///   ~1/workers of `grad_total_bytes`.
-    pub stage: u8,
+    /// * `0` — off: classic replicated DDP.
+    /// * `1` — optimizer state (~1/workers of the AdamW moments per rank).
+    /// * `2` — + gradient buffers: the reduce is a terminal
+    ///   reduce-scatter; each rank keeps only its owned gradient
+    ///   partition (`MemoryBreakdown.grad_bytes` ~ 1/workers).
+    /// * `3` — + the parameters themselves: each rank owns a contiguous
+    ///   partition, the full working view is all-gathered per step and
+    ///   dropped after the update (`MemoryBreakdown.param_bytes_per_rank`
+    ///   ~ 1/workers).
+    ///
+    /// Per-epoch losses stay bit-identical to the replicated path for a
+    /// fixed seed at every stage (the reduce-scatter reuses the
+    /// all-reduce summation schedule and the parameter gather is an exact
+    /// concatenation). A no-op at `workers = 1`. Off (`None`) by default.
+    pub stage: Option<crate::dist::ZeroStage>,
 }
 
-impl Default for ZeroConfig {
-    fn default() -> Self {
-        // stage 2 is the default for `enabled = true`: it is what the
-        // pre-`stage` `--zero` flag did (terminal reduce-scatter), so old
-        // configs keep their exact behavior
-        Self { enabled: false, stage: 2 }
+impl ZeroConfig {
+    /// Resolve the deprecated `enabled` shim and the `stage` knob into
+    /// the stage the run actually uses: `enabled = false` forces off,
+    /// `enabled = true` alone means the historical default (stage 2),
+    /// otherwise `stage` (off when neither is set).
+    pub fn effective_stage(&self) -> crate::dist::ZeroStage {
+        use crate::dist::ZeroStage;
+        match (self.enabled, self.stage) {
+            (Some(false), _) => ZeroStage::Off,
+            (Some(true), None) => ZeroStage::Zero2,
+            (_, Some(stage)) => stage,
+            (None, None) => ZeroStage::Off,
+        }
     }
 }
 
@@ -231,34 +245,95 @@ impl TrainConfig {
             .map_err(|e| anyhow::anyhow!(e))?;
         ensure!(self.pipeline.prefetch_depth >= 1, "pipeline.prefetch_depth >= 1");
         ensure!(
-            matches!(self.zero.stage, 1 | 2),
-            "zero.stage must be 1 (optimizer state) or 2 (+ gradients), got {}",
-            self.zero.stage
+            !(self.zero.enabled == Some(true)
+                && self.zero.stage == Some(crate::dist::ZeroStage::Off)),
+            "train.zero.enabled = true contradicts train.zero.stage = 0 — drop the deprecated \
+             enabled knob and set the stage you mean"
         );
         Ok(())
     }
 
-    /// Optimizer-state partition count the run's ZeRO setting implies:
-    /// one shard per data-parallel worker when sharding is on, a single
-    /// (unsharded) partition otherwise. Stages 1 and 2 both shard the
-    /// optimizer state.
+    /// Optimizer-state partition count the run's ZeRO stage implies: one
+    /// shard per data-parallel worker from stage 1 up, a single
+    /// (unsharded) partition otherwise.
     pub fn zero_shards(&self) -> usize {
-        if self.zero.enabled {
-            self.dp.workers
-        } else {
-            1
-        }
+        self.zero.effective_stage().opt_shards(self.dp.workers)
     }
 
-    /// Gradient-buffer partition count: one owned partition per worker at
-    /// ZeRO stage 2 (reduce-scatter is terminal), a single replicated
-    /// buffer otherwise (stage 1 or sharding off).
+    /// Gradient-buffer partition count: one owned partition per worker
+    /// from ZeRO stage 2 up (reduce-scatter is terminal), a single
+    /// replicated buffer otherwise.
     pub fn zero_grad_parts(&self) -> usize {
-        if self.zero.enabled && self.zero.stage >= 2 {
-            self.dp.workers
-        } else {
-            1
+        self.zero.effective_stage().grad_parts(self.dp.workers)
+    }
+
+    /// Parameter partition count: one owned partition per worker at ZeRO
+    /// stage 3, a single replicated vector otherwise.
+    pub fn zero_param_parts(&self) -> usize {
+        self.zero.effective_stage().param_parts(self.dp.workers)
+    }
+
+    /// Non-fatal configuration smells in the `train.zero.*` /
+    /// `train.pipeline.*` / `train.dp.*` blocks — surfaced by
+    /// `prelora config-lint` (and cheap enough to print anywhere) without
+    /// starting a run. Hard errors belong in [`validate`](Self::validate);
+    /// these are legal-but-probably-not-what-you-meant setups.
+    pub fn lint(&self) -> Vec<String> {
+        let mut warnings = Vec::new();
+        if self.zero.enabled.is_some() {
+            warnings.push(
+                "the legacy ZeRO enable knob (train.zero.enabled / --zero) is deprecated: \
+                 write train.zero.stage = 0|1|2|3 (or --zero-stage) instead — enabling keeps \
+                 its historical meaning, stage 2"
+                    .to_string(),
+            );
         }
+        if self.zero.enabled == Some(false)
+            && self.zero.stage.is_some_and(|s| s != crate::dist::ZeroStage::Off)
+        {
+            warnings.push(format!(
+                "train.zero.enabled = false overrides train.zero.stage = {} (legacy \
+                 precedence): sharding is OFF — drop the enabled knob if the stage is what \
+                 you mean",
+                self.zero.stage.unwrap()
+            ));
+        }
+        let stage = self.zero.effective_stage();
+        if stage != crate::dist::ZeroStage::Off && self.dp.workers == 1 {
+            warnings.push(format!(
+                "train.zero.stage = {stage} with train.dp.workers = 1: sharding degenerates to \
+                 the unsharded layout (nothing to partition across)"
+            ));
+        }
+        if stage != crate::dist::ZeroStage::Off && self.dp.workers > 64 {
+            warnings.push(format!(
+                "train.dp.workers = {} simulated ranks with sharding on: partitions get tiny \
+                 and chunk-rounding dominates the per-rank accounting",
+                self.dp.workers
+            ));
+        }
+        if self.pipeline.prefetch_depth > 16 {
+            warnings.push(format!(
+                "train.pipeline.prefetch_depth = {} buffers that many global steps of batches \
+                 ahead of compute — memory for no additional overlap beyond a small depth",
+                self.pipeline.prefetch_depth
+            ));
+        }
+        if !self.pipeline.enabled && self.pipeline.overlap_reduce {
+            warnings.push(
+                "train.pipeline.overlap_reduce has no effect with train.pipeline.enabled = \
+                 false (the serial reference loop reduces inline)"
+                    .to_string(),
+            );
+        }
+        if self.dp.workers > 1 && !self.dp.threaded {
+            warnings.push(format!(
+                "train.dp.workers = {} with train.dp.threaded = false runs every simulated \
+                 rank sequentially on the leader (deterministic debug mode, not a speedup)",
+                self.dp.workers
+            ));
+        }
+        warnings
     }
 
     fn train_batchable(&self) -> bool {
@@ -287,35 +362,92 @@ mod tests {
     }
 
     #[test]
-    fn zero_shards_follow_workers_only_when_enabled() {
+    fn zero_shards_follow_workers_only_when_sharding() {
+        use crate::dist::ZeroStage;
         let mut cfg = TrainConfig::default();
         cfg.dp.workers = 4;
-        assert_eq!(cfg.zero_shards(), 1, "off by default");
+        assert_eq!(cfg.zero.effective_stage(), ZeroStage::Off, "off by default");
+        assert_eq!(cfg.zero_shards(), 1);
         assert_eq!(cfg.zero_grad_parts(), 1);
-        cfg.zero.enabled = true;
+        assert_eq!(cfg.zero_param_parts(), 1);
+        // the deprecated knob keeps its historical meaning: stage 2
+        cfg.zero.enabled = Some(true);
+        assert_eq!(cfg.zero.effective_stage(), ZeroStage::Zero2);
         assert_eq!(cfg.zero_shards(), 4);
-        assert_eq!(cfg.zero_grad_parts(), 4, "default stage is 2");
+        assert_eq!(cfg.zero_grad_parts(), 4, "legacy enable means stage 2");
+        assert_eq!(cfg.zero_param_parts(), 1);
+        // enabled = false forces off even with a stage set
+        cfg.zero.enabled = Some(false);
+        cfg.zero.stage = Some(ZeroStage::Zero3);
+        assert_eq!(cfg.zero.effective_stage(), ZeroStage::Off);
+        cfg.validate().unwrap();
+        cfg.zero.enabled = None;
         cfg.dp.workers = 1;
         assert_eq!(cfg.zero_shards(), 1, "single worker: sharding degenerates");
         cfg.validate().unwrap();
     }
 
     #[test]
-    fn zero_stage_gates_gradient_sharding() {
+    fn zero_stage_gates_each_sharded_dimension() {
+        use crate::dist::ZeroStage;
         let mut cfg = TrainConfig::default();
         cfg.dp.workers = 4;
-        cfg.zero.enabled = true;
-        cfg.zero.stage = 1;
+        cfg.zero.stage = Some(ZeroStage::Zero1);
         cfg.validate().unwrap();
-        assert_eq!(cfg.zero_shards(), 4, "stage 1 still shards optimizer state");
+        assert_eq!(cfg.zero_shards(), 4, "stage 1 shards optimizer state");
         assert_eq!(cfg.zero_grad_parts(), 1, "stage 1 keeps gradients replicated");
-        cfg.zero.stage = 2;
+        assert_eq!(cfg.zero_param_parts(), 1);
+        cfg.zero.stage = Some(ZeroStage::Zero2);
         cfg.validate().unwrap();
         assert_eq!(cfg.zero_grad_parts(), 4);
-        for bad in [0u8, 3] {
-            cfg.zero.stage = bad;
-            assert!(cfg.validate().is_err(), "stage {bad} must be rejected");
-        }
+        assert_eq!(cfg.zero_param_parts(), 1, "stage 2 keeps parameters replicated");
+        cfg.zero.stage = Some(ZeroStage::Zero3);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.zero_shards(), 4);
+        assert_eq!(cfg.zero_grad_parts(), 4);
+        assert_eq!(cfg.zero_param_parts(), 4, "stage 3 shards the parameters");
+        // the contradiction is a hard error
+        cfg.zero.enabled = Some(true);
+        cfg.zero.stage = Some(ZeroStage::Off);
+        assert!(cfg.validate().is_err(), "enabled = true + stage = 0 must be rejected");
+    }
+
+    #[test]
+    fn lint_flags_degenerate_and_deprecated_setups() {
+        use crate::dist::ZeroStage;
+        let cfg = TrainConfig::default();
+        assert!(cfg.lint().is_empty(), "the default config must lint clean: {:?}", cfg.lint());
+        // deprecated knob
+        let mut cfg = TrainConfig::default();
+        cfg.zero.enabled = Some(true);
+        cfg.dp.workers = 2;
+        let w = cfg.lint();
+        assert!(w.iter().any(|m| m.contains("deprecated")), "{w:?}");
+        // sharding with one worker
+        let mut cfg = TrainConfig::default();
+        cfg.zero.stage = Some(ZeroStage::Zero3);
+        assert!(cfg.lint().iter().any(|m| m.contains("degenerates")), "{:?}", cfg.lint());
+        // the legacy knob silently overriding an explicit stage is called out
+        let mut cfg = TrainConfig::default();
+        cfg.zero.enabled = Some(false);
+        cfg.zero.stage = Some(ZeroStage::Zero3);
+        cfg.dp.workers = 2;
+        assert!(cfg.lint().iter().any(|m| m.contains("overrides")), "{:?}", cfg.lint());
+        // excessive prefetch + dead overlap knob + sequential workers
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.prefetch_depth = 64;
+        cfg.pipeline.enabled = false;
+        cfg.dp.workers = 4;
+        cfg.dp.threaded = false;
+        let w = cfg.lint();
+        assert!(w.iter().any(|m| m.contains("prefetch_depth")), "{w:?}");
+        assert!(w.iter().any(|m| m.contains("overlap_reduce")), "{w:?}");
+        assert!(w.iter().any(|m| m.contains("sequentially")), "{w:?}");
+        // lint never reports on valid sharded multi-worker runs
+        let mut cfg = TrainConfig::default();
+        cfg.zero.stage = Some(ZeroStage::Zero2);
+        cfg.dp.workers = 4;
+        assert!(cfg.lint().is_empty(), "{:?}", cfg.lint());
     }
 
     #[test]

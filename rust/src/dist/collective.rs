@@ -1,0 +1,155 @@
+//! The [`Collective`] trait: communication primitives strategies speak.
+//!
+//! Every operation carries a **bit contract** inherited from
+//! [`crate::dp::allreduce`]:
+//!
+//! * [`reduce_scatter`] chunks concatenate bit-for-bit to the
+//!   [`all_reduce`] output of the same inputs — the per-element summation
+//!   order is identical, only the final placement differs;
+//! * [`all_gather`] is the exact inverse of the partition chunking (a
+//!   plain concatenation — no arithmetic, so no rounding);
+//! * [`sq_sum_in_order`] folds the chunks' squared elements in
+//!   chunk-then-element order, which is bitwise the f64 left fold over the
+//!   concatenated buffer (what keeps sharded gradient clipping identical
+//!   to the full-buffer clip);
+//! * [`broadcast`] replicates bytes verbatim.
+//!
+//! These contracts are what let a [`super::Strategy`] change *where*
+//! state lives without changing a single bit of the training trajectory.
+//!
+//! [`reduce_scatter`]: Collective::reduce_scatter
+//! [`all_reduce`]: Collective::all_reduce
+//! [`all_gather`]: Collective::all_gather
+//! [`sq_sum_in_order`]: Collective::sq_sum_in_order
+//! [`broadcast`]: Collective::broadcast
+
+use crate::dp::Algorithm;
+
+/// Communication backend for the distributed strategies. Object-safe;
+/// implementations must be shareable across the pipeline's stage threads.
+pub trait Collective: Send + Sync {
+    /// Human-readable backend name (logs, bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Elementwise mean of same-length buffers, returned replicated (the
+    /// classic DDP all-reduce). `None` for an empty buffer set.
+    fn all_reduce(&self, bufs: Vec<Vec<f32>>) -> Option<Vec<f32>>;
+
+    /// Elementwise mean returned as `parts` owned contiguous chunks (the
+    /// [`crate::dp::partition`] layout) — the terminal op on the ZeRO-2/3
+    /// hot path: the input buffers are consumed and no replicated mean
+    /// vector is materialized. The chunks concatenate **bitwise** to the
+    /// [`all_reduce`](Self::all_reduce) output.
+    fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>>;
+
+    /// Reassemble the full vector from partition-ordered chunks (exact
+    /// concatenation; the step that builds the ZeRO-3 working view).
+    fn all_gather(&self, chunks: &[Vec<f32>]) -> Vec<f32> {
+        crate::dp::all_gather(chunks)
+    }
+
+    /// Replicate one buffer onto `ranks` ranks verbatim.
+    fn broadcast(&self, full: &[f32], ranks: usize) -> Vec<Vec<f32>> {
+        vec![full.to_vec(); ranks]
+    }
+
+    /// Ordered scalar reduction: fold the chunks' squared elements into
+    /// one f64 in chunk-then-element order — bitwise the accumulation
+    /// [`crate::tensor::sq_norm`] performs over the concatenation, which
+    /// is what keeps sharded clipping bit-identical to the full clip.
+    fn sq_sum_in_order(&self, chunks: &[Vec<f32>]) -> f64 {
+        crate::dp::sq_sum_in_order(chunks)
+    }
+}
+
+/// The stock collective: the in-memory naive / tree / ring summation
+/// schedules of [`crate::dp::allreduce`], unchanged. A real multi-host
+/// backend would implement [`Collective`] over NCCL/RCCL instead; the
+/// trait is the seam (`docs/dist-api.md` § Adding a backend).
+pub struct AlgoCollective {
+    alg: Algorithm,
+}
+
+impl AlgoCollective {
+    pub fn new(alg: Algorithm) -> Self {
+        Self { alg }
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.alg
+    }
+}
+
+impl Collective for AlgoCollective {
+    fn name(&self) -> &'static str {
+        self.alg.as_str()
+    }
+
+    fn all_reduce(&self, bufs: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+        crate::dp::reduce_owned(self.alg, bufs)
+    }
+
+    fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>> {
+        crate::dp::reduce_scatter(self.alg, bufs, parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::{reduce_owned, scatter};
+
+    fn bufs(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|w| (0..len).map(|i| ((w * 31 + i * 7) % 13) as f32 - 6.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn all_reduce_matches_dp_bitwise_per_algorithm() {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let c = AlgoCollective::new(alg);
+            assert_eq!(c.name(), alg.as_str());
+            assert_eq!(c.algorithm(), alg);
+            let want = reduce_owned(alg, bufs(5, 101)).unwrap();
+            assert_eq!(c.all_reduce(bufs(5, 101)).unwrap(), want, "{alg:?}");
+            assert!(c.all_reduce(Vec::new()).is_none());
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_concat_is_bitwise_all_reduce() {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let c = AlgoCollective::new(alg);
+            let want = c.all_reduce(bufs(3, 103)).unwrap();
+            for parts in [1usize, 2, 3, 5, 7] {
+                let chunks = c.reduce_scatter(bufs(3, 103), parts).unwrap();
+                assert_eq!(chunks.len(), parts);
+                assert_eq!(c.all_gather(&chunks), want, "{alg:?} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_inverts_scatter_and_broadcast_replicates() {
+        let c = AlgoCollective::new(Algorithm::Ring);
+        let full: Vec<f32> = (0..37).map(|i| i as f32 * 0.5 - 9.0).collect();
+        assert_eq!(c.all_gather(&scatter(&full, 5)), full);
+        let reps = c.broadcast(&full, 3);
+        assert_eq!(reps.len(), 3);
+        assert!(reps.iter().all(|r| r == &full));
+    }
+
+    #[test]
+    fn ordered_scalar_reduce_is_bitwise_the_full_fold() {
+        let c = AlgoCollective::new(Algorithm::Tree);
+        let full: Vec<f32> = (0..103).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.37).collect();
+        for parts in [1usize, 3, 5, 103] {
+            assert_eq!(
+                c.sq_sum_in_order(&scatter(&full, parts)),
+                crate::tensor::sq_norm(&full),
+                "parts={parts}"
+            );
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! `dist` — the single distributed-execution API.
+//!
+//! Everything the trainer knows about data-parallel sharding goes through
+//! two traits defined here:
+//!
+//! * [`Collective`] — the communication primitives (all-reduce,
+//!   reduce-scatter, all-gather, broadcast, the ordered scalar reduce).
+//!   The in-memory naive / tree / ring summation schedules from
+//!   [`crate::dp::allreduce`] are its stock implementation
+//!   ([`AlgoCollective`]), carrying their bitwise contracts unchanged: the
+//!   scattered chunks of a reduce-scatter concatenate bit-for-bit to the
+//!   all-reduce output, and the ordered scalar reduce folds exactly like
+//!   the full-buffer norm accumulation.
+//! * [`Strategy`] — an object-safe description of *which* training state
+//!   is partitioned across the data-parallel ranks and how the step
+//!   engine must route gradients, parameters and optimizer state through
+//!   that layout. The four stock strategies are the ZeRO stages
+//!   (Rajbhandari et al. 2020): [`Unsharded`], [`Zero1`] (optimizer
+//!   state), [`Zero2`] (+ gradient buffers) and [`Zero3`] (+ the
+//!   parameters themselves).
+//!
+//! Call sites — `Trainer`, the step pipeline, checkpoint save/restore,
+//! config, CLI and the benches — hold an `Arc<dyn Strategy>` and never
+//! branch on the stage. The *only* stage `match` in the crate is
+//! [`strategy_for`], and the only gradient-layout `match`es live in this
+//! module's defaults. PreLoRA's phase switches (Full -> Warmup ->
+//! LoraOnly) are delivered to the strategy as first-class
+//! [`Repartition`] events, not per-call-site special cases — the ReLoRA
+//! lesson that low-rank phases interleaved with resharding are the norm.
+//!
+//! **Bitwise contract.** For a fixed seed, every strategy produces
+//! bit-identical per-epoch losses, gradient norms and final parameters to
+//! [`Unsharded`] (asserted stage-by-stage in `rust/tests/integration.rs`
+//! and property-tested over odd worker counts in [`zero3`]). The layout
+//! changes *where* bytes live, never which additions happen in which
+//! order. See `docs/dist-api.md` for the full contract table.
+
+pub mod collective;
+pub mod model;
+pub mod strategy;
+pub mod zero3;
+
+pub use collective::{AlgoCollective, Collective};
+pub use model::{ModelState, ParamStore, Repartition};
+pub use strategy::{
+    clip_reduced, ParamSpace, ShardPlan, StateBytes, Strategy, Unsharded, Zero1, Zero2,
+};
+pub use zero3::Zero3;
+
+use std::str::FromStr;
+use std::sync::Arc;
+
+use crate::dp::Algorithm;
+
+/// The ZeRO sharding stage: which training state is partitioned across
+/// the data-parallel ranks. Stages are cumulative — each shard everything
+/// the previous one does, plus one more class of state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ZeroStage {
+    /// Classic DDP: everything replicated on every rank.
+    Off,
+    /// Optimizer state sharded (~1/N moments per rank).
+    Zero1,
+    /// + gradient buffers: the reduce is a terminal reduce-scatter.
+    Zero2,
+    /// + the parameters themselves: each rank owns a contiguous base-param
+    /// partition; the full working view is all-gathered per step and
+    /// dropped after the update.
+    Zero3,
+}
+
+impl ZeroStage {
+    /// Canonical config spelling (the `train.zero.stage` integer).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ZeroStage::Off => "0",
+            ZeroStage::Zero1 => "1",
+            ZeroStage::Zero2 => "2",
+            ZeroStage::Zero3 => "3",
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ZeroStage::Off => 0,
+            ZeroStage::Zero1 => 1,
+            ZeroStage::Zero2 => 2,
+            ZeroStage::Zero3 => 3,
+        }
+    }
+
+    pub fn from_usize(x: usize) -> Result<Self, String> {
+        match x {
+            0 => Ok(ZeroStage::Off),
+            1 => Ok(ZeroStage::Zero1),
+            2 => Ok(ZeroStage::Zero2),
+            3 => Ok(ZeroStage::Zero3),
+            other => Err(format!(
+                "ZeRO stage must be 0 (off), 1 (optimizer state), 2 (+ gradients) or 3 \
+                 (+ parameters), got {other}"
+            )),
+        }
+    }
+
+    /// Optimizer-state partition count at this stage (stages 1+).
+    pub fn opt_shards(self, workers: usize) -> usize {
+        if self >= ZeroStage::Zero1 {
+            workers.max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Gradient-buffer partition count at this stage (stages 2+: the
+    /// reduce-scatter is terminal).
+    pub fn grad_parts(self, workers: usize) -> usize {
+        if self >= ZeroStage::Zero2 {
+            workers.max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Parameter partition count at this stage (stage 3 only).
+    pub fn param_parts(self, workers: usize) -> usize {
+        if self >= ZeroStage::Zero3 {
+            workers.max(1)
+        } else {
+            1
+        }
+    }
+}
+
+impl std::fmt::Display for ZeroStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for ZeroStage {
+    type Err = String;
+
+    /// Case-insensitive: accepts the canonical integers plus the spelled
+    /// forms (`off`, `zero1` / `zero-1` / `stage1`, ...).
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "0" | "off" | "none" => Ok(ZeroStage::Off),
+            "1" | "zero1" | "zero-1" | "stage1" => Ok(ZeroStage::Zero1),
+            "2" | "zero2" | "zero-2" | "stage2" => Ok(ZeroStage::Zero2),
+            "3" | "zero3" | "zero-3" | "stage3" => Ok(ZeroStage::Zero3),
+            other => Err(format!(
+                "unknown ZeRO stage {other:?} (expected 0|1|2|3, or off/zero1/zero2/zero3)"
+            )),
+        }
+    }
+}
+
+/// The stock [`Collective`] over an in-memory all-reduce algorithm.
+pub fn collective_for(alg: Algorithm) -> Arc<dyn Collective> {
+    Arc::new(AlgoCollective::new(alg))
+}
+
+/// Construct the strategy for a stage. This is the one place in the crate
+/// that branches on [`ZeroStage`] — everywhere else dispatches through
+/// the [`Strategy`] trait object.
+pub fn strategy_for(
+    stage: ZeroStage,
+    workers: usize,
+    collective: Arc<dyn Collective>,
+) -> Arc<dyn Strategy> {
+    match stage {
+        ZeroStage::Off => Arc::new(Unsharded::new(workers, collective)),
+        ZeroStage::Zero1 => Arc::new(Zero1::new(workers, collective)),
+        ZeroStage::Zero2 => Arc::new(Zero2::new(workers, collective)),
+        ZeroStage::Zero3 => Arc::new(Zero3::new(workers, collective)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_display_roundtrips_case_insensitively() {
+        for stage in [ZeroStage::Off, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            assert_eq!(stage.to_string().parse::<ZeroStage>().unwrap(), stage);
+            assert_eq!(ZeroStage::from_usize(stage.as_u8() as usize).unwrap(), stage);
+        }
+        assert_eq!("OFF".parse::<ZeroStage>().unwrap(), ZeroStage::Off);
+        assert_eq!("Zero3".parse::<ZeroStage>().unwrap(), ZeroStage::Zero3);
+        assert_eq!("STAGE2".parse::<ZeroStage>().unwrap(), ZeroStage::Zero2);
+        let err = "4".parse::<ZeroStage>().unwrap_err();
+        assert!(err.contains("ZeRO stage"), "{err}");
+        assert!(ZeroStage::from_usize(7).is_err());
+    }
+
+    #[test]
+    fn stages_are_cumulative() {
+        let w = 4;
+        assert_eq!(ZeroStage::Off.opt_shards(w), 1);
+        assert_eq!(ZeroStage::Zero1.opt_shards(w), 4);
+        assert_eq!(ZeroStage::Zero1.grad_parts(w), 1);
+        assert_eq!(ZeroStage::Zero2.grad_parts(w), 4);
+        assert_eq!(ZeroStage::Zero2.param_parts(w), 1);
+        assert_eq!(ZeroStage::Zero3.param_parts(w), 4);
+        assert_eq!(ZeroStage::Zero3.opt_shards(w), 4);
+        assert_eq!(ZeroStage::Zero3.grad_parts(w), 4);
+        // a single worker degenerates every stage to the unsharded layout
+        assert_eq!(ZeroStage::Zero3.param_parts(1), 1);
+    }
+
+    #[test]
+    fn strategy_for_matches_stage() {
+        let c = collective_for(Algorithm::Tree);
+        for stage in [ZeroStage::Off, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            let s = strategy_for(stage, 3, c.clone());
+            assert_eq!(s.stage(), stage);
+            assert_eq!(s.workers(), 3);
+            assert_eq!(s.opt_shards(), stage.opt_shards(3));
+            assert_eq!(s.grad_parts(), stage.grad_parts(3));
+            assert_eq!(s.param_parts(), stage.param_parts(3));
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! Strategy-shaped parameter storage + the mutable model bundle.
+//!
+//! [`ParamStore`] is where a parameter vector *lives* under a
+//! [`super::Strategy`]: replicated on every rank (stages 0–2) or as owned
+//! contiguous per-rank partitions (ZeRO-3), in which case the full
+//! working view the forward/backward pass needs is **all-gathered per
+//! step** ([`ParamStore::materialize`]) and dropped again when the step's
+//! update lands — per-rank parameter memory is the owned partition, not
+//! the vector.
+//!
+//! **Bit contract.** The gathered view is the exact concatenation of the
+//! owned chunks (no arithmetic), and updates apply elementwise to the
+//! chunks — the identical per-element operations the replicated update
+//! performs on the full vector. Sharding parameters can therefore never
+//! change a loss; `rust/tests/integration.rs` and [`super::zero3`]'s
+//! property tests assert it bit-for-bit.
+
+use crate::config::TrainConfig;
+use crate::dp::Reduced;
+use crate::optim::ShardedOptimizer;
+use crate::rank::AdapterCfg;
+
+use super::collective::Collective;
+
+/// A flat parameter vector in its strategy-chosen layout.
+pub enum ParamStore {
+    /// Every rank holds the whole vector (the classic picture).
+    Replicated(Vec<f32>),
+    /// ZeRO-3: each rank owns one contiguous partition.
+    Sharded(ShardedParams),
+}
+
+/// The ZeRO-3 layout: owned chunks in [`crate::dp::partition`] order plus
+/// the transient gathered working view of the current step.
+pub struct ShardedParams {
+    chunks: Vec<Vec<f32>>,
+    /// Full working view, present only between [`ParamStore::materialize`]
+    /// and the step's update (which invalidates it). Deliberately *not*
+    /// counted by the per-rank memory accounting — it is the per-step
+    /// all-gather a real ZeRO-3 rank performs and frees.
+    view: Option<Vec<f32>>,
+}
+
+impl ParamStore {
+    pub fn replicated(full: Vec<f32>) -> Self {
+        ParamStore::Replicated(full)
+    }
+
+    /// Scatter a full vector into `parts` owned partitions.
+    pub fn sharded(full: Vec<f32>, parts: usize) -> Self {
+        ParamStore::Sharded(ShardedParams { chunks: crate::dp::scatter(&full, parts), view: None })
+    }
+
+    /// Total element count across the layout.
+    pub fn len(&self) -> usize {
+        match self {
+            ParamStore::Replicated(v) => v.len(),
+            ParamStore::Sharded(s) => s.chunks.iter().map(Vec::len).sum(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Partition count (1 when replicated).
+    pub fn parts(&self) -> usize {
+        match self {
+            ParamStore::Replicated(_) => 1,
+            ParamStore::Sharded(s) => s.chunks.len(),
+        }
+    }
+
+    /// Elements a single rank holds persistently: the whole vector when
+    /// replicated, the largest owned partition when sharded (the quantity
+    /// behind `MemoryBreakdown.param_bytes_per_rank`).
+    pub fn per_rank_elems(&self) -> usize {
+        match self {
+            ParamStore::Replicated(v) => v.len(),
+            ParamStore::Sharded(s) => s.chunks.iter().map(Vec::len).max().unwrap_or(0),
+        }
+    }
+
+    /// The slice rank `rank` owns: everything when replicated, its
+    /// partition when sharded.
+    pub fn owned_slice(&self, rank: usize) -> &[f32] {
+        match self {
+            ParamStore::Replicated(v) => v,
+            ParamStore::Sharded(s) => &s.chunks[rank],
+        }
+    }
+
+    /// Build the full working view if it does not exist (the per-step
+    /// parameter all-gather; a no-op for replicated storage or while a
+    /// valid view is cached — the chunks only change through
+    /// [`step_owned`](Self::step_owned), which drops the view).
+    pub fn materialize(&mut self, c: &dyn Collective) {
+        if let ParamStore::Sharded(s) = self {
+            if s.view.is_none() {
+                s.view = Some(c.all_gather(&s.chunks));
+            }
+        }
+    }
+
+    /// Drop the transient working view, if any (the "freed after
+    /// compute" half of the ZeRO-3 claim). Called by the update stage at
+    /// the end of every step for *every* store — a frozen base is never
+    /// stepped, so relying on the update to invalidate its view would
+    /// leave the full gather resident for the whole LoraOnly phase.
+    pub fn drop_view(&mut self) {
+        if let ParamStore::Sharded(s) = self {
+            s.view = None;
+        }
+    }
+
+    /// The full vector as a borrowed slice. Panics for a sharded store
+    /// whose view has not been [`materialize`](Self::materialize)d — a
+    /// step-engine sequencing bug, not a user error.
+    pub fn as_full(&self) -> &[f32] {
+        match self {
+            ParamStore::Replicated(v) => v,
+            ParamStore::Sharded(s) => s
+                .view
+                .as_deref()
+                .expect("sharded parameter view used before materialize()"),
+        }
+    }
+
+    /// The full vector without requiring a materialized view: borrows the
+    /// replicated vector (or a live view), gathers a fresh copy otherwise.
+    /// Telemetry convenience for the in-memory simulation (a rank-local
+    /// concatenation, like [`to_full`](Self::to_full)); the hot path uses
+    /// [`as_full`](Self::as_full) on a view materialized through the
+    /// [`Collective`].
+    pub fn full(&self) -> std::borrow::Cow<'_, [f32]> {
+        match self {
+            ParamStore::Replicated(v) => std::borrow::Cow::Borrowed(v),
+            ParamStore::Sharded(s) => match &s.view {
+                Some(v) => std::borrow::Cow::Borrowed(v),
+                None => std::borrow::Cow::Owned(crate::dp::all_gather(&s.chunks)),
+            },
+        }
+    }
+
+    /// Gather the authoritative full vector (layout-independent copy —
+    /// what checkpoints store). This is the **rank-local** concatenation;
+    /// the checkpoint path routes through
+    /// [`to_full_via`](Self::to_full_via) so a real backend's gather
+    /// traffic goes through the [`Collective`] seam.
+    pub fn to_full(&self) -> Vec<f32> {
+        match self {
+            ParamStore::Replicated(v) => v.clone(),
+            ParamStore::Sharded(s) => crate::dp::all_gather(&s.chunks),
+        }
+    }
+
+    /// [`to_full`](Self::to_full) through a collective: the gather that
+    /// actually moves shards between ranks on a real backend
+    /// (checkpoint export — `Strategy::export_params` — uses this).
+    pub fn to_full_via(&self, c: &dyn Collective) -> Vec<f32> {
+        match self {
+            ParamStore::Replicated(v) => v.clone(),
+            ParamStore::Sharded(s) => c.all_gather(&s.chunks),
+        }
+    }
+
+    /// Overwrite from a full vector (checkpoint restore): copies in place
+    /// for replicated storage, re-scatters onto the owned partitions (and
+    /// drops any stale view) otherwise. Lengths must already agree.
+    /// Deliberately rank-local — the checkpoint buffer is already present
+    /// at the restoring reader, and taking one's own slice of it involves
+    /// no communication on any backend.
+    pub fn copy_from_full(&mut self, full: &[f32]) {
+        assert_eq!(full.len(), self.len(), "parameter length mismatch");
+        match self {
+            ParamStore::Replicated(v) => v.copy_from_slice(full),
+            ParamStore::Sharded(s) => {
+                let parts = s.chunks.len();
+                s.chunks = crate::dp::scatter(full, parts);
+                s.view = None;
+            }
+        }
+    }
+
+    /// Apply one optimizer update in this layout. Replicated storage
+    /// steps through [`ShardedOptimizer::step_reduced`] (which itself
+    /// dispatches on the gradient layout); owned partitions step
+    /// shard-by-shard and then drop the working view — the "params are
+    /// freed after compute" half of the ZeRO-3 claim.
+    pub fn step_owned(&mut self, opt: &mut ShardedOptimizer, g: &Reduced, lr: f32) {
+        match self {
+            ParamStore::Replicated(v) => opt.step_reduced(v, g, lr),
+            ParamStore::Sharded(s) => {
+                match g {
+                    Reduced::Sharded(gchunks) => {
+                        assert_eq!(
+                            gchunks.len(),
+                            s.chunks.len(),
+                            "gradient partition count must match the parameter partition"
+                        );
+                        for (i, (p, gc)) in s.chunks.iter_mut().zip(gchunks).enumerate() {
+                            opt.step_shard(i, p, gc, lr);
+                        }
+                    }
+                    Reduced::Full(gfull) => {
+                        // replicated gradient onto owned partitions: slice
+                        // per chunk — elementwise identical either way
+                        let mut at = 0;
+                        for (i, p) in s.chunks.iter_mut().enumerate() {
+                            let gc = &gfull[at..at + p.len()];
+                            at += p.len();
+                            opt.step_shard(i, p, gc, lr);
+                        }
+                        assert_eq!(at, gfull.len(), "gradient length mismatch");
+                    }
+                }
+                s.view = None;
+            }
+        }
+    }
+}
+
+/// A phase-switch re-partition event. PreLoRA changes the trainable
+/// parameter layout mid-run; strategies are told through these events so
+/// resharding is a first-class API operation, not a per-call-site special
+/// case (the ReLoRA lesson — low-rank phases interleaved with resharding
+/// events are the norm).
+pub enum Repartition {
+    /// The warmup switch: a freshly initialized adapter space enters
+    /// training and needs storage + optimizer state in this strategy's
+    /// layout (partitioned over the *adapter* vector's length — shard
+    /// layouts re-derive per space, they are never shared across spaces).
+    AdaptersInit { lora: Vec<f32>, adapter_cfg: AdapterCfg },
+    /// The freeze: the base stops training and sheds its optimizer state
+    /// entirely (the paper's memory saving made literal). Its parameters
+    /// keep their layout — a frozen ZeRO-3 base still materializes per
+    /// step for the forward pass.
+    FreezeBase,
+}
+
+/// The mutable model the update stage advances: strategy-shaped parameter
+/// stores plus their (possibly ZeRO-sharded) optimizers. `lora` /
+/// `adapter_cfg` / `opt_lora` appear at the warmup switch via
+/// [`Repartition::AdaptersInit`]; `opt_base` is dropped at the freeze.
+pub struct ModelState {
+    pub base: ParamStore,
+    pub lora: Option<ParamStore>,
+    pub adapter_cfg: Option<AdapterCfg>,
+    pub opt_base: Option<ShardedOptimizer>,
+    pub opt_lora: Option<ShardedOptimizer>,
+}
+
+impl ModelState {
+    pub fn new(base: ParamStore, opt_base: ShardedOptimizer) -> Self {
+        Self { base, lora: None, adapter_cfg: None, opt_base: Some(opt_base), opt_lora: None }
+    }
+
+    /// The full base-parameter view for the engine. Requires a
+    /// materialized view under ZeRO-3 (see [`ParamStore::as_full`]).
+    pub fn base_view(&self) -> &[f32] {
+        self.base.as_full()
+    }
+
+    /// The `(lora_params, adapter_cfg)` input pair for the engine, present
+    /// only once both halves exist. Same materialization requirement as
+    /// [`base_view`](Self::base_view).
+    pub fn lora_pair(&self) -> Option<(&[f32], &[f32])> {
+        match (&self.lora, &self.adapter_cfg) {
+            (Some(l), Some(a)) => Some((l.as_full(), a.values.as_slice())),
+            _ => None,
+        }
+    }
+
+    /// Drop every store's transient working view (the per-step gathered
+    /// parameters under ZeRO-3). The update stage calls this at the end
+    /// of each step and the trainer after evaluation, so the gathered
+    /// full vectors never outlive the computation that needed them —
+    /// even for stores the step did not update (the frozen base).
+    pub fn drop_views(&mut self) {
+        self.base.drop_view();
+        if let Some(l) = self.lora.as_mut() {
+            l.drop_view();
+        }
+    }
+
+    /// Freeze the base: drop its optimizer state entirely (the paper's
+    /// memory saving made literal) — the controller's FreezeBase
+    /// decision, delivered through [`Repartition::FreezeBase`].
+    /// Checkpoint restores reach the same end state differently: they
+    /// clear *both* optimizers and rebuild whichever states the
+    /// checkpoint carries, so a lora-only restore leaves `opt_base` at
+    /// `None` without going through this transition.
+    pub fn freeze_base(&mut self) {
+        self.opt_base = None;
+    }
+}
+
+/// Build the configured optimizer partitioned `shards` ways (the helper
+/// [`super::Strategy::optimizer`] routes through).
+pub fn build_optimizer(cfg: &TrainConfig, len: usize, shards: usize) -> ShardedOptimizer {
+    ShardedOptimizer::new(cfg, len, shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::dist::collective_for;
+    use crate::dp::{scatter, Algorithm};
+
+    fn vals(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.25).collect()
+    }
+
+    #[test]
+    fn sharded_store_roundtrips_and_accounts_per_rank() {
+        let full = vals(23);
+        let s = ParamStore::sharded(full.clone(), 5);
+        assert_eq!(s.len(), 23);
+        assert_eq!(s.parts(), 5);
+        assert!(!s.is_empty());
+        // ceil(23/5) = 5-wide chunks, ragged tail of 3
+        assert_eq!(s.per_rank_elems(), 5);
+        assert_eq!(s.to_full(), full);
+        assert_eq!(&s.full()[..], &full[..]);
+        assert_eq!(s.owned_slice(0), &full[..5]);
+        assert_eq!(s.owned_slice(4), &full[20..]);
+        let r = ParamStore::replicated(full.clone());
+        assert_eq!(r.parts(), 1);
+        assert_eq!(r.per_rank_elems(), 23);
+        assert_eq!(r.owned_slice(0), &full[..]);
+    }
+
+    #[test]
+    fn materialize_builds_the_view_and_step_drops_it() {
+        let c = collective_for(Algorithm::Naive);
+        let full = vals(17);
+        let mut s = ParamStore::sharded(full.clone(), 3);
+        s.materialize(&*c);
+        assert_eq!(s.as_full(), &full[..]);
+        // update through the owned chunks: bitwise the replicated update
+        let cfg = TrainConfig::default();
+        let g = vals(17);
+        let mut opt_s = ShardedOptimizer::new(&cfg, 17, 3);
+        let mut opt_r = ShardedOptimizer::new(&cfg, 17, 3);
+        let mut r = ParamStore::replicated(full.clone());
+        s.step_owned(&mut opt_s, &Reduced::Sharded(scatter(&g, 3)), 1e-3);
+        r.step_owned(&mut opt_r, &Reduced::Sharded(scatter(&g, 3)), 1e-3);
+        assert_eq!(s.to_full(), r.to_full(), "layouts diverged");
+        // the view was dropped by the update and regathers to the new values
+        s.materialize(&*c);
+        assert_eq!(s.as_full(), &r.to_full()[..]);
+    }
+
+    #[test]
+    fn full_gradient_onto_owned_partitions_is_bitwise_sharded() {
+        let cfg = TrainConfig::default();
+        let full = vals(29);
+        let g = vals(29);
+        let mut a = ParamStore::sharded(full.clone(), 4);
+        let mut b = ParamStore::sharded(full, 4);
+        let mut opt_a = ShardedOptimizer::new(&cfg, 29, 4);
+        let mut opt_b = ShardedOptimizer::new(&cfg, 29, 4);
+        a.step_owned(&mut opt_a, &Reduced::Full(g.clone()), 1e-3);
+        b.step_owned(&mut opt_b, &Reduced::Sharded(scatter(&g, 4)), 1e-3);
+        assert_eq!(a.to_full(), b.to_full());
+    }
+
+    #[test]
+    fn copy_from_full_rescatters_and_invalidates_the_view() {
+        let c = collective_for(Algorithm::Tree);
+        let mut s = ParamStore::sharded(vals(11), 2);
+        s.materialize(&*c);
+        let replacement: Vec<f32> = vec![7.5; 11];
+        s.copy_from_full(&replacement);
+        assert_eq!(s.to_full(), replacement);
+        s.materialize(&*c);
+        assert_eq!(s.as_full(), &replacement[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "materialize")]
+    fn unmaterialized_sharded_view_is_a_sequencing_bug() {
+        let s = ParamStore::sharded(vals(8), 2);
+        let _ = s.as_full();
+    }
+
+    #[test]
+    fn drop_views_clears_even_unstepped_stores() {
+        // the frozen-base case: a store that is never stepped must still
+        // shed its gathered view when the step ends, or the full vector
+        // stays resident for the whole LoraOnly phase
+        let c = collective_for(Algorithm::Ring);
+        let cfg = TrainConfig::default();
+        let mut model = ModelState::new(
+            ParamStore::sharded(vals(12), 3),
+            ShardedOptimizer::new(&cfg, 12, 3),
+        );
+        model.lora = Some(ParamStore::sharded(vals(5), 3));
+        model.base.materialize(&*c);
+        model.lora.as_mut().unwrap().materialize(&*c);
+        assert_eq!(model.base_view().len(), 12);
+        model.freeze_base();
+        model.drop_views();
+        // both views are gone; a fresh materialize rebuilds them
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = model.base_view();
+        }))
+        .is_err();
+        assert!(panicked, "the frozen base's view must have been dropped");
+        model.base.materialize(&*c);
+        assert_eq!(model.base_view().len(), 12);
+    }
+}

@@ -1,0 +1,518 @@
+//! The [`Strategy`] trait: one object-safe description of a distributed
+//! training layout, consumed by the trainer, the step pipeline, the
+//! checkpoint path and the benches — none of which branch on the stage.
+//!
+//! A strategy is fully characterized by three partition counts over the
+//! data-parallel ranks — optimizer shards, gradient parts, parameter
+//! parts — plus the [`Collective`] it communicates through. The provided
+//! method bodies here *are* the distributed step engine: every stock
+//! stage ([`Unsharded`], [`Zero1`], [`Zero2`], [`super::Zero3`]) only
+//! declares its counts, so a new strategy (or a real multi-host backend)
+//! overrides exactly what it changes. The gradient/parameter layout
+//! `match`es live in these defaults and in [`super::model`] — call sites
+//! see trait dispatch only.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::dp::{partition, GradResult, Reduced, StepOutputs};
+use crate::optim::ShardedOptimizer;
+
+use super::collective::Collective;
+use super::model::{ModelState, ParamStore, Repartition};
+use super::ZeroStage;
+
+/// A named flat parameter vector a strategy partitions (the base trunk,
+/// the LoRA adapter vector, ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpace {
+    pub name: &'static str,
+    pub len: usize,
+}
+
+impl ParamSpace {
+    pub fn new(name: &'static str, len: usize) -> Self {
+        Self { name, len }
+    }
+}
+
+/// How a strategy partitions one [`ParamSpace`]: contiguous per-rank
+/// bounds for each of the three sharded dimensions. A replicated
+/// dimension has a single `(0, len)` entry. All sharded dimensions use
+/// the one [`partition`] chunking, so gradient chunks, optimizer shards
+/// and owned parameter slices line up by construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub len: usize,
+    pub param_bounds: Vec<(usize, usize)>,
+    pub grad_bounds: Vec<(usize, usize)>,
+    pub opt_bounds: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    fn widest(bounds: &[(usize, usize)]) -> usize {
+        bounds.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0)
+    }
+
+    /// Parameter bytes a single rank holds persistently under this plan.
+    pub fn param_bytes_per_rank(&self) -> usize {
+        Self::widest(&self.param_bounds) * 4
+    }
+
+    /// Gradient bytes a single rank holds after the reduce.
+    pub fn grad_bytes_per_rank(&self) -> usize {
+        Self::widest(&self.grad_bounds) * 4
+    }
+
+    /// The rank whose optimizer shard owns element `i`.
+    pub fn opt_owner_of(&self, i: usize) -> usize {
+        self.opt_bounds
+            .iter()
+            .position(|&(lo, hi)| (lo..hi).contains(&i))
+            .expect("element index outside the parameter space")
+    }
+}
+
+/// Per-rank / total byte accounting of a live [`ModelState`] under a
+/// strategy (feeds `MemoryBreakdown`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateBytes {
+    /// Parameter bytes a single rank holds persistently (owned partitions
+    /// under ZeRO-3; the transient gathered view is not counted — it is
+    /// the per-step all-gather a real rank frees after the update).
+    pub param_bytes_per_rank: usize,
+    /// Parameter bytes across all partitions (the replicated footprint).
+    pub param_total_bytes: usize,
+    /// Optimizer state bytes a single rank holds (largest shard).
+    pub opt_bytes_per_rank: usize,
+    /// Optimizer state across all shards (the unsharded footprint).
+    pub opt_total_bytes: usize,
+}
+
+/// Clip a reduced gradient in place by global norm, returning the
+/// pre-clip norm. The replicated buffer goes through
+/// [`crate::tensor::clip_by_global_norm`]; the sharded layout assembles
+/// the *global* pre-clip norm from the chunks' squared sums through the
+/// collective's ordered scalar reduce — bitwise the full-buffer fold —
+/// then applies the identical `(max / norm) as f32` scale per element.
+/// `max <= 0` disables clipping (the norm is still measured).
+pub fn clip_reduced(c: &dyn Collective, g: &mut Reduced, max: f64) -> f64 {
+    match g {
+        Reduced::Full(v) => {
+            if max > 0.0 {
+                crate::tensor::clip_by_global_norm(v, max)
+            } else {
+                crate::tensor::l2_norm(v)
+            }
+        }
+        Reduced::Sharded(chunks) => {
+            let norm = c.sq_sum_in_order(chunks).sqrt();
+            if max > 0.0 && norm > max && norm > 0.0 {
+                let s = (max / norm) as f32;
+                for chunk in chunks.iter_mut() {
+                    crate::tensor::scale(chunk, s);
+                }
+            }
+            norm
+        }
+    }
+}
+
+/// An object-safe distributed-execution strategy. Implementations are
+/// shared across the pipeline's threads (`Send + Sync`) behind an
+/// `Arc<dyn Strategy>`.
+///
+/// **Contract.** For a fixed seed every strategy must produce
+/// bit-identical losses, gradient norms and parameters to [`Unsharded`]:
+/// [`grad_sync`](Self::grad_sync) may change the gradient's *layout* but
+/// not its values' summation order, [`step`](Self::step) must perform the
+/// elementwise optimizer update of exactly the owned slices, and
+/// [`export_params`](Self::export_params) /
+/// [`import_params`](Self::import_params) must gather/scatter without
+/// arithmetic so checkpoints stay shard-layout independent.
+pub trait Strategy: Send + Sync {
+    /// The ZeRO stage this strategy implements (metadata: checkpoints,
+    /// logs, bench labels).
+    fn stage(&self) -> ZeroStage;
+
+    /// Data-parallel ranks the layout partitions over.
+    fn workers(&self) -> usize;
+
+    /// The communication backend.
+    fn collective(&self) -> &dyn Collective;
+
+    /// Optimizer-state partition count.
+    fn opt_shards(&self) -> usize {
+        self.stage().opt_shards(self.workers())
+    }
+
+    /// Gradient-buffer partition count (`> 1` makes the reduce a terminal
+    /// reduce-scatter).
+    fn grad_parts(&self) -> usize {
+        self.stage().grad_parts(self.workers())
+    }
+
+    /// Parameter partition count (`> 1` = ZeRO-3 owned storage).
+    fn param_parts(&self) -> usize {
+        self.stage().param_parts(self.workers())
+    }
+
+    /// How this strategy partitions a parameter space. Layouts re-derive
+    /// per space length, which is what makes the phase switch's new
+    /// adapter vector re-partition automatically.
+    fn plan(&self, space: &ParamSpace) -> ShardPlan {
+        ShardPlan {
+            len: space.len,
+            param_bounds: partition(space.len, self.param_parts()),
+            grad_bounds: partition(space.len, self.grad_parts()),
+            opt_bounds: partition(space.len, self.opt_shards()),
+        }
+    }
+
+    /// Put a full parameter vector into this strategy's storage layout.
+    fn park_params(&self, full: Vec<f32>) -> ParamStore {
+        if self.param_parts() <= 1 {
+            ParamStore::replicated(full)
+        } else {
+            ParamStore::sharded(full, self.param_parts())
+        }
+    }
+
+    /// Build the configured optimizer over this strategy's shard layout
+    /// for a space of `len` elements.
+    fn optimizer(&self, cfg: &TrainConfig, len: usize) -> ShardedOptimizer {
+        super::model::build_optimizer(cfg, len, self.opt_shards())
+    }
+
+    /// Materialize the full working parameter views for the next step
+    /// (the ZeRO-3 per-step all-gather; a no-op for replicated storage).
+    fn materialize_params(&self, model: &mut ModelState) {
+        model.base.materialize(self.collective());
+        if let Some(l) = model.lora.as_mut() {
+            l.materialize(self.collective());
+        }
+    }
+
+    /// The parameter slice rank `rank` owns in `store`.
+    fn owned_slice<'a>(&self, store: &'a ParamStore, rank: usize) -> &'a [f32] {
+        store.owned_slice(rank)
+    }
+
+    /// Reduce one step's per-worker gradient buffers into this strategy's
+    /// layout: a replicated mean via the collective's all-reduce, or —
+    /// when gradients are sharded — a **terminal** reduce-scatter (the
+    /// input buffers are consumed, one owned partition per rank survives,
+    /// no replicated mean vector is ever materialized).
+    fn grad_sync(&self, bufs: Vec<Vec<f32>>) -> Option<Reduced> {
+        if self.grad_parts() <= 1 {
+            self.collective().all_reduce(bufs).map(Reduced::Full)
+        } else {
+            self.collective().reduce_scatter(bufs, self.grad_parts()).map(Reduced::Sharded)
+        }
+    }
+
+    /// [`grad_sync`](Self::grad_sync) over both of a step's buffer sets
+    /// (base + LoRA), scalars passed through.
+    fn reduce_step(&self, outs: StepOutputs) -> GradResult {
+        let StepOutputs { base_grads, lora_grads, loss, correct, samples, execute_seconds } = outs;
+        GradResult {
+            d_base: self.grad_sync(base_grads),
+            d_lora: self.grad_sync(lora_grads),
+            loss,
+            correct,
+            samples,
+            execute_seconds,
+        }
+    }
+
+    /// Clip one reduced gradient by global norm in place; returns the
+    /// pre-clip norm (see [`clip_reduced`]).
+    fn clip_grad(&self, g: &mut Reduced, max: f64) -> f64 {
+        clip_reduced(self.collective(), g, max)
+    }
+
+    /// Apply one optimizer update to a parameter store. Owned-partition
+    /// storage steps shard-by-shard and drops its working view; the
+    /// elementwise arithmetic is identical across layouts.
+    fn step(&self, opt: &mut ShardedOptimizer, store: &mut ParamStore, g: &Reduced, lr: f32) {
+        store.step_owned(opt, g, lr);
+    }
+
+    /// Gather a store's authoritative full vector (the checkpoint
+    /// representation — shard-layout independent by construction). Routed
+    /// through the collective: on a real backend this is the gather that
+    /// moves owned shards to the writer.
+    fn export_params(&self, store: &ParamStore) -> Vec<f32> {
+        store.to_full_via(self.collective())
+    }
+
+    /// Scatter a checkpointed full vector onto this strategy's layout.
+    fn import_params(&self, store: &mut ParamStore, full: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            full.len() == store.len(),
+            "parameter length mismatch: checkpoint {} vs store {}",
+            full.len(),
+            store.len()
+        );
+        store.copy_from_full(full);
+        Ok(())
+    }
+
+    /// Per-rank / total byte accounting of the live model under this
+    /// strategy.
+    fn state_bytes(&self, model: &ModelState) -> StateBytes {
+        let lora_per = model.lora.as_ref().map_or(0, ParamStore::per_rank_elems);
+        let lora_total = model.lora.as_ref().map_or(0, ParamStore::len);
+        let opt_per = model.opt_base.as_ref().map_or(0, |o| o.per_worker_state_bytes())
+            + model.opt_lora.as_ref().map_or(0, |o| o.per_worker_state_bytes());
+        let opt_total = model.opt_base.as_ref().map_or(0, |o| o.state_bytes())
+            + model.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
+        StateBytes {
+            param_bytes_per_rank: (model.base.per_rank_elems() + lora_per) * 4,
+            param_total_bytes: (model.base.len() + lora_total) * 4,
+            opt_bytes_per_rank: opt_per,
+            opt_total_bytes: opt_total,
+        }
+    }
+
+    /// Apply a phase-switch re-partition event: install freshly
+    /// initialized adapter storage + optimizer state in this strategy's
+    /// layout, or shed the frozen base's optimizer state. Invoked at the
+    /// epoch barrier only — every in-flight step has drained, so the
+    /// layout never changes mid-step.
+    fn repartition(&self, model: &mut ModelState, event: Repartition, cfg: &TrainConfig) {
+        match event {
+            Repartition::AdaptersInit { lora, adapter_cfg } => {
+                model.opt_lora = Some(self.optimizer(cfg, lora.len()));
+                model.lora = Some(self.park_params(lora));
+                model.adapter_cfg = Some(adapter_cfg);
+            }
+            Repartition::FreezeBase => model.freeze_base(),
+        }
+    }
+}
+
+/// Classic DDP: everything replicated (ZeRO off). The reference layout
+/// every other strategy must match bit-for-bit.
+pub struct Unsharded {
+    workers: usize,
+    collective: Arc<dyn Collective>,
+}
+
+impl Unsharded {
+    pub fn new(workers: usize, collective: Arc<dyn Collective>) -> Self {
+        Self { workers, collective }
+    }
+}
+
+impl Strategy for Unsharded {
+    fn stage(&self) -> ZeroStage {
+        ZeroStage::Off
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn collective(&self) -> &dyn Collective {
+        &*self.collective
+    }
+}
+
+/// ZeRO-1: optimizer state sharded (~1/N moments per rank); gradients and
+/// parameters stay replicated.
+pub struct Zero1 {
+    workers: usize,
+    collective: Arc<dyn Collective>,
+}
+
+impl Zero1 {
+    pub fn new(workers: usize, collective: Arc<dyn Collective>) -> Self {
+        Self { workers, collective }
+    }
+}
+
+impl Strategy for Zero1 {
+    fn stage(&self) -> ZeroStage {
+        ZeroStage::Zero1
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn collective(&self) -> &dyn Collective {
+        &*self.collective
+    }
+}
+
+/// ZeRO-2: optimizer state *and* gradient buffers sharded — the reduce is
+/// a terminal reduce-scatter, each rank keeps only its owned gradient
+/// partition and updates its parameter slice in place (the disjoint
+/// writes are the implicit parameter all-gather).
+pub struct Zero2 {
+    workers: usize,
+    collective: Arc<dyn Collective>,
+}
+
+impl Zero2 {
+    pub fn new(workers: usize, collective: Arc<dyn Collective>) -> Self {
+        Self { workers, collective }
+    }
+}
+
+impl Strategy for Zero2 {
+    fn stage(&self) -> ZeroStage {
+        ZeroStage::Zero2
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn collective(&self) -> &dyn Collective {
+        &*self.collective
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{collective_for, strategy_for};
+    use crate::dp::Algorithm;
+
+    fn bufs(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|w| (0..len).map(|i| ((w * 13 + i * 5) % 11) as f32 - 5.0).collect())
+            .collect()
+    }
+
+    fn strat(stage: ZeroStage, workers: usize) -> Arc<dyn Strategy> {
+        strategy_for(stage, workers, collective_for(Algorithm::Ring))
+    }
+
+    #[test]
+    fn grad_sync_layouts_gather_to_the_same_bits() {
+        let want = strat(ZeroStage::Off, 3).grad_sync(bufs(3, 101)).unwrap().into_full();
+        for stage in [ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            let got = strat(stage, 3).grad_sync(bufs(3, 101)).unwrap();
+            assert_eq!(
+                got.per_rank_elems(),
+                if stage >= ZeroStage::Zero2 { 34 } else { 101 },
+                "{stage:?}: per-rank gradient accounting"
+            );
+            assert_eq!(got.into_full(), want, "{stage:?} diverged from the all-reduce");
+        }
+        assert!(strat(ZeroStage::Zero2, 3).grad_sync(Vec::new()).is_none());
+    }
+
+    #[test]
+    fn plan_partitions_each_dimension_at_its_stage() {
+        let space = ParamSpace::new("base", 23);
+        let off = strat(ZeroStage::Off, 5).plan(&space);
+        assert_eq!(off.param_bounds, vec![(0, 23)]);
+        assert_eq!(off.grad_bounds, vec![(0, 23)]);
+        assert_eq!(off.opt_bounds, vec![(0, 23)]);
+        assert_eq!(off.param_bytes_per_rank(), 23 * 4);
+        let z3 = strat(ZeroStage::Zero3, 5).plan(&space);
+        assert_eq!(z3.param_bounds.len(), 5);
+        assert_eq!(z3.param_bounds, z3.opt_bounds, "owned slices line up with moments");
+        assert_eq!(z3.param_bounds, z3.grad_bounds, "and with gradient chunks");
+        // ceil(23/5) = 5-wide chunks
+        assert_eq!(z3.param_bytes_per_rank(), 5 * 4);
+        assert_eq!(z3.grad_bytes_per_rank(), 5 * 4);
+        assert_eq!(z3.opt_owner_of(0), 0);
+        assert_eq!(z3.opt_owner_of(22), 4);
+        let z1 = strat(ZeroStage::Zero1, 5).plan(&space);
+        assert_eq!(z1.param_bounds, vec![(0, 23)]);
+        assert_eq!(z1.grad_bounds, vec![(0, 23)]);
+        assert_eq!(z1.opt_bounds.len(), 5);
+    }
+
+    #[test]
+    fn clip_is_bitwise_identical_across_layouts() {
+        let g: Vec<f32> = (0..53).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.5).collect();
+        for max in [0.0f64, 1.0, 100.0] {
+            let full_strat = strat(ZeroStage::Off, 3);
+            let sharded_strat = strat(ZeroStage::Zero2, 3);
+            let mut gf = full_strat.grad_sync(vec![g.clone()]).unwrap();
+            let mut gs = sharded_strat.grad_sync(vec![g.clone()]).unwrap();
+            let nf = full_strat.clip_grad(&mut gf, max);
+            let ns = sharded_strat.clip_grad(&mut gs, max);
+            assert_eq!(nf.to_bits(), ns.to_bits(), "max={max}: norms diverged");
+            assert_eq!(gf.into_full(), gs.into_full(), "max={max}: clipped values diverged");
+        }
+    }
+
+    #[test]
+    fn park_export_import_roundtrip_per_stage() {
+        let full: Vec<f32> = (0..31).map(|i| i as f32 * 0.5 - 7.0).collect();
+        for stage in [ZeroStage::Off, ZeroStage::Zero2, ZeroStage::Zero3] {
+            let s = strat(stage, 4);
+            let mut store = s.park_params(full.clone());
+            assert_eq!(store.len(), 31);
+            assert_eq!(s.export_params(&store), full, "{stage:?}");
+            assert_eq!(s.owned_slice(&store, 0).len(), store.per_rank_elems());
+            let replacement: Vec<f32> = full.iter().map(|x| x * 2.0).collect();
+            s.import_params(&mut store, &replacement).unwrap();
+            assert_eq!(s.export_params(&store), replacement, "{stage:?}");
+            assert!(s.import_params(&mut store, &full[..7]).is_err(), "length must be checked");
+        }
+    }
+
+    #[test]
+    fn repartition_installs_adapters_and_sheds_the_frozen_base() {
+        let cfg = TrainConfig::default();
+        let s = strat(ZeroStage::Zero3, 3);
+        let mut model =
+            ModelState::new(s.park_params(vec![0.5; 20]), s.optimizer(&cfg, 20));
+        assert!(model.opt_base.is_some() && model.lora.is_none());
+        let acfg = crate::rank::AdapterCfg {
+            values: vec![1.0, 0.0],
+            ranks: vec![2],
+            trainable_params: 12,
+        };
+        s.repartition(
+            &mut model,
+            Repartition::AdaptersInit { lora: vec![0.25; 9], adapter_cfg: acfg },
+            &cfg,
+        );
+        let lora = model.lora.as_ref().unwrap();
+        assert_eq!(lora.len(), 9);
+        assert_eq!(lora.parts(), 3, "the adapter space re-partitions at its own length");
+        assert_eq!(model.opt_lora.as_ref().unwrap().shard_count(), 3);
+        assert!(model.adapter_cfg.is_some());
+        s.repartition(&mut model, Repartition::FreezeBase, &cfg);
+        assert!(model.opt_base.is_none(), "the frozen base keeps no optimizer state");
+        assert!(model.opt_lora.is_some());
+    }
+
+    #[test]
+    fn state_bytes_shrink_per_rank_with_the_stage() {
+        let cfg = TrainConfig::default();
+        let n = 10_000;
+        let full = vec![0.1f32; n];
+        let per = |stage: ZeroStage| {
+            let s = strat(stage, 4);
+            let model = ModelState::new(s.park_params(full.clone()), s.optimizer(&cfg, n));
+            s.state_bytes(&model)
+        };
+        let off = per(ZeroStage::Off);
+        assert_eq!(off.param_bytes_per_rank, off.param_total_bytes);
+        assert_eq!(off.opt_bytes_per_rank, off.opt_total_bytes);
+        let z1 = per(ZeroStage::Zero1);
+        assert_eq!(z1.param_bytes_per_rank, z1.param_total_bytes);
+        assert!(z1.opt_bytes_per_rank as f64 <= z1.opt_total_bytes as f64 / 4.0 + 16.0);
+        let z3 = per(ZeroStage::Zero3);
+        assert_eq!(z3.param_total_bytes, off.param_total_bytes, "total is layout-free");
+        assert!(
+            z3.param_bytes_per_rank as f64 <= z3.param_total_bytes as f64 / 4.0 + 16.0,
+            "ZeRO-3 per-rank params must shrink to ~1/N: {} vs {}",
+            z3.param_bytes_per_rank,
+            z3.param_total_bytes
+        );
+        assert!(z3.opt_bytes_per_rank as f64 <= z3.opt_total_bytes as f64 / 4.0 + 16.0);
+    }
+}

@@ -10,10 +10,14 @@
 //! split so the pipeline (`crate::pipeline`) can overlap its other stages
 //! with the workers' compute; `compute` is the one-shot wrapper. The
 //! all-reduce itself is implemented three ways (naive / tree / ring) and
-//! benchmarked in `benches/allreduce.rs`. For ZeRO-1 runs the same
-//! summation schedules drive [`reduce_scatter`]/[`all_gather`], whose
-//! scattered chunks concatenate bitwise to the all-reduce output (the
-//! [`Reduced`] layout contract).
+//! benchmarked in `benches/allreduce.rs`. The same summation schedules
+//! drive [`reduce_scatter`]/[`all_gather`], whose scattered chunks
+//! concatenate bitwise to the all-reduce output (the [`Reduced`] layout
+//! contract). The training stack consumes these primitives through
+//! `crate::dist` — the [`Collective`] trait wraps them unchanged, and the
+//! run's `Strategy` decides which layout each reduce produces.
+//!
+//! [`Collective`]: crate::dist::Collective
 
 pub mod allreduce;
 mod engine;

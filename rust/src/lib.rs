@@ -37,17 +37,27 @@
 //!   are busy.
 //! * **reduce** — `pipeline::ReduceStage`: with
 //!   `train.pipeline.overlap_reduce`, a warmup step's base gradients
-//!   all-reduce on the stage thread concurrently with its LoRA gradients
-//!   on the leader (a double-buffered accumulation pair). With
-//!   `train.zero.enabled` the stage reduce-*scatters* instead (ZeRO-1):
-//!   each worker keeps only its owned partition of the mean gradient.
+//!   sync on the stage thread concurrently with its LoRA gradients on
+//!   the leader (a double-buffered accumulation pair).
 //! * **update** — `pipeline::UpdateStage`: clip + optimizer step + per-step
 //!   pre-clip gradient-norm telemetry, shared by the pipelined and the
-//!   sequential (`train.pipeline.enabled = false`) paths. Under ZeRO the
-//!   optimizer is an `optim::ShardedOptimizer` — AdamW moments live only
-//!   on the owning worker (~1/N state per worker), and the shard updates
-//!   re-assemble the replicated parameter vector in place (the
-//!   all-gather), with bit-identical losses either way.
+//!   sequential (`train.pipeline.enabled = false`) paths.
+//!
+//! ## The distribution API
+//!
+//! Everything the stack knows about sharding lives behind the two traits
+//! in [`dist`]: [`dist::Collective`] (all-reduce / reduce-scatter /
+//! all-gather / broadcast over the naive / tree / ring schedules) and
+//! [`dist::Strategy`] — the object-safe layout description the trainer,
+//! pipeline, checkpoint path and benches dispatch through. The stock
+//! strategies are the ZeRO stages (`train.zero.stage = 0|1|2|3`):
+//! unsharded DDP, optimizer-state sharding, terminal gradient
+//! reduce-scatter, and full parameter sharding (each rank owns a
+//! contiguous partition; the working view is all-gathered per step and
+//! dropped after the update). Per-rank optimizer / gradient / parameter
+//! bytes shrink ~1/N stage by stage with bit-identical losses throughout;
+//! PreLoRA's phase switches reach the strategy as first-class
+//! `Repartition` events. See `docs/dist-api.md`.
 //!
 //! **Determinism contract:** for a fixed seed the two paths produce
 //! bit-identical per-epoch losses in every phase. Batches are pure
@@ -71,10 +81,12 @@
 //! println!("{}", summary.render());
 //! ```
 
+pub mod checkpoint;
 pub mod config;
 pub mod convergence;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod dp;
 pub mod manifest;
 pub mod optim;

@@ -39,11 +39,11 @@ fn train_flags() -> Args {
         .switch("no-pipeline", "run the serial reference loop instead of the step pipeline")
         .switch(
             "zero",
-            "shard optimizer state (and, at the default stage 2, gradient buffers) across workers: ~1/N state per worker, bit-identical losses",
+            "deprecated legacy switch: shard at the historical default (stage 2) unless the config file sets train.zero.stage — prefer --zero-stage",
         )
         .flag(
             "zero-stage",
-            "ZeRO stage: 1 = optimizer state only, 2 = + gradient buffers (implies --zero)",
+            "ZeRO stage: 0 = off, 1 = optimizer state, 2 = + gradient buffers, 3 = + parameters (each ~1/N per rank, bit-identical losses)",
         )
         .flag("seed", "run seed")
         .flag(
@@ -98,11 +98,18 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
         cfg.train.pipeline.enabled = false;
     }
     if a.get_switch("zero") {
-        cfg.train.zero.enabled = true;
+        // deprecated shim; run_training prints TrainConfig::lint()'s
+        // deprecation warning (which names both spellings) exactly once
+        cfg.train.zero.enabled = Some(true);
     }
-    if let Some(stage) = a.get_parsed::<u8>("zero-stage")? {
-        cfg.train.zero.enabled = true;
-        cfg.train.zero.stage = stage;
+    if let Some(stage) = a.get_parsed::<prelora::dist::ZeroStage>("zero-stage")? {
+        // an explicit CLI stage overrides the config file outright,
+        // including a legacy `train.zero.enabled = false` knob that would
+        // otherwise take precedence over the stage (old configs always
+        // carried the enabled line, and `--zero-stage 3` silently training
+        // unsharded would be the worst kind of surprise)
+        cfg.train.zero.enabled = None;
+        cfg.train.zero.stage = Some(stage);
     }
     if let Some(s) = a.get_parsed::<u64>("seed")? {
         cfg.seed = s;
@@ -120,6 +127,11 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
 fn run_training(raw: &[String], cmd: &str, enabled: bool) -> Result<()> {
     let a = train_flags().parse(cmd, raw)?;
     let mut cfg = build_config(&a, enabled)?;
+    // configuration smells (deprecated knobs, degenerate sharding setups)
+    // are loud at startup, not just under `prelora config-lint`
+    for w in cfg.train.lint() {
+        eprintln!("warning: {w}");
+    }
     let resume_path = a
         .get("resume")
         .map(str::to_string)
@@ -192,8 +204,10 @@ fn run_training(raw: &[String], cmd: &str, enabled: bool) -> Result<()> {
 }
 
 /// Surface the startup validation (`prelora.convergence_modules` against
-/// the manifest's telemetry set, plus the regular config checks) without
-/// starting a run — a misspelled module should cost seconds, not a
+/// the manifest's telemetry set, the regular config checks, and the
+/// `train.zero.*` / `train.pipeline.*` block lint — stage range, worker
+/// count vs. partition sanity) without starting a run — a misspelled
+/// module or a degenerate sharding setup should cost seconds, not a
 /// training job. Validates strictly even when the controller is disabled.
 fn config_lint(raw: &[String]) -> Result<()> {
     let a = Args::new()
@@ -208,14 +222,34 @@ fn config_lint(raw: &[String]) -> Result<()> {
     cfg.model = a.get_or("model", &cfg.model);
     cfg.artifacts_dir = a.get_or("artifacts-dir", &cfg.artifacts_dir);
     cfg.validate()?;
+    let mut warnings = cfg.train.lint();
     let manifest = Manifest::load(cfg.model_dir())?;
+    // partition sanity needs the manifest: more ranks than parameters
+    // means empty shards (legal — partition() pads — but never intended)
+    let stage = cfg.train.zero.effective_stage();
+    if stage != prelora::dist::ZeroStage::Off && cfg.train.dp.workers > manifest.base.size {
+        warnings.push(format!(
+            "train.dp.workers = {} exceeds the model's {} base parameters — most ranks would \
+             own empty partitions",
+            cfg.train.dp.workers, manifest.base.size
+        ));
+    }
     let modules = resolve_watch_modules(&cfg.prelora, &manifest, true)?;
+    for w in &warnings {
+        eprintln!("warning: {w}");
+    }
     println!(
-        "config ok: model {}, strategy {}, convergence test watches {} module(s): {}",
+        "config ok: model {}, zero stage {}, strategy {}, convergence test watches {} module(s): {}{}",
         cfg.model,
+        stage,
         cfg.prelora.strategy.as_str(),
         modules.len(),
-        modules.join(", ")
+        modules.join(", "),
+        if warnings.is_empty() {
+            String::new()
+        } else {
+            format!(" ({} warning(s))", warnings.len())
+        }
     );
     Ok(())
 }

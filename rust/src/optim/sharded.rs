@@ -20,8 +20,8 @@
 //! partition with the partition's gradient chunk performs exactly the
 //! per-element operations the unsharded optimizer would — sharded and
 //! unsharded training produce bit-identical parameters. A single shard
-//! (`shards == 1`) *is* the unsharded optimizer; the trainer uses that
-//! degenerate layout whenever `train.zero.enabled` is off.
+//! (`shards == 1`) *is* the unsharded optimizer; the unsharded
+//! `dist::Strategy` builds exactly that degenerate layout.
 
 use anyhow::{ensure, Result};
 
@@ -107,6 +107,21 @@ impl ShardedOptimizer {
             assert_eq!(chunk.len(), hi - lo, "gradient chunk does not match shard bounds");
             shard.step(&mut params[lo..hi], chunk, lr);
         }
+    }
+
+    /// Apply one update to a *single* shard: `params` and `grads` are the
+    /// shard's owned slices (ZeRO-3, where the parameters themselves live
+    /// as owned partitions and each rank steps only its own). Performs
+    /// exactly the per-element operations [`step_sharded`] performs for
+    /// that shard — callers step every shard each round so the lockstep
+    /// `steps()` counter stays meaningful.
+    ///
+    /// [`step_sharded`]: Self::step_sharded
+    pub fn step_shard(&mut self, shard: usize, params: &mut [f32], grads: &[f32], lr: f32) {
+        let (lo, hi) = self.bounds[shard];
+        assert_eq!(params.len(), hi - lo, "owned parameter slice does not match shard bounds");
+        assert_eq!(grads.len(), hi - lo, "gradient chunk does not match shard bounds");
+        self.shards[shard].step(params, grads, lr);
     }
 
     /// Total state bytes across all shards (= the unsharded footprint).
@@ -209,6 +224,26 @@ mod tests {
                 "workers={workers}: per-worker {per} vs total {total}"
             );
         }
+    }
+
+    #[test]
+    fn per_shard_steps_match_the_sharded_step_bitwise() {
+        // the ZeRO-3 entry point: stepping each shard's owned slices one
+        // by one equals one step_sharded call over the same chunks
+        let n = 103;
+        let cfg = TrainConfig::default();
+        let g = grads(n, 5);
+        let mut whole = ShardedOptimizer::new(&cfg, n, 3);
+        let mut piecewise = ShardedOptimizer::new(&cfg, n, 3);
+        let mut p1 = vec![0.3f32; n];
+        let mut p2_chunks = scatter(&p1, 3);
+        whole.step_sharded(&mut p1, &scatter(&g, 3), 1e-3);
+        for (i, (pc, gc)) in p2_chunks.iter_mut().zip(scatter(&g, 3)).enumerate() {
+            piecewise.step_shard(i, pc, &gc, 1e-3);
+        }
+        assert_eq!(p1, all_gather(&p2_chunks), "per-shard stepping diverged");
+        assert_eq!(whole.export_state(), piecewise.export_state());
+        assert_eq!(piecewise.steps(), 1, "all shards stepped keeps the counter in lockstep");
     }
 
     #[test]

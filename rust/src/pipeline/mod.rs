@@ -13,23 +13,31 @@
 //!   immediately after the step-*k* update and does its bookkeeping while
 //!   the workers are already busy;
 //! * **reduce** ([`ReduceStage`]) — a double-buffered accumulation pair:
-//!   with `overlap_reduce` on, the base-gradient all-reduce runs on the
-//!   stage thread concurrently with the LoRA-gradient reduce on the
-//!   leader (the warmup phase carries both buffers);
+//!   with `overlap_reduce` on, the base-gradient sync runs on the stage
+//!   thread concurrently with the LoRA-gradient sync on the leader (the
+//!   warmup phase carries both buffers);
 //! * **update** ([`UpdateStage`]) — clip + optimizer step + gradient-norm
 //!   telemetry, shared verbatim by the pipelined and the retained
 //!   sequential path.
 //!
+//! **Distribution.** Everything the pipeline knows about sharding goes
+//! through the run's [`Strategy`] (`crate::dist`): the reduce stage asks
+//! it for the gradient sync (replicated all-reduce or terminal
+//! reduce-scatter), the update stage routes clipping and the optimizer
+//! step through it, and each step begins by asking it to materialize the
+//! full parameter views (the ZeRO-3 per-step all-gather; a no-op for
+//! replicated storage). There is no stage-conditional branching here —
+//! the strategy *is* the layout.
+//!
 //! **Determinism contract.** With a fixed seed the pipelined loop produces
 //! bit-identical per-step losses and parameters to the sequential path:
 //! batches depend only on `(seed, epoch, step)`, worker outputs are
-//! reduced in worker order by the same [`reduce_mean`] summation schedule
+//! reduced in worker order by the strategy's one summation schedule
 //! regardless of which thread runs it, and updates apply in step order.
 //! Phase switches act as barriers — an epoch drains every in-flight step
-//! before the controller's decision can change the [`StepMode`], so the
-//! Full -> Warmup -> LoraOnly transition is deterministic.
-//!
-//! [`reduce_mean`]: crate::dp::reduce_mean
+//! before the controller's decision can change the [`StepMode`] or the
+//! shard layout, so the Full -> Warmup -> LoraOnly transition is
+//! deterministic.
 
 mod prefetch;
 mod reduce;
@@ -37,7 +45,11 @@ mod update;
 
 pub use prefetch::Prefetcher;
 pub use reduce::ReduceStage;
-pub use update::{ModelState, StepNorms, UpdateStage};
+pub use update::{StepNorms, UpdateStage};
+
+// The mutable model bundle lives with the distribution API now; re-export
+// the old path for existing callers.
+pub use crate::dist::ModelState;
 
 use std::sync::Arc;
 
@@ -45,7 +57,8 @@ use anyhow::Result;
 
 use crate::config::PipelineConfig;
 use crate::data::{Dataset, EpochLoader};
-use crate::dp::{Algorithm, GradEngine, StepMode};
+use crate::dist::Strategy;
+use crate::dp::{GradEngine, StepMode};
 use crate::telemetry::GradNormStats;
 
 /// Aggregated results of one epoch of training steps (either path).
@@ -77,28 +90,20 @@ impl EpochRun {
 /// The staged step driver. Owns the reduce stage's worker thread; the
 /// prefetch thread is per-epoch (it terminates when the epoch drains).
 ///
-/// `grad_parts > 1` switches the reduce stage to the ZeRO-2 terminal
-/// reduce-scatter: gradients arrive at the update stage as per-worker
-/// owned partitions (no replicated mean vector exists after the reduce)
-/// and each optimizer shard updates its parameter slice, rebuilding the
-/// replicas by the disjoint writes' implicit parameter all-gather (see
-/// [`UpdateStage`]/[`crate::optim::ShardedOptimizer`]).
-/// Bitwise-identical losses either way — the scattered chunks are the
-/// replicated vector. ZeRO-1 passes `grad_parts == 1` (replicated
-/// gradients, sharded optimizer state only); the gradient partition is
-/// re-derived per buffer length, so the LoRA buffer appearing at the
-/// phase switch re-partitions automatically.
+/// The driver is strategy-parameterized: gradient layout, parameter
+/// materialization and the optimizer routing all come from the
+/// [`Strategy`] it was built with, and are bitwise-equivalent across
+/// strategies by the `dist` contract.
 pub struct StepPipeline {
     cfg: PipelineConfig,
-    grad_parts: usize,
+    strategy: Arc<dyn Strategy>,
     reduce: ReduceStage,
 }
 
 impl StepPipeline {
-    pub fn new(cfg: &PipelineConfig, algorithm: Algorithm, grad_parts: usize) -> Result<Self> {
-        let grad_parts = grad_parts.max(1);
-        let reduce = ReduceStage::new(algorithm, cfg.enabled && cfg.overlap_reduce, grad_parts)?;
-        Ok(Self { cfg: cfg.clone(), grad_parts, reduce })
+    pub fn new(cfg: &PipelineConfig, strategy: Arc<dyn Strategy>) -> Result<Self> {
+        let reduce = ReduceStage::new(strategy.clone(), cfg.enabled && cfg.overlap_reduce)?;
+        Ok(Self { cfg: cfg.clone(), strategy, reduce })
     }
 
     /// Run one epoch of `steps` training steps in mode `mode`, dispatching
@@ -118,18 +123,7 @@ impl StepPipeline {
         lr: f32,
     ) -> Result<EpochRun> {
         if !self.cfg.enabled {
-            return Self::run_sequential_sharded(
-                engine,
-                loader,
-                data,
-                model,
-                update,
-                mode,
-                epoch,
-                steps,
-                lr,
-                self.grad_parts,
-            );
+            return self.run_sequential(engine, loader, data, model, update, mode, epoch, steps, lr);
         }
         let mut prefetch = Prefetcher::spawn(
             loader.clone(),
@@ -142,16 +136,21 @@ impl StepPipeline {
         // Prime the compute stage with step 0, then keep exactly one step
         // in flight: collect k, reduce k, update k, submit k+1, account k.
         // The accounting and the next prefetch overlap the workers' compute.
+        // Every submit is preceded by the strategy's parameter
+        // materialization — the per-step all-gather when parameters are
+        // sharded, free otherwise.
         let run = (|| -> Result<()> {
             if steps > 0 {
-                engine.submit(mode, &model.base, model.lora_pair(), prefetch.recv()?)?;
+                self.strategy.materialize_params(model);
+                engine.submit(mode, model.base_view(), model.lora_pair(), prefetch.recv()?)?;
             }
             for step in 0..steps {
                 let outs = engine.collect()?;
                 let mut r = self.reduce.reduce(outs)?;
-                let norms = update.apply(model, &mut r, lr)?;
+                let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
                 if step + 1 < steps {
-                    engine.submit(mode, &model.base, model.lora_pair(), prefetch.recv()?)?;
+                    self.strategy.materialize_params(model);
+                    engine.submit(mode, model.base_view(), model.lora_pair(), prefetch.recv()?)?;
                 }
                 out.ingest(&r, norms);
             }
@@ -165,14 +164,13 @@ impl StepPipeline {
         run.map(|()| out)
     }
 
-    /// The fully serial reference loop (pipeline disabled), with an
-    /// explicit gradient partition count (`grad_parts <= 1` = classic
-    /// replicated gradients; `> 1` = ZeRO-2 terminal reduce-scatter).
-    /// Shares the [`UpdateStage`] and the reduce summation schedule with
-    /// the pipelined path — this is the other half of the determinism
+    /// The fully serial reference loop (pipeline disabled). Shares the
+    /// [`UpdateStage`] and the strategy's gradient-sync schedule with the
+    /// pipelined path — this is the other half of the determinism
     /// contract.
     #[allow(clippy::too_many_arguments)]
-    pub fn run_sequential_sharded(
+    fn run_sequential(
+        &mut self,
         engine: &mut GradEngine,
         loader: &EpochLoader,
         data: &Arc<Dataset>,
@@ -182,16 +180,15 @@ impl StepPipeline {
         epoch: usize,
         steps: usize,
         lr: f32,
-        grad_parts: usize,
     ) -> Result<EpochRun> {
         let order = loader.epoch_order(data, epoch);
-        let algorithm = engine.algorithm();
         let mut out = EpochRun::default();
         for step in 0..steps {
             let batches = loader.step_batches_in(data, &order, step);
-            engine.submit(mode, &model.base, model.lora_pair(), batches)?;
-            let mut r = engine.collect()?.reduce_sharded(algorithm, grad_parts);
-            let norms = update.apply(model, &mut r, lr)?;
+            self.strategy.materialize_params(model);
+            engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
+            let mut r = self.strategy.reduce_step(engine.collect()?);
+            let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
             out.ingest(&r, norms);
         }
         Ok(out)

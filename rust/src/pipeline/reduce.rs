@@ -1,68 +1,67 @@
-//! Reduce stage: gradient all-reduce with optional cross-buffer overlap.
+//! Reduce stage: gradient synchronization with optional cross-buffer
+//! overlap.
 //!
 //! A step in the warmup phase carries two independent gradient buffers
 //! (base + LoRA). With overlap on, they reduce as a double-buffered pair:
 //! the base buffers go to the stage's worker thread while the leader
 //! reduces the LoRA buffers, so both accumulations are active at once and
 //! the warmup step's reduce critical path is max(base, lora) instead of
-//! base + lora. Each reduce runs the exact same [`reduce_mean`] summation
-//! schedule as the serial path — which thread executes it cannot change
-//! the bits (the determinism contract in the module docs).
+//! base + lora. Which thread runs a reduce cannot change the bits — both
+//! call the same [`Strategy::grad_sync`], which runs the collective's one
+//! summation schedule (the determinism contract in the module docs).
 //!
-//! With ZeRO-2 enabled (`grad_parts > 1`) the stage reduce-*scatters*
-//! instead, and the scatter is **terminal**: each worker keeps only its
-//! owned partition of the mean gradient ([`Reduced::Sharded`]), no
-//! replicated mean vector is materialized after the reduce, and the
-//! per-worker input buffers are consumed by it — per-rank gradient memory
-//! drops to ~1/parts. The scattered chunks concatenate bitwise to the
-//! replicated vector (see `dp::reduce_scatter`), so turning ZeRO on
-//! cannot change losses. At ZeRO-1 (`grad_parts == 1`) gradients stay
-//! replicated and only the optimizer state is sharded downstream.
+//! The *layout* the stage produces is the strategy's choice: a replicated
+//! mean under classic DDP / ZeRO-1, or — when the strategy shards
+//! gradients — a **terminal** reduce-scatter whose owned partitions are
+//! all that survives (no replicated mean vector is materialized and the
+//! per-worker input buffers are consumed), dropping per-rank gradient
+//! memory to ~1/N. Either way the result gathers bitwise to the
+//! all-reduce output, so the layout cannot change losses.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::dp::{Algorithm, GradResult, Reduced, StepOutputs};
+use crate::dist::Strategy;
+use crate::dp::{GradResult, Reduced, StepOutputs};
 
 /// Persistent reduce stage; the worker thread exists only when overlap is
 /// requested.
 pub struct ReduceStage {
-    algorithm: Algorithm,
-    /// Gradient partition count for the ZeRO-2 terminal reduce-scatter;
-    /// `<= 1` reduces to the replicated full vector.
-    grad_parts: usize,
+    strategy: Arc<dyn Strategy>,
     tx: Option<mpsc::Sender<Vec<Vec<f32>>>>,
     rx: Option<mpsc::Receiver<Option<Reduced>>>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ReduceStage {
-    pub fn new(algorithm: Algorithm, overlap: bool, grad_parts: usize) -> Result<Self> {
-        let grad_parts = grad_parts.max(1);
+    pub fn new(strategy: Arc<dyn Strategy>, overlap: bool) -> Result<Self> {
         if !overlap {
-            return Ok(Self { algorithm, grad_parts, tx: None, rx: None, join: None });
+            return Ok(Self { strategy, tx: None, rx: None, join: None });
         }
         let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
         let (out_tx, rx) = mpsc::channel::<Option<Reduced>>();
+        let stage_strategy = strategy.clone();
         let join = std::thread::Builder::new()
             .name("reduce-stage".into())
             .spawn(move || {
                 while let Ok(bufs) = job_rx.recv() {
-                    if out_tx.send(reduce_one(algorithm, bufs, grad_parts)).is_err() {
+                    if out_tx.send(stage_strategy.grad_sync(bufs)).is_err() {
                         break;
                     }
                 }
             })
             .context("spawning reduce-stage thread")?;
-        Ok(Self { algorithm, grad_parts, tx: Some(tx), rx: Some(rx), join: Some(join) })
+        Ok(Self { strategy, tx: Some(tx), rx: Some(rx), join: Some(join) })
     }
 
-    /// Reduce one step's worker outputs to mean gradients. Overlaps the
-    /// base reduce with the LoRA reduce when both are present and a stage
-    /// thread exists; otherwise defers to [`StepOutputs::reduce_sharded`]
-    /// — the serial path's epilogue — so the two can never diverge.
+    /// Reduce one step's worker outputs to mean gradients in the
+    /// strategy's layout. Overlaps the base reduce with the LoRA reduce
+    /// when both are present and a stage thread exists; otherwise defers
+    /// to [`Strategy::reduce_step`] — the serial path's epilogue — so the
+    /// two can never diverge.
     pub fn reduce(&mut self, outs: StepOutputs) -> Result<GradResult> {
         let (tx, rx) = match (&self.tx, &self.rx) {
             (Some(tx), Some(rx))
@@ -70,7 +69,7 @@ impl ReduceStage {
             {
                 (tx, rx)
             }
-            _ => return Ok(outs.reduce_sharded(self.algorithm, self.grad_parts)),
+            _ => return Ok(self.strategy.reduce_step(outs)),
         };
         let StepOutputs {
             base_grads,
@@ -82,20 +81,9 @@ impl ReduceStage {
         } = outs;
         tx.send(base_grads)
             .map_err(|_| anyhow!("reduce stage hung up"))?;
-        let d_lora = reduce_one(self.algorithm, lora_grads, self.grad_parts);
+        let d_lora = self.strategy.grad_sync(lora_grads);
         let d_base = rx.recv().map_err(|_| anyhow!("reduce stage died"))?;
         Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
-    }
-}
-
-/// Reduce one buffer set into the stage's configured layout. With
-/// `grad_parts > 1` the reduce-scatter is the terminal op: `bufs` is
-/// consumed, and only the owned partitions survive.
-fn reduce_one(algorithm: Algorithm, bufs: Vec<Vec<f32>>, grad_parts: usize) -> Option<Reduced> {
-    if grad_parts > 1 {
-        crate::dp::reduce_scatter(algorithm, bufs, grad_parts).map(Reduced::Sharded)
-    } else {
-        crate::dp::reduce_owned(algorithm, bufs).map(Reduced::Full)
     }
 }
 
@@ -112,6 +100,12 @@ impl Drop for ReduceStage {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::{collective_for, strategy_for, ZeroStage};
+    use crate::dp::Algorithm;
+
+    fn strat(stage: ZeroStage, workers: usize) -> Arc<dyn Strategy> {
+        strategy_for(stage, workers, collective_for(Algorithm::Tree))
+    }
 
     fn outs(base_workers: usize, lora_workers: usize, len: usize) -> StepOutputs {
         let buf = |w: usize| (0..len).map(|i| ((w * 13 + i * 5) % 11) as f32 - 5.0).collect();
@@ -128,8 +122,8 @@ mod tests {
     #[test]
     fn overlapped_reduce_is_bitwise_identical_to_inline() {
         for (nb, nl) in [(4usize, 4usize), (3, 3), (2, 0), (0, 5)] {
-            let mut overlapped = ReduceStage::new(Algorithm::Tree, true, 1).unwrap();
-            let mut inline = ReduceStage::new(Algorithm::Tree, false, 1).unwrap();
+            let mut overlapped = ReduceStage::new(strat(ZeroStage::Off, 4), true).unwrap();
+            let mut inline = ReduceStage::new(strat(ZeroStage::Off, 4), false).unwrap();
             let a = overlapped.reduce(outs(nb, nl, 97)).unwrap();
             let b = inline.reduce(outs(nb, nl, 97)).unwrap();
             assert_eq!(a.d_base, b.d_base);
@@ -139,30 +133,35 @@ mod tests {
     }
 
     #[test]
-    fn zero_sharded_reduce_matches_full_bitwise() {
-        // with ZeRO the overlapped and inline paths must both produce the
-        // sharded layout, and its gather must equal the full reduce
+    fn sharded_strategies_gather_to_the_full_reduce_bitwise() {
+        // whatever layout the strategy picks, overlapped and inline must
+        // both produce it, and its gather must equal the full reduce
         for (nb, nl) in [(3usize, 3usize), (4, 0)] {
-            let mut full = ReduceStage::new(Algorithm::Ring, false, 1).unwrap();
-            let mut inline = ReduceStage::new(Algorithm::Ring, false, 3).unwrap();
-            let mut overlapped = ReduceStage::new(Algorithm::Ring, true, 3).unwrap();
-            let want = full.reduce(outs(nb, nl, 101)).unwrap();
-            let a = inline.reduce(outs(nb, nl, 101)).unwrap();
-            let b = overlapped.reduce(outs(nb, nl, 101)).unwrap();
-            for got in [a, b] {
-                match (&got.d_base, &want.d_base) {
-                    (Some(Reduced::Sharded(chunks)), Some(Reduced::Full(v))) => {
-                        assert_eq!(chunks.len(), 3);
-                        assert_eq!(&crate::dp::all_gather(chunks), v);
-                    }
-                    (None, None) => {}
-                    other => panic!("unexpected layouts: {other:?}"),
-                }
-                if nl > 0 {
-                    assert_eq!(
-                        got.d_lora.clone().map(Reduced::into_full),
-                        want.d_lora.clone().map(Reduced::into_full)
+            for stage in [ZeroStage::Zero2, ZeroStage::Zero3] {
+                let mut full = ReduceStage::new(strat(ZeroStage::Off, 3), false).unwrap();
+                let mut inline = ReduceStage::new(strat(stage, 3), false).unwrap();
+                let mut overlapped = ReduceStage::new(strat(stage, 3), true).unwrap();
+                let want = full.reduce(outs(nb, nl, 101)).unwrap();
+                let a = inline.reduce(outs(nb, nl, 101)).unwrap();
+                let b = overlapped.reduce(outs(nb, nl, 101)).unwrap();
+                for got in [a, b] {
+                    let gb = got.d_base.clone().expect("base gradients present");
+                    assert!(
+                        gb.per_rank_elems() < 101,
+                        "{stage:?}: the stage must produce owned partitions, got a replicated buffer"
                     );
+                    assert_eq!(
+                        gb.into_full(),
+                        want.d_base.clone().unwrap().into_full(),
+                        "{stage:?}"
+                    );
+                    if nl > 0 {
+                        assert_eq!(
+                            got.d_lora.clone().map(|x| x.into_full()),
+                            want.d_lora.clone().map(|x| x.into_full()),
+                            "{stage:?}"
+                        );
+                    }
                 }
             }
         }
@@ -170,7 +169,7 @@ mod tests {
 
     #[test]
     fn scalars_pass_through() {
-        let mut stage = ReduceStage::new(Algorithm::Naive, false, 1).unwrap();
+        let mut stage = ReduceStage::new(strat(ZeroStage::Off, 2), false).unwrap();
         let r = stage.reduce(outs(2, 0, 8)).unwrap();
         assert_eq!(r.loss, 1.5);
         assert_eq!(r.correct, 3.0);

@@ -2,70 +2,23 @@
 //!
 //! Extracted from the old `Trainer::run_epoch` inline block so the
 //! pipelined and sequential epoch drivers share one implementation — any
-//! divergence here would break the bit-equivalence contract. Also owns
-//! [`ModelState`], the mutable parameter/optimizer bundle the stage
-//! operates on.
+//! divergence here would break the bit-equivalence contract.
 //!
-//! The stage accepts gradients in either [`Reduced`] layout. For the
-//! ZeRO-2 sharded layout each worker's chunk updates only that worker's
-//! owned parameter slice through its optimizer shard; because the slices
-//! of the shared full vector are disjoint, writing them back *is* the
-//! post-update **parameter** all-gather (gradients are never gathered —
-//! the scattered chunks are dropped once applied) — the replicated
-//! parameter vector the next step's forward pass needs is re-assembled in
-//! place. The clip scale is computed from the global pre-clip norm, which
-//! the sharded path assembles from the shards' squared sums through the
-//! ordered scalar reduction [`sq_sum_in_order`]; that fold is bitwise the
-//! full-vector [`l2_norm`] accumulation (f64 left-fold over a
-//! concatenation equals the fold over the chunks carried in order), so
-//! sharded and replicated updates clip — and therefore train — identically
-//! even for odd worker counts and ragged partition lengths.
-//!
-//! [`sq_sum_in_order`]: crate::dp::sq_sum_in_order
+//! The stage is layout-blind: gradients arrive in whatever layout the
+//! run's [`Strategy`] produced, and both the global-norm clip and the
+//! optimizer step dispatch through the strategy
+//! ([`Strategy::clip_grad`] / [`Strategy::step`]). Sharded clipping
+//! assembles the global pre-clip norm through the collective's ordered
+//! scalar reduce, which is bitwise the full-buffer fold, so sharded and
+//! replicated updates clip — and therefore train — identically even for
+//! odd worker counts and ragged partition lengths (see
+//! `dist::clip_reduced`). Under ZeRO-3 the step also drops the gathered
+//! parameter view, completing the per-step materialize/update cycle.
 
 use anyhow::{anyhow, Result};
 
-use crate::dp::{GradResult, Reduced};
-use crate::optim::ShardedOptimizer;
-use crate::rank::AdapterCfg;
-use crate::tensor::{clip_by_global_norm, l2_norm};
-
-/// The mutable model the update stage advances: flat parameter vectors
-/// plus their (possibly ZeRO-sharded) optimizers. `lora`/`adapter_cfg`/
-/// `opt_lora` appear at the warmup switch; `opt_base` is dropped at the
-/// freeze (the paper's memory saving made literal).
-pub struct ModelState {
-    pub base: Vec<f32>,
-    pub lora: Option<Vec<f32>>,
-    pub adapter_cfg: Option<AdapterCfg>,
-    pub opt_base: Option<ShardedOptimizer>,
-    pub opt_lora: Option<ShardedOptimizer>,
-}
-
-impl ModelState {
-    pub fn new(base: Vec<f32>, opt_base: ShardedOptimizer) -> Self {
-        Self { base, lora: None, adapter_cfg: None, opt_base: Some(opt_base), opt_lora: None }
-    }
-
-    /// The `(lora_params, adapter_cfg)` input pair for the engine, present
-    /// only once both halves exist.
-    pub fn lora_pair(&self) -> Option<(&[f32], &[f32])> {
-        match (&self.lora, &self.adapter_cfg) {
-            (Some(l), Some(a)) => Some((l.as_slice(), a.values.as_slice())),
-            _ => None,
-        }
-    }
-
-    /// Freeze the base: drop its optimizer state entirely (the paper's
-    /// memory saving made literal) — the controller's FreezeBase
-    /// decision. Checkpoint restores reach the same end state
-    /// differently: they clear *both* optimizers and rebuild whichever
-    /// states the checkpoint carries, so a lora-only restore leaves
-    /// `opt_base` at `None` without going through this transition.
-    pub fn freeze_base(&mut self) {
-        self.opt_base = None;
-    }
-}
+use crate::dist::{ModelState, Strategy};
+use crate::dp::GradResult;
 
 /// One step's gradient-norm observation.
 #[derive(Debug, Clone, Copy)]
@@ -79,7 +32,7 @@ pub struct StepNorms {
 }
 
 /// Stateless per-step update: clip each gradient buffer by global norm,
-/// then apply the phase's optimizer(s).
+/// then apply the phase's optimizer(s) through the strategy.
 pub struct UpdateStage {
     grad_clip: f64,
 }
@@ -90,54 +43,30 @@ impl UpdateStage {
         Self { grad_clip }
     }
 
-    /// Clip one buffer (either layout) by global norm in place, returning
-    /// its pre-clip norm. Mirrors [`clip_by_global_norm`] bit-for-bit on
-    /// the sharded layout: same accumulated norm, same `(max/norm) as f32`
-    /// scale applied per element.
-    fn clip(&self, g: &mut Reduced) -> f64 {
-        match g {
-            Reduced::Full(v) => {
-                if self.grad_clip > 0.0 {
-                    clip_by_global_norm(v, self.grad_clip)
-                } else {
-                    l2_norm(v)
-                }
-            }
-            Reduced::Sharded(chunks) => {
-                // ZeRO-2: every rank needs the *global* norm to compute
-                // the clip scale; the shards' squared sums combine through
-                // the ordered scalar reduce (see the module docs for why
-                // the order is pinned)
-                let norm = crate::dp::sq_sum_in_order(chunks).sqrt();
-                if self.grad_clip > 0.0 && norm > self.grad_clip && norm > 0.0 {
-                    let s = (self.grad_clip / norm) as f32;
-                    for c in chunks.iter_mut() {
-                        crate::tensor::scale(c, s);
-                    }
-                }
-                norm
-            }
-        }
-    }
-
     /// Apply one reduced step to the model. Buffers are clipped
     /// independently (base and LoRA live on different scales), matching
     /// the pre-pipeline trainer numerics exactly.
-    pub fn apply(&self, model: &mut ModelState, r: &mut GradResult, lr: f32) -> Result<StepNorms> {
+    pub fn apply(
+        &self,
+        strategy: &dyn Strategy,
+        model: &mut ModelState,
+        r: &mut GradResult,
+        lr: f32,
+    ) -> Result<StepNorms> {
         let mut sq = 0.0f64;
         let mut clipped = false;
         if let Some(ref mut g) = r.d_base {
-            let pre = self.clip(g);
+            let pre = strategy.clip_grad(g, self.grad_clip);
             clipped |= self.grad_clip > 0.0 && pre > self.grad_clip;
             sq += pre * pre;
             let opt = model
                 .opt_base
                 .as_mut()
                 .ok_or_else(|| anyhow!("base optimizer missing"))?;
-            opt.step_reduced(&mut model.base, g, lr);
+            strategy.step(opt, &mut model.base, g, lr);
         }
         if let Some(ref mut g) = r.d_lora {
-            let pre = self.clip(g);
+            let pre = strategy.clip_grad(g, self.grad_clip);
             clipped |= self.grad_clip > 0.0 && pre > self.grad_clip;
             sq += pre * pre;
             let lora = model
@@ -148,8 +77,13 @@ impl UpdateStage {
                 .opt_lora
                 .as_mut()
                 .ok_or_else(|| anyhow!("lora optimizer missing"))?;
-            opt.step_reduced(lora, g, lr);
+            strategy.step(opt, lora, g, lr);
         }
+        // the step is over: drop every transient gathered view, including
+        // stores this step did not update (a frozen ZeRO-3 base would
+        // otherwise keep its full gather resident across the LoraOnly
+        // phase, falsifying the per-rank parameter accounting)
+        model.drop_views();
         Ok(StepNorms { pre_clip: sq.sqrt(), clipped })
     }
 }
@@ -158,21 +92,22 @@ impl UpdateStage {
 mod tests {
     use super::*;
     use crate::config::TrainConfig;
-    use crate::dp::scatter;
-    use crate::optim::ShardedOptimizer;
+    use crate::dist::{collective_for, strategy_for, Strategy, ZeroStage};
+    use crate::dp::Algorithm;
+    use std::sync::Arc;
 
-    fn model_sharded(n: usize, shards: usize) -> ModelState {
+    fn strat(stage: ZeroStage, workers: usize) -> Arc<dyn Strategy> {
+        strategy_for(stage, workers, collective_for(Algorithm::Naive))
+    }
+
+    fn model(s: &dyn Strategy, n: usize) -> ModelState {
         let cfg = TrainConfig::default();
-        ModelState::new(vec![0.5; n], ShardedOptimizer::new(&cfg, n, shards))
+        ModelState::new(s.park_params(vec![0.5; n]), s.optimizer(&cfg, n))
     }
 
-    fn model(n: usize) -> ModelState {
-        model_sharded(n, 1)
-    }
-
-    fn result(d_base: Option<Reduced>) -> GradResult {
+    fn result(s: &dyn Strategy, g: Vec<f32>) -> GradResult {
         GradResult {
-            d_base,
+            d_base: s.grad_sync(vec![g]),
             d_lora: None,
             loss: 1.0,
             correct: 0.0,
@@ -183,61 +118,68 @@ mod tests {
 
     #[test]
     fn reports_pre_clip_norm_and_updates_params() {
-        let mut m = model(4);
-        let before = m.base.clone();
+        let s = strat(ZeroStage::Off, 1);
+        let mut m = model(&*s, 4);
+        let before = m.base.to_full();
         let stage = UpdateStage::new(1.0);
         // norm 5 -> clipped
-        let mut r = result(Some(Reduced::Full(vec![3.0, 4.0, 0.0, 0.0])));
-        let norms = stage.apply(&mut m, &mut r, 0.1).unwrap();
+        let mut r = result(&*s, vec![3.0, 4.0, 0.0, 0.0]);
+        let norms = stage.apply(&*s, &mut m, &mut r, 0.1).unwrap();
         assert!((norms.pre_clip - 5.0).abs() < 1e-9, "pre-clip, not post-clip");
         assert!(norms.clipped);
-        assert_ne!(m.base, before, "optimizer must have stepped");
+        assert_ne!(m.base.to_full(), before, "optimizer must have stepped");
         // the applied gradient was the clipped one
-        let Some(Reduced::Full(g)) = &r.d_base else { panic!("layout changed") };
-        assert!((l2_norm(g) - 1.0).abs() < 1e-6);
+        let g = r.d_base.unwrap().into_full();
+        assert!((crate::tensor::l2_norm(&g) - 1.0).abs() < 1e-6);
     }
 
     #[test]
     fn no_clip_reports_raw_norm() {
-        let mut m = model(2);
+        let s = strat(ZeroStage::Off, 1);
+        let mut m = model(&*s, 2);
         let stage = UpdateStage::new(0.0);
-        let mut r = result(Some(Reduced::Full(vec![3.0, 4.0])));
-        let norms = stage.apply(&mut m, &mut r, 0.1).unwrap();
+        let mut r = result(&*s, vec![3.0, 4.0]);
+        let norms = stage.apply(&*s, &mut m, &mut r, 0.1).unwrap();
         assert!((norms.pre_clip - 5.0).abs() < 1e-9);
         assert!(!norms.clipped);
     }
 
     #[test]
     fn missing_optimizer_is_an_error() {
-        let mut m = model(2);
+        let s = strat(ZeroStage::Off, 1);
+        let mut m = model(&*s, 2);
         m.opt_base = None;
         let stage = UpdateStage::new(1.0);
-        let mut r = result(Some(Reduced::Full(vec![1.0, 1.0])));
-        assert!(stage.apply(&mut m, &mut r, 0.1).is_err());
+        let mut r = result(&*s, vec![1.0, 1.0]);
+        assert!(stage.apply(&*s, &mut m, &mut r, 0.1).is_err());
     }
 
     #[test]
-    fn sharded_apply_is_bitwise_identical_to_full() {
-        // same gradient through both layouts (ragged 3-way split of 7),
-        // with a clip that engages: parameters and norms must match bitwise
+    fn every_stage_applies_bitwise_identically() {
+        // the same gradient through every strategy layout (ragged 3-way
+        // split of 7), with a clip that engages: parameters and norms
+        // must match the unsharded apply bitwise
         let n = 7;
         let g: Vec<f32> = vec![1.5, -2.0, 0.25, 3.0, -0.5, 2.25, -1.0];
         let stage = UpdateStage::new(1.0);
 
-        let mut mf = model(n);
-        let mut rf = result(Some(Reduced::Full(g.clone())));
-        let nf = stage.apply(&mut mf, &mut rf, 0.1).unwrap();
+        let s_off = strat(ZeroStage::Off, 3);
+        let mut mf = model(&*s_off, n);
+        let mut rf = result(&*s_off, g.clone());
+        let nf = stage.apply(&*s_off, &mut mf, &mut rf, 0.1).unwrap();
 
-        let mut ms = model_sharded(n, 3);
-        let mut rs = result(Some(Reduced::Sharded(scatter(&g, 3))));
-        let ns = stage.apply(&mut ms, &mut rs, 0.1).unwrap();
-
-        assert_eq!(nf.pre_clip, ns.pre_clip, "norms must match bitwise");
-        assert_eq!(nf.clipped, ns.clipped);
-        assert_eq!(mf.base, ms.base, "sharded update diverged from full");
-        // clipped gradients agree across layouts too
-        let Some(Reduced::Full(gf)) = rf.d_base else { panic!() };
-        let Some(gs) = rs.d_base.map(Reduced::into_full) else { panic!() };
-        assert_eq!(gf, gs);
+        for zstage in [ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            let s = strat(zstage, 3);
+            let mut ms = model(&*s, n);
+            let mut rs = result(&*s, g.clone());
+            let ns = stage.apply(&*s, &mut ms, &mut rs, 0.1).unwrap();
+            assert_eq!(nf.pre_clip, ns.pre_clip, "{zstage:?}: norms must match bitwise");
+            assert_eq!(nf.clipped, ns.clipped, "{zstage:?}");
+            assert_eq!(mf.base.to_full(), ms.base.to_full(), "{zstage:?}: update diverged");
+            // clipped gradients agree across layouts too
+            let gf = rf.d_base.clone().map(|x| x.into_full());
+            let gs = rs.d_base.clone().map(|x| x.into_full());
+            assert_eq!(gf, gs, "{zstage:?}");
+        }
     }
 }

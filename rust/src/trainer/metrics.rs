@@ -24,7 +24,7 @@ pub struct EpochStats {
     /// Semantic accelerator-memory model in bytes (see MemoryBreakdown).
     pub memory_model_bytes: usize,
     /// Optimizer state bytes a single worker holds. Equal to the full
-    /// state without ZeRO; ~1/workers of it with `train.zero.enabled`.
+    /// state without ZeRO; ~1/workers of it from ZeRO stage 1 up.
     pub opt_state_bytes_per_worker: usize,
     /// Gradient buffer bytes a single worker holds after the reduce.
     /// Equal to the live buffers' full size except at ZeRO stage 2, where
@@ -102,6 +102,12 @@ pub struct MemoryBreakdown {
     pub base_param_bytes: usize,
     /// LoRA weights at r_max as actually allocated.
     pub lora_param_bytes: usize,
+    /// Parameter bytes *this rank* holds persistently. Equal to
+    /// `base_param_bytes + lora_param_bytes` except under ZeRO-3
+    /// parameter sharding, where a rank owns only its contiguous
+    /// partition of each space (~1/workers of the total, plus chunk
+    /// rounding) and the gathered per-step working view is transient.
+    pub param_bytes_per_rank: usize,
     /// Gradient buffer bytes *this rank* holds for the current phase.
     /// Without ZeRO-2 every rank keeps the full buffers; at stage 2 the
     /// reduce-scatter is terminal and this is the largest owned partition
@@ -111,8 +117,8 @@ pub struct MemoryBreakdown {
     /// footprint; equals `grad_bytes` when gradients are not sharded).
     pub grad_total_bytes: usize,
     /// Optimizer state bytes *this rank* holds. Without ZeRO every rank
-    /// replicates the full state; with `train.zero.enabled` this is the
-    /// largest shard (~1/workers of the total).
+    /// replicates the full state; from stage 1 up this is the largest
+    /// shard (~1/workers of the total).
     pub optimizer_bytes: usize,
     /// Optimizer state bytes summed over all shards (the unsharded
     /// footprint; equals `optimizer_bytes` when state is not sharded).
@@ -127,6 +133,7 @@ impl MemoryBreakdown {
         n_base: usize,
         n_lora: usize,
         trainable: usize,
+        param_bytes_per_rank: usize,
         grad_bytes: usize,
         grad_total_bytes: usize,
         optimizer_bytes: usize,
@@ -135,6 +142,7 @@ impl MemoryBreakdown {
         Self {
             base_param_bytes: n_base * 4,
             lora_param_bytes: n_lora * 4,
+            param_bytes_per_rank,
             grad_bytes,
             grad_total_bytes,
             optimizer_bytes,
@@ -143,10 +151,12 @@ impl MemoryBreakdown {
         }
     }
 
-    /// The paper-comparable per-rank total: weights + the grads and
-    /// optimizer state *this rank* holds.
+    /// The paper-comparable per-rank total: the weights, grads and
+    /// optimizer state *this rank* holds. Identical to the replicated
+    /// accounting except under ZeRO-3, where the weight term is the
+    /// rank's owned partition.
     pub fn model_bytes(&self) -> usize {
-        self.base_param_bytes + self.lora_param_bytes + self.grad_bytes + self.optimizer_bytes
+        self.param_bytes_per_rank + self.grad_bytes + self.optimizer_bytes
     }
 }
 
@@ -192,11 +202,11 @@ mod tests {
     #[test]
     fn lora_phase_is_smaller_than_full_phase() {
         let n = 1_000_000usize;
-        // full: grads n*4, adam 8n
-        let full = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 8, n * 8);
+        // full: params n*4 per rank, grads n*4, adam 8n
+        let full = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 4, n * 8, n * 8);
         // lora at 10%: grads 0.1n*4, adam 0.8n, lora weights 0.1n*4
         let nl = n / 10;
-        let lora = MemoryBreakdown::new(n, nl, nl, nl * 4, nl * 4, nl * 8, nl * 8);
+        let lora = MemoryBreakdown::new(n, nl, nl, (n + nl) * 4, nl * 4, nl * 4, nl * 8, nl * 8);
         assert!(lora.model_bytes() < full.model_bytes());
         let saving = 1.0 - lora.model_bytes() as f64 / full.model_bytes() as f64;
         // dropping grads+opt of 90% of params saves a large fraction
@@ -206,23 +216,40 @@ mod tests {
     #[test]
     fn zero1_sharding_shrinks_per_rank_optimizer_memory() {
         let n = 1_000_000usize;
-        let replicated = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 8, n * 8);
+        let replicated = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 4, n * 8, n * 8);
         // 4-way ZeRO-1: the rank holds its shard of the moments only;
-        // gradients stay replicated
-        let sharded = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 2, n * 8);
+        // gradients and parameters stay replicated
+        let sharded = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 4, n * 2, n * 8);
         assert_eq!(sharded.optimizer_total_bytes, replicated.optimizer_total_bytes);
         assert_eq!(sharded.grad_bytes, sharded.grad_total_bytes);
+        assert_eq!(sharded.param_bytes_per_rank, n * 4, "params replicated at stage 1");
         assert!(sharded.model_bytes() < replicated.model_bytes());
     }
 
     #[test]
     fn zero2_sharding_shrinks_per_rank_gradient_memory_too() {
         let n = 1_000_000usize;
-        let zero1 = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 2, n * 8);
+        let zero1 = MemoryBreakdown::new(n, 0, n, n * 4, n * 4, n * 4, n * 2, n * 8);
         // 4-way ZeRO-2: grads per rank drop to ~1/4 of the total as well
-        let zero2 = MemoryBreakdown::new(n, 0, n, n, n * 4, n * 2, n * 8);
+        let zero2 = MemoryBreakdown::new(n, 0, n, n * 4, n, n * 4, n * 2, n * 8);
         assert_eq!(zero2.grad_total_bytes, zero1.grad_total_bytes);
         assert_eq!(zero2.grad_bytes * 4, zero2.grad_total_bytes);
         assert!(zero2.model_bytes() < zero1.model_bytes());
+    }
+
+    #[test]
+    fn zero3_sharding_shrinks_per_rank_parameter_memory_too() {
+        let n = 1_000_000usize;
+        let zero2 = MemoryBreakdown::new(n, 0, n, n * 4, n, n * 4, n * 2, n * 8);
+        // 4-way ZeRO-3: the rank's persistent weights are its owned
+        // partition — every per-rank term is now ~1/4 of its total
+        let zero3 = MemoryBreakdown::new(n, 0, n, n, n, n * 4, n * 2, n * 8);
+        assert_eq!(
+            zero3.base_param_bytes + zero3.lora_param_bytes,
+            zero2.base_param_bytes + zero2.lora_param_bytes,
+            "total parameter footprint is layout-free"
+        );
+        assert_eq!(zero3.param_bytes_per_rank * 4, zero3.base_param_bytes);
+        assert!(zero3.model_bytes() < zero2.model_bytes());
     }
 }

@@ -7,11 +7,17 @@
 //! [`StepPipeline`], and applies the controller's decision at the epoch
 //! barrier (where every in-flight step has drained — phase switches are
 //! deterministic by construction).
+//!
+//! Everything distributed goes through the run's `dist::Strategy`: the
+//! trainer builds it once from the configured stage and thereafter only
+//! trait-dispatches — parking parameters into the strategy's storage
+//! layout, routing phase switches through `Repartition` events,
+//! gathering on checkpoint save and re-scattering on restore. The
+//! trainer contains no layout branching of its own.
 
-mod checkpoint;
 mod metrics;
 
-pub use checkpoint::{Checkpoint, TrajectoryState};
+pub use crate::checkpoint::{Checkpoint, TrajectoryState};
 pub use metrics::{EpochStats, MemoryBreakdown};
 
 use std::sync::Arc;
@@ -21,9 +27,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::RunConfig;
 use crate::coordinator::{Decision, Phase, PreLoraController};
 use crate::data::{Dataset, EpochLoader, SynthSpec};
+use crate::dist::{self, ParamSpace, Repartition, Strategy};
 use crate::dp::{Algorithm, GradEngine, StepMode};
 use crate::manifest::Manifest;
-use crate::optim::{LrSchedule, ShardedOptimizer};
+use crate::optim::LrSchedule;
 use crate::pipeline::{ModelState, StepPipeline, UpdateStage};
 use crate::rank::{build_adapter_cfg, AdapterCfg};
 use crate::report::RunSummary;
@@ -36,6 +43,7 @@ pub struct Trainer {
     pub manifest: Arc<Manifest>,
     engine: GradEngine,
     loader: EpochLoader,
+    strategy: Arc<dyn Strategy>,
     pipeline: StepPipeline,
     update: UpdateStage,
     train_spec: SynthSpec,
@@ -69,14 +77,15 @@ impl Trainer {
             cfg.train.dp.threaded,
             algorithm,
         )?;
-        // the pipeline's reduce stage must use the engine's exact algorithm
-        // (same summation schedule => the bit-equivalence contract). ZeRO
-        // stage 2 makes the reduce-scatter terminal (one owned gradient
-        // partition per worker, no replicated mean vector); stage 1 keeps
-        // gradients replicated and shards only the optimizer state below.
-        let zero_shards = cfg.train.zero_shards();
-        let grad_parts = cfg.train.zero_grad_parts();
-        let pipeline = StepPipeline::new(&cfg.train.pipeline, engine.algorithm(), grad_parts)?;
+        // one strategy for the whole run, built over the same summation
+        // schedule the engine reduces with (same collective => the
+        // bit-equivalence contract holds across every layout)
+        let strategy = dist::strategy_for(
+            cfg.train.zero.effective_stage(),
+            cfg.train.dp.workers,
+            dist::collective_for(algorithm),
+        );
+        let pipeline = StepPipeline::new(&cfg.train.pipeline, strategy.clone())?;
         let update = UpdateStage::new(cfg.train.grad_clip);
         let loader = EpochLoader::new(c.batch_size, cfg.train.dp.workers, cfg.seed);
         let train_spec = SynthSpec {
@@ -99,8 +108,8 @@ impl Trainer {
             seed: cfg.seed ^ 0x7a1_5eed_u64,
         }));
         let base = manifest.load_init_base()?;
-        let opt_base = ShardedOptimizer::new(&cfg.train, base.len(), zero_shards);
-        let model = ModelState::new(base, opt_base);
+        let opt_base = strategy.optimizer(&cfg.train, base.len());
+        let model = ModelState::new(strategy.park_params(base), opt_base);
         let lr = LrSchedule::new(&cfg.train);
         let controller = PreLoraController::new(cfg.prelora.clone(), &manifest)?;
         Ok(Self {
@@ -108,6 +117,7 @@ impl Trainer {
             manifest,
             engine,
             loader,
+            strategy,
             pipeline,
             update,
             train_spec,
@@ -134,8 +144,15 @@ impl Trainer {
         &self.history
     }
 
-    pub fn base_params(&self) -> &[f32] {
-        &self.model.base
+    /// The run's distributed strategy (telemetry/inspection).
+    pub fn strategy(&self) -> &dyn Strategy {
+        &*self.strategy
+    }
+
+    /// The full base-parameter vector, gathered from the strategy's
+    /// storage layout (a copy; telemetry and test convenience).
+    pub fn base_params(&self) -> Vec<f32> {
+        self.model.base.to_full()
     }
 
     pub fn adapter_cfg(&self) -> Option<&AdapterCfg> {
@@ -146,7 +163,8 @@ impl Trainer {
     /// (per-layer norm of the stacked [A; B] pair) — the Fig. 6b series.
     /// None before the switch.
     pub fn lora_module_norm(&self, module: &str) -> Option<f64> {
-        let lora = self.model.lora.as_ref()?;
+        let store = self.model.lora.as_ref()?;
+        let lora = store.full();
         let mut acc = 0.0;
         let mut n = 0usize;
         for ad in self.manifest.adapters.iter().filter(|a| a.module == module) {
@@ -177,27 +195,29 @@ impl Trainer {
         }
     }
 
-    /// Current memory accounting (see `MemoryBreakdown` docs). Optimizer
-    /// *and* gradient bytes are per-rank: with ZeRO a worker holds only
-    /// its partition of the moments (stages 1+2, ~1/workers of the
-    /// total), and at stage 2 only its partition of each live gradient
-    /// buffer as well (the reduce-scatter is terminal).
+    /// Current memory accounting (see `MemoryBreakdown` docs). Parameter,
+    /// gradient *and* optimizer bytes are per-rank quantities under the
+    /// run's strategy: a rank holds its shard of the moments, its owned
+    /// gradient partition once the reduce-scatter is terminal, and — when
+    /// the parameters themselves are sharded — its owned parameter
+    /// partition (the gathered per-step working view is transient and
+    /// deliberately not counted).
     pub fn memory(&self) -> MemoryBreakdown {
         let n_base = self.manifest.base.size;
         let n_lora = self.manifest.lora.size;
         let trainable = self.trainable_params();
-        let opt_bytes = self
-            .model
-            .opt_base
-            .as_ref()
-            .map_or(0, |o| o.per_worker_state_bytes())
+        let st = self.strategy.state_bytes(&self.model);
+        // manifest-level parameter accounting (allocation-independent,
+        // like base_param_bytes/lora_param_bytes): the largest owned
+        // partition of each space under the strategy's parameter plan
+        let param_bytes_per_rank = self
+            .strategy
+            .plan(&ParamSpace::new("base", n_base))
+            .param_bytes_per_rank()
             + self
-                .model
-                .opt_lora
-                .as_ref()
-                .map_or(0, |o| o.per_worker_state_bytes());
-        let opt_total = self.model.opt_base.as_ref().map_or(0, |o| o.state_bytes())
-            + self.model.opt_lora.as_ref().map_or(0, |o| o.state_bytes());
+                .strategy
+                .plan(&ParamSpace::new("lora", n_lora))
+                .param_bytes_per_rank();
         let (base_live, lora_live) = match self.controller.phase() {
             Phase::FullParam => (n_base, 0),
             Phase::Warmup { .. } => (n_base, n_lora),
@@ -206,16 +226,17 @@ impl Trainer {
         let grad_total_bytes = (base_live + lora_live) * 4;
         // per-rank: the largest partition() chunk of each live buffer,
         // which is ceil(len / parts) for non-empty buffers
-        let parts = self.cfg.train.zero_grad_parts().max(1);
+        let parts = self.strategy.grad_parts().max(1);
         let grad_bytes = (base_live.div_ceil(parts) + lora_live.div_ceil(parts)) * 4;
         MemoryBreakdown::new(
             n_base,
             n_lora,
             trainable,
+            param_bytes_per_rank,
             grad_bytes,
             grad_total_bytes,
-            opt_bytes,
-            opt_total,
+            st.opt_bytes_per_rank,
+            st.opt_total_bytes,
         )
     }
 
@@ -253,7 +274,7 @@ impl Trainer {
 
         // telemetry + controller (the epoch boundary is the pipeline's
         // phase-switch barrier: every step above has drained)
-        let snapshot = NormSnapshot::measure(&self.manifest, epoch, &self.model.base);
+        let snapshot = NormSnapshot::measure(&self.manifest, epoch, &self.model.base.full());
         self.history.push(snapshot, train_loss);
         let decision = self.controller.on_epoch_end(&self.history);
         self.apply(decision)?;
@@ -300,10 +321,16 @@ impl Trainer {
 
     /// Evaluate on the validation split.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        // the engine needs the full working views (a gather under
+        // parameter sharding; free otherwise)
+        self.strategy.materialize_params(&mut self.model);
         let batches = self.loader.eval_batches(&self.val_data);
         let (loss, acc, _) =
             self.engine
-                .evaluate(&self.model.base, self.model.lora_pair(), batches)?;
+                .evaluate(self.model.base_view(), self.model.lora_pair(), batches)?;
+        // evaluation is done with the gathered views — drop them (under
+        // parameter sharding they are per-use transients, not state)
+        self.model.drop_views();
         Ok((loss, acc))
     }
 
@@ -327,15 +354,6 @@ impl Trainer {
                         rng.fill_normal(&mut lora[t.offset..t.offset + t.size], 0.02);
                     }
                 }
-                // the LoRA shard layout is new at the switch: a fresh
-                // partition of the (much smaller) adapter vector
-                self.model.opt_lora = Some(ShardedOptimizer::new(
-                    &self.cfg.train,
-                    lora.len(),
-                    self.cfg.train.zero_shards(),
-                ));
-                self.model.lora = Some(lora);
-                self.model.adapter_cfg = Some(acfg);
                 eprintln!(
                     "[prelora] epoch {}: convergence passed (max dW {:.3}%, max dL {:.3}%) -> warmup; ranks {:?}",
                     self.history.epochs(),
@@ -343,9 +361,20 @@ impl Trainer {
                     report.max_loss_delta,
                     assignment.histogram()
                 );
+                // the adapter space enters training as a first-class
+                // re-partition event: the strategy parks the fresh vector
+                // in its own layout and builds the (sharded) optimizer —
+                // layouts re-derive per space length, so the (much
+                // smaller) adapter vector re-partitions automatically
+                self.strategy.repartition(
+                    &mut self.model,
+                    Repartition::AdaptersInit { lora, adapter_cfg: acfg },
+                    &self.cfg.train,
+                );
             }
             Decision::FreezeBase => {
-                self.model.freeze_base();
+                self.strategy
+                    .repartition(&mut self.model, Repartition::FreezeBase, &self.cfg.train);
                 eprintln!(
                     "[prelora] epoch {}: warmup done -> base frozen, LoRA-only ({} trainable params, {:.1}% of full)",
                     self.history.epochs(),
@@ -414,28 +443,26 @@ impl Trainer {
         s
     }
 
-    /// Save current model state. Optimizer state is gathered from the
-    /// ZeRO shards into full-length buffers (shard-layout independent),
-    /// so the checkpoint restores onto any worker count. The trajectory
-    /// block carries the phase machine (controller cursors + convergence
-    /// evidence), the full norm/loss history, the LR-schedule position
-    /// and the data-order seed — everything `restore` needs to make the
-    /// resumed run a true bitwise continuation.
+    /// Save current model state. The payload is gathered through the
+    /// strategy — full parameter vectors (a parameter-sharded run's owned
+    /// partitions are all-gathered) and full-length optimizer state — so
+    /// the file is shard-layout independent and restores onto any stage
+    /// and worker count (the v3 contract). The trajectory block carries
+    /// the phase machine (controller cursors + convergence evidence), the
+    /// full norm/loss history, the LR-schedule position and the
+    /// data-order seed — everything `restore` needs to make the resumed
+    /// run a true bitwise continuation.
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             epoch: self.history.epochs(),
-            base: self.model.base.clone(),
-            lora: self.model.lora.clone(),
+            base: self.strategy.export_params(&self.model.base),
+            lora: self.model.lora.as_ref().map(|l| self.strategy.export_params(l)),
             adapter_cfg: self.model.adapter_cfg.as_ref().map(|a| a.values.clone()),
             ranks: self.model.adapter_cfg.as_ref().map(|a| a.ranks.clone()),
             opt_base: self.model.opt_base.as_ref().map(|o| o.export_state()),
             opt_lora: self.model.opt_lora.as_ref().map(|o| o.export_state()),
-            zero_shards: self.cfg.train.zero_shards(),
-            zero_stage: if self.cfg.train.zero.enabled {
-                self.cfg.train.zero.stage
-            } else {
-                1
-            },
+            zero_shards: self.strategy.opt_shards(),
+            stage: self.strategy.stage(),
             trajectory: Some(TrajectoryState {
                 seed: self.cfg.seed,
                 phase: self.controller.phase(),
@@ -452,12 +479,13 @@ impl Trainer {
     }
 
     /// Restore model state — base, LoRA params *and* the adapter config
-    /// that makes them meaningful. Checkpointed optimizer state, when
-    /// present, is re-scattered onto *this* run's ZeRO layout — the
-    /// saving run's shard count is irrelevant, so a single-worker trainer
-    /// restores an N-way sharded run unchanged (and a worker-count change
-    /// on restore re-partitions both optimizers and, at stage 2, the
-    /// gradient partitions derived from them).
+    /// that makes them meaningful. The gathered payload is scattered back
+    /// through *this* run's strategy: parameters park into its storage
+    /// layout and checkpointed optimizer state re-partitions onto its
+    /// shard layout — the saving run's stage and worker count are
+    /// irrelevant, so a single-worker trainer restores an N-way sharded
+    /// run unchanged (and a parameter-sharded trainer restores an
+    /// unsharded file).
     ///
     /// A v3 checkpoint additionally carries the trajectory block; this
     /// rebuilds the phase machine (controller cursors + convergence
@@ -535,7 +563,7 @@ impl Trainer {
         }
         match (&ckpt.lora, &ckpt.adapter_cfg, &ckpt.ranks) {
             (None, None, None) => {
-                self.model.base.copy_from_slice(&ckpt.base);
+                self.strategy.import_params(&mut self.model.base, &ckpt.base)?;
                 self.model.lora = None;
                 self.model.adapter_cfg = None;
             }
@@ -564,8 +592,8 @@ impl Trainer {
                     "checkpoint rank outside [1, {r_max}]: {ranks:?}"
                 );
                 let trainable_params = self.manifest.lora_trainable(ranks);
-                self.model.base.copy_from_slice(&ckpt.base);
-                self.model.lora = Some(lora.clone());
+                self.strategy.import_params(&mut self.model.base, &ckpt.base)?;
+                self.model.lora = Some(self.strategy.park_params(lora.clone()));
                 self.model.adapter_cfg = Some(AdapterCfg {
                     values: values.clone(),
                     ranks: ranks.clone(),
@@ -607,19 +635,18 @@ impl Trainer {
                 }
             }
         }
-        // optimizer state: rebuild on this run's shard layout and scatter
-        // the gathered buffers into it. With a trajectory, absence is
-        // authoritative — a lora-only checkpoint restores to a frozen
-        // base with *no* optimizer state. Without one (v1/v2), absent
-        // state leaves the current optimizers untouched — the pre-v2
-        // eval/analysis semantics.
+        // optimizer state: rebuild on this run's strategy layout and
+        // scatter the gathered buffers into it. With a trajectory,
+        // absence is authoritative — a lora-only checkpoint restores to a
+        // frozen base with *no* optimizer state. Without one (v1/v2),
+        // absent state leaves the current optimizers untouched — the
+        // pre-v2 eval/analysis semantics.
         if ckpt.trajectory.is_some() {
             self.model.opt_base = None;
             self.model.opt_lora = None;
         }
-        let shards = self.cfg.train.zero_shards();
         if let Some(st) = &ckpt.opt_base {
-            let mut opt = ShardedOptimizer::new(&self.cfg.train, self.model.base.len(), shards);
+            let mut opt = self.strategy.optimizer(&self.cfg.train, self.model.base.len());
             opt.import_state(st)
                 .map_err(|e| anyhow!("restoring base optimizer state: {e}"))?;
             self.model.opt_base = Some(opt);
@@ -631,7 +658,7 @@ impl Trainer {
                 .as_ref()
                 .map(|l| l.len())
                 .ok_or_else(|| anyhow!("checkpoint has LoRA optimizer state but no LoRA params"))?;
-            let mut opt = ShardedOptimizer::new(&self.cfg.train, lora_len, shards);
+            let mut opt = self.strategy.optimizer(&self.cfg.train, lora_len);
             opt.import_state(st)
                 .map_err(|e| anyhow!("restoring lora optimizer state: {e}"))?;
             self.model.opt_lora = Some(opt);

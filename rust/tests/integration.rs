@@ -8,9 +8,9 @@ use std::collections::BTreeMap;
 use prelora::config::{RunConfig, StrictnessPreset, TrainConfig};
 use prelora::coordinator::Phase;
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
+use prelora::dist::{collective_for, strategy_for, ModelState, ZeroStage};
 use prelora::dp::{all_gather, reduce_mean, reduce_scatter, scatter, Algorithm, GradResult, Reduced};
-use prelora::optim::ShardedOptimizer;
-use prelora::pipeline::{ModelState, UpdateStage};
+use prelora::pipeline::UpdateStage;
 use prelora::rank::{assign_ranks, rank_buckets};
 use prelora::tensor::Pcg64;
 use prelora::trainer::{Checkpoint, Trainer};
@@ -31,6 +31,16 @@ fn micro_config(epochs: usize) -> RunConfig {
     cfg.prelora.windows = 2;
     cfg.prelora.window_epochs = 2;
     cfg.prelora.warmup_epochs = 2;
+    // CI knob: rerun the whole suite under one forced ZeRO stage (the
+    // smoke job runs it once more with PRELORA_TEST_ZERO_STAGE=3, so
+    // every lifecycle/pipeline/restore test also exercises parameter
+    // sharding). Tests that sweep stages explicitly override this.
+    if let Ok(s) = std::env::var("PRELORA_TEST_ZERO_STAGE") {
+        let stage: ZeroStage = s
+            .parse()
+            .unwrap_or_else(|e| panic!("bad PRELORA_TEST_ZERO_STAGE: {e}"));
+        cfg.train.zero.stage = Some(stage);
+    }
     cfg
 }
 
@@ -166,14 +176,16 @@ fn pipeline_matches_sequential_bitwise_across_phase_switch() {
 
 #[test]
 fn zero_stages_match_unsharded_bitwise_across_phase_switch() {
-    // the ZeRO acceptance contract, both stages: with train.zero.enabled
-    // at stage 1 (optimizer state sharded) or stage 2 (+ gradient buffers
-    // reduce-scattered terminally), fixed-seed per-epoch losses are
-    // bit-identical to the unsharded path across the Full -> Warmup ->
-    // LoraOnly lifecycle (the shard AND gradient-partition layouts
-    // re-partition at the switch), while per-worker optimizer state is
-    // <= (1/N + eps) of the unsharded total — and at stage 2 the
-    // per-worker gradient bytes are ~1/N of grad_total_bytes as well
+    // the dist::Strategy acceptance contract, every stage: at stage 1
+    // (optimizer state sharded), stage 2 (+ gradient buffers
+    // reduce-scattered terminally) or stage 3 (+ the parameters
+    // themselves as owned partitions, working views gathered per step),
+    // fixed-seed per-epoch losses are bit-identical to the unsharded path
+    // across the Full -> Warmup -> LoraOnly lifecycle (every shard layout
+    // re-partitions at the switch), while per-worker optimizer state is
+    // <= (1/N + eps) of the unsharded total — at stage 2+ per-worker
+    // gradient bytes are ~1/N of grad_total_bytes, and at stage 3
+    // per-rank parameter bytes are ~1/N of the replicated footprint
     let workers = 2;
     struct ZeroRun {
         losses: Vec<f64>,
@@ -183,14 +195,13 @@ fn zero_stages_match_unsharded_bitwise_across_phase_switch() {
         opt_tot: Vec<usize>,
         grad_per: Vec<usize>,
         grad_tot: Vec<usize>,
+        param_per: Vec<usize>,
+        param_tot: Vec<usize>,
     }
-    let run = |stage: Option<u8>| {
+    let run = |stage: ZeroStage| {
         let mut cfg = micro_config(16);
         cfg.train.dp.workers = workers;
-        if let Some(s) = stage {
-            cfg.train.zero.enabled = true;
-            cfg.train.zero.stage = s;
-        }
+        cfg.train.zero.stage = Some(stage); // explicit: the sweep overrides the CI env knob
         let mut t = Trainer::new(cfg).unwrap();
         let mut out = ZeroRun {
             losses: Vec::new(),
@@ -200,6 +211,8 @@ fn zero_stages_match_unsharded_bitwise_across_phase_switch() {
             opt_tot: Vec::new(),
             grad_per: Vec::new(),
             grad_tot: Vec::new(),
+            param_per: Vec::new(),
+            param_tot: Vec::new(),
         };
         for _ in 0..16 {
             out.losses.push(t.run_epoch().unwrap().train_loss);
@@ -208,21 +221,25 @@ fn zero_stages_match_unsharded_bitwise_across_phase_switch() {
             out.opt_tot.push(mem.optimizer_total_bytes);
             out.grad_per.push(mem.grad_bytes);
             out.grad_tot.push(mem.grad_total_bytes);
+            out.param_per.push(mem.param_bytes_per_rank);
+            out.param_tot.push(mem.base_param_bytes + mem.lora_param_bytes);
         }
         out.switch = t.controller().switch_epoch();
         out.freeze = t.controller().freeze_epoch();
         out
     };
-    let off = run(None);
-    let s1 = run(Some(1));
-    let s2 = run(Some(2));
-    for (name, z) in [("stage 1", &s1), ("stage 2", &s2)] {
+    let off = run(ZeroStage::Off);
+    let s1 = run(ZeroStage::Zero1);
+    let s2 = run(ZeroStage::Zero2);
+    let s3 = run(ZeroStage::Zero3);
+    for (name, z) in [("stage 1", &s1), ("stage 2", &s2), ("stage 3", &s3)] {
         assert_eq!(z.losses, off.losses, "{name}: losses must be bit-identical to unsharded");
         assert_eq!(z.switch, off.switch, "{name}: switch epoch must match");
         assert_eq!(z.freeze, off.freeze, "{name}: freeze epoch must match");
         // total state is layout-independent
         assert_eq!(z.opt_tot, off.opt_tot, "{name}: optimizer total changed");
         assert_eq!(z.grad_tot, off.grad_tot, "{name}: gradient total changed");
+        assert_eq!(z.param_tot, off.param_tot, "{name}: parameter total changed");
         for (epoch, (&per, &tot)) in z.opt_per.iter().zip(&z.opt_tot).enumerate() {
             // eps: ceil-chunking rounds each state buffer up by at most
             // one element per shard (two optimizers of two bufs in warmup)
@@ -240,17 +257,68 @@ fn zero_stages_match_unsharded_bitwise_across_phase_switch() {
     // without ZeRO (and at stage 1) a worker holds the full buffers
     assert_eq!(off.opt_per, off.opt_tot);
     assert_eq!(off.grad_per, off.grad_tot);
+    assert_eq!(off.param_per, off.param_tot);
     assert_eq!(s1.grad_per, s1.grad_tot, "stage 1 must keep gradients replicated");
-    // stage 2: per-worker gradient bytes are ~1/N of the replicated
+    assert_eq!(s2.param_per, s2.param_tot, "stage 2 must keep parameters replicated");
+    // stage 2+: per-worker gradient bytes are ~1/N of the replicated
     // footprint in every phase (ceil-chunked per live buffer: base and/or
     // LoRA, so at most 2 * 4-byte rounding)
-    for (epoch, (&per, &tot)) in s2.grad_per.iter().zip(&s2.grad_tot).enumerate() {
+    for (name, z) in [("stage 2", &s2), ("stage 3", &s3)] {
+        for (epoch, (&per, &tot)) in z.grad_per.iter().zip(&z.grad_tot).enumerate() {
+            assert!(
+                per as f64 <= tot as f64 / workers as f64 + 8.0,
+                "{name} epoch {epoch}: per-worker grads {per} B exceed total {tot} B / {workers} + eps"
+            );
+            assert!(per > 0, "{name} epoch {epoch}: gradient accounting vanished");
+        }
+    }
+    // stage 3: per-rank parameter bytes are ~1/N of the replicated
+    // footprint in every phase (base + LoRA spaces partition separately)
+    for (epoch, (&per, &tot)) in s3.param_per.iter().zip(&s3.param_tot).enumerate() {
         assert!(
             per as f64 <= tot as f64 / workers as f64 + 8.0,
-            "stage 2 epoch {epoch}: per-worker grads {per} B exceed total {tot} B / {workers} + eps"
+            "stage 3 epoch {epoch}: per-rank params {per} B exceed total {tot} B / {workers} + eps"
         );
-        assert!(per > 0, "stage 2 epoch {epoch}: gradient accounting vanished");
+        assert!(per > 0, "stage 3 epoch {epoch}: parameter accounting vanished");
     }
+}
+
+#[test]
+fn zero3_matches_unsharded_bitwise_at_odd_worker_counts() {
+    // the stage-3 acceptance property at a worker count that does not
+    // divide the parameter spaces: losses, per-epoch mean grad norms and
+    // the final base parameters are bitwise the unsharded run's across
+    // the full Full -> Warmup -> LoraOnly lifecycle, while per-rank
+    // parameter bytes shrink to ~1/3
+    let workers = 3;
+    let run = |stage: ZeroStage| {
+        let mut cfg = micro_config(16);
+        cfg.train.dp.workers = workers;
+        cfg.train.zero.stage = Some(stage);
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        let mut norms = Vec::new();
+        for _ in 0..16 {
+            let s = t.run_epoch().unwrap();
+            losses.push(s.train_loss.to_bits());
+            norms.push(s.grad_norm.to_bits());
+        }
+        let mem = t.memory();
+        (losses, norms, t.base_params(), t.controller().switch_epoch(), mem)
+    };
+    let (l_off, n_off, p_off, sw_off, _) = run(ZeroStage::Off);
+    let (l_z3, n_z3, p_z3, sw_z3, mem) = run(ZeroStage::Zero3);
+    assert_eq!(l_z3, l_off, "stage-3 losses must be bitwise the unsharded run's");
+    assert_eq!(n_z3, n_off, "stage-3 grad norms must be bitwise the unsharded run's");
+    assert_eq!(p_z3, p_off, "stage-3 final base params must be bitwise the unsharded run's");
+    assert_eq!(sw_z3, sw_off, "switch epoch must match");
+    assert!(sw_off.is_some(), "run must cross the phase boundary");
+    let tot = mem.base_param_bytes + mem.lora_param_bytes;
+    assert!(
+        mem.param_bytes_per_rank as f64 <= tot as f64 / workers as f64 + 8.0,
+        "per-rank params {} B must be ~1/{workers} of {tot} B",
+        mem.param_bytes_per_rank
+    );
 }
 
 #[test]
@@ -259,7 +327,7 @@ fn sharded_checkpoint_restores_on_single_worker() {
     // state; an unsharded single-worker trainer must restore it exactly
     let mut cfg = micro_config(16);
     cfg.train.dp.workers = 2;
-    cfg.train.zero.enabled = true;
+    cfg.train.zero.stage = Some(ZeroStage::Zero2);
     let mut t = Trainer::new(cfg).unwrap();
     for _ in 0..16 {
         t.run_epoch().unwrap();
@@ -267,17 +335,19 @@ fn sharded_checkpoint_restores_on_single_worker() {
     assert!(t.adapter_cfg().is_some(), "run never switched");
     let ck = t.checkpoint();
     assert_eq!(ck.zero_shards, 2);
-    assert_eq!(ck.zero_stage, 2, "default ZeRO stage is 2");
+    assert_eq!(ck.stage, ZeroStage::Zero2);
     assert!(ck.opt_lora.is_some(), "post-switch checkpoint must carry LoRA optimizer state");
 
     let path = std::env::temp_dir().join(format!("prelora_zero_{}.ckpt", std::process::id()));
     ck.save(&path).unwrap();
     let back = Checkpoint::load(&path).unwrap();
     assert_eq!(back.zero_shards, 2);
-    assert_eq!(back.zero_stage, 2, "stage metadata must survive disk");
+    assert_eq!(back.stage, ZeroStage::Zero2, "stage metadata must survive disk");
     assert_eq!(back.opt_lora, ck.opt_lora, "optimizer state must survive disk");
 
-    let mut solo = Trainer::new(micro_config(16)).unwrap(); // 1 worker, no ZeRO
+    let mut solo_cfg = micro_config(16); // 1 worker...
+    solo_cfg.train.zero.stage = Some(ZeroStage::Off); // ...no sharding, env knob or not
+    let mut solo = Trainer::new(solo_cfg).unwrap();
     solo.restore(&back).unwrap();
     let (l1, a1) = t.evaluate().unwrap();
     let (l2, a2) = solo.evaluate().unwrap();
@@ -650,38 +720,44 @@ impl Arbitrary for ClipCase {
 
 #[test]
 fn prop_sharded_partial_norm_clip_is_bitwise_full_clip() {
-    // the ZeRO-2 clip contract, property-tested: clipping through
+    // the sharded clip contract, property-tested: clipping through
     // per-shard chunks (whose squared sums combine via the ordered scalar
     // reduce) must equal the full-buffer clip *bitwise* — pre-clip norm,
     // clipped flag, clipped gradient AND the optimizer step it feeds —
-    // for odd worker counts and ragged partition lengths
+    // for odd worker counts and ragged partition lengths, under both the
+    // gradient-sharded (stage 2) and parameter-sharded (stage 3) layouts
     check::<ClipCase, _>(606, 150, |case| {
         let n = case.grads.len();
         let tcfg = TrainConfig::default();
         let stage = UpdateStage::new(case.clip);
-        let mk = |d: Reduced| GradResult {
-            d_base: Some(d),
+        let mk = |d: Option<Reduced>| GradResult {
+            d_base: d,
             d_lora: None,
             loss: 0.0,
             correct: 0.0,
             samples: 1,
             execute_seconds: 0.0,
         };
-        let mut mf = ModelState::new(vec![0.4f32; n], ShardedOptimizer::new(&tcfg, n, 1));
-        let mut rf = mk(Reduced::Full(case.grads.clone()));
-        let Ok(nf) = stage.apply(&mut mf, &mut rf, 1e-3) else { return false };
+        let s_off = strategy_for(ZeroStage::Off, case.parts, collective_for(Algorithm::Naive));
+        let mut mf = ModelState::new(s_off.park_params(vec![0.4f32; n]), s_off.optimizer(&tcfg, n));
+        let mut rf = mk(Some(Reduced::Full(case.grads.clone())));
+        let Ok(nf) = stage.apply(&*s_off, &mut mf, &mut rf, 1e-3) else { return false };
 
-        let mut ms = ModelState::new(
-            vec![0.4f32; n],
-            ShardedOptimizer::new(&tcfg, n, case.parts),
-        );
-        let mut rs = mk(Reduced::Sharded(scatter(&case.grads, case.parts)));
-        let Ok(ns) = stage.apply(&mut ms, &mut rs, 1e-3) else { return false };
-
-        nf.pre_clip == ns.pre_clip
-            && nf.clipped == ns.clipped
-            && mf.base == ms.base
-            && rf.d_base.map(Reduced::into_full) == rs.d_base.map(Reduced::into_full)
+        for zs in [ZeroStage::Zero2, ZeroStage::Zero3] {
+            let s = strategy_for(zs, case.parts, collective_for(Algorithm::Naive));
+            let mut ms = ModelState::new(s.park_params(vec![0.4f32; n]), s.optimizer(&tcfg, n));
+            let mut rs = mk(Some(Reduced::Sharded(scatter(&case.grads, case.parts))));
+            let Ok(ns) = stage.apply(&*s, &mut ms, &mut rs, 1e-3) else { return false };
+            if nf.pre_clip != ns.pre_clip
+                || nf.clipped != ns.clipped
+                || mf.base.to_full() != ms.base.to_full()
+                || rf.d_base.clone().map(Reduced::into_full)
+                    != rs.d_base.clone().map(Reduced::into_full)
+            {
+                return false;
+            }
+        }
+        true
     });
 }
 

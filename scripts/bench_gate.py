@@ -37,7 +37,11 @@ Environment:
 
 ``--update`` rewrites the baseline from the fresh file (keeping it in the
 same schema) instead of gating — run it locally and commit the result to
-ratify an intended change.
+ratify an intended change. Ratification refuses fresh results that carry
+seeded-null latency means (a ``mean_s`` of null means the bench never
+actually timed that case — ratifying it would silently disarm the
+latency gate forever) unless ``--allow-first-run`` is passed, the escape
+hatch for seeding a brand-new baseline before the first trusted CI run.
 """
 
 from __future__ import annotations
@@ -86,6 +90,14 @@ def main() -> None:
         action="store_true",
         help="rewrite the baseline from the fresh results instead of gating",
     )
+    ap.add_argument(
+        "--allow-first-run",
+        action="store_true",
+        help=(
+            "with --update: permit ratifying results whose latency means are "
+            "null (seeded placeholders) — only for seeding a brand-new baseline"
+        ),
+    )
     args = ap.parse_args()
 
     tol = float(os.environ.get("PRELORA_BENCH_TOL_PCT", "15")) / 100.0
@@ -94,6 +106,20 @@ def main() -> None:
     fresh = load(args.fresh)
 
     if args.update:
+        null_means = sorted(
+            m["name"] for m in fresh["results"] if m.get("mean_s") is None
+        )
+        if null_means and not args.allow_first_run:
+            print(
+                "bench_gate: refusing to ratify: "
+                f"{len(null_means)} case(s) carry seeded-null latency means "
+                f"({', '.join(null_means)}) — a null mean_s was never actually "
+                "timed, and ratifying it disarms the latency gate for that case; "
+                "re-run the bench so every case records a mean, or pass "
+                "--allow-first-run to seed a brand-new baseline deliberately",
+                file=sys.stderr,
+            )
+            sys.exit(1)
         with open(args.baseline, "w", encoding="utf-8") as f:
             json.dump(fresh, f, indent=1)
             f.write("\n")
@@ -134,9 +160,10 @@ def main() -> None:
         want = base_cases[name].get("mean_s")
         got = fresh_cases[name].get("mean_s")
         if want is None:
+            fresh_desc = "also null" if got is None else f"{got:.6f}s"
             notes.append(
                 f"{name}: baseline has no recorded latency (seeded); fresh mean "
-                f"{got:.6f}s — run --update to start gating it"
+                f"{fresh_desc} — run --update to start gating it"
             )
             continue
         if got is None:

@@ -196,6 +196,37 @@ class TestUpdateRatification(GateHarness):
         self.assertEqual(code, 0, out)
         self.assertTrue(os.path.exists(self.base_path))
 
+    def test_update_refuses_seeded_null_means(self) -> None:
+        # a fresh file whose cases were never actually timed must not be
+        # ratifiable by default: it would disarm the latency gate forever
+        self.write(self.base_path, bench_doc())
+        fresh = bench_doc()
+        fresh["results"][1]["mean_s"] = None
+        self.write(self.fresh_path, fresh)
+        code, _, err = self.run_gate("--update")
+        self.assertEqual(code, 1)
+        self.assertIn("refusing to ratify", err)
+        self.assertIn("vit-micro/full/zero-2", err)
+        self.assertIn("--allow-first-run", err)
+        # the baseline must be untouched by the refused update
+        with open(self.base_path, encoding="utf-8") as f:
+            self.assertEqual(json.load(f), bench_doc())
+
+    def test_allow_first_run_permits_seeding_a_null_baseline(self) -> None:
+        fresh = bench_doc()
+        for m in fresh["results"]:
+            m["mean_s"] = None
+        self.write(self.fresh_path, fresh)
+        code, out, _ = self.run_gate("--update", "--allow-first-run")
+        self.assertEqual(code, 0, out)
+        with open(self.base_path, encoding="utf-8") as f:
+            ratified = json.load(f)
+        self.assertIsNone(ratified["results"][0]["mean_s"])
+        # and fully-timed results never need the escape hatch
+        self.write(self.fresh_path, bench_doc())
+        code, out, _ = self.run_gate("--update")
+        self.assertEqual(code, 0, out)
+
 
 class TestMalformedInput(GateHarness):
     def test_non_bench_json_is_rejected(self) -> None:
