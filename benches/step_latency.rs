@@ -6,7 +6,9 @@
 //! model with built artifacts. Expect lora < full < warmup. Also measures
 //! the staged pipeline vs the serial loop and the `dist::Strategy` sweep
 //! (ZeRO off / stage 1 / stage 2 / stage 3 — same losses, per-rank
-//! optimizer, gradient and parameter bytes shrinking stage by stage).
+//! optimizer, gradient and parameter bytes shrinking stage by stage) and
+//! the bucketed gradient-sync sweep (`epoch_bucketed_*`: same losses at
+//! every bucket size, leader comm_wait dropping as buckets overlap).
 //!
 //! Writes results/bench_step_latency.csv and the CI artifact
 //! results/BENCH_step_latency.json. `PRELORA_BENCH_SMOKE=1` runs one
@@ -17,7 +19,7 @@ use std::sync::Arc;
 use prelora::config::{PipelineConfig, TrainConfig};
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
 use prelora::dist::{self, ZeroStage};
-use prelora::dp::{Algorithm, GradEngine, StepMode};
+use prelora::dp::{Algorithm, BucketPlan, GradEngine, StepMode};
 use prelora::manifest::{Manifest, ADAPTED_MODULES};
 use prelora::optim::ShardedOptimizer;
 use prelora::pipeline::{ModelState, StepPipeline, UpdateStage};
@@ -110,7 +112,12 @@ fn bench_pipeline(b: &mut Bench, name: &str) {
         dist::strategy_for(ZeroStage::Off, workers, dist::collective_for(engine.algorithm()));
     let mut means = [0.0f64; 2];
     for enabled in [false, true] {
-        let pcfg = PipelineConfig { enabled, prefetch_depth: 2, overlap_reduce: true };
+        let pcfg = PipelineConfig {
+            enabled,
+            prefetch_depth: 2,
+            overlap_reduce: None,
+            bucket_bytes: 0,
+        };
         let mut pipe = StepPipeline::new(&pcfg, strategy.clone()).unwrap();
         let mut model = ModelState::new(
             strategy.park_params(base.clone()),
@@ -188,7 +195,12 @@ fn bench_zero(b: &mut Bench, name: &str) {
     for (i, stage) in stages.into_iter().enumerate() {
         let strategy =
             dist::strategy_for(stage, workers, dist::collective_for(engine.algorithm()));
-        let pcfg = PipelineConfig { enabled: true, prefetch_depth: 2, overlap_reduce: true };
+        let pcfg = PipelineConfig {
+            enabled: true,
+            prefetch_depth: 2,
+            overlap_reduce: None,
+            bucket_bytes: 0,
+        };
         let mut pipe = StepPipeline::new(&pcfg, strategy.clone()).unwrap();
         let label = match stage {
             ZeroStage::Off => format!("{name}/epoch_zero_off"),
@@ -306,6 +318,108 @@ fn bench_zero(b: &mut Bench, name: &str) {
     );
 }
 
+/// Bucketed gradient sync sweep: one full-phase epoch at 2 threaded
+/// workers per bucket size, whole-buffer (`bucket_bytes = 0`) first. The
+/// bit contract is asserted — every bucket size produces the identical
+/// epoch loss — and the overlap claim is reported: the leader's
+/// `comm_wait_s` should drop once early buckets reduce on the
+/// accumulator thread while later backward slices still compute.
+fn bench_bucketed(b: &mut Bench, name: &str) {
+    let dir = std::path::Path::new("artifacts").join(name);
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("skipping {name} bucketed bench: no artifacts");
+        return;
+    };
+    let m = Arc::new(m);
+    let c = m.config.clone();
+    let workers = 2;
+    let epoch_steps = 4;
+    let data = Arc::new(Dataset::generate(&SynthSpec {
+        samples: c.batch_size * workers * epoch_steps,
+        image_size: c.image_size,
+        channels: c.in_channels,
+        num_classes: c.num_classes,
+        noise: 0.3,
+        phase_jitter: true,
+        seed: 4,
+    }));
+    let loader = EpochLoader::new(c.batch_size, workers, 0);
+    let steps = loader.steps_per_epoch(&data);
+    let mut engine = GradEngine::new(m.clone(), workers, true, Algorithm::Ring).unwrap();
+    let tcfg = TrainConfig::default();
+    let base = m.load_init_base().unwrap();
+    let update = UpdateStage::new(tcfg.grad_clip);
+    let units = (c.batch_size * workers * steps) as f64;
+    let strategy =
+        dist::strategy_for(ZeroStage::Off, workers, dist::collective_for(engine.algorithm()));
+    let sweep = BUCKET_SWEEP;
+    let mut losses = [0.0f64; BUCKET_SWEEP.len()];
+    let mut waits = [0.0f64; BUCKET_SWEEP.len()];
+    for (i, &bytes) in sweep.iter().enumerate() {
+        let pcfg = PipelineConfig {
+            enabled: true,
+            prefetch_depth: 2,
+            overlap_reduce: None,
+            bucket_bytes: bytes,
+        };
+        let mut pipe = StepPipeline::new(&pcfg, strategy.clone()).unwrap();
+        let label = if bytes == 0 {
+            format!("{name}/epoch_bucketed_off")
+        } else {
+            format!("{name}/epoch_bucketed_{bytes}")
+        };
+        let mut last_loss = 0.0f64;
+        let mut wait_sum = 0.0f64;
+        let mut iters = 0usize;
+        b.run_units(&label, units, || {
+            // fresh model per iteration: epoch 0 from init every time, so
+            // the recorded losses are directly comparable
+            let mut model = ModelState::new(
+                strategy.park_params(base.clone()),
+                strategy.optimizer(&tcfg, base.len()),
+            );
+            let run = pipe
+                .run_epoch(
+                    &mut engine,
+                    &loader,
+                    &data,
+                    &mut model,
+                    &update,
+                    StepMode::Full,
+                    0,
+                    steps,
+                    1e-3,
+                )
+                .unwrap();
+            last_loss = run.loss_sum;
+            wait_sum += run.comm_wait_s;
+            iters += 1;
+        });
+        losses[i] = last_loss;
+        waits[i] = wait_sum / iters.max(1) as f64;
+    }
+    for (i, &bytes) in sweep.iter().enumerate().skip(1) {
+        assert_eq!(
+            losses[i], losses[0],
+            "{name}: bucket_bytes = {bytes} changed the epoch loss (must be bitwise the \
+             whole-buffer sync's)"
+        );
+    }
+    let fmt: Vec<String> = sweep
+        .iter()
+        .zip(&waits)
+        .map(|(&bytes, &w)| format!("{bytes}B: {:.3} ms", w * 1e3))
+        .collect();
+    println!(
+        "{name}: losses bit-identical across the bucket sweep; epoch comm_wait [{}] (expect \
+         bucketed < whole-buffer at {workers} workers)",
+        fmt.join(", ")
+    );
+}
+
+/// The bucket sizes `bench_bucketed` sweeps (0 = whole-buffer reference).
+const BUCKET_SWEEP: [usize; 3] = [0, 4096, 16384];
+
 fn main() {
     let smoke = std::env::var("PRELORA_BENCH_SMOKE").is_ok_and(|v| v == "1");
     let mut b = if smoke { Bench::smoke() } else { Bench::heavy() };
@@ -316,6 +430,7 @@ fn main() {
         bench_model(&mut b, model);
         bench_pipeline(&mut b, model);
         bench_zero(&mut b, model);
+        bench_bucketed(&mut b, model);
     }
     b.write_csv("results/bench_step_latency.csv").unwrap();
     let mut meta: Vec<(&str, String)> = vec![
@@ -345,6 +460,19 @@ fn main() {
         meta.push(("zero_param_total_bytes", (m.base.size * 4).to_string()));
         meta.push(("zero_opt_bytes_per_worker", opt_per.to_string()));
         meta.push(("zero_opt_total_bytes", opt_total.to_string()));
+        // the bucketed-sync sweep's layout: space size and per-size bucket
+        // counts for the unsharded (parts = 1) epoch cases — deterministic
+        // functions of the manifest, compared exactly by the gate
+        meta.push(("bucketed_workers", workers.to_string()));
+        meta.push(("bucketed_grad_space_bytes", (m.base.size * 4).to_string()));
+        meta.push((
+            "bucketed_4096_bucket_count",
+            BucketPlan::derive(m.base.size, 1, 4096).count().to_string(),
+        ));
+        meta.push((
+            "bucketed_16384_bucket_count",
+            BucketPlan::derive(m.base.size, 1, 16384).count().to_string(),
+        ));
     }
     b.write_json("results/BENCH_step_latency.json", &meta).unwrap();
     // Fig. 7 shape assertion: the frozen-base step must beat the full step

@@ -801,6 +801,7 @@ mod tests {
             opt_state_bytes_per_worker: 2048,
             grad_bytes_per_worker: 1024,
             grad_norm: 0.5 + epoch as f64,
+            comm_wait_s: 0.0625 * epoch as f64,
         }
     }
 

@@ -97,7 +97,9 @@ impl RunConfig {
             "train.dp.threaded" => t.dp.threaded = v.as_bool()?,
             "train.pipeline.enabled" => t.pipeline.enabled = v.as_bool()?,
             "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
-            "train.pipeline.overlap_reduce" => t.pipeline.overlap_reduce = v.as_bool()?,
+            // deprecated shim (same treatment as train.zero.enabled below)
+            "train.pipeline.overlap_reduce" => t.pipeline.overlap_reduce = Some(v.as_bool()?),
+            "train.pipeline.bucket_bytes" => t.pipeline.bucket_bytes = v.as_usize()?,
             // deprecated shim; the deprecation warning is surfaced once
             // through TrainConfig::lint() (printed by `prelora train` at
             // startup and by `prelora config-lint`), not at parse time —
@@ -175,10 +177,14 @@ impl RunConfig {
         s.push_str(&format!("workers = {}\n", t.dp.workers));
         s.push_str(&format!("allreduce = {}\n", escape_str(&t.dp.allreduce)));
         s.push_str(&format!("threaded = {}\n\n", t.dp.threaded));
+        // canonical form only: the deprecated `overlap_reduce` shim is
+        // resolved into the bucket size it implies (overlap is pure
+        // scheduling — it cannot change a bit — so only bucket_bytes
+        // needs re-emitting), mirroring the `[train.zero]` treatment
         s.push_str("[train.pipeline]\n");
         s.push_str(&format!("enabled = {}\n", t.pipeline.enabled));
         s.push_str(&format!("prefetch_depth = {}\n", t.pipeline.prefetch_depth));
-        s.push_str(&format!("overlap_reduce = {}\n\n", t.pipeline.overlap_reduce));
+        s.push_str(&format!("bucket_bytes = {}\n\n", t.pipeline.effective_bucket_bytes()));
         // canonical form only: the deprecated `enabled` shim is resolved
         // into the stage it means, so re-emitted configs never carry it
         s.push_str("[train.zero]\n");
@@ -271,7 +277,45 @@ mod tests {
         .unwrap();
         assert!(!cfg.train.pipeline.enabled);
         assert_eq!(cfg.train.pipeline.prefetch_depth, 4);
-        assert!(!cfg.train.pipeline.overlap_reduce);
+        assert_eq!(cfg.train.pipeline.overlap_reduce, Some(false));
+        assert!(!cfg.train.pipeline.effective_overlap());
+        let cfg =
+            RunConfig::from_toml_str("[train.pipeline]\nbucket_bytes = 4096\n").unwrap();
+        assert_eq!(cfg.train.pipeline.bucket_bytes, 4096);
+        assert_eq!(cfg.train.pipeline.effective_bucket_bytes(), 4096);
+    }
+
+    #[test]
+    fn deprecated_overlap_reduce_key_canonicalizes_away() {
+        // legacy false forces whole-buffer sync; the re-emission resolves
+        // the shim into the bucket size it implies and drops the key
+        let cfg = RunConfig::from_toml_str(
+            "[train.pipeline]\noverlap_reduce = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.pipeline.overlap_reduce, Some(false));
+        assert_eq!(cfg.train.pipeline.effective_bucket_bytes(), 0);
+        let text = cfg.to_toml();
+        assert!(
+            !text.contains("overlap_reduce"),
+            "deprecated key must not be re-emitted: {text}"
+        );
+        assert!(text.contains("bucket_bytes = 0"), "{text}");
+        let back = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.train.pipeline.overlap_reduce, None);
+        assert!(back.train.pipeline.effective_overlap());
+        // an explicit bucket size survives the roundtrip
+        let cfg = RunConfig::from_toml_str("[train.pipeline]\nbucket_bytes = 256\n").unwrap();
+        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.train.pipeline.bucket_bytes, 256);
+        // the contradiction is rejected at validate
+        assert!(
+            RunConfig::from_toml_str(
+                "[train.pipeline]\noverlap_reduce = false\nbucket_bytes = 256\n"
+            )
+            .is_err(),
+            "overlap_reduce = false + bucket_bytes > 0 must be rejected"
+        );
     }
 
     #[test]
@@ -287,9 +331,14 @@ mod tests {
         );
         assert_eq!(cfg.train.zero_shards(), 4);
         assert_eq!(cfg.train.zero_grad_parts(), 4);
-        // the canonical re-emission resolves the shim away
+        // the canonical re-emission resolves the shim away (the zero
+        // block carries only the stage; other sections have their own
+        // legitimate `enabled` keys)
         let text = cfg.to_toml();
-        assert!(!text.contains("enabled"), "deprecated key must not be re-emitted: {text}");
+        assert!(text.contains("[train.zero]\nstage = 2"), "{text}");
+        let zero_block = text.split("[train.zero]").nth(1).unwrap();
+        let zero_block = zero_block.split('[').next().unwrap();
+        assert!(!zero_block.contains("enabled"), "deprecated key must not be re-emitted: {text}");
         let back = RunConfig::from_toml_str(&text).unwrap();
         assert_eq!(back.train.zero.enabled, None);
         assert_eq!(back.train.zero.effective_stage(), crate::dist::ZeroStage::Zero2);

@@ -158,14 +158,48 @@ pub struct PipelineConfig {
     /// Global steps of batches the prefetch stage may materialize ahead of
     /// the compute stage (>= 1).
     pub prefetch_depth: usize,
-    /// Reduce the base gradients on the stage thread concurrently with the
-    /// LoRA gradients on the leader when a step carries both (warmup).
-    pub overlap_reduce: bool,
+    /// **Deprecated** legacy knob, kept only so old configs keep working
+    /// (the `train.zero.enabled` pattern): `true` keeps its historical
+    /// meaning — reduce the base gradients on the stage thread
+    /// concurrently with the LoRA gradients on the leader — and `false`
+    /// additionally forces `bucket_bytes` off. Setting it is called out by
+    /// [`TrainConfig::lint`]; phase-level overlap is on by default and
+    /// `bucket_bytes` is the knob that actually changes the overlap
+    /// granularity. Overlap is pure scheduling: it cannot change a bit of
+    /// the trajectory, which is why the canonical config no longer spells
+    /// it.
+    pub overlap_reduce: Option<bool>,
+    /// Bucket-level gradient sync: split each gradient space into buckets
+    /// of at most this many bytes (aligned to the ZeRO partition
+    /// boundaries), publish each bucket as its slice of backward
+    /// completes, and reduce early buckets while later ones are still
+    /// computing. `0` (default) = whole-buffer sync. Bitwise identical to
+    /// `0` for a fixed seed at any setting — bucketing changes *when*
+    /// reduction work happens, never the summation order.
+    pub bucket_bytes: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { enabled: true, prefetch_depth: 2, overlap_reduce: true }
+        Self { enabled: true, prefetch_depth: 2, overlap_reduce: None, bucket_bytes: 0 }
+    }
+}
+
+impl PipelineConfig {
+    /// Resolve the deprecated `overlap_reduce` shim: phase-level overlap
+    /// is on unless the legacy knob forces it off.
+    pub fn effective_overlap(&self) -> bool {
+        self.overlap_reduce.unwrap_or(true)
+    }
+
+    /// The bucket size the run actually uses: the legacy
+    /// `overlap_reduce = false` forces whole-buffer sync (bucketing *is*
+    /// reduce overlap, just finer-grained), otherwise `bucket_bytes`.
+    pub fn effective_bucket_bytes(&self) -> usize {
+        match self.overlap_reduce {
+            Some(false) => 0,
+            _ => self.bucket_bytes,
+        }
     }
 }
 
@@ -245,6 +279,11 @@ impl TrainConfig {
             .map_err(|e| anyhow::anyhow!(e))?;
         ensure!(self.pipeline.prefetch_depth >= 1, "pipeline.prefetch_depth >= 1");
         ensure!(
+            !(self.pipeline.overlap_reduce == Some(false) && self.pipeline.bucket_bytes > 0),
+            "train.pipeline.overlap_reduce = false contradicts train.pipeline.bucket_bytes > 0 \
+             — drop the deprecated overlap knob and set the bucket size you mean"
+        );
+        ensure!(
             !(self.zero.enabled == Some(true)
                 && self.zero.stage == Some(crate::dist::ZeroStage::Off)),
             "train.zero.enabled = true contradicts train.zero.stage = 0 — drop the deprecated \
@@ -319,12 +358,38 @@ impl TrainConfig {
                 self.pipeline.prefetch_depth
             ));
         }
-        if !self.pipeline.enabled && self.pipeline.overlap_reduce {
+        if self.pipeline.overlap_reduce.is_some() {
             warnings.push(
-                "train.pipeline.overlap_reduce has no effect with train.pipeline.enabled = \
-                 false (the serial reference loop reduces inline)"
+                "the legacy reduce-overlap knob (train.pipeline.overlap_reduce) is deprecated: \
+                 phase-level overlap is always on, and train.pipeline.bucket_bytes is the knob \
+                 that changes overlap granularity — overlap_reduce = false keeps its historical \
+                 meaning (whole-buffer inline sync, bucketing forced off)"
                     .to_string(),
             );
+        }
+        if !self.pipeline.enabled
+            && (self.pipeline.overlap_reduce == Some(true) || self.pipeline.bucket_bytes > 0)
+        {
+            warnings.push(
+                "train.pipeline.overlap_reduce / train.pipeline.bucket_bytes have no effect \
+                 with train.pipeline.enabled = false (the serial reference loop reduces inline)"
+                    .to_string(),
+            );
+        }
+        if self.pipeline.bucket_bytes > 0 && self.pipeline.bucket_bytes < 4 {
+            warnings.push(format!(
+                "train.pipeline.bucket_bytes = {} is smaller than one f32 element: buckets \
+                 clamp to one element each and queue overhead dominates the reduce",
+                self.pipeline.bucket_bytes
+            ));
+        }
+        if self.pipeline.bucket_bytes >= (1 << 20) {
+            warnings.push(format!(
+                "train.pipeline.bucket_bytes = {} is larger than the parameter spaces trained \
+                 here: every partition fits one bucket, which degenerates to whole-buffer sync \
+                 (same as 0)",
+                self.pipeline.bucket_bytes
+            ));
         }
         if self.dp.workers > 1 && !self.dp.threaded {
             warnings.push(format!(
@@ -437,11 +502,13 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.pipeline.prefetch_depth = 64;
         cfg.pipeline.enabled = false;
+        cfg.pipeline.overlap_reduce = Some(true);
         cfg.dp.workers = 4;
         cfg.dp.threaded = false;
         let w = cfg.lint();
         assert!(w.iter().any(|m| m.contains("prefetch_depth")), "{w:?}");
-        assert!(w.iter().any(|m| m.contains("overlap_reduce")), "{w:?}");
+        assert!(w.iter().any(|m| m.contains("no effect")), "{w:?}");
+        assert!(w.iter().any(|m| m.contains("overlap_reduce") && m.contains("deprecated")), "{w:?}");
         assert!(w.iter().any(|m| m.contains("sequentially")), "{w:?}");
         // lint never reports on valid sharded multi-worker runs
         let mut cfg = TrainConfig::default();
@@ -455,6 +522,52 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.pipeline.prefetch_depth = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn overlap_shim_resolves_like_the_zero_shim() {
+        // default: overlap on, bucketing off, no lint noise
+        let cfg = TrainConfig::default();
+        assert!(cfg.pipeline.effective_overlap());
+        assert_eq!(cfg.pipeline.effective_bucket_bytes(), 0);
+        // legacy true: historical meaning, bucket size passes through
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.overlap_reduce = Some(true);
+        cfg.pipeline.bucket_bytes = 4096;
+        cfg.validate().unwrap();
+        assert!(cfg.pipeline.effective_overlap());
+        assert_eq!(cfg.pipeline.effective_bucket_bytes(), 4096);
+        assert!(cfg.lint().iter().any(|m| m.contains("deprecated")), "{:?}", cfg.lint());
+        // legacy false forces both overlap layers off
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.overlap_reduce = Some(false);
+        cfg.validate().unwrap();
+        assert!(!cfg.pipeline.effective_overlap());
+        assert_eq!(cfg.pipeline.effective_bucket_bytes(), 0);
+        // ...and contradicting it with an explicit bucket size is fatal
+        cfg.pipeline.bucket_bytes = 4096;
+        assert!(cfg.validate().is_err(), "overlap_reduce = false + bucket_bytes > 0");
+    }
+
+    #[test]
+    fn lint_flags_degenerate_bucket_sizes() {
+        // smaller than one element
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.bucket_bytes = 2;
+        assert!(cfg.lint().iter().any(|m| m.contains("one f32 element")), "{:?}", cfg.lint());
+        // larger than any space trained here
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.bucket_bytes = 8 << 20;
+        assert!(cfg.lint().iter().any(|m| m.contains("whole-buffer")), "{:?}", cfg.lint());
+        // bucketing under a disabled pipeline is dead config
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.enabled = false;
+        cfg.pipeline.bucket_bytes = 4096;
+        assert!(cfg.lint().iter().any(|m| m.contains("no effect")), "{:?}", cfg.lint());
+        // a reasonable bucket size lints clean
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline.bucket_bytes = 4096;
+        assert!(cfg.lint().is_empty(), "{:?}", cfg.lint());
     }
 
     #[test]

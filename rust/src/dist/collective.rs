@@ -42,6 +42,18 @@ pub trait Collective: Send + Sync {
     /// [`all_reduce`](Self::all_reduce) output.
     fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>>;
 
+    /// Reduce one bucket — a contiguous slice `[lo, lo + bufs[0].len())`
+    /// of a `full_len`-element gradient space — such that concatenating
+    /// the per-bucket outputs in index order reproduces the whole-buffer
+    /// [`all_reduce`](Self::all_reduce) **bitwise**. `None` means the
+    /// backend does not support bucketed reduction; callers must fall
+    /// back to the whole-buffer path (the default, so custom backends
+    /// keep today's behavior unchanged).
+    fn reduce_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
+        let _ = (bufs, lo, full_len);
+        None
+    }
+
     /// Reassemble the full vector from partition-ordered chunks (exact
     /// concatenation; the step that builds the ZeRO-3 working view).
     fn all_gather(&self, chunks: &[Vec<f32>]) -> Vec<f32> {
@@ -92,6 +104,10 @@ impl Collective for AlgoCollective {
     fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>> {
         crate::dp::reduce_scatter(self.alg, bufs, parts)
     }
+
+    fn reduce_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
+        crate::dp::reduce_bucket(self.alg, bufs, lo, full_len)
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +144,40 @@ mod tests {
                 assert_eq!(c.all_gather(&chunks), want, "{alg:?} parts={parts}");
             }
         }
+    }
+
+    #[test]
+    fn bucketed_reduce_concat_is_bitwise_all_reduce() {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let c = AlgoCollective::new(alg);
+            let len = 101;
+            let want = c.all_reduce(bufs(3, len)).unwrap();
+            let plan = crate::dp::BucketPlan::derive(len, 1, 52);
+            let src = bufs(3, len);
+            let mut got = Vec::with_capacity(len);
+            for b in &plan.buckets {
+                let slices: Vec<Vec<f32>> = src.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                got.extend(c.reduce_bucket(slices, b.lo, len).unwrap());
+            }
+            assert_eq!(got, want, "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn default_reduce_bucket_signals_unsupported() {
+        struct Whole;
+        impl Collective for Whole {
+            fn name(&self) -> &'static str {
+                "whole"
+            }
+            fn all_reduce(&self, bufs: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+                crate::dp::reduce_owned(Algorithm::Naive, bufs)
+            }
+            fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>> {
+                crate::dp::reduce_scatter(Algorithm::Naive, bufs, parts)
+            }
+        }
+        assert!(Whole.reduce_bucket(bufs(2, 8), 0, 8).is_none());
     }
 
     #[test]

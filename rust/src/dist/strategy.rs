@@ -17,7 +17,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::dp::{partition, GradResult, Reduced, StepOutputs};
+use crate::dp::{partition, BucketPlan, GradResult, Reduced, StepOutputs};
 use crate::optim::ShardedOptimizer;
 
 use super::collective::Collective;
@@ -213,6 +213,34 @@ pub trait Strategy: Send + Sync {
         }
     }
 
+    /// Whether this strategy supports the bucketed reduce path. The
+    /// default is `false`, so any custom strategy keeps today's
+    /// whole-buffer [`grad_sync`](Self::grad_sync) behavior untouched;
+    /// the stock stages opt in because their collective implements
+    /// [`Collective::reduce_bucket`] bitwise.
+    fn bucketed_sync(&self) -> bool {
+        false
+    }
+
+    /// Partition a `len`-element gradient space into size-bounded buckets
+    /// aligned to this strategy's gradient partition boundaries (so
+    /// ZeRO-1/2/3 ownership is bucket-local). `bucket_bytes = 0` means
+    /// whole-partition buckets. Layouts re-derive per call, which is what
+    /// makes a `Repartition` event's new space lengths pick up fresh
+    /// bucket layouts automatically.
+    fn bucket_plan(&self, len: usize, bucket_bytes: usize) -> BucketPlan {
+        BucketPlan::derive(len, self.grad_parts(), bucket_bytes)
+    }
+
+    /// Reduce one bucket — worker slices of `[lo, lo + bufs[0].len())`
+    /// within a `full_len`-element space — such that the per-bucket
+    /// outputs concatenated in index order are **bitwise** the
+    /// [`grad_sync`](Self::grad_sync) of the whole buffers. `None` means
+    /// unsupported; callers must fall back to the whole-buffer reduce.
+    fn grad_sync_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
+        self.collective().reduce_bucket(bufs, lo, full_len)
+    }
+
     /// [`grad_sync`](Self::grad_sync) over both of a step's buffer sets
     /// (base + LoRA), scalars passed through.
     fn reduce_step(&self, outs: StepOutputs) -> GradResult {
@@ -319,6 +347,10 @@ impl Strategy for Unsharded {
     fn collective(&self) -> &dyn Collective {
         &*self.collective
     }
+
+    fn bucketed_sync(&self) -> bool {
+        true
+    }
 }
 
 /// ZeRO-1: optimizer state sharded (~1/N moments per rank); gradients and
@@ -345,6 +377,10 @@ impl Strategy for Zero1 {
 
     fn collective(&self) -> &dyn Collective {
         &*self.collective
+    }
+
+    fn bucketed_sync(&self) -> bool {
+        true
     }
 }
 
@@ -374,6 +410,10 @@ impl Strategy for Zero2 {
 
     fn collective(&self) -> &dyn Collective {
         &*self.collective
+    }
+
+    fn bucketed_sync(&self) -> bool {
+        true
     }
 }
 
@@ -406,6 +446,61 @@ mod tests {
             assert_eq!(got.into_full(), want, "{stage:?} diverged from the all-reduce");
         }
         assert!(strat(ZeroStage::Zero2, 3).grad_sync(Vec::new()).is_none());
+    }
+
+    #[test]
+    fn bucketed_grad_sync_assembles_bitwise_per_stage() {
+        // bucket-by-bucket reduction + index-order assembly must be
+        // bitwise the whole-buffer grad_sync in every stage's layout,
+        // including bucket counts coprime with the worker count
+        let len = 101;
+        for stage in [ZeroStage::Off, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            let s = strat(stage, 3);
+            assert!(s.bucketed_sync(), "{stage:?} must opt into bucketing");
+            let want = s.grad_sync(bufs(3, len)).unwrap();
+            for bytes in [0usize, 28, 52, 4 * len] {
+                let plan = s.bucket_plan(len, bytes);
+                assert_eq!(plan.parts, s.grad_parts().max(1));
+                let src = bufs(3, len);
+                let mut chunks = vec![Vec::new(); plan.parts];
+                for b in &plan.buckets {
+                    let slices: Vec<Vec<f32>> =
+                        src.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                    chunks[b.part].extend(s.grad_sync_bucket(slices, b.lo, len).unwrap());
+                }
+                let got = if s.grad_parts() <= 1 {
+                    assert_eq!(chunks.len(), 1);
+                    Reduced::Full(chunks.pop().unwrap())
+                } else {
+                    Reduced::Sharded(chunks)
+                };
+                match (&got, &want) {
+                    (Reduced::Full(a), Reduced::Full(b)) => assert_eq!(a, b, "{stage:?} {bytes}"),
+                    (Reduced::Sharded(a), Reduced::Sharded(b)) => {
+                        assert_eq!(a, b, "{stage:?} {bytes}")
+                    }
+                    _ => panic!("{stage:?}: layout mismatch between bucketed and whole-buffer"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn custom_strategies_default_to_whole_buffer_sync() {
+        struct Custom(Unsharded);
+        impl Strategy for Custom {
+            fn stage(&self) -> ZeroStage {
+                ZeroStage::Off
+            }
+            fn workers(&self) -> usize {
+                self.0.workers()
+            }
+            fn collective(&self) -> &dyn Collective {
+                self.0.collective()
+            }
+        }
+        let c = Custom(Unsharded::new(3, collective_for(Algorithm::Ring)));
+        assert!(!c.bucketed_sync(), "custom strategies must keep whole-buffer behavior");
     }
 
     #[test]

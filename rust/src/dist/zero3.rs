@@ -53,6 +53,10 @@ impl Strategy for Zero3 {
     fn collective(&self) -> &dyn Collective {
         &*self.collective
     }
+
+    fn bucketed_sync(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +166,42 @@ mod tests {
             m_off.base.to_full() == m_z3.base.to_full()
                 && m_off.opt_base.as_ref().unwrap().export_state()
                     == m_z3.opt_base.as_ref().unwrap().export_state()
+        });
+    }
+
+    /// Bucket boundaries fuzzed over ragged lengths, odd worker counts
+    /// and bucket element counts coprime with the worker count: the
+    /// bucketed reduce assembled in index order must be bitwise the
+    /// whole-buffer reduce-scatter for the stage-3 layout.
+    #[test]
+    fn prop_bucketed_reduce_scatter_is_bitwise_whole_buffer() {
+        check::<TrajCase, _>(911, 120, |case| {
+            let z3 = strategy_for(ZeroStage::Zero3, case.workers, collective_for(Algorithm::Ring));
+            let mut rng = Pcg64::new(case.seed);
+            let src = worker_grads(&mut rng, case.workers, case.len);
+            let Some(want) = z3.grad_sync(src.clone()) else { return false };
+            // bucket sizes deliberately coprime with typical worker counts
+            for bytes in [0usize, 4, 44, 52, 4 * case.len] {
+                let plan = z3.bucket_plan(case.len, bytes);
+                let mut chunks = vec![Vec::new(); plan.parts];
+                for b in &plan.buckets {
+                    let slices: Vec<Vec<f32>> =
+                        src.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                    let Some(r) = z3.grad_sync_bucket(slices, b.lo, case.len) else {
+                        return false;
+                    };
+                    chunks[b.part].extend(r);
+                }
+                let got = crate::dp::Reduced::Sharded(chunks);
+                let same = match &want {
+                    crate::dp::Reduced::Sharded(w) => matches!(&got, crate::dp::Reduced::Sharded(g) if g == w),
+                    crate::dp::Reduced::Full(_) => false,
+                };
+                if !same {
+                    return false;
+                }
+            }
+            true
         });
     }
 

@@ -119,6 +119,153 @@ pub fn partition(len: usize, parts: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// One bucket of a gradient space: the element range `[lo, hi)` plus the
+/// index of the [`partition`] chunk that wholly contains it. Buckets never
+/// straddle a partition boundary, so under ZeRO sharding every bucket has
+/// exactly one owning rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    pub lo: usize,
+    pub hi: usize,
+    /// Index of the grad partition this bucket lies inside.
+    pub part: usize,
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo >= self.hi
+    }
+}
+
+/// The bucket layout of one gradient space: contiguous, size-bounded
+/// sub-ranges of `[0, len)` whose boundaries include every grad-partition
+/// boundary (each bucket lies fully inside one [`partition`] chunk, so
+/// ZeRO-1/2/3 ownership is bucket-local). Derived per space length —
+/// callers re-derive whenever a `Repartition` event changes which spaces
+/// are live or how long they are.
+///
+/// `bucket_bytes = 0` means "whole-buffer": one bucket per non-empty
+/// partition, i.e. exactly the unbucketed reduce-scatter layout (and a
+/// single whole-space bucket when `parts == 1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketPlan {
+    /// Full length of the gradient space the plan covers.
+    pub len: usize,
+    /// Grad partition count the boundaries are aligned to.
+    pub parts: usize,
+    /// Buckets in ascending index order (ascending `lo`, covering
+    /// `[0, len)` contiguously; empty for a zero-length space).
+    pub buckets: Vec<Bucket>,
+}
+
+impl BucketPlan {
+    /// Derive the layout: split each of the `parts` grad partitions of a
+    /// length-`len` space into pieces of at most `max(1, bucket_bytes/4)`
+    /// f32 elements. Degenerate sizes are safe by construction — a bucket
+    /// size below one element clamps to single-element buckets, and one
+    /// larger than the space (or 0) degrades to whole-partition buckets.
+    pub fn derive(len: usize, parts: usize, bucket_bytes: usize) -> Self {
+        let parts = parts.max(1);
+        let max_elems = if bucket_bytes == 0 {
+            len.max(1)
+        } else {
+            (bucket_bytes / 4).max(1)
+        };
+        let mut buckets = Vec::new();
+        for (part, (plo, phi)) in partition(len, parts).into_iter().enumerate() {
+            let mut lo = plo;
+            while lo < phi {
+                let hi = (lo + max_elems).min(phi);
+                buckets.push(Bucket { lo, hi, part });
+                lo = hi;
+            }
+        }
+        Self { len, parts, buckets }
+    }
+
+    pub fn count(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+/// Reduce one *bucket* of the gradient space: `bufs[w]` is worker `w`'s
+/// elements `[lo, lo + bufs[w].len())` of its full length-`full_len`
+/// buffer, and the result is the elementwise mean of that slice.
+///
+/// **Bit contract:** the returned slice equals `reduce_owned(alg,
+/// full_bufs)[lo..hi]` exactly — per element the identical additions in
+/// the identical order, only restricted to the bucket's range:
+///
+/// * `Naive`/`Tree` schedules are position-independent (the same
+///   worker-order / pairwise folds per element), so they run on the
+///   bucket-local slices directly.
+/// * `Ring`'s summation order depends on which *global* ring chunk an
+///   element falls in, so the fold is replayed per overlapped chunk of
+///   `partition(full_len, n)`: chunk `c`'s elements accumulate as
+///   `acc = bufs[c]`, then `acc = bufs[(c+k) % n] + acc` for
+///   `k = 1..n` — the exact `dst += src` chain [`ring_rounds`] performs.
+///
+/// A single worker is the identity (no scaling), matching `reduce_mean`'s
+/// early return. Returns `None` for an empty worker set.
+pub fn reduce_bucket(
+    alg: Algorithm,
+    mut bufs: Vec<Vec<f32>>,
+    lo: usize,
+    full_len: usize,
+) -> Option<Vec<f32>> {
+    let n = bufs.len();
+    if n == 0 {
+        return None;
+    }
+    let blen = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == blen), "bucket slice length mismatch");
+    assert!(
+        lo + blen <= full_len,
+        "bucket [{lo}, {}) exceeds the space length {full_len}",
+        lo + blen
+    );
+    if n == 1 {
+        return Some(bufs.swap_remove(0));
+    }
+    let mut out = match alg {
+        Algorithm::Naive => naive_range(&bufs, 0, blen),
+        Algorithm::Tree => tree_range(&bufs, 0, blen),
+        Algorithm::Ring => {
+            let hi = lo + blen;
+            let mut out = Vec::with_capacity(blen);
+            for (c, &(rlo, rhi)) in partition(full_len, n).iter().enumerate() {
+                let (s, e) = (lo.max(rlo), hi.min(rhi));
+                if s >= e {
+                    continue;
+                }
+                let (bs, be) = (s - lo, e - lo);
+                let mut acc = bufs[c][bs..be].to_vec();
+                for k in 1..n {
+                    let src = &bufs[(c + k) % n][bs..be];
+                    for (a, &v) in acc.iter_mut().zip(src) {
+                        // operand order matches the ring's dst += src:
+                        // the receiving rank's value on the left, the
+                        // accumulated chunk on the right
+                        *a = v + *a;
+                    }
+                }
+                out.extend_from_slice(&acc);
+            }
+            debug_assert_eq!(out.len(), blen);
+            out
+        }
+    };
+    let inv = 1.0 / n as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    Some(out)
+}
+
 /// Reduce `bufs` to their elementwise mean, left in `bufs[0]`.
 /// Returns early on a single buffer. Panics on length mismatch.
 pub fn reduce_mean(alg: Algorithm, bufs: &mut [Vec<f32>]) {
@@ -621,5 +768,111 @@ mod tests {
         assert_eq!(sharded.into_full(), full);
         assert_eq!(Reduced::Full(full.clone()).len(), 5);
         assert_eq!(Reduced::Full(full.clone()).into_full(), full);
+    }
+
+    #[test]
+    fn bucket_plan_aligns_to_partitions_and_bounds_size() {
+        // degenerate sizes included: smaller than one partition (many
+        // buckets per partition), larger than the whole space (one bucket
+        // per partition), zero (whole-buffer), parts > len (empty
+        // partitions contribute no buckets)
+        for (len, parts, bytes) in [
+            (101usize, 3usize, 16usize),
+            (101, 3, 4096),
+            (101, 3, 0),
+            (101, 1, 40),
+            (7, 7, 4),
+            (3, 8, 8),
+            (0, 2, 16),
+            (64, 2, 1), // below one element: clamps to 1-element buckets
+            (1023, 5, 100),
+        ] {
+            let plan = BucketPlan::derive(len, parts, bytes);
+            assert_eq!(plan.len, len);
+            let max_elems = if bytes == 0 { len.max(1) } else { (bytes / 4).max(1) };
+            let bounds = partition(len, parts.max(1));
+            // contiguous cover of [0, len) in ascending index order
+            let mut at = 0usize;
+            for b in &plan.buckets {
+                assert_eq!(b.lo, at, "len={len} parts={parts} bytes={bytes}");
+                assert!(b.hi > b.lo, "empty bucket emitted");
+                assert!(b.len() <= max_elems, "bucket exceeds the size bound");
+                assert!(!b.is_empty());
+                // inside exactly one partition
+                let (plo, phi) = bounds[b.part];
+                assert!(plo <= b.lo && b.hi <= phi, "bucket straddles a partition");
+                at = b.hi;
+            }
+            assert_eq!(at, len, "buckets must cover the space");
+            // every partition boundary is a bucket boundary
+            for &(plo, _) in bounds.iter().filter(|&&(lo, hi)| lo < hi) {
+                assert!(
+                    plo == 0 || plan.buckets.iter().any(|b| b.hi == plo),
+                    "partition boundary {plo} not a bucket boundary"
+                );
+            }
+            if len == 0 {
+                assert_eq!(plan.count(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_bucket_concat_is_bitwise_reduce_owned() {
+        // the bucketing bit contract, all three schedules: slicing the
+        // worker buffers per bucket, reducing each bucket independently
+        // and concatenating in index order reproduces the whole-buffer
+        // reduce exactly — including ragged lengths, odd worker counts
+        // and bucket sizes coprime with both
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            for n in [1usize, 2, 3, 5, 7, 8] {
+                for len in [1usize, 2, 17, 101, 256] {
+                    for bytes in [4usize, 12, 28, 92, 4 * len, 8 * len, 0] {
+                        let (bufs, _) = make_bufs(n, len);
+                        let want = reduce_owned(alg, bufs.clone()).unwrap();
+                        let plan = BucketPlan::derive(len, 1, bytes);
+                        let mut got = Vec::with_capacity(len);
+                        for b in &plan.buckets {
+                            let slices: Vec<Vec<f32>> =
+                                bufs.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                            got.extend(reduce_bucket(alg, slices, b.lo, len).unwrap());
+                        }
+                        assert_eq!(got, want, "{alg:?} n={n} len={len} bytes={bytes}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_bucket_assembles_sharded_chunks_bitwise() {
+        // partition-aligned buckets concatenate within each partition to
+        // exactly the reduce-scatter chunk — the ZeRO-2/3 assembly the
+        // pipeline's bucketed reduce performs
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            for n in [2usize, 3, 5] {
+                for parts in [2usize, 3, 5, 7] {
+                    let len = 103;
+                    let (bufs, _) = make_bufs(n, len);
+                    let want = reduce_scatter(alg, bufs.clone(), parts).unwrap();
+                    let plan = BucketPlan::derive(len, parts, 64);
+                    let mut chunks = vec![Vec::new(); parts];
+                    for b in &plan.buckets {
+                        let slices: Vec<Vec<f32>> =
+                            bufs.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                        chunks[b.part].extend(reduce_bucket(alg, slices, b.lo, len).unwrap());
+                    }
+                    assert_eq!(chunks, want, "{alg:?} n={n} parts={parts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_bucket_single_worker_is_identity() {
+        // matches reduce_mean's n == 1 early return: no 1/n scaling
+        let got = reduce_bucket(Algorithm::Ring, vec![vec![1.5f32, -2.0]], 3, 10).unwrap();
+        assert_eq!(got, vec![1.5, -2.0]);
+        assert!(reduce_bucket(Algorithm::Ring, Vec::new(), 0, 10).is_none());
     }
 }

@@ -6,7 +6,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::allreduce::{reduce_owned, reduce_scatter, Algorithm, Reduced};
+use super::allreduce::{reduce_owned, reduce_scatter, Algorithm, BucketPlan, Reduced};
 use crate::data::Batch;
 use crate::manifest::Manifest;
 use crate::runtime::{Input, Runtime};
@@ -128,6 +128,75 @@ impl StepOutputs {
     }
 }
 
+/// Which of a step's two gradient spaces a bucket belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GradSpace {
+    Base,
+    Lora,
+}
+
+/// One worker's gradient slice for one bucket, published as soon as that
+/// slice of the backward output is available (rather than waiting for the
+/// whole step to collect). `bucket` indexes the space's [`BucketPlan`].
+#[derive(Debug)]
+pub struct BucketMsg {
+    pub space: GradSpace,
+    pub bucket: usize,
+    pub worker: usize,
+    /// The bucket's start offset within the space (for the positional
+    /// ring schedule).
+    pub lo: usize,
+    /// The space's full length.
+    pub full_len: usize,
+    pub data: Vec<f32>,
+}
+
+/// Where workers publish per-bucket gradients: the bucket layouts of the
+/// live spaces (`None` = that space is not bucketed this epoch) plus the
+/// bounded queue the reduce stage's accumulator thread drains. Cloned
+/// into each job so every worker thread owns its own sender handle.
+#[derive(Clone)]
+pub struct BucketRoute {
+    pub base: Option<Arc<BucketPlan>>,
+    pub lora: Option<Arc<BucketPlan>>,
+    pub tx: mpsc::SyncSender<BucketMsg>,
+}
+
+/// Slice a worker's gradient buffers per the route's bucket plans and
+/// publish them in (space, bucket-index) order; published buffers are
+/// stripped from the output so only scalars flow through the results
+/// channel. Send errors are ignored: a gone receiver means the leader is
+/// already failing the step. A length mismatch is a logic bug — panicking
+/// here drops the worker's results sender, which surfaces as a collect
+/// error leader-side instead of a silent bucket-wait hang.
+fn publish_buckets(route: &BucketRoute, mut out: WorkerOut) -> WorkerOut {
+    let worker = out.worker;
+    let publish = |space: GradSpace, plan: &BucketPlan, d: Vec<f32>| {
+        assert_eq!(d.len(), plan.len, "{space:?} gradient length vs bucket plan");
+        for (i, b) in plan.buckets.iter().enumerate() {
+            let _ = route.tx.send(BucketMsg {
+                space,
+                bucket: i,
+                worker,
+                lo: b.lo,
+                full_len: plan.len,
+                data: d[b.lo..b.hi].to_vec(),
+            });
+        }
+    };
+    if let Some(plan) = route.base.as_deref() {
+        if let Some(d) = out.d_base.take() {
+            publish(GradSpace::Base, plan, d);
+        }
+    }
+    if let Some(plan) = route.lora.as_deref() {
+        if let Some(d) = out.d_lora.take() {
+            publish(GradSpace::Lora, plan, d);
+        }
+    }
+    out
+}
+
 struct Job {
     mode: Option<StepMode>, // None => eval
     eval_lora: bool,
@@ -135,6 +204,9 @@ struct Job {
     lora: Option<Arc<Vec<f32>>>,
     acfg: Option<Arc<Vec<f32>>>,
     batch: Batch,
+    /// Bucketed-sync route for this step (cloned per job; `None` =
+    /// whole-buffer gradients flow back through the results channel).
+    route: Option<BucketRoute>,
 }
 
 struct WorkerOut {
@@ -241,6 +313,8 @@ pub struct GradEngine {
     in_flight: usize,
     /// Parked outputs of a sequential-path submit (runs synchronously).
     parked: Option<Vec<WorkerOut>>,
+    /// Bucketed-sync route for training steps (`None` = whole-buffer).
+    route: Option<BucketRoute>,
 }
 
 impl GradEngine {
@@ -265,6 +339,7 @@ impl GradEngine {
             n_workers: workers,
             in_flight: 0,
             parked: None,
+            route: None,
         };
         if engine.threaded {
             for w in 0..workers {
@@ -313,7 +388,14 @@ impl GradEngine {
                             )
                             .map(|mut o| {
                                 o.worker = id;
-                                o
+                                match job.route.as_ref() {
+                                    // publish buckets as soon as this
+                                    // worker's backward output is ready —
+                                    // the reduce thread overlaps with the
+                                    // other workers' still-running steps
+                                    Some(route) => publish_buckets(route, o),
+                                    None => o,
+                                }
                             });
                             if results.send(out).is_err() {
                                 break;
@@ -359,6 +441,18 @@ impl GradEngine {
         self.algorithm
     }
 
+    /// Install (or clear) the bucketed-sync route for subsequent training
+    /// steps. Set by the pipeline at each epoch start — the epoch barrier
+    /// guarantees no step is in flight, and re-deriving there is what
+    /// picks up new bucket layouts after a `Repartition` event. With a
+    /// route installed, workers publish per-bucket gradient slices to the
+    /// route's queue as each backward completes and only scalars flow
+    /// through the results channel.
+    pub fn set_bucket_route(&mut self, route: Option<BucketRoute>) {
+        debug_assert_eq!(self.in_flight, 0, "route change with a step in flight");
+        self.route = route;
+    }
+
     /// Threaded fan-out: snapshot the parameters once, send one job per
     /// worker. Every successful send increments `in_flight`, so an error
     /// mid-loop leaves an exact count for [`drain`](Self::drain) /
@@ -378,6 +472,8 @@ impl GradEngine {
             Some((l, a)) => (Some(Arc::new(l.to_vec())), Some(Arc::new(a.to_vec()))),
             None => (None, None),
         };
+        // eval jobs produce no gradients, so they never publish buckets
+        let route = if mode.is_some() { self.route.clone() } else { None };
         for (w, batch) in batches.into_iter().enumerate() {
             let job = Job {
                 mode,
@@ -386,6 +482,7 @@ impl GradEngine {
                 lora: lora_arc.clone(),
                 acfg: acfg_arc.clone(),
                 batch,
+                route: route.clone(),
             };
             self.workers[w]
                 .tx
@@ -453,6 +550,9 @@ impl GradEngine {
             for (w, batch) in batches.iter().enumerate() {
                 let mut o = run_job(rt, &self.manifest, Some(mode), false, base, lora, batch)?;
                 o.worker = w;
+                if let Some(route) = self.route.as_ref() {
+                    o = publish_buckets(route, o);
+                }
                 outs.push(o);
             }
             self.parked = Some(outs);
@@ -685,6 +785,47 @@ mod tests {
         // collect with nothing in flight must be rejected; drain is a no-op
         assert!(eng.collect().is_err());
         eng.drain();
+    }
+
+    #[test]
+    fn bucket_route_publishes_slices_that_reduce_bitwise() {
+        // with a route installed, collect() sees scalars only; the bucket
+        // queue carries every worker's slices, and reassembling + reducing
+        // them whole-buffer reproduces the unrouted gradient exactly
+        let m = micro();
+        let d = data(&m, 64);
+        let workers = 2;
+        let loader = EpochLoader::new(m.config.batch_size, workers, 0);
+        let base = m.load_init_base().unwrap();
+        let batches = loader.step_batches(&d, 0, 0);
+        let mut eng = GradEngine::new(m.clone(), workers, false, Algorithm::Tree).unwrap();
+        let r1 = eng.compute(StepMode::Full, &base, None, batches.clone()).unwrap();
+        let want = r1.d_base.unwrap().into_full();
+
+        let plan = Arc::new(BucketPlan::derive(m.base.size, 1, 1024));
+        // capacity covers every message: this test drains only afterwards
+        let (tx, rx) = mpsc::sync_channel(plan.count() * workers + 1);
+        eng.set_bucket_route(Some(BucketRoute { base: Some(plan.clone()), lora: None, tx }));
+        eng.submit(StepMode::Full, &base, None, batches).unwrap();
+        let outs = eng.collect().unwrap();
+        assert!(outs.base_grads.is_empty(), "published buffers must not reach collect");
+        assert!(outs.lora_grads.is_empty());
+        assert!(outs.loss.is_finite());
+        eng.set_bucket_route(None);
+
+        let mut per_worker = vec![vec![0.0f32; m.base.size]; workers];
+        let mut got = 0usize;
+        for msg in rx.try_iter() {
+            assert_eq!(msg.space, GradSpace::Base);
+            assert_eq!(msg.full_len, m.base.size);
+            let b = plan.buckets[msg.bucket];
+            assert_eq!(msg.lo, b.lo);
+            per_worker[msg.worker][b.lo..b.hi].copy_from_slice(&msg.data);
+            got += 1;
+        }
+        assert_eq!(got, plan.count() * workers);
+        let r2 = reduce_owned(Algorithm::Tree, per_worker).unwrap();
+        assert_eq!(r2, want, "bucketed slices must reduce bitwise to the whole buffer");
     }
 
     #[test]

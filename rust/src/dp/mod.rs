@@ -23,7 +23,9 @@ pub mod allreduce;
 mod engine;
 
 pub use allreduce::{
-    all_gather, partition, reduce_mean, reduce_owned, reduce_scatter, scatter, sq_sum_in_order,
-    Algorithm, Reduced,
+    all_gather, partition, reduce_bucket, reduce_mean, reduce_owned, reduce_scatter, scatter,
+    sq_sum_in_order, Algorithm, Bucket, BucketPlan, Reduced,
 };
-pub use engine::{GradEngine, GradResult, StepMode, StepOutputs};
+pub use engine::{
+    BucketMsg, BucketRoute, GradEngine, GradResult, GradSpace, StepMode, StepOutputs,
+};

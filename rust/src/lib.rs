@@ -35,10 +35,14 @@
 //!   `submit`/`collect` split so the leader re-dispatches step *k+1*
 //!   right after the step-*k* update and books step *k* while the workers
 //!   are busy.
-//! * **reduce** — `pipeline::ReduceStage`: with
-//!   `train.pipeline.overlap_reduce`, a warmup step's base gradients
-//!   sync on the stage thread concurrently with its LoRA gradients on
-//!   the leader (a double-buffered accumulation pair).
+//! * **reduce** — `pipeline::ReduceStage`: a warmup step's base
+//!   gradients sync on the stage thread concurrently with its LoRA
+//!   gradients on the leader (a double-buffered accumulation pair).
+//!   With `train.pipeline.bucket_bytes > 0` the overlap goes
+//!   bucket-level: workers publish shard-aligned gradient buckets as
+//!   backward fills them and a persistent accumulator thread reduces
+//!   them while later buckets are still being computed — bitwise
+//!   identical to whole-buffer sync (see `docs/dist-api.md`).
 //! * **update** — `pipeline::UpdateStage`: clip + optimizer step + per-step
 //!   pre-clip gradient-norm telemetry, shared by the pipelined and the
 //!   sequential (`train.pipeline.enabled = false`) paths.

@@ -45,6 +45,10 @@ fn train_flags() -> Args {
             "zero-stage",
             "ZeRO stage: 0 = off, 1 = optimizer state, 2 = + gradient buffers, 3 = + parameters (each ~1/N per rank, bit-identical losses)",
         )
+        .flag(
+            "bucket-bytes",
+            "gradient-sync bucket size in bytes (0 = whole-buffer sync); buckets overlap the reduce with backward compute, bit-identically",
+        )
         .flag("seed", "run seed")
         .flag(
             "resume",
@@ -110,6 +114,13 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
         // unsharded would be the worst kind of surprise)
         cfg.train.zero.enabled = None;
         cfg.train.zero.stage = Some(stage);
+    }
+    if let Some(bytes) = a.get_parsed::<usize>("bucket-bytes")? {
+        // same override shape as --zero-stage: an explicit CLI bucket
+        // size also clears a legacy `train.pipeline.overlap_reduce =
+        // false` knob that would otherwise force whole-buffer sync
+        cfg.train.pipeline.overlap_reduce = None;
+        cfg.train.pipeline.bucket_bytes = bytes;
     }
     if let Some(s) = a.get_parsed::<u64>("seed")? {
         cfg.seed = s;

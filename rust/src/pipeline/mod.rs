@@ -12,10 +12,14 @@
 //!   `submit`/`collect` split so the leader re-dispatches step *k+1*
 //!   immediately after the step-*k* update and does its bookkeeping while
 //!   the workers are already busy;
-//! * **reduce** ([`ReduceStage`]) — a double-buffered accumulation pair:
-//!   with `overlap_reduce` on, the base-gradient sync runs on the stage
-//!   thread concurrently with the LoRA-gradient sync on the leader (the
-//!   warmup phase carries both buffers);
+//! * **reduce** ([`ReduceStage`]) — phase-level overlap runs the
+//!   base-gradient sync on the stage thread concurrently with the
+//!   LoRA-gradient sync on the leader (the warmup phase carries both
+//!   buffers); bucket-level overlap (`train.pipeline.bucket_bytes > 0`)
+//!   goes further: workers publish size-bounded gradient buckets as each
+//!   backward completes and a persistent accumulator thread reduces
+//!   early buckets while later ones are still computing. The leader's
+//!   blocking time in this stage is measured as `comm_wait_s`;
 //! * **update** ([`UpdateStage`]) — clip + optimizer step + gradient-norm
 //!   telemetry, shared verbatim by the pipelined and the retained
 //!   sequential path.
@@ -75,6 +79,11 @@ pub struct EpochRun {
     /// Pre-clip gradient-norm statistics over the epoch's steps (its
     /// `steps()` is also the number of steps executed).
     pub grad_norms: GradNormStats,
+    /// Wall seconds the leader spent blocked in the reduce stage —
+    /// waiting on unreduced buckets (bucketed sync) or inside the
+    /// whole-buffer gradient sync. The comm/compute-overlap telemetry:
+    /// timing only, never part of any bitwise comparison.
+    pub comm_wait_s: f64,
 }
 
 impl EpochRun {
@@ -102,7 +111,10 @@ pub struct StepPipeline {
 
 impl StepPipeline {
     pub fn new(cfg: &PipelineConfig, strategy: Arc<dyn Strategy>) -> Result<Self> {
-        let reduce = ReduceStage::new(strategy.clone(), cfg.enabled && cfg.overlap_reduce)?;
+        let overlap = cfg.enabled && cfg.effective_overlap();
+        let bucket_bytes = if cfg.enabled { cfg.effective_bucket_bytes() } else { 0 };
+        let workers = strategy.workers();
+        let reduce = ReduceStage::new(strategy.clone(), overlap, bucket_bytes, workers)?;
         Ok(Self { cfg: cfg.clone(), strategy, reduce })
     }
 
@@ -125,6 +137,15 @@ impl StepPipeline {
         if !self.cfg.enabled {
             return self.run_sequential(engine, loader, data, model, update, mode, epoch, steps, lr);
         }
+        // Derive this epoch's bucket route from the mode's live gradient
+        // spaces (mode is constant within an epoch; the epoch barrier
+        // means nothing is in flight). Re-deriving here is what picks up
+        // fresh layouts after a Repartition event changed space lengths.
+        let base_len =
+            if mode != StepMode::LoraOnly { Some(model.base.len()) } else { None };
+        let lora_len =
+            if mode != StepMode::Full { model.lora.as_ref().map(|l| l.len()) } else { None };
+        engine.set_bucket_route(self.reduce.epoch_route(base_len, lora_len));
         let mut prefetch = Prefetcher::spawn(
             loader.clone(),
             data.clone(),
@@ -146,7 +167,9 @@ impl StepPipeline {
             }
             for step in 0..steps {
                 let outs = engine.collect()?;
+                let wait = std::time::Instant::now();
                 let mut r = self.reduce.reduce(outs)?;
+                out.comm_wait_s += wait.elapsed().as_secs_f64();
                 let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
                 if step + 1 < steps {
                     self.strategy.materialize_params(model);
@@ -181,13 +204,17 @@ impl StepPipeline {
         steps: usize,
         lr: f32,
     ) -> Result<EpochRun> {
+        engine.set_bucket_route(None); // the serial path reduces inline
         let order = loader.epoch_order(data, epoch);
         let mut out = EpochRun::default();
         for step in 0..steps {
             let batches = loader.step_batches_in(data, &order, step);
             self.strategy.materialize_params(model);
             engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
-            let mut r = self.strategy.reduce_step(engine.collect()?);
+            let outs = engine.collect()?;
+            let wait = std::time::Instant::now();
+            let mut r = self.strategy.reduce_step(outs);
+            out.comm_wait_s += wait.elapsed().as_secs_f64();
             let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
             out.ingest(&r, norms);
         }

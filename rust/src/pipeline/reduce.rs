@@ -1,5 +1,5 @@
 //! Reduce stage: gradient synchronization with optional cross-buffer
-//! overlap.
+//! and bucket-level overlap.
 //!
 //! A step in the warmup phase carries two independent gradient buffers
 //! (base + LoRA). With overlap on, they reduce as a double-buffered pair:
@@ -10,6 +10,22 @@
 //! call the same [`Strategy::grad_sync`], which runs the collective's one
 //! summation schedule (the determinism contract in the module docs).
 //!
+//! **Bucket-level overlap** (`train.pipeline.bucket_bytes > 0`) goes
+//! further: the parameter space is split into size-bounded buckets
+//! aligned to the strategy's gradient partition boundaries
+//! ([`Strategy::bucket_plan`]), workers publish each bucket's slice the
+//! moment their backward output is ready (see
+//! `GradEngine::set_bucket_route`), and this stage's persistent
+//! accumulator thread reduces bucket *k* while later buckets are still
+//! being computed or published. [`ReduceStage::reduce`] then assembles
+//! the reduced buckets **in deterministic index order**, so the result is
+//! bitwise the whole-buffer reduce (each bucket runs the collective's one
+//! summation schedule over the same element positions —
+//! [`Strategy::grad_sync_bucket`]'s contract) and downstream clipping
+//! still folds the global norm via `sq_sum_in_order` unchanged. Bucket
+//! layouts re-derive at every epoch start ([`ReduceStage::epoch_route`]),
+//! which is what picks up new space lengths after a `Repartition` event.
+//!
 //! The *layout* the stage produces is the strategy's choice: a replicated
 //! mean under classic DDP / ZeRO-1, or — when the strategy shards
 //! gradients — a **terminal** reduce-scatter whose owned partitions are
@@ -18,32 +34,111 @@
 //! memory to ~1/N. Either way the result gathers bitwise to the
 //! all-reduce output, so the layout cannot change losses.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::dist::Strategy;
-use crate::dp::{GradResult, Reduced, StepOutputs};
+use crate::dp::{BucketMsg, BucketPlan, BucketRoute, GradResult, GradSpace, Reduced, StepOutputs};
 
-/// Persistent reduce stage; the worker thread exists only when overlap is
-/// requested.
+/// The bucket plans live this epoch (a space is `None` when its gradients
+/// still flow whole-buffer — e.g. the frozen base after the switch).
+#[derive(Clone)]
+struct ActiveBuckets {
+    base: Option<Arc<BucketPlan>>,
+    lora: Option<Arc<BucketPlan>>,
+}
+
+/// Persistent reduce stage; the phase-overlap worker thread exists only
+/// when overlap is requested, the bucket accumulator thread only when
+/// `bucket_bytes > 0` and the strategy opts into bucketed sync.
 pub struct ReduceStage {
     strategy: Arc<dyn Strategy>,
     tx: Option<mpsc::Sender<Vec<Vec<f32>>>>,
     rx: Option<mpsc::Receiver<Option<Reduced>>>,
     join: Option<JoinHandle<()>>,
+    /// Bucket size bound (elements are f32; 0 = bucketing off).
+    bucket_bytes: usize,
+    /// Sender handed to the engine each epoch (workers publish here).
+    bucket_tx: Option<mpsc::SyncSender<BucketMsg>>,
+    /// Reduced buckets back from the accumulator thread.
+    reduced_rx: Option<mpsc::Receiver<(GradSpace, usize, Vec<f32>)>>,
+    /// Plans of the epoch in flight (`None` = whole-buffer this epoch).
+    active: Option<ActiveBuckets>,
 }
 
 impl ReduceStage {
-    pub fn new(strategy: Arc<dyn Strategy>, overlap: bool) -> Result<Self> {
+    pub fn new(
+        strategy: Arc<dyn Strategy>,
+        overlap: bool,
+        bucket_bytes: usize,
+        n_workers: usize,
+    ) -> Result<Self> {
+        let mut stage = Self {
+            strategy,
+            tx: None,
+            rx: None,
+            join: None,
+            bucket_bytes: 0,
+            bucket_tx: None,
+            reduced_rx: None,
+            active: None,
+        };
+        if bucket_bytes > 0 && stage.strategy.bucketed_sync() {
+            // bounded job queue: throttles publishers without ever filling
+            // faster than the accumulator drains
+            let (btx, brx) = mpsc::sync_channel::<BucketMsg>(4 * n_workers.max(1));
+            let (rtx, rrx) = mpsc::channel::<(GradSpace, usize, Vec<f32>)>();
+            let n = n_workers.max(1);
+            let acc_strategy = stage.strategy.clone();
+            // Detached on purpose: the engine holds sender clones of `btx`
+            // in its route, so joining here could wait on the engine's
+            // drop order. The thread exits once every sender is gone.
+            let handle = std::thread::Builder::new()
+                .name("bucket-reduce".into())
+                .spawn(move || {
+                    let mut pending: HashMap<(GradSpace, usize), Vec<Option<Vec<f32>>>> =
+                        HashMap::new();
+                    while let Ok(msg) = brx.recv() {
+                        let key = (msg.space, msg.bucket);
+                        let slots = pending.entry(key).or_insert_with(|| vec![None; n]);
+                        // a duplicate or out-of-range worker is a protocol
+                        // bug; panicking drops `rtx`, which the leader
+                        // observes as a recv error instead of a hang
+                        assert!(
+                            slots[msg.worker].is_none(),
+                            "duplicate bucket {key:?} from worker {}",
+                            msg.worker
+                        );
+                        slots[msg.worker] = Some(msg.data);
+                        if slots.iter().all(Option::is_some) {
+                            let slots = pending.remove(&key).expect("pending entry");
+                            let bufs: Vec<Vec<f32>> =
+                                slots.into_iter().map(|s| s.expect("complete")).collect();
+                            let reduced = acc_strategy
+                                .grad_sync_bucket(bufs, msg.lo, msg.full_len)
+                                .expect("strategy advertised bucketed_sync");
+                            if rtx.send((msg.space, msg.bucket, reduced)).is_err() {
+                                break; // leader gone
+                            }
+                        }
+                    }
+                })
+                .context("spawning bucket-reduce thread")?;
+            drop(handle); // detached (see above)
+            stage.bucket_bytes = bucket_bytes;
+            stage.bucket_tx = Some(btx);
+            stage.reduced_rx = Some(rrx);
+        }
         if !overlap {
-            return Ok(Self { strategy, tx: None, rx: None, join: None });
+            return Ok(stage);
         }
         let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
         let (out_tx, rx) = mpsc::channel::<Option<Reduced>>();
-        let stage_strategy = strategy.clone();
+        let stage_strategy = stage.strategy.clone();
         let join = std::thread::Builder::new()
             .name("reduce-stage".into())
             .spawn(move || {
@@ -54,15 +149,56 @@ impl ReduceStage {
                 }
             })
             .context("spawning reduce-stage thread")?;
-        Ok(Self { strategy, tx: Some(tx), rx: Some(rx), join: Some(join) })
+        stage.tx = Some(tx);
+        stage.rx = Some(rx);
+        stage.join = Some(join);
+        Ok(stage)
+    }
+
+    /// Derive this epoch's bucket layouts and hand back the route the
+    /// engine should publish through (`None` = bucketing inactive: knob
+    /// off, strategy without bucketed sync, or no live gradient space).
+    /// Called at every epoch start — the epoch barrier guarantees nothing
+    /// is in flight, and re-deriving per call is what makes a
+    /// `Repartition` event's new space lengths pick up fresh layouts.
+    pub fn epoch_route(
+        &mut self,
+        base_len: Option<usize>,
+        lora_len: Option<usize>,
+    ) -> Option<BucketRoute> {
+        let tx = match &self.bucket_tx {
+            Some(tx) if self.bucket_bytes > 0 => tx.clone(),
+            _ => {
+                self.active = None;
+                return None;
+            }
+        };
+        let base = base_len
+            .filter(|&l| l > 0)
+            .map(|l| Arc::new(self.strategy.bucket_plan(l, self.bucket_bytes)));
+        let lora = lora_len
+            .filter(|&l| l > 0)
+            .map(|l| Arc::new(self.strategy.bucket_plan(l, self.bucket_bytes)));
+        if base.is_none() && lora.is_none() {
+            self.active = None;
+            return None;
+        }
+        self.active = Some(ActiveBuckets { base: base.clone(), lora: lora.clone() });
+        Some(BucketRoute { base, lora, tx })
     }
 
     /// Reduce one step's worker outputs to mean gradients in the
-    /// strategy's layout. Overlaps the base reduce with the LoRA reduce
-    /// when both are present and a stage thread exists; otherwise defers
-    /// to [`Strategy::reduce_step`] — the serial path's epilogue — so the
-    /// two can never diverge.
+    /// strategy's layout. With bucket plans active, the gradients already
+    /// arrived through the bucket queue — this waits for the remaining
+    /// reduced buckets and assembles them in index order. Otherwise it
+    /// overlaps the base reduce with the LoRA reduce when both are
+    /// present and a stage thread exists, or defers to
+    /// [`Strategy::reduce_step`] — the serial path's epilogue — so the
+    /// paths can never diverge.
     pub fn reduce(&mut self, outs: StepOutputs) -> Result<GradResult> {
+        if self.active.is_some() {
+            return self.reduce_bucketed(outs);
+        }
         let (tx, rx) = match (&self.tx, &self.rx) {
             (Some(tx), Some(rx))
                 if !outs.base_grads.is_empty() && !outs.lora_grads.is_empty() =>
@@ -84,6 +220,74 @@ impl ReduceStage {
         let d_lora = self.strategy.grad_sync(lora_grads);
         let d_base = rx.recv().map_err(|_| anyhow!("reduce stage died"))?;
         Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
+    }
+
+    /// Drain the accumulator's reduced buckets for one step and assemble
+    /// each space in bucket-index order — bitwise the whole-buffer reduce.
+    /// The blocking `recv` here is exactly the comm-wait the pipeline
+    /// measures: time the update stage stalls on unreduced buckets.
+    fn reduce_bucketed(&mut self, outs: StepOutputs) -> Result<GradResult> {
+        let StepOutputs { base_grads, lora_grads, loss, correct, samples, execute_seconds } = outs;
+        let active = self.active.as_ref().expect("bucketed reduce without plans");
+        let rx = self
+            .reduced_rx
+            .as_ref()
+            .ok_or_else(|| anyhow!("bucketed reduce without a result channel"))?;
+        let expect_base = active.base.as_ref().map_or(0, |p| p.count());
+        let expect_lora = active.lora.as_ref().map_or(0, |p| p.count());
+        ensure!(
+            expect_base == 0 || base_grads.is_empty(),
+            "base gradients arrived whole-buffer despite an active bucket route"
+        );
+        ensure!(
+            expect_lora == 0 || lora_grads.is_empty(),
+            "LoRA gradients arrived whole-buffer despite an active bucket route"
+        );
+        let mut base_slots: Vec<Option<Vec<f32>>> = vec![None; expect_base];
+        let mut lora_slots: Vec<Option<Vec<f32>>> = vec![None; expect_lora];
+        let mut remaining = expect_base + expect_lora;
+        while remaining > 0 {
+            let (space, idx, data) =
+                rx.recv().map_err(|_| anyhow!("bucket-reduce thread died"))?;
+            let slot = match space {
+                GradSpace::Base => base_slots.get_mut(idx),
+                GradSpace::Lora => lora_slots.get_mut(idx),
+            }
+            .ok_or_else(|| anyhow!("bucket index {idx} out of range for {space:?}"))?;
+            ensure!(slot.is_none(), "duplicate reduced bucket {space:?}/{idx}");
+            *slot = Some(data);
+            remaining -= 1;
+        }
+        let d_base = match active.base.as_deref() {
+            Some(plan) => Some(assemble(plan, base_slots)),
+            None => self.strategy.grad_sync(base_grads),
+        };
+        let d_lora = match active.lora.as_deref() {
+            Some(plan) => Some(assemble(plan, lora_slots)),
+            None => self.strategy.grad_sync(lora_grads),
+        };
+        Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
+    }
+}
+
+/// Concatenate reduced buckets in index order into the strategy's layout:
+/// one full vector when gradients are replicated, per-partition chunks
+/// (grouped by each bucket's owning partition, preserving index order
+/// within it) when they shard — mirroring `reduce_scatter`'s output shape
+/// including empty chunks for empty partitions.
+fn assemble(plan: &BucketPlan, slots: Vec<Option<Vec<f32>>>) -> Reduced {
+    if plan.parts <= 1 {
+        let mut full = Vec::with_capacity(plan.len);
+        for s in slots {
+            full.extend(s.expect("all buckets received"));
+        }
+        Reduced::Full(full)
+    } else {
+        let mut chunks = vec![Vec::new(); plan.parts];
+        for (b, s) in plan.buckets.iter().zip(slots) {
+            chunks[b.part].extend(s.expect("all buckets received"));
+        }
+        Reduced::Sharded(chunks)
     }
 }
 
@@ -119,11 +323,35 @@ mod tests {
         }
     }
 
+    /// Play the engine's role: slice each worker's buffer per the plan and
+    /// push the bucket messages through the route.
+    fn publish(route: &crate::dp::BucketRoute, space: GradSpace, grads: &[Vec<f32>]) {
+        let plan = match space {
+            GradSpace::Base => route.base.as_deref().expect("base plan"),
+            GradSpace::Lora => route.lora.as_deref().expect("lora plan"),
+        };
+        for (w, d) in grads.iter().enumerate() {
+            for (i, b) in plan.buckets.iter().enumerate() {
+                route
+                    .tx
+                    .send(crate::dp::BucketMsg {
+                        space,
+                        bucket: i,
+                        worker: w,
+                        lo: b.lo,
+                        full_len: plan.len,
+                        data: d[b.lo..b.hi].to_vec(),
+                    })
+                    .unwrap();
+            }
+        }
+    }
+
     #[test]
     fn overlapped_reduce_is_bitwise_identical_to_inline() {
         for (nb, nl) in [(4usize, 4usize), (3, 3), (2, 0), (0, 5)] {
-            let mut overlapped = ReduceStage::new(strat(ZeroStage::Off, 4), true).unwrap();
-            let mut inline = ReduceStage::new(strat(ZeroStage::Off, 4), false).unwrap();
+            let mut overlapped = ReduceStage::new(strat(ZeroStage::Off, 4), true, 0, 4).unwrap();
+            let mut inline = ReduceStage::new(strat(ZeroStage::Off, 4), false, 0, 4).unwrap();
             let a = overlapped.reduce(outs(nb, nl, 97)).unwrap();
             let b = inline.reduce(outs(nb, nl, 97)).unwrap();
             assert_eq!(a.d_base, b.d_base);
@@ -133,14 +361,97 @@ mod tests {
     }
 
     #[test]
+    fn bucketed_reduce_is_bitwise_identical_to_whole_buffer() {
+        // every ZeRO stage, base-only and warmup shapes, a bucket size
+        // that produces ragged final buckets: the assembled result must
+        // match the whole-buffer stage bit-for-bit in the same layout
+        let len = 101;
+        let workers = 3;
+        for stage in [ZeroStage::Off, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+            for (nb, nl) in [(3usize, 0usize), (3, 3), (0, 3)] {
+                let mut whole = ReduceStage::new(strat(stage, workers), false, 0, workers).unwrap();
+                let want = whole.reduce(outs(nb, nl, len)).unwrap();
+
+                let mut bucketed =
+                    ReduceStage::new(strat(stage, workers), false, 52, workers).unwrap();
+                let route = bucketed
+                    .epoch_route(
+                        (nb > 0).then_some(len),
+                        (nl > 0).then_some(len),
+                    )
+                    .expect("route must exist for a stock strategy with bucketing on");
+                let mut o = outs(nb, nl, len);
+                let base_grads = std::mem::take(&mut o.base_grads);
+                let lora_grads = std::mem::take(&mut o.lora_grads);
+                if route.base.is_some() {
+                    publish(&route, GradSpace::Base, &base_grads);
+                }
+                if route.lora.is_some() {
+                    publish(&route, GradSpace::Lora, &lora_grads);
+                }
+                let got = bucketed.reduce(o).unwrap();
+                assert_eq!(got.d_base, want.d_base, "{stage:?} nb={nb} nl={nl}");
+                assert_eq!(got.d_lora, want.d_lora, "{stage:?} nb={nb} nl={nl}");
+                assert_eq!(got.loss, want.loss);
+                assert_eq!(got.samples, want.samples);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_route_rederives_plans_per_length() {
+        // the Repartition contract: a new space length at the next epoch
+        // start gets a freshly derived layout
+        let workers = 2;
+        let mut stage = ReduceStage::new(strat(ZeroStage::Zero2, workers), false, 64, workers).unwrap();
+        let r1 = stage.epoch_route(Some(101), None).unwrap();
+        assert_eq!(r1.base.as_ref().unwrap().len, 101);
+        assert!(r1.lora.is_none());
+        let r2 = stage.epoch_route(Some(101), Some(33)).unwrap();
+        assert_eq!(r2.lora.as_ref().unwrap().len, 33);
+        let r3 = stage.epoch_route(None, Some(33)).unwrap();
+        assert!(r3.base.is_none(), "frozen base must drop out of the route");
+        // no live space => no route, and the stage falls back to inline
+        assert!(stage.epoch_route(None, None).is_none());
+        let r = stage.reduce(outs(workers, 0, 16)).unwrap();
+        assert!(r.d_base.is_some());
+    }
+
+    #[test]
+    fn bucketing_is_inert_when_off_or_unsupported() {
+        // knob off
+        let mut off = ReduceStage::new(strat(ZeroStage::Off, 2), false, 0, 2).unwrap();
+        assert!(off.epoch_route(Some(100), None).is_none());
+        // a custom strategy that never opted into bucketed sync keeps
+        // whole-buffer behavior even with the knob on
+        struct Custom(Arc<dyn Strategy>);
+        impl Strategy for Custom {
+            fn stage(&self) -> ZeroStage {
+                self.0.stage()
+            }
+            fn workers(&self) -> usize {
+                self.0.workers()
+            }
+            fn collective(&self) -> &dyn crate::dist::Collective {
+                self.0.collective()
+            }
+        }
+        let custom: Arc<dyn Strategy> = Arc::new(Custom(strat(ZeroStage::Off, 2)));
+        let mut stage = ReduceStage::new(custom, false, 4096, 2).unwrap();
+        assert!(stage.epoch_route(Some(100), None).is_none());
+        let r = stage.reduce(outs(2, 0, 16)).unwrap();
+        assert!(r.d_base.is_some(), "whole-buffer fallback must still reduce");
+    }
+
+    #[test]
     fn sharded_strategies_gather_to_the_full_reduce_bitwise() {
         // whatever layout the strategy picks, overlapped and inline must
         // both produce it, and its gather must equal the full reduce
         for (nb, nl) in [(3usize, 3usize), (4, 0)] {
             for stage in [ZeroStage::Zero2, ZeroStage::Zero3] {
-                let mut full = ReduceStage::new(strat(ZeroStage::Off, 3), false).unwrap();
-                let mut inline = ReduceStage::new(strat(stage, 3), false).unwrap();
-                let mut overlapped = ReduceStage::new(strat(stage, 3), true).unwrap();
+                let mut full = ReduceStage::new(strat(ZeroStage::Off, 3), false, 0, 3).unwrap();
+                let mut inline = ReduceStage::new(strat(stage, 3), false, 0, 3).unwrap();
+                let mut overlapped = ReduceStage::new(strat(stage, 3), true, 0, 3).unwrap();
                 let want = full.reduce(outs(nb, nl, 101)).unwrap();
                 let a = inline.reduce(outs(nb, nl, 101)).unwrap();
                 let b = overlapped.reduce(outs(nb, nl, 101)).unwrap();
@@ -169,7 +480,7 @@ mod tests {
 
     #[test]
     fn scalars_pass_through() {
-        let mut stage = ReduceStage::new(strat(ZeroStage::Off, 2), false).unwrap();
+        let mut stage = ReduceStage::new(strat(ZeroStage::Off, 2), false, 0, 2).unwrap();
         let r = stage.reduce(outs(2, 0, 8)).unwrap();
         assert_eq!(r.loss, 1.5);
         assert_eq!(r.correct, 3.0);

@@ -24,6 +24,11 @@ pub struct PhaseAggregate {
     /// (ZeRO-2: ~1/workers of the replicated footprint — the summary's
     /// evidence for the gradient-sharding claim).
     pub mean_grad_bytes_per_worker: f64,
+    /// Mean wall seconds per epoch the leader spent blocked on gradient
+    /// communication (unreduced buckets under bucketed sync, the whole
+    /// sync otherwise) — the comm/compute-overlap evidence for
+    /// `train.pipeline.bucket_bytes`.
+    pub mean_comm_wait_s: f64,
     pub final_train_loss: f64,
 }
 
@@ -73,6 +78,7 @@ impl RunSummary {
             agg.mean_memory_bytes += s.memory_model_bytes as f64;
             agg.mean_opt_state_bytes_per_worker += s.opt_state_bytes_per_worker as f64;
             agg.mean_grad_bytes_per_worker += s.grad_bytes_per_worker as f64;
+            agg.mean_comm_wait_s += s.comm_wait_s;
             agg.final_train_loss = s.train_loss;
         }
         for agg in by_phase.values_mut() {
@@ -82,6 +88,7 @@ impl RunSummary {
             agg.mean_memory_bytes /= n;
             agg.mean_opt_state_bytes_per_worker /= n;
             agg.mean_grad_bytes_per_worker /= n;
+            agg.mean_comm_wait_s /= n;
         }
         let last = stats.last();
         let last_val = stats.iter().rev().find(|s| !s.val_loss.is_nan());
@@ -163,13 +170,14 @@ impl RunSummary {
         }
         for (phase, agg) in &self.by_phase {
             out.push_str(&format!(
-                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem, {:.2} MiB opt-state/worker, {:.2} MiB grads/worker\n",
+                "  [{phase:>6}] {:>3} epochs, {:.2}s/epoch, {:.0} img/s, {:.1} MiB model-mem, {:.2} MiB opt-state/worker, {:.2} MiB grads/worker, {:.3}s comm-wait/epoch\n",
                 agg.epochs,
                 agg.mean_epoch_seconds,
                 agg.mean_images_per_sec,
                 agg.mean_memory_bytes / (1 << 20) as f64,
                 agg.mean_opt_state_bytes_per_worker / (1 << 20) as f64,
                 agg.mean_grad_bytes_per_worker / (1 << 20) as f64,
+                agg.mean_comm_wait_s,
             ));
         }
         if let Some(r) = self.epoch_time_ratio {
@@ -210,6 +218,7 @@ impl RunSummary {
                                 "mean_grad_bytes_per_worker",
                                 Json::Num(a.mean_grad_bytes_per_worker),
                             ),
+                            ("mean_comm_wait_s", Json::Num(a.mean_comm_wait_s)),
                             ("final_train_loss", Json::Num(a.final_train_loss)),
                         ]),
                     )
@@ -267,6 +276,7 @@ mod tests {
             opt_state_bytes_per_worker: mem / 2,
             grad_bytes_per_worker: mem / 4,
             grad_norm: 1.0,
+            comm_wait_s: secs * 0.1,
         }
     }
 
@@ -301,9 +311,13 @@ mod tests {
         // per-worker gradient bytes too (stat() sets them to mem/4)
         assert!((s.by_phase["full"].mean_grad_bytes_per_worker - 250.0).abs() < 1e-9);
         assert!((s.by_phase["lora"].mean_grad_bytes_per_worker - 150.0).abs() < 1e-9);
+        // comm-wait means (stat() sets it to secs * 0.1)
+        assert!((s.by_phase["full"].mean_comm_wait_s - 0.2).abs() < 1e-9);
+        assert!((s.by_phase["lora"].mean_comm_wait_s - 0.1).abs() < 1e-9);
         let j = s.to_json();
         assert!(j.contains("mean_opt_state_bytes_per_worker"), "{j}");
         assert!(j.contains("mean_grad_bytes_per_worker"), "{j}");
+        assert!(j.contains("mean_comm_wait_s"), "{j}");
     }
 
     #[test]

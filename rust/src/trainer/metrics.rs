@@ -31,6 +31,11 @@ pub struct EpochStats {
     /// the terminal reduce-scatter leaves each worker ~1/workers of it.
     pub grad_bytes_per_worker: usize,
     pub grad_norm: f64,
+    /// Wall seconds the leader spent blocked on gradient communication
+    /// this epoch — waiting on unreduced buckets under bucketed sync, or
+    /// inside the whole-buffer sync otherwise. Timing telemetry only:
+    /// never part of any bitwise trajectory comparison.
+    pub comm_wait_s: f64,
 }
 
 impl EpochStats {
@@ -59,6 +64,7 @@ impl EpochStats {
             ),
             ("grad_bytes_per_worker", Json::from_usize(self.grad_bytes_per_worker)),
             ("grad_norm", Json::from_f64_bits(self.grad_norm)),
+            ("comm_wait_s", Json::from_f64_bits(self.comm_wait_s)),
         ])
     }
 
@@ -86,6 +92,12 @@ impl EpochStats {
             opt_state_bytes_per_worker: v.req("opt_state_bytes_per_worker")?.as_usize()?,
             grad_bytes_per_worker: v.req("grad_bytes_per_worker")?.as_usize()?,
             grad_norm: v.req("grad_norm")?.as_f64_bits()?,
+            // optional: checkpoints written before the comm/compute
+            // telemetry existed load with a zero wait
+            comm_wait_s: match v.get("comm_wait_s") {
+                Some(x) => x.as_f64_bits()?,
+                None => 0.0,
+            },
         })
     }
 }
@@ -182,6 +194,7 @@ mod tests {
             opt_state_bytes_per_worker: 4096,
             grad_bytes_per_worker: 2048,
             grad_norm: 0.75,
+            comm_wait_s: 0.125,
         };
         let text = s.to_json().dump();
         let back = EpochStats::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -190,7 +203,15 @@ mod tests {
         assert_eq!(back.train_loss.to_bits(), s.train_loss.to_bits());
         assert_eq!(back.val_loss.to_bits(), s.val_loss.to_bits(), "NaN must survive");
         assert_eq!(back.grad_norm.to_bits(), s.grad_norm.to_bits());
+        assert_eq!(back.comm_wait_s.to_bits(), s.comm_wait_s.to_bits());
         assert_eq!(back.trainable_params, s.trainable_params);
+        // checkpoints written before the comm telemetry existed still load
+        let mut old = s.to_json();
+        if let Json::Obj(m) = &mut old {
+            m.remove("comm_wait_s");
+        }
+        let compat = EpochStats::from_json(&old).unwrap();
+        assert_eq!(compat.comm_wait_s, 0.0, "missing field defaults to zero");
         // unknown labels rejected (the label becomes a &'static str)
         let mut j = s.to_json();
         if let Json::Obj(m) = &mut j {

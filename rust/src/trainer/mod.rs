@@ -303,6 +303,7 @@ impl Trainer {
             opt_state_bytes_per_worker: mem.optimizer_bytes,
             grad_bytes_per_worker: mem.grad_bytes,
             grad_norm: run.grad_norms.mean(),
+            comm_wait_s: run.comm_wait_s,
         };
         self.stats.push(stats.clone());
         Ok(stats)

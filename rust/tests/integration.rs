@@ -9,7 +9,10 @@ use prelora::config::{RunConfig, StrictnessPreset, TrainConfig};
 use prelora::coordinator::Phase;
 use prelora::data::{Dataset, EpochLoader, SynthSpec};
 use prelora::dist::{collective_for, strategy_for, ModelState, ZeroStage};
-use prelora::dp::{all_gather, reduce_mean, reduce_scatter, scatter, Algorithm, GradResult, Reduced};
+use prelora::dp::{
+    all_gather, reduce_bucket, reduce_mean, reduce_owned, reduce_scatter, scatter, Algorithm,
+    BucketPlan, GradResult, Reduced,
+};
 use prelora::pipeline::UpdateStage;
 use prelora::rank::{assign_ranks, rank_buckets};
 use prelora::tensor::Pcg64;
@@ -40,6 +43,17 @@ fn micro_config(epochs: usize) -> RunConfig {
             .parse()
             .unwrap_or_else(|e| panic!("bad PRELORA_TEST_ZERO_STAGE: {e}"));
         cfg.train.zero.stage = Some(stage);
+    }
+    // CI knob: rerun the whole suite with bucketed gradient sync forced on
+    // (the smoke job runs it once more with PRELORA_TEST_BUCKET_BYTES=256,
+    // so every lifecycle/pipeline/restore test also exercises the
+    // bucket-level overlap path). Tests that sweep bucket sizes explicitly
+    // override this.
+    if let Ok(s) = std::env::var("PRELORA_TEST_BUCKET_BYTES") {
+        let bytes: usize = s
+            .parse()
+            .unwrap_or_else(|e| panic!("bad PRELORA_TEST_BUCKET_BYTES: {e}"));
+        cfg.train.pipeline.bucket_bytes = bytes;
     }
     cfg
 }
@@ -155,7 +169,6 @@ fn pipeline_matches_sequential_bitwise_across_phase_switch() {
         cfg.train.dp.workers = 2;
         cfg.train.pipeline.enabled = enabled;
         cfg.train.pipeline.prefetch_depth = 2;
-        cfg.train.pipeline.overlap_reduce = true;
         let mut t = Trainer::new(cfg).unwrap();
         let mut losses = Vec::new();
         for _ in 0..16 {
@@ -319,6 +332,42 @@ fn zero3_matches_unsharded_bitwise_at_odd_worker_counts() {
         "per-rank params {} B must be ~1/{workers} of {tot} B",
         mem.param_bytes_per_rank
     );
+}
+
+#[test]
+fn bucketed_sync_matches_whole_buffer_bitwise_across_stages_and_phase_switch() {
+    // the bucketed-sync acceptance contract: with bucket-level overlap on,
+    // fixed-seed per-epoch losses, grad norms and the final parameters are
+    // bitwise the whole-buffer run's at every ZeRO stage and across the
+    // Full -> Warmup -> LoraOnly lifecycle (bucket layouts re-derive at
+    // each Repartition; comm_wait_s is timing-only and never compared)
+    let run = |stage: ZeroStage, bucket_bytes: usize| {
+        let mut cfg = micro_config(16);
+        cfg.train.dp.workers = 2;
+        // explicit: the sweep overrides both CI env knobs
+        cfg.train.zero.stage = Some(stage);
+        cfg.train.pipeline.bucket_bytes = bucket_bytes;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        let mut norms = Vec::new();
+        for _ in 0..16 {
+            let s = t.run_epoch().unwrap();
+            losses.push(s.train_loss.to_bits());
+            norms.push(s.grad_norm.to_bits());
+        }
+        (losses, norms, t.base_params(), t.controller().switch_epoch())
+    };
+    let (l0, n0, p0, sw0) = run(ZeroStage::Off, 0);
+    assert!(sw0.is_some(), "run must cross the phase boundary");
+    for stage in [ZeroStage::Off, ZeroStage::Zero1, ZeroStage::Zero2, ZeroStage::Zero3] {
+        // 1 KiB buckets split vit-micro's 77 984-byte base space into ~77
+        // buckets (re-split per owned partition under sharding)
+        let (l, n, p, sw) = run(stage, 1024);
+        assert_eq!(l, l0, "{stage}: bucketed losses must be bitwise whole-buffer's");
+        assert_eq!(n, n0, "{stage}: bucketed grad norms must be bitwise whole-buffer's");
+        assert_eq!(p, p0, "{stage}: bucketed final params must be bitwise whole-buffer's");
+        assert_eq!(sw, sw0, "{stage}: switch epoch must match");
+    }
 }
 
 #[test]
@@ -669,6 +718,106 @@ fn prop_reduce_scatter_foreign_parts_is_bitwise_allreduce() {
                 return false;
             };
             if chunks.len() != case.parts || all_gather(&chunks) != want {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Bucketed-reduce layouts: ragged lengths, odd worker counts, and
+/// bucket/partition counts chosen to disagree with the worker count.
+#[derive(Debug, Clone)]
+struct BucketReduceCase {
+    bufs: Vec<Vec<f32>>,
+    parts: usize,
+    bucket_bytes: usize,
+}
+
+impl Arbitrary for BucketReduceCase {
+    fn generate(rng: &mut Pcg64) -> Self {
+        let n = [2usize, 3, 5, 7][rng.next_below(4)];
+        let mut len = 1 + rng.next_below(400);
+        if len % n == 0 {
+            len += 1; // force a ragged ring chunking
+        }
+        // partition counts that may disagree with the worker count
+        let parts = 1 + rng.next_below(2 * n + 2);
+        // bucket sizes from one element up past the whole space; the odd
+        // element counts are usually coprime with the worker count
+        let bucket_bytes = match rng.next_below(4) {
+            0 => 0,                                // whole-partition buckets
+            1 => 4,                                // one element per bucket
+            2 => 4 * (1 + 2 * rng.next_below(40)), // odd element counts
+            _ => 4 * (len / 2 + 1),                // larger than most partitions
+        };
+        let bufs = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_f32() * 4.0 - 2.0).collect())
+            .collect();
+        BucketReduceCase { bufs, parts, bucket_bytes }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let len = self.bufs[0].len();
+        if len > 1 {
+            out.push(BucketReduceCase {
+                bufs: self.bufs.iter().map(|b| b[..len / 2].to_vec()).collect(),
+                parts: self.parts,
+                bucket_bytes: self.bucket_bytes,
+            });
+        }
+        if self.parts > 1 {
+            let mut c = self.clone();
+            c.parts = 1;
+            out.push(c);
+        }
+        if self.bucket_bytes != 0 {
+            let mut c = self.clone();
+            c.bucket_bytes = 0;
+            out.push(c);
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_bucketed_reduce_concatenates_bitwise_to_whole_buffer() {
+    // the bucketed-sync bit contract at the collective layer, fuzzed: for
+    // every schedule, reducing per size-bounded bucket and concatenating
+    // in index order reproduces the whole-buffer all-reduce bitwise, and
+    // regrouping the same buckets by owning partition reproduces the
+    // whole-buffer reduce-scatter bitwise
+    check::<BucketReduceCase, _>(909, 200, |case| {
+        let len = case.bufs[0].len();
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            // parts = 1: index-order concat vs the all-reduce
+            let plan = BucketPlan::derive(len, 1, case.bucket_bytes);
+            let Some(want) = reduce_owned(alg, case.bufs.clone()) else { return false };
+            let mut got = Vec::with_capacity(len);
+            for b in &plan.buckets {
+                let slices: Vec<Vec<f32>> =
+                    case.bufs.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                let Some(r) = reduce_bucket(alg, slices, b.lo, len) else { return false };
+                got.extend(r);
+            }
+            if got != want {
+                return false;
+            }
+            // foreign partition counts: per-partition regrouping vs the
+            // whole-buffer reduce-scatter (empty partitions stay empty)
+            let plan = BucketPlan::derive(len, case.parts, case.bucket_bytes);
+            let Some(chunks) = reduce_scatter(alg, case.bufs.clone(), case.parts) else {
+                return false;
+            };
+            let mut grouped: Vec<Vec<f32>> = vec![Vec::new(); case.parts];
+            for b in &plan.buckets {
+                let slices: Vec<Vec<f32>> =
+                    case.bufs.iter().map(|w| w[b.lo..b.hi].to_vec()).collect();
+                let Some(r) = reduce_bucket(alg, slices, b.lo, len) else { return false };
+                grouped[b.part].extend(r);
+            }
+            if grouped != chunks {
                 return false;
             }
         }

@@ -58,13 +58,18 @@ fn micro_config() -> RunConfig {
 struct Variant {
     zero: ZeroStage,
     pipeline: bool,
+    /// Gradient-sync bucket size (0 = whole-buffer). Pure scheduling —
+    /// bucketed and whole-buffer runs are bitwise identical, so a
+    /// checkpoint must restore across the toggle too.
+    bucket_bytes: usize,
 }
 
-const DEFAULT: Variant = Variant { zero: ZeroStage::Off, pipeline: true };
+const DEFAULT: Variant = Variant { zero: ZeroStage::Off, pipeline: true, bucket_bytes: 0 };
 
 fn config_of(v: Variant) -> RunConfig {
     let mut cfg = micro_config();
     cfg.train.pipeline.enabled = v.pipeline;
+    cfg.train.pipeline.bucket_bytes = v.bucket_bytes;
     // explicit, so the reference trajectory is the same regardless of the
     // integration suite's PRELORA_TEST_ZERO_STAGE env knob
     cfg.train.zero.stage = Some(v.zero);
@@ -215,14 +220,14 @@ fn resume_across_zero_stage_changes_is_bitwise_continuous() {
     // save sharded (stage 1), resume stage 2: the gathered optimizer
     // state re-scatters onto the gradient-sharded layout
     assert_resume_matches(
-        Variant { zero: ZeroStage::Zero1, pipeline: true },
-        Variant { zero: ZeroStage::Zero2, pipeline: true },
+        Variant { zero: ZeroStage::Zero1, pipeline: true, bucket_bytes: 0 },
+        Variant { zero: ZeroStage::Zero2, pipeline: true, bucket_bytes: 0 },
         k,
         "zero1->zero2",
     );
     // save stage 2, resume unsharded
     assert_resume_matches(
-        Variant { zero: ZeroStage::Zero2, pipeline: true },
+        Variant { zero: ZeroStage::Zero2, pipeline: true, bucket_bytes: 0 },
         DEFAULT,
         k,
         "zero2->off",
@@ -238,7 +243,7 @@ fn resume_across_parameter_sharding_is_bitwise_continuous() {
     let k = reference().k_warm;
     // save under stage 3, resume under stage 0
     assert_resume_matches(
-        Variant { zero: ZeroStage::Zero3, pipeline: true },
+        Variant { zero: ZeroStage::Zero3, pipeline: true, bucket_bytes: 0 },
         DEFAULT,
         k,
         "zero3->off",
@@ -247,7 +252,7 @@ fn resume_across_parameter_sharding_is_bitwise_continuous() {
     // gathered payload onto owned partitions)
     assert_resume_matches(
         DEFAULT,
-        Variant { zero: ZeroStage::Zero3, pipeline: true },
+        Variant { zero: ZeroStage::Zero3, pipeline: true, bucket_bytes: 0 },
         k,
         "off->zero3",
     );
@@ -259,16 +264,45 @@ fn resume_across_pipeline_toggle_is_bitwise_continuous() {
     let k = reference().k_warm;
     assert_resume_matches(
         DEFAULT,
-        Variant { zero: ZeroStage::Off, pipeline: false },
+        Variant { zero: ZeroStage::Off, pipeline: false, bucket_bytes: 0 },
         k,
         "pipe->serial",
     );
     // ...and the other way round, interrupted back in the full phase
     assert_resume_matches(
-        Variant { zero: ZeroStage::Off, pipeline: false },
+        Variant { zero: ZeroStage::Off, pipeline: false, bucket_bytes: 0 },
         DEFAULT,
         2,
         "serial->pipe",
+    );
+}
+
+#[test]
+fn resume_across_bucketed_sync_toggle_is_bitwise_continuous() {
+    // bucket layouts are pure scheduling: a checkpoint saved under
+    // bucketed gradient sync restores bitwise under whole-buffer sync and
+    // vice versa (k inside warmup, where base AND LoRA gradient spaces
+    // are both live and bucketed independently)
+    let k = reference().k_warm;
+    assert_resume_matches(
+        Variant { zero: ZeroStage::Off, pipeline: true, bucket_bytes: 1024 },
+        DEFAULT,
+        k,
+        "bucketed->whole",
+    );
+    assert_resume_matches(
+        DEFAULT,
+        Variant { zero: ZeroStage::Off, pipeline: true, bucket_bytes: 1024 },
+        k,
+        "whole->bucketed",
+    );
+    // and across a simultaneous shard-layout change: bucketed ZeRO-2 save,
+    // whole-buffer ZeRO-3 resume
+    assert_resume_matches(
+        Variant { zero: ZeroStage::Zero2, pipeline: true, bucket_bytes: 1024 },
+        Variant { zero: ZeroStage::Zero3, pipeline: true, bucket_bytes: 0 },
+        k,
+        "zero2-bucketed->zero3-whole",
     );
 }
 
@@ -281,7 +315,7 @@ fn worker_count_change_restores_state_bitwise_and_keeps_the_schedule() {
     // a 2-worker ZeRO-2 run, preempted inside warmup...
     let k = reference().k_warm;
     let mut a =
-        Trainer::new(config_of(Variant { zero: ZeroStage::Zero2, pipeline: true })).unwrap();
+        Trainer::new(config_of(Variant { zero: ZeroStage::Zero2, pipeline: true, bucket_bytes: 0 })).unwrap();
     drive(&mut a, k);
     let ck = a.checkpoint();
     assert_eq!(ck.zero_shards, 2);
@@ -357,7 +391,7 @@ fn stage3_checkpoint_restores_under_stage0_and_a_new_worker_count() {
     // state — and the phase schedule continues
     let k = reference().k_warm;
     let mut a =
-        Trainer::new(config_of(Variant { zero: ZeroStage::Zero3, pipeline: true })).unwrap();
+        Trainer::new(config_of(Variant { zero: ZeroStage::Zero3, pipeline: true, bucket_bytes: 0 })).unwrap();
     drive(&mut a, k);
     let ck = a.checkpoint();
     assert_eq!(ck.stage, ZeroStage::Zero3, "checkpoint must carry the saving stage");
