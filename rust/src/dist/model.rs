@@ -122,6 +122,9 @@ impl ParamStore {
             ParamStore::Sharded(s) => s
                 .view
                 .as_deref()
+                // lint: allow(PL004): documented invariant panic — the
+                // doc comment above promises it, callers materialize
+                // first, and a miss is a prelora sequencing bug.
                 .expect("sharded parameter view used before materialize()"),
         }
     }

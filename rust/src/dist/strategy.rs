@@ -71,6 +71,9 @@ impl ShardPlan {
         self.opt_bounds
             .iter()
             .position(|&(lo, hi)| (lo..hi).contains(&i))
+            // lint: allow(PL004): documented invariant panic — the bounds
+            // cover [0, len) by construction, so a miss means the caller
+            // indexed outside the space: a prelora bug, not input.
             .expect("element index outside the parameter space")
     }
 }

@@ -1,10 +1,10 @@
 //! Worker pool: per-thread PJRT runtimes computing gradients on shards.
 
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use std::panic::AssertUnwindSafe;
 
 use anyhow::{anyhow, ensure, Result};
+
+use crate::sync::{mpsc, thread, Arc};
 
 use super::allreduce::{reduce_owned, reduce_scatter, Algorithm, BucketPlan, Reduced};
 use crate::data::Batch;
@@ -128,8 +128,10 @@ impl StepOutputs {
     }
 }
 
-/// Which of a step's two gradient spaces a bucket belongs to.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Which of a step's two gradient spaces a bucket belongs to. `Ord` so it
+/// can key the accumulator's `BTreeMap` (PL001: no order-nondeterministic
+/// containers on the reduce path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum GradSpace {
     Base,
     Lora,
@@ -151,6 +153,62 @@ pub struct BucketMsg {
     pub data: Vec<f32>,
 }
 
+/// Everything that can travel the bucket queue: worker-published bucket
+/// slices plus the reduce stage's lifecycle signals. Workers only ever
+/// send `Bucket` — [`BucketTx`] cannot forge the control variants, whose
+/// senders stay with the stage that owns the accumulator thread (every
+/// spawned thread has a shutdown story — PL005). The enum itself is
+/// public only because [`BucketTx::channel`] hands the receiving half to
+/// tests.
+pub enum BucketCtrl {
+    Bucket(BucketMsg),
+    /// Epoch barrier: drop any partial accumulation an aborted step left
+    /// behind before the next epoch starts publishing (`epoch_route`).
+    Reset,
+    /// Terminate the accumulator even while other senders are still
+    /// alive, so `ReduceStage::drop` can join the thread regardless of
+    /// drop order (the engine may still hold route clones).
+    Shutdown,
+}
+
+/// The bucket queue's receiver is gone: the reduce stage is shutting down
+/// or has already failed the step. Publishing is pointless but harmless.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketQueueClosed;
+
+/// Sending half of the bounded bucket queue. A newtype over the raw
+/// channel so workers can only publish bucket slices — the lifecycle
+/// signals ([`BucketCtrl::Reset`] / [`BucketCtrl::Shutdown`]) stay with
+/// the reduce stage that owns the accumulator thread.
+#[derive(Clone)]
+pub struct BucketTx(mpsc::SyncSender<BucketCtrl>);
+
+impl BucketTx {
+    /// A bounded queue: throttles publishers without ever filling faster
+    /// than the accumulator drains. Public so tests can build a
+    /// [`BucketRoute`] and drive the publish path directly; the receiving
+    /// half stays crate-internal (only the reduce stage drains it).
+    pub fn channel(bound: usize) -> (Self, mpsc::Receiver<BucketCtrl>) {
+        let (tx, rx) = mpsc::sync_channel(bound);
+        (Self(tx), rx)
+    }
+
+    /// Publish one bucket slice (blocks while the queue is full).
+    pub fn send(&self, msg: BucketMsg) -> Result<(), BucketQueueClosed> {
+        self.0.send(BucketCtrl::Bucket(msg)).map_err(|_| BucketQueueClosed)
+    }
+
+    /// Clear the accumulator's partial state at an epoch barrier.
+    pub(crate) fn reset(&self) -> Result<(), BucketQueueClosed> {
+        self.0.send(BucketCtrl::Reset).map_err(|_| BucketQueueClosed)
+    }
+
+    /// Ask the accumulator thread to exit now (overrides live senders).
+    pub(crate) fn shutdown(&self) -> Result<(), BucketQueueClosed> {
+        self.0.send(BucketCtrl::Shutdown).map_err(|_| BucketQueueClosed)
+    }
+}
+
 /// Where workers publish per-bucket gradients: the bucket layouts of the
 /// live spaces (`None` = that space is not bucketed this epoch) plus the
 /// bounded queue the reduce stage's accumulator thread drains. Cloned
@@ -159,7 +217,7 @@ pub struct BucketMsg {
 pub struct BucketRoute {
     pub base: Option<Arc<BucketPlan>>,
     pub lora: Option<Arc<BucketPlan>>,
-    pub tx: mpsc::SyncSender<BucketMsg>,
+    pub tx: BucketTx,
 }
 
 /// Slice a worker's gradient buffers per the route's bucket plans and
@@ -195,6 +253,18 @@ fn publish_buckets(route: &BucketRoute, mut out: WorkerOut) -> WorkerOut {
         }
     }
     out
+}
+
+/// Best-effort text of a caught panic payload (`&str` from `panic!("..")`,
+/// `String` from `panic!("{x}")`, opaque otherwise).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
 }
 
 struct Job {
@@ -295,7 +365,7 @@ enum WorkerMsg {
 
 struct WorkerHandle {
     tx: mpsc::Sender<WorkerMsg>,
-    join: Option<JoinHandle<()>>,
+    join: Option<thread::JoinHandle<()>>,
 }
 
 /// The data-parallel gradient engine: leader-side API over N workers.
@@ -359,7 +429,9 @@ impl GradEngine {
         let (tx, rx) = mpsc::channel::<WorkerMsg>();
         let results = self.results_tx.clone();
         let manifest = self.manifest.clone();
-        let join = std::thread::Builder::new()
+        // lint: thread: joined — GradEngine::drop sends WorkerMsg::Shutdown
+        // to every worker, then joins each handle.
+        let join = thread::Builder::new()
             .name(format!("dp-worker-{id}"))
             .spawn(move || {
                 // each worker owns its own PJRT client (not Send)
@@ -373,29 +445,43 @@ impl GradEngine {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         WorkerMsg::Job(job) => {
-                            let lora = match (&job.lora, &job.acfg) {
-                                (Some(l), Some(a)) => Some((l.as_slice(), a.as_slice())),
-                                _ => None,
-                            };
-                            let out = run_job(
-                                &mut rt,
-                                &manifest,
-                                job.mode,
-                                job.eval_lora,
-                                &job.base,
-                                lora,
-                                &job.batch,
-                            )
-                            .map(|mut o| {
-                                o.worker = id;
-                                match job.route.as_ref() {
-                                    // publish buckets as soon as this
-                                    // worker's backward output is ready —
-                                    // the reduce thread overlaps with the
-                                    // other workers' still-running steps
-                                    Some(route) => publish_buckets(route, o),
-                                    None => o,
-                                }
+                            // A panicking job (artifact mismatch, bucket
+                            // protocol bug) must reach the leader as an
+                            // error on the results channel. Without the
+                            // catch, the worker vanishes with its result
+                            // unsent and the leader's recv_all waits
+                            // forever — the engine's own results_tx clone
+                            // keeps the channel open, so no disconnect
+                            // error ever arrives (model-checked in
+                            // tests/loom_bucket.rs).
+                            let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                let lora = match (&job.lora, &job.acfg) {
+                                    (Some(l), Some(a)) => Some((l.as_slice(), a.as_slice())),
+                                    _ => None,
+                                };
+                                run_job(
+                                    &mut rt,
+                                    &manifest,
+                                    job.mode,
+                                    job.eval_lora,
+                                    &job.base,
+                                    lora,
+                                    &job.batch,
+                                )
+                                .map(|mut o| {
+                                    o.worker = id;
+                                    match job.route.as_ref() {
+                                        // publish buckets as soon as this
+                                        // worker's backward output is ready —
+                                        // the reduce thread overlaps with the
+                                        // other workers' still-running steps
+                                        Some(route) => publish_buckets(route, o),
+                                        None => o,
+                                    }
+                                })
+                            }))
+                            .unwrap_or_else(|p| {
+                                Err(anyhow!("worker {id} panicked: {}", panic_message(&*p)))
                             });
                             if results.send(out).is_err() {
                                 break;
@@ -545,7 +631,10 @@ impl GradEngine {
         } else {
             // sequential path: zero-copy borrows straight into the runtime,
             // executed eagerly (there is no background thread to defer to)
-            let rt = self.local.as_mut().expect("local runtime");
+            let rt = self
+                .local
+                .as_mut()
+                .ok_or_else(|| anyhow!("sequential engine has no local runtime"))?;
             let mut outs = Vec::with_capacity(n);
             for (w, batch) in batches.iter().enumerate() {
                 let mut o = run_job(rt, &self.manifest, Some(mode), false, base, lora, batch)?;
@@ -673,7 +762,10 @@ impl GradEngine {
             self.recv_all()
         } else {
             // sequential path: zero-copy borrows straight into the runtime
-            let rt = self.local.as_mut().expect("local runtime");
+            let rt = self
+                .local
+                .as_mut()
+                .ok_or_else(|| anyhow!("sequential engine has no local runtime"))?;
             let mut outs = Vec::with_capacity(batches.len());
             for (w, batch) in batches.iter().enumerate() {
                 let mut o = run_job(rt, &self.manifest, None, eval_lora, base, lora, batch)?;
@@ -804,7 +896,7 @@ mod tests {
 
         let plan = Arc::new(BucketPlan::derive(m.base.size, 1, 1024));
         // capacity covers every message: this test drains only afterwards
-        let (tx, rx) = mpsc::sync_channel(plan.count() * workers + 1);
+        let (tx, rx) = BucketTx::channel(plan.count() * workers + 1);
         eng.set_bucket_route(Some(BucketRoute { base: Some(plan.clone()), lora: None, tx }));
         eng.submit(StepMode::Full, &base, None, batches).unwrap();
         let outs = eng.collect().unwrap();
@@ -815,7 +907,10 @@ mod tests {
 
         let mut per_worker = vec![vec![0.0f32; m.base.size]; workers];
         let mut got = 0usize;
-        for msg in rx.try_iter() {
+        for ctrl in rx.try_iter() {
+            let BucketCtrl::Bucket(msg) = ctrl else {
+                panic!("workers publish buckets only, never lifecycle signals");
+            };
             assert_eq!(msg.space, GradSpace::Base);
             assert_eq!(msg.full_len, m.base.size);
             let b = plan.buckets[msg.bucket];

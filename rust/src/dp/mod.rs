@@ -27,5 +27,6 @@ pub use allreduce::{
     sq_sum_in_order, Algorithm, Bucket, BucketPlan, Reduced,
 };
 pub use engine::{
-    BucketMsg, BucketRoute, GradEngine, GradResult, GradSpace, StepMode, StepOutputs,
+    BucketCtrl, BucketMsg, BucketQueueClosed, BucketRoute, BucketTx, GradEngine, GradResult,
+    GradSpace, StepMode, StepOutputs,
 };

@@ -93,11 +93,13 @@ pub mod data;
 pub mod dist;
 pub mod dp;
 pub mod manifest;
+pub mod mc;
 pub mod optim;
 pub mod pipeline;
 pub mod rank;
 pub mod report;
 pub mod runtime;
+pub(crate) mod sync;
 pub mod telemetry;
 pub mod tensor;
 pub mod trainer;

@@ -184,6 +184,11 @@ impl StepPipeline {
             // across a phase switch or the next epoch
             engine.drain();
         }
+        // Retire the engine's route sender clones at the epoch barrier
+        // (success or failure): the reduce stage must stay joinable
+        // without waiting on the engine's drop order, and the next epoch
+        // re-derives its own route anyway.
+        engine.set_bucket_route(None);
         run.map(|()| out)
     }
 

@@ -32,6 +32,8 @@ impl Prefetcher {
         depth: usize,
     ) -> Result<Self> {
         let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        // lint: thread: joined — Drop closes the channel (unblocking a
+        // producer stuck on the full queue) and joins the handle.
         let join = std::thread::Builder::new()
             .name("data-prefetch".into())
             .spawn(move || {

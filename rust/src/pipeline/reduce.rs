@@ -33,16 +33,32 @@
 //! per-worker input buffers are consumed), dropping per-rank gradient
 //! memory to ~1/N. Either way the result gathers bitwise to the
 //! all-reduce output, so the layout cannot change losses.
+//!
+//! **Thread lifecycle**: both stage threads (phase overlap + bucket
+//! accumulator) are joined in [`Drop`]. The accumulator's queue carries
+//! lifecycle signals alongside buckets ([`BucketCtrl`]) — `Shutdown`
+//! terminates it even while the engine still holds route sender clones,
+//! so the join can never block on a foreign drop order, and `Reset` at
+//! each epoch barrier clears partial accumulation an aborted step left
+//! behind. The exhaustive interleaving checks for this protocol live in
+//! `rust/tests/loom_bucket.rs` (via [`crate::mc`]).
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::BTreeMap;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::dist::Strategy;
-use crate::dp::{BucketMsg, BucketPlan, BucketRoute, GradResult, GradSpace, Reduced, StepOutputs};
+use crate::dp::{
+    BucketCtrl, BucketPlan, BucketRoute, BucketTx, GradResult, GradSpace, Reduced, StepOutputs,
+};
+use crate::sync::{mpsc, thread, Arc};
+
+/// One reduced bucket — or the accumulator's report of a broken protocol
+/// (duplicate/out-of-range publish, strategy refusal), which the leader
+/// surfaces as a step error instead of waiting on a bucket that can never
+/// complete.
+type ReducedMsg = Result<(GradSpace, usize, Vec<f32>)>;
 
 /// The bucket plans live this epoch (a space is `None` when its gradients
 /// still flow whole-buffer — e.g. the frozen base after the switch).
@@ -62,12 +78,76 @@ pub struct ReduceStage {
     join: Option<JoinHandle<()>>,
     /// Bucket size bound (elements are f32; 0 = bucketing off).
     bucket_bytes: usize,
-    /// Sender handed to the engine each epoch (workers publish here).
-    bucket_tx: Option<mpsc::SyncSender<BucketMsg>>,
-    /// Reduced buckets back from the accumulator thread.
-    reduced_rx: Option<mpsc::Receiver<(GradSpace, usize, Vec<f32>)>>,
+    /// Sender handed to the engine each epoch (workers publish here);
+    /// also carries the stage-private lifecycle signals.
+    bucket_tx: Option<BucketTx>,
+    /// Reduced buckets (or the accumulator's error) back to the leader.
+    reduced_rx: Option<mpsc::Receiver<ReducedMsg>>,
+    /// The accumulator thread, joined on drop.
+    bucket_join: Option<JoinHandle<()>>,
     /// Plans of the epoch in flight (`None` = whole-buffer this epoch).
     active: Option<ActiveBuckets>,
+}
+
+/// Body of the persistent "bucket-reduce" accumulator thread: collect
+/// every worker's slice of each bucket, reduce complete buckets through
+/// the strategy's one summation schedule, stream results to the leader.
+/// A protocol violation is reported over `rtx` and stops the thread — the
+/// leader's next [`ReduceStage::reduce`] fails loudly instead of waiting
+/// on a bucket that can never complete.
+fn accumulate_buckets(
+    brx: &mpsc::Receiver<BucketCtrl>,
+    rtx: &mpsc::Sender<ReducedMsg>,
+    n: usize,
+    strategy: &dyn Strategy,
+) {
+    // BTreeMap, not HashMap (PL001): nothing may ever iterate this map in
+    // hash order on the reduce path, and a keyed lookup loses nothing.
+    let mut pending: BTreeMap<(GradSpace, usize), Vec<Option<Vec<f32>>>> = BTreeMap::new();
+    while let Ok(ctrl) = brx.recv() {
+        let msg = match ctrl {
+            BucketCtrl::Bucket(msg) => msg,
+            BucketCtrl::Reset => {
+                pending.clear();
+                continue;
+            }
+            BucketCtrl::Shutdown => return,
+        };
+        let key = (msg.space, msg.bucket);
+        let slots = pending.entry(key).or_insert_with(|| vec![None; n]);
+        let violation = if msg.worker >= n {
+            Some("out-of-range")
+        } else if slots[msg.worker].is_some() {
+            Some("duplicate")
+        } else {
+            None
+        };
+        if let Some(what) = violation {
+            let _ = rtx.send(Err(anyhow!(
+                "bucket-sync protocol violation: {what} publish of {:?}/{} by worker {}",
+                msg.space,
+                msg.bucket,
+                msg.worker
+            )));
+            return;
+        }
+        slots[msg.worker] = Some(msg.data);
+        if slots.iter().all(Option::is_some) {
+            let Some(slots) = pending.remove(&key) else { continue };
+            let bufs: Vec<Vec<f32>> = slots.into_iter().flatten().collect();
+            let reduced = strategy.grad_sync_bucket(bufs, msg.lo, msg.full_len).ok_or_else(|| {
+                anyhow!(
+                    "strategy stopped supporting bucketed sync for {:?}/{}",
+                    msg.space,
+                    msg.bucket
+                )
+            });
+            let failed = reduced.is_err();
+            if rtx.send(reduced.map(|r| (msg.space, msg.bucket, r))).is_err() || failed {
+                return; // leader gone, or nothing left to accumulate for
+            }
+        }
+    }
 }
 
 impl ReduceStage {
@@ -85,53 +165,27 @@ impl ReduceStage {
             bucket_bytes: 0,
             bucket_tx: None,
             reduced_rx: None,
+            bucket_join: None,
             active: None,
         };
         if bucket_bytes > 0 && stage.strategy.bucketed_sync() {
             // bounded job queue: throttles publishers without ever filling
             // faster than the accumulator drains
-            let (btx, brx) = mpsc::sync_channel::<BucketMsg>(4 * n_workers.max(1));
-            let (rtx, rrx) = mpsc::channel::<(GradSpace, usize, Vec<f32>)>();
+            let (btx, brx) = BucketTx::channel(4 * n_workers.max(1));
+            let (rtx, rrx) = mpsc::channel::<ReducedMsg>();
             let n = n_workers.max(1);
             let acc_strategy = stage.strategy.clone();
-            // Detached on purpose: the engine holds sender clones of `btx`
-            // in its route, so joining here could wait on the engine's
-            // drop order. The thread exits once every sender is gone.
-            let handle = std::thread::Builder::new()
+            // lint: thread: joined — Drop sends `BucketCtrl::Shutdown`
+            // (which overrides the engine's live route sender clones, so
+            // the join cannot block on foreign drop order) and joins.
+            let handle = thread::Builder::new()
                 .name("bucket-reduce".into())
-                .spawn(move || {
-                    let mut pending: HashMap<(GradSpace, usize), Vec<Option<Vec<f32>>>> =
-                        HashMap::new();
-                    while let Ok(msg) = brx.recv() {
-                        let key = (msg.space, msg.bucket);
-                        let slots = pending.entry(key).or_insert_with(|| vec![None; n]);
-                        // a duplicate or out-of-range worker is a protocol
-                        // bug; panicking drops `rtx`, which the leader
-                        // observes as a recv error instead of a hang
-                        assert!(
-                            slots[msg.worker].is_none(),
-                            "duplicate bucket {key:?} from worker {}",
-                            msg.worker
-                        );
-                        slots[msg.worker] = Some(msg.data);
-                        if slots.iter().all(Option::is_some) {
-                            let slots = pending.remove(&key).expect("pending entry");
-                            let bufs: Vec<Vec<f32>> =
-                                slots.into_iter().map(|s| s.expect("complete")).collect();
-                            let reduced = acc_strategy
-                                .grad_sync_bucket(bufs, msg.lo, msg.full_len)
-                                .expect("strategy advertised bucketed_sync");
-                            if rtx.send((msg.space, msg.bucket, reduced)).is_err() {
-                                break; // leader gone
-                            }
-                        }
-                    }
-                })
+                .spawn(move || accumulate_buckets(&brx, &rtx, n, &*acc_strategy))
                 .context("spawning bucket-reduce thread")?;
-            drop(handle); // detached (see above)
             stage.bucket_bytes = bucket_bytes;
             stage.bucket_tx = Some(btx);
             stage.reduced_rx = Some(rrx);
+            stage.bucket_join = Some(handle);
         }
         if !overlap {
             return Ok(stage);
@@ -139,7 +193,8 @@ impl ReduceStage {
         let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
         let (out_tx, rx) = mpsc::channel::<Option<Reduced>>();
         let stage_strategy = stage.strategy.clone();
-        let join = std::thread::Builder::new()
+        // lint: thread: joined — Drop closes the job channel and joins.
+        let join = thread::Builder::new()
             .name("reduce-stage".into())
             .spawn(move || {
                 while let Ok(bufs) = job_rx.recv() {
@@ -173,6 +228,10 @@ impl ReduceStage {
                 return None;
             }
         };
+        // epoch barrier: clear any partial accumulation an aborted step
+        // left behind before the new epoch starts publishing (a closed
+        // queue is fine — the next reduce reports the dead accumulator)
+        let _ = tx.reset();
         let base = base_len
             .filter(|&l| l > 0)
             .map(|l| Arc::new(self.strategy.bucket_plan(l, self.bucket_bytes)));
@@ -196,8 +255,8 @@ impl ReduceStage {
     /// [`Strategy::reduce_step`] — the serial path's epilogue — so the
     /// paths can never diverge.
     pub fn reduce(&mut self, outs: StepOutputs) -> Result<GradResult> {
-        if self.active.is_some() {
-            return self.reduce_bucketed(outs);
+        if let Some(active) = self.active.clone() {
+            return self.reduce_bucketed(&active, outs);
         }
         let (tx, rx) = match (&self.tx, &self.rx) {
             (Some(tx), Some(rx))
@@ -226,9 +285,8 @@ impl ReduceStage {
     /// each space in bucket-index order — bitwise the whole-buffer reduce.
     /// The blocking `recv` here is exactly the comm-wait the pipeline
     /// measures: time the update stage stalls on unreduced buckets.
-    fn reduce_bucketed(&mut self, outs: StepOutputs) -> Result<GradResult> {
+    fn reduce_bucketed(&mut self, active: &ActiveBuckets, outs: StepOutputs) -> Result<GradResult> {
         let StepOutputs { base_grads, lora_grads, loss, correct, samples, execute_seconds } = outs;
-        let active = self.active.as_ref().expect("bucketed reduce without plans");
         let rx = self
             .reduced_rx
             .as_ref()
@@ -247,8 +305,10 @@ impl ReduceStage {
         let mut lora_slots: Vec<Option<Vec<f32>>> = vec![None; expect_lora];
         let mut remaining = expect_base + expect_lora;
         while remaining > 0 {
-            let (space, idx, data) =
-                rx.recv().map_err(|_| anyhow!("bucket-reduce thread died"))?;
+            let (space, idx, data) = rx
+                .recv()
+                .map_err(|_| anyhow!("bucket-reduce thread died"))?
+                .context("bucket-reduce accumulator failed")?;
             let slot = match space {
                 GradSpace::Base => base_slots.get_mut(idx),
                 GradSpace::Lora => lora_slots.get_mut(idx),
@@ -259,11 +319,11 @@ impl ReduceStage {
             remaining -= 1;
         }
         let d_base = match active.base.as_deref() {
-            Some(plan) => Some(assemble(plan, base_slots)),
+            Some(plan) => Some(assemble(plan, base_slots)?),
             None => self.strategy.grad_sync(base_grads),
         };
         let d_lora = match active.lora.as_deref() {
-            Some(plan) => Some(assemble(plan, lora_slots)),
+            Some(plan) => Some(assemble(plan, lora_slots)?),
             None => self.strategy.grad_sync(lora_grads),
         };
         Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
@@ -274,20 +334,21 @@ impl ReduceStage {
 /// one full vector when gradients are replicated, per-partition chunks
 /// (grouped by each bucket's owning partition, preserving index order
 /// within it) when they shard — mirroring `reduce_scatter`'s output shape
-/// including empty chunks for empty partitions.
-fn assemble(plan: &BucketPlan, slots: Vec<Option<Vec<f32>>>) -> Reduced {
+/// including empty chunks for empty partitions. A missing bucket can only
+/// mean a counting bug in the caller's drain loop.
+fn assemble(plan: &BucketPlan, slots: Vec<Option<Vec<f32>>>) -> Result<Reduced> {
     if plan.parts <= 1 {
         let mut full = Vec::with_capacity(plan.len);
-        for s in slots {
-            full.extend(s.expect("all buckets received"));
+        for (i, s) in slots.into_iter().enumerate() {
+            full.extend(s.ok_or_else(|| anyhow!("bucket {i} missing from assembly"))?);
         }
-        Reduced::Full(full)
+        Ok(Reduced::Full(full))
     } else {
         let mut chunks = vec![Vec::new(); plan.parts];
-        for (b, s) in plan.buckets.iter().zip(slots) {
-            chunks[b.part].extend(s.expect("all buckets received"));
+        for (i, (b, s)) in plan.buckets.iter().zip(slots).enumerate() {
+            chunks[b.part].extend(s.ok_or_else(|| anyhow!("bucket {i} missing from assembly"))?);
         }
-        Reduced::Sharded(chunks)
+        Ok(Reduced::Sharded(chunks))
     }
 }
 
@@ -298,6 +359,18 @@ impl Drop for ReduceStage {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        // `Shutdown` terminates the accumulator even while the engine
+        // still holds route sender clones, so this join cannot block on a
+        // foreign drop order. A closed queue means the accumulator
+        // already exited (protocol violation) — the join returns at once
+        // either way.
+        if let Some(tx) = self.bucket_tx.take() {
+            let _ = tx.shutdown();
+        }
+        drop(self.reduced_rx.take());
+        if let Some(j) = self.bucket_join.take() {
+            let _ = j.join();
+        }
     }
 }
 
@@ -305,7 +378,7 @@ impl Drop for ReduceStage {
 mod tests {
     use super::*;
     use crate::dist::{collective_for, strategy_for, ZeroStage};
-    use crate::dp::Algorithm;
+    use crate::dp::{Algorithm, BucketMsg, BucketQueueClosed};
 
     fn strat(stage: ZeroStage, workers: usize) -> Arc<dyn Strategy> {
         strategy_for(stage, workers, collective_for(Algorithm::Tree))
@@ -334,7 +407,7 @@ mod tests {
             for (i, b) in plan.buckets.iter().enumerate() {
                 route
                     .tx
-                    .send(crate::dp::BucketMsg {
+                    .send(BucketMsg {
                         space,
                         bucket: i,
                         worker: w,
@@ -402,8 +475,8 @@ mod tests {
     fn epoch_route_rederives_plans_per_length() {
         // the Repartition contract: a new space length at the next epoch
         // start gets a freshly derived layout
-        let workers = 2;
-        let mut stage = ReduceStage::new(strat(ZeroStage::Zero2, workers), false, 64, workers).unwrap();
+        let w = 2;
+        let mut stage = ReduceStage::new(strat(ZeroStage::Zero2, w), false, 64, w).unwrap();
         let r1 = stage.epoch_route(Some(101), None).unwrap();
         assert_eq!(r1.base.as_ref().unwrap().len, 101);
         assert!(r1.lora.is_none());
@@ -413,7 +486,7 @@ mod tests {
         assert!(r3.base.is_none(), "frozen base must drop out of the route");
         // no live space => no route, and the stage falls back to inline
         assert!(stage.epoch_route(None, None).is_none());
-        let r = stage.reduce(outs(workers, 0, 16)).unwrap();
+        let r = stage.reduce(outs(w, 0, 16)).unwrap();
         assert!(r.d_base.is_some());
     }
 
@@ -459,7 +532,7 @@ mod tests {
                     let gb = got.d_base.clone().expect("base gradients present");
                     assert!(
                         gb.per_rank_elems() < 101,
-                        "{stage:?}: the stage must produce owned partitions, got a replicated buffer"
+                        "{stage:?}: stage must produce owned partitions, not replicated"
                     );
                     assert_eq!(
                         gb.into_full(),
@@ -486,5 +559,85 @@ mod tests {
         assert_eq!(r.correct, 3.0);
         assert_eq!(r.samples, 8);
         assert!(r.d_base.is_some() && r.d_lora.is_none());
+    }
+
+    #[test]
+    fn drop_joins_accumulator_despite_live_route_senders() {
+        // the old stage detached the accumulator: dropping the stage
+        // while someone (the engine) still held a route sender leaked a
+        // live thread. Now Shutdown ends it and Drop joins — observable
+        // from outside because a publish on the surviving sender reports
+        // the closed queue instead of quietly feeding a leaked thread.
+        let workers = 2;
+        let mut stage =
+            ReduceStage::new(strat(ZeroStage::Off, workers), false, 64, workers).unwrap();
+        let route = stage.epoch_route(Some(100), None).unwrap();
+        drop(stage);
+        let late = route.tx.send(BucketMsg {
+            space: GradSpace::Base,
+            bucket: 0,
+            worker: 0,
+            lo: 0,
+            full_len: 100,
+            data: vec![0.0; 16],
+        });
+        assert_eq!(late, Err(BucketQueueClosed));
+    }
+
+    #[test]
+    fn aborted_step_leftovers_are_cleared_at_next_epoch_route() {
+        // a failed step can leave partial accumulation behind (worker 0
+        // published, worker 1's step errored before publishing); without
+        // the Reset at the next epoch barrier, worker 0's fresh publishes
+        // would collide with its stale ones as duplicates
+        let workers = 2;
+        let len = 40;
+        let mut stage =
+            ReduceStage::new(strat(ZeroStage::Off, workers), false, 64, workers).unwrap();
+        let r1 = stage.epoch_route(Some(len), None).unwrap();
+        let plan = r1.base.clone().expect("base plan");
+        for (i, b) in plan.buckets.iter().enumerate() {
+            r1.tx
+                .send(BucketMsg {
+                    space: GradSpace::Base,
+                    bucket: i,
+                    worker: 0,
+                    lo: b.lo,
+                    full_len: plan.len,
+                    data: vec![9.0; b.hi - b.lo],
+                })
+                .unwrap();
+        }
+        drop(r1);
+        let r2 = stage.epoch_route(Some(len), None).unwrap();
+        let grads = vec![vec![2.0f32; len]; workers];
+        publish(&r2, GradSpace::Base, &grads);
+        let got = stage.reduce(outs(0, 0, len)).unwrap();
+        let full = got.d_base.expect("base reduced").into_full();
+        assert_eq!(full, vec![2.0f32; len], "stale epoch-1 slices leaked into epoch 2");
+    }
+
+    #[test]
+    fn protocol_violation_surfaces_as_contextful_error() {
+        // a duplicate publish is a logic bug; the old accumulator
+        // panicked on it (an assert in a detached thread), the new one
+        // reports it through the result channel so reduce() fails loudly
+        let workers = 2;
+        let len = 16;
+        let mut stage =
+            ReduceStage::new(strat(ZeroStage::Off, workers), false, 1024, workers).unwrap();
+        let route = stage.epoch_route(Some(len), None).unwrap();
+        let msg = |worker| BucketMsg {
+            space: GradSpace::Base,
+            bucket: 0,
+            worker,
+            lo: 0,
+            full_len: len,
+            data: vec![1.0; len],
+        };
+        route.tx.send(msg(0)).unwrap();
+        route.tx.send(msg(0)).unwrap(); // duplicate: the protocol bug
+        let err = stage.reduce(outs(0, 0, len)).unwrap_err();
+        assert!(format!("{err:#}").contains("protocol violation"), "{err:#}");
     }
 }

@@ -1,6 +1,6 @@
 //! Thread-local PJRT client + artifact compilation cache.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
 
@@ -15,7 +15,9 @@ use crate::manifest::Manifest;
 /// metrics report); `execute` is the request-path operation.
 pub struct Runtime {
     client: xla::PjRtClient,
-    cache: HashMap<String, Executable>,
+    // BTreeMap, not HashMap (PL001): anything that ever iterates the
+    // cache (diagnostics, eviction) must see name order, not hash order.
+    cache: BTreeMap<String, Executable>,
     /// Cumulative compile time, exposed to the metrics report.
     pub compile_seconds: f64,
 }
@@ -23,7 +25,7 @@ pub struct Runtime {
 impl Runtime {
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, cache: HashMap::new(), compile_seconds: 0.0 })
+        Ok(Self { client, cache: BTreeMap::new(), compile_seconds: 0.0 })
     }
 
     pub fn platform(&self) -> String {

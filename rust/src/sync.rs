@@ -1,0 +1,26 @@
+//! Sync-primitive indirection for model checking.
+//!
+//! Concurrency-bearing modules (`dp`, `pipeline`) import their channels,
+//! `Arc`, and thread handles from here instead of `std::sync` directly, so
+//! a model checker can substitute instrumented primitives under
+//! `--cfg loom` without touching the call sites. The `loom` branch is the
+//! documented hook point for [loom](https://docs.rs/loom) once the build
+//! environment can fetch it; it is `cfg`'d out so the tree never depends
+//! on the crate. Two gaps make the hook insufficient on its own today:
+//! loom's `mpsc` has no `sync_channel`, and `loom::thread` has no
+//! `Builder` — both are load-bearing in the bucket-sync protocol (bounded
+//! publish queue, named workers). The protocol's interleavings are instead
+//! verified exhaustively by the vendored checker in [`crate::mc`] against
+//! faithful models of these primitives (`rust/tests/loom_bucket.rs`); the
+//! shim keeps production code honest about *which* primitives those models
+//! must mirror.
+
+#[cfg(loom)]
+pub(crate) use loom::sync::{mpsc, Arc};
+#[cfg(loom)]
+pub(crate) use loom::thread;
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::{mpsc, Arc};
+#[cfg(not(loom))]
+pub(crate) use std::thread;

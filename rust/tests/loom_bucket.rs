@@ -1,0 +1,533 @@
+//! Exhaustive interleaving checks for the bucket-sync protocol.
+//!
+//! The fixed-seed integration sweep proves the bucketed reduce is bitwise
+//! correct on the interleavings the OS scheduler happens to produce;
+//! these tests prove liveness and delivery on *every* interleaving of
+//! small instances. Each test states a faithful model of the protocol in
+//! `pipeline/reduce.rs` + `dp/engine.rs` — workers publishing over the
+//! bounded [`BucketTx`] queue, the accumulator thread, the leader's
+//! collect/drain — and hands it to the [`prelora::mc`] checker, which
+//! walks the whole schedule space (see `src/sync.rs` for why the vendored
+//! checker stands in for loom here).
+//!
+//! The models mirror `std::sync::mpsc` semantics exactly where the
+//! protocol depends on them: a bounded `sync_channel` send blocks while
+//! the queue is full but fails *immediately* once the receiver is gone
+//! (that failure is what un-sticks publishers after a teardown), and an
+//! unbounded channel recv blocks while any sender is alive — which is
+//! exactly how a vanished worker used to hang the leader.
+//!
+//! [`BucketTx`]: prelora::dp::BucketTx
+
+use std::collections::VecDeque;
+
+use prelora::mc::{explore, Model, Step, ViolationKind};
+
+const WORKERS: usize = 2;
+const BUCKETS: usize = 3;
+/// Queue bound; smaller than WORKERS * BUCKETS so publishers really block.
+const CAP: usize = 2;
+
+/// What travels the bucket queue (mirrors `dp::BucketCtrl`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum Ctrl {
+    Bucket { worker: u8, bucket: u8 },
+    Reset,
+    Shutdown,
+}
+
+/// The full pipeline: WORKERS publisher threads, the accumulator, and the
+/// leader draining reduced buckets then shutting the accumulator down.
+/// Thread ids: `0..WORKERS` = workers, `WORKERS` = accumulator,
+/// `WORKERS + 1` = leader.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Pipeline {
+    /// Next bucket index each worker will publish.
+    published: [u8; WORKERS],
+    /// The bounded bucket queue.
+    queue: VecDeque<Ctrl>,
+    /// Worker slices the accumulator holds per bucket.
+    got: [u8; BUCKETS],
+    /// Reduced buckets in flight to the leader (unbounded channel).
+    reduced: VecDeque<u8>,
+    /// How many times the leader received each reduced bucket.
+    leader: [u8; BUCKETS],
+    /// How many reduced buckets the leader consumes before tearing down
+    /// (BUCKETS = a full step; fewer = a mid-epoch abort).
+    leader_takes: u8,
+    /// Leader dropped its reduced-bucket receiver (teardown).
+    rx_alive: bool,
+    shutdown_sent: bool,
+    /// Accumulator exited (Shutdown, or its result send failed).
+    acc_done: bool,
+}
+
+impl Pipeline {
+    fn new(leader_takes: u8) -> Self {
+        Self {
+            published: [0; WORKERS],
+            queue: VecDeque::new(),
+            got: [0; BUCKETS],
+            reduced: VecDeque::new(),
+            leader: [0; BUCKETS],
+            leader_takes,
+            rx_alive: true,
+            shutdown_sent: false,
+            acc_done: false,
+        }
+    }
+
+    fn taken(&self) -> u8 {
+        self.leader.iter().sum()
+    }
+}
+
+impl Model for Pipeline {
+    fn threads(&self) -> usize {
+        WORKERS + 2
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        if tid < WORKERS {
+            // worker: publish buckets in index order; a send on the
+            // closed queue fails immediately and is ignored, like
+            // publish_buckets' `let _ = route.tx.send(...)`
+            let next = self.published[tid];
+            if usize::from(next) == BUCKETS {
+                return Step::Done;
+            }
+            if self.acc_done {
+                self.published[tid] = next + 1;
+                return Step::Progress;
+            }
+            if self.queue.len() == CAP {
+                return Step::Blocked;
+            }
+            self.queue.push_back(Ctrl::Bucket { worker: tid as u8, bucket: next });
+            self.published[tid] = next + 1;
+            Step::Progress
+        } else if tid == WORKERS {
+            // accumulator: accumulate_buckets' loop
+            if self.acc_done {
+                return Step::Done;
+            }
+            let Some(ctrl) = self.queue.pop_front() else {
+                // senders never all drop before Shutdown (the stage owns
+                // one for its whole lifetime), so an empty queue blocks
+                return Step::Blocked;
+            };
+            match ctrl {
+                Ctrl::Shutdown => self.acc_done = true,
+                Ctrl::Reset => self.got = [0; BUCKETS],
+                Ctrl::Bucket { bucket, .. } => {
+                    let b = usize::from(bucket);
+                    self.got[b] += 1;
+                    if usize::from(self.got[b]) == WORKERS {
+                        if self.rx_alive {
+                            self.reduced.push_back(bucket);
+                        } else {
+                            // result send failed: leader is gone, exit
+                            self.acc_done = true;
+                        }
+                    }
+                }
+            }
+            Step::Progress
+        } else {
+            // leader: drain `leader_takes` reduced buckets, drop the
+            // receiver, send Shutdown, join the accumulator
+            if self.taken() < self.leader_takes {
+                let Some(b) = self.reduced.pop_front() else {
+                    return Step::Blocked;
+                };
+                self.leader[usize::from(b)] += 1;
+                Step::Progress
+            } else if self.rx_alive {
+                self.rx_alive = false; // drop(self.reduced_rx.take())
+                Step::Progress
+            } else if !self.shutdown_sent {
+                if self.queue.len() == CAP && !self.acc_done {
+                    return Step::Blocked; // bounded send waits for space
+                }
+                if !self.acc_done {
+                    self.queue.push_back(Ctrl::Shutdown);
+                }
+                self.shutdown_sent = true;
+                Step::Progress
+            } else if !self.acc_done {
+                Step::Blocked // join
+            } else {
+                Step::Done
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        for (b, &n) in self.leader.iter().enumerate() {
+            if n > 1 {
+                return Err(format!("bucket {b} delivered to the leader {n} times"));
+            }
+        }
+        for (b, &n) in self.got.iter().enumerate() {
+            if usize::from(n) > WORKERS {
+                return Err(format!("bucket {b} over-filled: {n} slices"));
+            }
+        }
+        Ok(())
+    }
+
+    fn accept(&self) -> Result<(), String> {
+        if self.taken() != self.leader_takes {
+            return Err(format!(
+                "leader ended with {} of {} buckets",
+                self.taken(),
+                self.leader_takes
+            ));
+        }
+        if !self.acc_done {
+            return Err("accumulator outlived the leader's join".into());
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn full_step_delivers_every_bucket_once_in_every_interleaving() {
+    // the happy path: the leader drains a complete step, then tears down.
+    // No interleaving of publishes, reduces and the teardown may deadlock,
+    // lose a bucket, or deliver one twice.
+    let report = explore(Pipeline::new(BUCKETS as u8)).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.terminals > 0, "at least one complete schedule must exist");
+}
+
+#[test]
+fn mid_epoch_teardown_cannot_hang_leader_or_workers() {
+    // the drop-order scenario behind ReduceStage::drop: the leader takes
+    // only one reduced bucket, drops its receiver, sends Shutdown and
+    // joins — while workers may still be publishing into a bounded queue.
+    // Every interleaving must terminate: the accumulator exits on
+    // Shutdown or on its failed result send, and closed-queue publishes
+    // fail immediately instead of blocking forever.
+    for takes in [0u8, 1] {
+        explore(Pipeline::new(takes)).unwrap_or_else(|v| panic!("takes={takes}: {v}"));
+    }
+}
+
+/// A worker dying mid-job vs. the leader's blocking collect. The results
+/// channel never disconnects — the engine keeps its own sender clone —
+/// so `recv` can only be released by an actual message. Thread 0 is the
+/// worker, thread 1 the leader.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct WorkerDeath {
+    /// true = the fixed engine: catch_unwind turns the panic into an
+    /// error on the results channel. false = the old engine: the worker
+    /// thread just vanishes.
+    catches: bool,
+    results: u8,
+    worker_done: bool,
+    leader_got: bool,
+}
+
+impl Model for WorkerDeath {
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        if tid == 0 {
+            if self.worker_done {
+                return Step::Done;
+            }
+            if self.catches {
+                self.results += 1; // send Err("worker panicked")
+            }
+            self.worker_done = true;
+            Step::Progress
+        } else {
+            if self.leader_got {
+                return Step::Done;
+            }
+            if self.results == 0 {
+                return Step::Blocked; // recv_all: channel still open
+            }
+            self.results -= 1;
+            self.leader_got = true;
+            Step::Progress
+        }
+    }
+
+    fn accept(&self) -> Result<(), String> {
+        if self.leader_got {
+            Ok(())
+        } else {
+            Err("leader never observed the worker's fate".into())
+        }
+    }
+}
+
+#[test]
+fn uncaught_worker_panic_deadlocks_the_leader_and_the_catch_fixes_it() {
+    // the old protocol really hangs: the checker must find the lost-result
+    // interleaving, not just fail to prove liveness
+    let v = explore(WorkerDeath {
+        catches: false,
+        results: 0,
+        worker_done: false,
+        leader_got: false,
+    })
+    .unwrap_err();
+    assert_eq!(v.kind, ViolationKind::Deadlock, "{v}");
+
+    // with catch_unwind the panic reaches the leader as an error in every
+    // interleaving
+    explore(WorkerDeath { catches: true, results: 0, worker_done: false, leader_got: false })
+        .unwrap_or_else(|v| panic!("{v}"));
+}
+
+/// The phase-overlap handoff (`ReduceStage`'s base-vs-LoRA pair): the
+/// leader ships base buffers to the stage thread, reduces LoRA itself,
+/// receives the base result, and on drop closes the job channel and
+/// joins. Thread 0 is the leader, thread 1 the stage thread.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Handoff {
+    jobs: VecDeque<u8>,
+    outs: VecDeque<u8>,
+    steps_left: u8,
+    awaiting: bool,
+    tx_alive: bool,
+    stage_done: bool,
+}
+
+impl Model for Handoff {
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        if tid == 0 {
+            if self.steps_left > 0 {
+                if !self.awaiting {
+                    self.jobs.push_back(self.steps_left);
+                    self.awaiting = true;
+                    return Step::Progress;
+                }
+                if self.outs.pop_front().is_none() {
+                    return Step::Blocked; // rx.recv() for the base result
+                }
+                self.awaiting = false;
+                self.steps_left -= 1;
+                Step::Progress
+            } else if self.tx_alive {
+                self.tx_alive = false; // Drop: close the job channel
+                Step::Progress
+            } else if !self.stage_done {
+                Step::Blocked // join
+            } else {
+                Step::Done
+            }
+        } else {
+            if self.stage_done {
+                return Step::Done;
+            }
+            match self.jobs.pop_front() {
+                Some(job) => {
+                    self.outs.push_back(job);
+                    Step::Progress
+                }
+                // `while let Ok(bufs) = job_rx.recv()`: exits only when
+                // the channel is both empty and closed
+                None if !self.tx_alive => {
+                    self.stage_done = true;
+                    Step::Progress
+                }
+                None => Step::Blocked,
+            }
+        }
+    }
+
+    fn accept(&self) -> Result<(), String> {
+        if self.steps_left == 0 && self.stage_done {
+            Ok(())
+        } else {
+            Err(format!("steps_left={}, stage_done={}", self.steps_left, self.stage_done))
+        }
+    }
+}
+
+#[test]
+fn reduce_update_handoff_completes_and_joins_in_every_interleaving() {
+    explore(Handoff {
+        jobs: VecDeque::new(),
+        outs: VecDeque::new(),
+        steps_left: 2,
+        awaiting: false,
+        tx_alive: true,
+        stage_done: false,
+    })
+    .unwrap_or_else(|v| panic!("{v}"));
+}
+
+/// Two epochs around an aborted step: worker 0's epoch-1 slice is already
+/// queued when the step fails; both workers then publish fresh slices in
+/// epoch 2. Models the accumulator's pending map for one bucket. With
+/// `reset` (the shipped protocol) the epoch barrier clears the stale
+/// slice; without it — the pre-fix protocol — some interleaving either
+/// completes the bucket from mixed-epoch data or trips the duplicate
+/// assert. Thread ids: 0/1 = workers, 2 = accumulator, 3 = leader.
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum Slice {
+    Stale,
+    Fresh,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct EpochReset {
+    reset: bool,
+    queue: VecDeque<(u8, Slice)>, // (worker, slice) — Reset = worker 255
+    epoch2: bool,
+    /// Worker pcs: w0 publishes stale then (in epoch 2) fresh; w1 only
+    /// fresh.
+    w0: u8,
+    w1: u8,
+    slots: [Option<Slice>; 2],
+    delivered: Option<[Slice; 2]>,
+    acc_done: bool,
+    leader_done: bool,
+}
+
+impl Model for EpochReset {
+    fn threads(&self) -> usize {
+        4
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        match tid {
+            0 => match self.w0 {
+                0 => {
+                    self.queue.push_back((0, Slice::Stale));
+                    self.w0 = 1;
+                    Step::Progress
+                }
+                1 if self.epoch2 => {
+                    self.queue.push_back((0, Slice::Fresh));
+                    self.w0 = 2;
+                    Step::Progress
+                }
+                1 => Step::Blocked, // waiting out the epoch barrier
+                _ => Step::Done,
+            },
+            1 => match self.w1 {
+                0 if self.epoch2 => {
+                    self.queue.push_back((1, Slice::Fresh));
+                    self.w1 = 1;
+                    Step::Progress
+                }
+                0 => Step::Blocked,
+                _ => Step::Done,
+            },
+            2 => {
+                // accumulator
+                if self.acc_done {
+                    return Step::Done;
+                }
+                if self.delivered.is_some() {
+                    // one-bucket model: nothing further to do
+                    self.acc_done = true;
+                    return Step::Progress;
+                }
+                let Some((w, slice)) = self.queue.pop_front() else {
+                    return Step::Blocked;
+                };
+                if w == 255 {
+                    self.slots = [None, None]; // Reset
+                    return Step::Progress;
+                }
+                let slot = &mut self.slots[usize::from(w)];
+                if slot.is_some() {
+                    // the pre-fix duplicate assert: accumulator dies; the
+                    // checker reports it as an unserviceable leader below
+                    self.acc_done = true;
+                    return Step::Progress;
+                }
+                *slot = Some(slice);
+                if let [Some(a), Some(b)] = self.slots.clone() {
+                    self.delivered = Some([a, b]);
+                }
+                Step::Progress
+            }
+            _ => {
+                // leader: epoch barrier after the aborted step, then wait
+                // for the reduced bucket
+                if !self.epoch2 {
+                    if self.w0 == 0 {
+                        return Step::Blocked; // drain: w0's publish lands first
+                    }
+                    if self.reset {
+                        self.queue.push_back((255, Slice::Stale));
+                    }
+                    self.epoch2 = true;
+                    return Step::Progress;
+                }
+                if self.leader_done {
+                    return Step::Done;
+                }
+                if self.delivered.is_none() {
+                    if self.acc_done {
+                        // rtx dropped: recv errors out — the step fails
+                        // loudly; terminal, but accept() flags it
+                        self.leader_done = true;
+                        return Step::Progress;
+                    }
+                    return Step::Blocked;
+                }
+                self.leader_done = true;
+                Step::Progress
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if let Some(slices) = &self.delivered {
+            if slices.iter().any(|s| *s == Slice::Stale) {
+                return Err("bucket completed from mixed-epoch slices".into());
+            }
+        }
+        Ok(())
+    }
+
+    fn accept(&self) -> Result<(), String> {
+        match &self.delivered {
+            Some(_) => Ok(()),
+            None => Err("leader never received the epoch-2 bucket".into()),
+        }
+    }
+}
+
+fn epoch_reset(reset: bool) -> EpochReset {
+    EpochReset {
+        reset,
+        queue: VecDeque::new(),
+        epoch2: false,
+        w0: 0,
+        w1: 0,
+        slots: [None, None],
+        delivered: None,
+        acc_done: false,
+        leader_done: false,
+    }
+}
+
+#[test]
+fn epoch_reset_isolates_aborted_step_leftovers() {
+    // shipped protocol: every interleaving delivers a fresh-only bucket
+    explore(epoch_reset(true)).unwrap_or_else(|v| panic!("{v}"));
+
+    // pre-fix protocol: the checker finds an interleaving that corrupts
+    // the bucket with the stale slice (or kills the accumulator on the
+    // duplicate) — the bug class the fixed-seed sweep cannot surface
+    let v = explore(epoch_reset(false)).unwrap_err();
+    assert!(
+        matches!(v.kind, ViolationKind::Invariant | ViolationKind::Accept),
+        "expected corruption or a lost bucket, got {v}"
+    );
+}

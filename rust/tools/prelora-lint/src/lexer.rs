@@ -1,0 +1,263 @@
+//! A line-oriented Rust lexer — just enough to separate code from prose.
+//!
+//! Rules in this tool are substring checks, so the lexer's one job is to
+//! make sure those substrings can only match real code: comments are
+//! stripped into a separate per-line `comment` field (where the allow /
+//! thread-marker annotations live), and string/char literal *contents* are
+//! blanked while their delimiters stay, so `"HashMap"` in a log message
+//! never trips PL001. It also brace-matches `#[cfg(test)]` items so rules
+//! can skip test regions.
+//!
+//! It is not a full lexer: no macro expansion, no `include!`, and the
+//! lifetime-vs-char-literal split is a two-character lookahead heuristic.
+//! That is fine for a lint that gates a single known tree — the unit tests
+//! below pin the cases the prelora sources actually contain.
+
+/// One source line, split into rule-checkable parts.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// Code with comments removed and string/char contents blanked
+    /// (delimiters kept), so substring rules cannot match prose.
+    pub code: String,
+    /// Comment text carried by this line (line and block comments).
+    pub comment: String,
+}
+
+/// A lexed file plus its test-region map.
+pub struct SourceFile {
+    pub lines: Vec<Line>,
+    /// `true` for lines belonging to a `#[cfg(test)]` item (attribute
+    /// line through the item's closing brace).
+    pub in_test: Vec<bool>,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comments carry their depth.
+    BlockComment(u32),
+    Str,
+    /// Raw strings carry their `#` count.
+    RawStr(u32),
+    CharLit,
+}
+
+pub fn lex(src: &str) -> SourceFile {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'r' && raw_str_hashes(&chars, i).is_some() {
+                    let hashes = raw_str_hashes(&chars, i).unwrap();
+                    cur.code.push_str("r\"");
+                    state = State::RawStr(hashes);
+                    i += 2 + hashes as usize;
+                } else if c == '\'' {
+                    // Lifetime (`'a`, `'static`) vs char literal (`'x'`,
+                    // `'\n'`): an identifier char followed by anything but
+                    // a closing quote means lifetime.
+                    let next = chars.get(i + 1);
+                    let after = chars.get(i + 2);
+                    let lifetime = next.is_some_and(|n| n.is_alphanumeric() || *n == '_')
+                        && after != Some(&'\'');
+                    cur.code.push('\'');
+                    if !lifetime {
+                        state = State::CharLit;
+                    }
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Keep an escaped newline visible to the line loop so
+                    // line numbers stay aligned.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    let in_test = mark_tests(&lines);
+    SourceFile { lines, in_test }
+}
+
+/// `Some(n)` when position `i` (an `r`) starts a raw string with `n` hashes.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'))
+}
+
+/// Mark every line of each `#[cfg(test)]` item by brace-matching its body.
+/// Strings and comments are already stripped, so every brace in `code` is
+/// structural.
+fn mark_tests(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            in_test[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_are_stripped_into_the_comment_field() {
+        let f = lex("let x = 1; // HashMap here is prose\n/* and\nhere */ let y = 2;\n");
+        assert_eq!(f.lines[0].code.trim_end(), "let x = 1;");
+        assert!(f.lines[0].comment.contains("HashMap"));
+        assert!(f.lines[1].comment.contains("and"));
+        assert!(f.lines[2].comment.contains("here"));
+        assert_eq!(f.lines[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_delimiters_survive() {
+        let got = code_of("let s = \"HashMap .unwrap() // nope\"; s.len();\n");
+        assert_eq!(got[0], "let s = \"\"; s.len();");
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_do_not_leak() {
+        let got = code_of("let a = r#\"x \" HashMap\"#; let b = \"q\\\"HashSet\";\n");
+        assert_eq!(got[0], "let a = r\"\"; let b = \"\";");
+    }
+
+    #[test]
+    fn lifetimes_are_code_but_char_literals_are_blanked() {
+        let got = code_of("fn f<'a>(x: &'static str) -> char { 'y' }\n");
+        assert_eq!(got[0], "fn f<'a>(x: &'static str) -> char { '' }");
+        let got = code_of("let c = '\\n'; let d = 'Z';\n");
+        assert_eq!(got[0], "let c = ''; let d = '';");
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers_aligned() {
+        let f = lex("let s = \"one\ntwo\nthree\"; let t = 4;\n");
+        assert_eq!(f.lines.len(), 3);
+        assert_eq!(f.lines[2].code, "\"; let t = 4;");
+    }
+
+    #[test]
+    fn cfg_test_region_is_brace_matched() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = lex(src);
+        assert_eq!(f.in_test, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let got = code_of("/* outer /* inner */ still */ let z = 1;\n");
+        assert_eq!(got[0].trim(), "let z = 1;");
+    }
+}

@@ -1,0 +1,102 @@
+//! prelora-lint: determinism-invariant checker for the prelora tree.
+//!
+//! Usage (from `rust/`):
+//!
+//! ```text
+//! cargo run -p prelora-lint                # lint rust/src, exit 1 on findings
+//! cargo run -p prelora-lint -- --list-rules
+//! cargo run -p prelora-lint -- --root other/src
+//! ```
+//!
+//! Output is one line per finding, `RULE src/path.rs:line message`, in
+//! deterministic (path, line) order — the lint practices what it preaches.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--list-rules" => {
+                for (id, summary) in rules::RULES {
+                    println!("{id}  {summary}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown argument: {other} (try --list-rules or --root <dir>)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Default to the prelora sources relative to this crate's manifest, so
+    // the tool works from any cwd via `cargo run -p prelora-lint`.
+    let default_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let root = root.unwrap_or(default_root);
+
+    let mut files = Vec::new();
+    if let Err(e) = walk(&root, &mut files) {
+        eprintln!("prelora-lint: cannot scan {}: {e}", root.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+
+    let mut total = 0usize;
+    for path in &files {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("prelora-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let lexed = lexer::lex(&src);
+        for f in rules::check_file(&rel, &lexed) {
+            println!("{} src/{}:{} {}", f.rule, rel, f.line, f.message);
+            total += 1;
+        }
+    }
+
+    if total == 0 {
+        println!("prelora-lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("prelora-lint: {total} finding(s) — rule catalog: docs/static-analysis.md");
+        ExitCode::FAILURE
+    }
+}
+
+/// Collect `.rs` files under `dir`. Directory entries are sorted so the
+/// scan order (and therefore the report order) is stable across machines.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,287 @@
+//! The determinism rule set (PL001–PL005).
+//!
+//! Each rule is a per-line substring check over lexed code (comments
+//! stripped, string contents blanked — see `lexer`), scoped to the paths
+//! where the invariant is load-bearing. Suppressions are comment
+//! annotations and must carry a reason:
+//!
+//! ```text
+//! // lint: allow(PL004): documented invariant panic — <why it cannot fire>
+//! // lint: thread: joined — <who joins this handle, and when>
+//! ```
+//!
+//! An `allow` without a reason does not suppress; it is itself reported.
+//! The full catalog with rationale lives in docs/static-analysis.md.
+
+use crate::lexer::SourceFile;
+
+pub struct Finding {
+    pub rule: &'static str,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// How far above a flagged line a `lint: allow(...)` annotation may sit
+/// (multi-line justification comments push the marker upward).
+const ALLOW_WINDOW: usize = 3;
+/// How far above a `.spawn(` line a `lint: thread:` marker may sit —
+/// builder chains put the marker well above the `.spawn(` itself.
+const THREAD_WINDOW: usize = 6;
+
+/// Function-level telemetry sinks: a wall-clock read whose enclosing
+/// function feeds one of these fields is measurement, not state.
+const TELEMETRY_FIELDS: [&str; 3] = ["execute_seconds", "comm_wait_s", "compile_seconds"];
+
+/// Directories (relative to `src/`) where replicas must agree bitwise.
+const DETERMINISTIC_DIRS: [&str; 4] = ["dist", "dp", "pipeline", "runtime"];
+/// PL002 is scoped tighter: float reductions only happen in these.
+const REDUCE_DIRS: [&str; 3] = ["dist", "dp", "pipeline"];
+
+pub const RULES: [(&str, &str); 5] = [
+    (
+        "PL001",
+        "no HashMap/HashSet in deterministic paths (dist/, dp/, pipeline/, runtime/) — \
+         iteration order varies per process; use BTreeMap/BTreeSet or sorted keys",
+    ),
+    (
+        "PL002",
+        "no unordered float reduction (.sum()/.fold()) in reduce/clip paths — float \
+         addition is non-associative; use the explicit in-order helpers",
+    ),
+    (
+        "PL003",
+        "no wall-clock (Instant/SystemTime) outside telemetry-only functions — time must \
+         never flow into bitwise-compared state",
+    ),
+    (
+        "PL004",
+        "no unwrap()/expect() in non-test library code under dist/, dp/, pipeline/, \
+         checkpoint.rs — return Result, or annotate the documented invariant",
+    ),
+    (
+        "PL005",
+        "every spawned thread needs a `lint: thread:` marker naming who joins it (or its \
+         detach story); scoped threads are exempt",
+    ),
+];
+
+pub fn check_file(rel: &str, file: &SourceFile) -> Vec<Finding> {
+    let ann: Vec<Annotations> = file.lines.iter().map(|l| parse_annotations(&l.comment)).collect();
+    let mut out = Vec::new();
+
+    for (idx, line) in file.lines.iter().enumerate() {
+        // Reasonless allows are findings wherever they appear: a bare
+        // suppression defeats the audit trail the annotation exists for.
+        for id in &ann[idx].bare_allows {
+            out.push(Finding {
+                rule: "PL000",
+                line: idx + 1,
+                message: format!("allow({id}) without a reason — write `allow({id}): <why>`"),
+            });
+        }
+        if file.in_test[idx] {
+            continue;
+        }
+        let code = line.code.as_str();
+
+        if in_dirs(rel, &DETERMINISTIC_DIRS)
+            && (code.contains("HashMap") || code.contains("HashSet"))
+            && !allowed(&ann, idx, "PL001")
+        {
+            out.push(finding("PL001", idx, "hash-ordered container in a deterministic path"));
+        }
+
+        if in_dirs(rel, &REDUCE_DIRS) && !allowed(&ann, idx, "PL002") {
+            if code.contains(".sum::<f32") || code.contains(".sum::<f64") {
+                out.push(finding("PL002", idx, "unordered float .sum() — use sq_sum_in_order"));
+            } else if (code.contains(".sum()") || code.contains(".fold("))
+                && !(code.contains("len") || code.contains("count") || code.contains("usize"))
+            {
+                out.push(finding(
+                    "PL002",
+                    idx,
+                    "possibly-float reduction without an explicit order (annotate if integral)",
+                ));
+            }
+        }
+
+        if (in_dirs(rel, &DETERMINISTIC_DIRS) || rel == "checkpoint.rs")
+            && (code.contains("Instant::now") || code.contains("SystemTime::now"))
+            && !enclosing_fn_mentions(file, idx, &TELEMETRY_FIELDS)
+            && !allowed(&ann, idx, "PL003")
+        {
+            out.push(finding(
+                "PL003",
+                idx,
+                "wall-clock read in a function that is not a telemetry sink",
+            ));
+        }
+
+        if (in_dirs(rel, &REDUCE_DIRS) || rel == "checkpoint.rs")
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed(&ann, idx, "PL004")
+        {
+            out.push(finding("PL004", idx, "unwrap/expect in library code"));
+        }
+
+        if (code.contains(".spawn(") || code.contains("thread::spawn"))
+            && !code.contains("scope.spawn")
+            && !thread_marked(&ann, idx)
+            && !allowed(&ann, idx, "PL005")
+        {
+            out.push(finding(
+                "PL005",
+                idx,
+                "spawned thread without a `lint: thread:` join/detach marker",
+            ));
+        }
+    }
+    out
+}
+
+fn finding(rule: &'static str, idx: usize, message: &str) -> Finding {
+    Finding { rule, line: idx + 1, message: message.to_string() }
+}
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d) && rel[d.len()..].starts_with('/'))
+}
+
+struct Annotations {
+    /// Rule ids with a non-empty reason — these suppress.
+    allows: Vec<String>,
+    /// Rule ids written without a reason — these are findings.
+    bare_allows: Vec<String>,
+    thread_marker: bool,
+}
+
+fn parse_annotations(comment: &str) -> Annotations {
+    let mut allows = Vec::new();
+    let mut bare_allows = Vec::new();
+    let mut rest = comment;
+    while let Some(p) = rest.find("lint: allow(") {
+        rest = &rest[p + "lint: allow(".len()..];
+        let Some(close) = rest.find(')') else { break };
+        let id = rest[..close].trim().to_string();
+        rest = &rest[close + 1..];
+        let has_reason = rest
+            .strip_prefix(':')
+            .is_some_and(|r| !r.trim_start().is_empty() && !r.trim_start().starts_with("lint:"));
+        if id.is_empty() {
+            continue;
+        }
+        if has_reason {
+            allows.push(id);
+        } else {
+            bare_allows.push(id);
+        }
+    }
+    Annotations { allows, bare_allows, thread_marker: comment.contains("lint: thread:") }
+}
+
+/// An allow on the flagged line or within `ALLOW_WINDOW` lines above it.
+fn allowed(ann: &[Annotations], idx: usize, rule: &str) -> bool {
+    let lo = idx.saturating_sub(ALLOW_WINDOW);
+    ann[lo..=idx].iter().any(|a| a.allows.iter().any(|r| r == rule))
+}
+
+fn thread_marked(ann: &[Annotations], idx: usize) -> bool {
+    let lo = idx.saturating_sub(THREAD_WINDOW);
+    ann[lo..=idx].iter().any(|a| a.thread_marker)
+}
+
+/// True when any line of the function enclosing `idx` mentions one of
+/// `needles`. The span is approximated as [nearest `fn ` at-or-above,
+/// next `fn ` below) — good enough because telemetry fields are assigned
+/// in the same function body that reads the clock.
+fn enclosing_fn_mentions(file: &SourceFile, idx: usize, needles: &[&str]) -> bool {
+    let is_fn = |i: usize| file.lines[i].code.contains("fn ");
+    let start = (0..=idx).rev().find(|&i| is_fn(i)).unwrap_or(0);
+    let end = ((idx + 1)..file.lines.len()).find(|&i| is_fn(i)).unwrap_or(file.lines.len());
+    file.lines[start..end]
+        .iter()
+        .any(|l| needles.iter().any(|n| l.code.contains(n)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn run(rel: &str, src: &str) -> Vec<(String, usize)> {
+        check_file(rel, &lex(src))
+            .into_iter()
+            .map(|f| (f.rule.to_string(), f.line))
+            .collect()
+    }
+
+    #[test]
+    fn pl001_flags_hash_containers_only_in_scope() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run("dp/engine.rs", src), vec![("PL001".into(), 1)]);
+        assert_eq!(run("model.rs", src), vec![]);
+        // prose and strings never match
+        let prose = "// HashMap is banned here\nlet m = \"HashMap\";\n";
+        assert_eq!(run("dp/engine.rs", prose), vec![]);
+    }
+
+    #[test]
+    fn pl001_allow_with_reason_suppresses_within_window() {
+        let src = "// lint: allow(PL001): single-key scratch map, never iterated\n\
+                   // (continued justification)\n\
+                   use std::collections::HashMap;\n";
+        assert_eq!(run("dist/zero3.rs", src), vec![]);
+    }
+
+    #[test]
+    fn bare_allow_is_reported_and_does_not_suppress() {
+        let src = "// lint: allow(PL001)\nuse std::collections::HashMap;\n";
+        let got = run("dp/engine.rs", src);
+        assert_eq!(got, vec![("PL000".into(), 1), ("PL001".into(), 2)]);
+    }
+
+    #[test]
+    fn pl002_flags_float_sums_but_not_length_arithmetic() {
+        assert_eq!(
+            run("dp/engine.rs", "let s = xs.iter().sum::<f32>();\n"),
+            vec![("PL002".into(), 1)]
+        );
+        assert_eq!(run("dp/engine.rs", "let n: usize = xs.iter().map(Vec::len).sum();\n"), vec![]);
+        // runtime/ is outside the reduce scope
+        assert_eq!(run("runtime/client.rs", "let s = xs.iter().sum::<f32>();\n"), vec![]);
+    }
+
+    #[test]
+    fn pl003_permits_telemetry_sinks_only() {
+        let sink = "fn run(&self) {\n    let t0 = Instant::now();\n    \
+                    self.execute_seconds.set(t0.elapsed().as_secs_f64());\n}\n";
+        assert_eq!(run("runtime/executable.rs", sink), vec![]);
+        let state = "fn seed(&self) -> u64 {\n    Instant::now().elapsed().as_nanos() as u64\n}\n";
+        assert_eq!(run("dp/engine.rs", state), vec![("PL003".into(), 2)]);
+    }
+
+    #[test]
+    fn pl004_skips_tests_and_honors_annotations() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+        assert_eq!(run("checkpoint.rs", src), vec![("PL004".into(), 1)]);
+        let annotated = "// lint: allow(PL004): documented invariant — x checked by caller\n\
+                         fn f(x: Option<u8>) -> u8 { x.expect(\"checked\") }\n";
+        assert_eq!(run("dist/model.rs", annotated), vec![]);
+        // unwrap_or_else is not unwrap
+        assert_eq!(run("dp/engine.rs", "let v = x.unwrap_or_else(Vec::new);\n"), vec![]);
+    }
+
+    #[test]
+    fn pl005_requires_a_marker_within_the_window() {
+        let bare = "let j = std::thread::Builder::new()\n    .name(\"w\".into())\n    \
+                    .spawn(move || {})?;\n";
+        assert_eq!(run("model.rs", bare), vec![("PL005".into(), 3)]);
+        let marked = "// lint: thread: joined — Drop joins the handle.\n\
+                      let j = std::thread::Builder::new()\n    .name(\"w\".into())\n    \
+                      .spawn(move || {})?;\n";
+        assert_eq!(run("model.rs", marked), vec![]);
+        assert_eq!(run("model.rs", "scope.spawn(|| {});\n"), vec![]);
+    }
+}
