@@ -420,17 +420,162 @@ fn bench_bucketed(b: &mut Bench, name: &str) {
 /// The bucket sizes `bench_bucketed` sweeps (0 = whole-buffer reference).
 const BUCKET_SWEEP: [usize; 3] = [0, 4096, 16384];
 
+/// The tcp transport over loopback: one full-phase epoch with two
+/// `TcpEndpoint` ranks in this process (each driving its own 1-worker
+/// engine + pipeline, exactly the per-process layout `--dist tcp` runs),
+/// timed against an in-memory 2-worker reference epoch. The bit contract
+/// is asserted — the wire epoch's loss must equal the in-memory one —
+/// and rank 0's `comm_wait_s` (time blocked on the wire reduce + scalar
+/// exchange) is returned for the bench metadata.
+fn bench_tcp(b: &mut Bench, name: &str) -> Option<f64> {
+    let dir = std::path::Path::new("artifacts").join(name);
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("skipping {name} tcp bench: no artifacts");
+        return None;
+    };
+    let m = Arc::new(m);
+    let c = m.config.clone();
+    let ranks = 2;
+    let epoch_steps = 4;
+    let data = Arc::new(Dataset::generate(&SynthSpec {
+        samples: c.batch_size * ranks * epoch_steps,
+        image_size: c.image_size,
+        channels: c.in_channels,
+        num_classes: c.num_classes,
+        noise: 0.3,
+        phase_jitter: true,
+        seed: 5,
+    }));
+    let loader = EpochLoader::new(c.batch_size, ranks, 0);
+    let steps = loader.steps_per_epoch(&data);
+    let tcfg = TrainConfig::default();
+    let base = m.load_init_base().unwrap();
+    let update = UpdateStage::new(tcfg.grad_clip);
+    let units = (c.batch_size * ranks * steps) as f64;
+    let pcfg = PipelineConfig {
+        enabled: true,
+        prefetch_depth: 2,
+        overlap_reduce: None,
+        bucket_bytes: 0,
+    };
+
+    // in-memory reference: the same epoch at 2 simulated workers
+    let mut ref_engine = GradEngine::new(m.clone(), ranks, true, Algorithm::Ring).unwrap();
+    let ref_strategy =
+        dist::strategy_for(ZeroStage::Off, ranks, dist::collective_for(ref_engine.algorithm()));
+    let mut ref_pipe = StepPipeline::new(&pcfg, ref_strategy.clone()).unwrap();
+    let mut ref_model = ModelState::new(
+        ref_strategy.park_params(base.clone()),
+        ref_strategy.optimizer(&tcfg, base.len()),
+    );
+    let want_loss = ref_pipe
+        .run_epoch(
+            &mut ref_engine,
+            &loader,
+            &data,
+            &mut ref_model,
+            &update,
+            StepMode::Full,
+            0,
+            steps,
+            1e-3,
+        )
+        .unwrap()
+        .loss_sum;
+
+    // two tcp ranks over loopback, in-process (rank 1's peer entry is
+    // identity only — leaves dial peers[0])
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let peers = vec![addr, "127.0.0.1:1".to_string()];
+    let timeout = std::time::Duration::from_secs(30);
+    let p0 = peers.clone();
+    let root_ep =
+        std::thread::spawn(move || dist::TcpEndpoint::connect(Algorithm::Ring, 0, &p0, timeout));
+    let leaf_ep = dist::TcpEndpoint::connect(Algorithm::Ring, 1, &peers, timeout).unwrap();
+    let root_ep = root_ep.join().unwrap().unwrap();
+
+    let mut rank_state = [root_ep, leaf_ep].map(|ep| {
+        let col: Arc<dyn dist::Collective> = Arc::new(dist::EndpointCollective::new(ep));
+        let strategy = dist::strategy_for(ZeroStage::Off, ranks, col);
+        let engine = GradEngine::new(m.clone(), 1, false, Algorithm::Ring).unwrap();
+        let pipe = StepPipeline::new(&pcfg, strategy.clone()).unwrap();
+        (engine, pipe, strategy)
+    });
+    let [root, leaf] = &mut rank_state;
+
+    let mut last_loss = 0.0f64;
+    let mut wait_sum = 0.0f64;
+    let mut iters = 0usize;
+    b.run_units(&format!("{name}/epoch_tcp_loopback"), units, || {
+        // fresh model per rank per iteration: epoch 0 from init, so the
+        // loss is comparable to the reference and the op sequence is
+        // identical every iteration (lockstep across ranks)
+        std::thread::scope(|s| {
+            let (engine, pipe, strategy) = leaf;
+            let mut model = ModelState::new(
+                strategy.park_params(base.clone()),
+                strategy.optimizer(&tcfg, base.len()),
+            );
+            let loader = &loader;
+            let data = &data;
+            let update = &update;
+            s.spawn(move || {
+                pipe.run_epoch(
+                    engine,
+                    loader,
+                    data,
+                    &mut model,
+                    update,
+                    StepMode::Full,
+                    0,
+                    steps,
+                    1e-3,
+                )
+                .unwrap();
+            });
+            let (engine, pipe, strategy) = root;
+            let mut model = ModelState::new(
+                strategy.park_params(base.clone()),
+                strategy.optimizer(&tcfg, base.len()),
+            );
+            let run = pipe
+                .run_epoch(engine, loader, data, &mut model, update, StepMode::Full, 0, steps, 1e-3)
+                .unwrap();
+            last_loss = run.loss_sum;
+            wait_sum += run.comm_wait_s;
+        });
+        iters += 1;
+    });
+    assert_eq!(
+        last_loss, want_loss,
+        "{name}: the tcp-loopback epoch loss must be bitwise the in-memory 2-worker epoch's"
+    );
+    let wait = wait_sum / iters.max(1) as f64;
+    println!(
+        "{name}: tcp loopback epoch loss bit-identical to in-memory; rank-0 comm_wait {:.3} ms/epoch",
+        wait * 1e3
+    );
+    Some(wait)
+}
+
 fn main() {
     let smoke = std::env::var("PRELORA_BENCH_SMOKE").is_ok_and(|v| v == "1");
     let mut b = if smoke { Bench::smoke() } else { Bench::heavy() };
     // PRELORA_BENCH_MODELS=vit-small,... restricts the sweep
     let models = std::env::var("PRELORA_BENCH_MODELS")
         .unwrap_or_else(|_| "vit-micro,vit-small,vit-base-sim".into());
+    let mut tcp_waits: Vec<(String, f64)> = Vec::new();
     for model in models.split(',') {
         bench_model(&mut b, model);
         bench_pipeline(&mut b, model);
         bench_zero(&mut b, model);
         bench_bucketed(&mut b, model);
+        if let Some(wait) = bench_tcp(&mut b, model) {
+            tcp_waits.push((model.to_string(), wait));
+        }
     }
     b.write_csv("results/bench_step_latency.csv").unwrap();
     let mut meta: Vec<(&str, String)> = vec![
@@ -473,6 +618,26 @@ fn main() {
             "bucketed_16384_bucket_count",
             BucketPlan::derive(m.base.size, 1, 16384).count().to_string(),
         ));
+        // the tcp transport's deterministic wire contract: group size and
+        // the fixed per-frame overhead (length prefix + version + kind +
+        // rank + seq + CRC around an empty payload) — gated exactly
+        meta.push(("tcp_loopback_ranks", "2".to_string()));
+        let empty = dist::net::Frame {
+            kind: dist::net::FrameKind::Op,
+            rank: 0,
+            seq: 1,
+            payload: Vec::new(),
+        };
+        meta.push(("tcp_frame_overhead_bytes", empty.encode().len().to_string()));
+    }
+    // rank-0 wire wait per epoch — timing telemetry next to the gated
+    // latency case, not itself a deterministic gate
+    let tcp_wait_meta: Vec<(String, String)> = tcp_waits
+        .iter()
+        .map(|(model, wait)| (format!("tcp_comm_wait_s_{model}"), format!("{wait:.6}")))
+        .collect();
+    for (k, v) in &tcp_wait_meta {
+        meta.push((k.as_str(), v.clone()));
     }
     b.write_json("results/BENCH_step_latency.json", &meta).unwrap();
     // Fig. 7 shape assertion: the frozen-base step must beat the full step

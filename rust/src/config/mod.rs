@@ -7,7 +7,8 @@ mod train;
 
 pub use prelora::{ConvergenceStrategyKind, PreLoraConfig, StrictnessPreset};
 pub use train::{
-    DataConfig, DpConfig, LrScheduleKind, OptimizerKind, PipelineConfig, TrainConfig, ZeroConfig,
+    DataConfig, DistConfig, DpConfig, LrScheduleKind, OptimizerKind, PipelineConfig, TrainConfig,
+    ZeroConfig,
 };
 
 use std::path::Path;
@@ -95,6 +96,20 @@ impl RunConfig {
             "train.dp.workers" => t.dp.workers = v.as_usize()?,
             "train.dp.allreduce" => t.dp.allreduce = v.as_str()?.to_string(),
             "train.dp.threaded" => t.dp.threaded = v.as_bool()?,
+            "train.dist.transport" => t.dist.transport = v.as_str()?.to_string(),
+            "train.dist.rank" => t.dist.rank = v.as_usize()?,
+            // comma-separated rank-ordered host:port list (the TOML
+            // subset has no arrays; same treatment as
+            // prelora.convergence_modules)
+            "train.dist.peers" => {
+                t.dist.peers = v
+                    .as_str()?
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+            }
+            "train.dist.connect_timeout_ms" => t.dist.connect_timeout_ms = v.as_u64()?,
             "train.pipeline.enabled" => t.pipeline.enabled = v.as_bool()?,
             "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
             // deprecated shim (same treatment as train.zero.enabled below)
@@ -177,6 +192,13 @@ impl RunConfig {
         s.push_str(&format!("workers = {}\n", t.dp.workers));
         s.push_str(&format!("allreduce = {}\n", escape_str(&t.dp.allreduce)));
         s.push_str(&format!("threaded = {}\n\n", t.dp.threaded));
+        s.push_str("[train.dist]\n");
+        s.push_str(&format!("transport = {}\n", escape_str(&t.dist.transport)));
+        if t.dist.is_tcp() {
+            s.push_str(&format!("rank = {}\n", t.dist.rank));
+            s.push_str(&format!("peers = {}\n", escape_str(&t.dist.peers.join(","))));
+        }
+        s.push_str(&format!("connect_timeout_ms = {}\n\n", t.dist.connect_timeout_ms));
         // canonical form only: the deprecated `overlap_reduce` shim is
         // resolved into the bucket size it implies (overlap is pure
         // scheduling — it cannot change a bit — so only bucket_bytes
@@ -377,6 +399,32 @@ mod tests {
         assert_eq!(cfg.train.zero_param_parts(), 4, "stage 3 shards the parameters");
         let err = RunConfig::from_toml_str("[train.zero]\nstage = 4\n").unwrap_err().to_string();
         assert!(err.contains("ZeRO stage"), "stage outside 0..=3 must be rejected: {err}");
+    }
+
+    #[test]
+    fn dist_keys_parse_and_roundtrip() {
+        let cfg = RunConfig::from_toml_str(
+            "[train.dist]\ntransport = \"tcp\"\nrank = 1\n\
+             peers = \"127.0.0.1:7001, 127.0.0.1:7002\"\nconnect_timeout_ms = 2500\n",
+        )
+        .unwrap();
+        assert!(cfg.train.dist.is_tcp());
+        assert_eq!(cfg.train.dist.rank, 1);
+        assert_eq!(cfg.train.dist.peers, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!(cfg.train.dist.connect_timeout_ms, 2500);
+        assert_eq!(cfg.train.world(), 2);
+        let back = RunConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.train.dist.transport, "tcp");
+        assert_eq!(back.train.dist.rank, 1);
+        assert_eq!(back.train.dist.peers, cfg.train.dist.peers);
+        assert_eq!(back.train.dist.connect_timeout_ms, 2500);
+        // the default emits the local transport and no dead peer knobs
+        let text = RunConfig::default().to_toml();
+        assert!(text.contains("[train.dist]\ntransport = \"local\""), "{text}");
+        assert!(!text.contains("peers"), "{text}");
+        RunConfig::from_toml_str(&text).unwrap();
+        // tcp without peers is rejected at validate
+        assert!(RunConfig::from_toml_str("[train.dist]\ntransport = \"tcp\"\n").is_err());
     }
 
     #[test]

@@ -102,6 +102,40 @@ impl Default for DpConfig {
     }
 }
 
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Collective transport the run's ranks communicate over:
+    ///
+    /// * `"local"` — the in-memory collective; all ranks are simulated
+    ///   worker threads inside this one process (the historical mode).
+    /// * `"tcp"` — each rank is a separate OS process; gradients travel
+    ///   over loopback/LAN TCP through a per-rank
+    ///   `dist::CollectiveEndpoint`. Launch one `prelora train` per rank
+    ///   with the same `peers` list and distinct `rank`s. Trajectories
+    ///   stay bitwise identical to `"local"` at the same seed.
+    pub transport: String,
+    /// This process's rank in the tcp group (0 hosts the rendezvous).
+    pub rank: usize,
+    /// Rank-ordered `host:port` list, one entry per rank; `peers[0]` is
+    /// the address rank 0 binds and everyone else connects to. Its length
+    /// *is* the world size under the tcp transport.
+    pub peers: Vec<String>,
+    /// Connect/accept retry budget and per-op stall timeout (ms).
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self { transport: "local".into(), rank: 0, peers: Vec::new(), connect_timeout_ms: 10_000 }
+    }
+}
+
+impl DistConfig {
+    pub fn is_tcp(&self) -> bool {
+        self.transport == "tcp"
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct ZeroConfig {
     /// **Deprecated** legacy knob, kept only so old configs and the old
@@ -234,6 +268,7 @@ pub struct TrainConfig {
     pub resume: Option<String>,
     pub data: DataConfig,
     pub dp: DpConfig,
+    pub dist: DistConfig,
     pub pipeline: PipelineConfig,
     pub zero: ZeroConfig,
 }
@@ -257,6 +292,7 @@ impl Default for TrainConfig {
             resume: None,
             data: DataConfig::default(),
             dp: DpConfig::default(),
+            dist: DistConfig::default(),
             pipeline: PipelineConfig::default(),
             zero: ZeroConfig::default(),
         }
@@ -289,27 +325,64 @@ impl TrainConfig {
             "train.zero.enabled = true contradicts train.zero.stage = 0 — drop the deprecated \
              enabled knob and set the stage you mean"
         );
+        match self.dist.transport.as_str() {
+            "local" | "tcp" => {}
+            other => bail!(
+                "unknown dist transport {other:?} (train.dist.transport / --dist takes \
+                 \"local\" or \"tcp\")"
+            ),
+        }
+        if self.dist.is_tcp() {
+            ensure!(
+                !self.dist.peers.is_empty(),
+                "train.dist.transport = \"tcp\" needs a rank-ordered peer list \
+                 (train.dist.peers / --peers host:port,host:port,...)"
+            );
+            ensure!(
+                self.dist.rank < self.dist.peers.len(),
+                "train.dist.rank = {} is out of range for the {}-rank peer list",
+                self.dist.rank,
+                self.dist.peers.len()
+            );
+            ensure!(
+                self.dist.peers.iter().all(|p| !p.trim().is_empty()),
+                "train.dist.peers contains an empty address"
+            );
+        }
+        ensure!(self.dist.connect_timeout_ms >= 1, "train.dist.connect_timeout_ms >= 1");
         Ok(())
+    }
+
+    /// The data-parallel world size the run actually trains with: the
+    /// length of the tcp peer list when the tcp transport is selected
+    /// (the group *is* the peer list; each process computes one rank),
+    /// `train.dp.workers` otherwise.
+    pub fn world(&self) -> usize {
+        if self.dist.is_tcp() {
+            self.dist.peers.len()
+        } else {
+            self.dp.workers
+        }
     }
 
     /// Optimizer-state partition count the run's ZeRO stage implies: one
     /// shard per data-parallel worker from stage 1 up, a single
     /// (unsharded) partition otherwise.
     pub fn zero_shards(&self) -> usize {
-        self.zero.effective_stage().opt_shards(self.dp.workers)
+        self.zero.effective_stage().opt_shards(self.world())
     }
 
     /// Gradient-buffer partition count: one owned partition per worker
     /// from ZeRO stage 2 up (reduce-scatter is terminal), a single
     /// replicated buffer otherwise.
     pub fn zero_grad_parts(&self) -> usize {
-        self.zero.effective_stage().grad_parts(self.dp.workers)
+        self.zero.effective_stage().grad_parts(self.world())
     }
 
     /// Parameter partition count: one owned partition per worker at ZeRO
     /// stage 3, a single replicated vector otherwise.
     pub fn zero_param_parts(&self) -> usize {
-        self.zero.effective_stage().param_parts(self.dp.workers)
+        self.zero.effective_stage().param_parts(self.world())
     }
 
     /// Non-fatal configuration smells in the `train.zero.*` /
@@ -396,6 +469,33 @@ impl TrainConfig {
                 "train.dp.workers = {} with train.dp.threaded = false runs every simulated \
                  rank sequentially on the leader (deterministic debug mode, not a speedup)",
                 self.dp.workers
+            ));
+        }
+        if self.dist.is_tcp() {
+            if self.dp.workers > 1 && self.dp.workers != self.dist.peers.len() {
+                warnings.push(format!(
+                    "train.dp.workers = {} disagrees with the {}-rank train.dist.peers list: \
+                     under the tcp transport the peer list is the world size and each process \
+                     computes one rank — drop the workers knob or make them match",
+                    self.dp.workers,
+                    self.dist.peers.len()
+                ));
+            }
+            if self.dp.workers > 1 && self.dp.threaded {
+                warnings.push(format!(
+                    "train.dp.workers = {} compute threads with train.dist.transport = \
+                     \"tcp\": a tcp rank runs exactly one local compute worker (its shard of \
+                     the group), so the extra threads never run",
+                    self.dp.workers
+                ));
+            }
+        } else if !self.dist.peers.is_empty() || self.dist.rank != 0 {
+            warnings.push(format!(
+                "train.dist.rank / train.dist.peers are set ({} peer(s), rank {}) but \
+                 train.dist.transport = \"local\" ignores them — set transport = \"tcp\" \
+                 (--dist tcp) if a multi-process group is what you mean",
+                self.dist.peers.len(),
+                self.dist.rank
             ));
         }
         warnings
@@ -567,6 +667,63 @@ mod tests {
         // a reasonable bucket size lints clean
         let mut cfg = TrainConfig::default();
         cfg.pipeline.bucket_bytes = 4096;
+        assert!(cfg.lint().is_empty(), "{:?}", cfg.lint());
+    }
+
+    #[test]
+    fn dist_transport_is_validated() {
+        // default: local transport, no peers — valid and lint-clean
+        let cfg = TrainConfig::default();
+        assert!(!cfg.dist.is_tcp());
+        assert_eq!(cfg.world(), cfg.dp.workers);
+        cfg.validate().unwrap();
+        // unknown transports are rejected with the accepted spellings
+        let mut cfg = TrainConfig::default();
+        cfg.dist.transport = "rdma".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("local") && err.contains("tcp"), "{err}");
+        // tcp without a peer list is unusable
+        let mut cfg = TrainConfig::default();
+        cfg.dist.transport = "tcp".into();
+        assert!(cfg.validate().unwrap_err().to_string().contains("peer list"));
+        // rank must index into the peer list
+        cfg.dist.peers = vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()];
+        cfg.dist.rank = 2;
+        assert!(cfg.validate().unwrap_err().to_string().contains("out of range"));
+        cfg.dist.rank = 1;
+        cfg.validate().unwrap();
+        // under tcp the peer list is the world size
+        assert_eq!(cfg.world(), 2);
+        cfg.zero.stage = Some(crate::dist::ZeroStage::Zero3);
+        assert_eq!(cfg.zero_param_parts(), 2, "sharding follows the tcp world");
+        // a zero-length timeout can only hang
+        let mut cfg = TrainConfig::default();
+        cfg.dist.connect_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn dist_lint_flags_contradictory_knobs() {
+        // tcp with threaded local workers: the threads never run
+        let mut cfg = TrainConfig::default();
+        cfg.dist.transport = "tcp".into();
+        cfg.dist.peers = vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()];
+        cfg.dp.workers = 4;
+        let w = cfg.lint();
+        assert!(w.iter().any(|m| m.contains("never run")), "{w:?}");
+        assert!(w.iter().any(|m| m.contains("disagrees")), "{w:?}");
+        // matching workers silences the mismatch but threading is still moot
+        cfg.dp.workers = 2;
+        let w = cfg.lint();
+        assert!(!w.iter().any(|m| m.contains("disagrees")), "{w:?}");
+        // peers under the local transport are dead config
+        let mut cfg = TrainConfig::default();
+        cfg.dist.peers = vec!["127.0.0.1:7001".into()];
+        assert!(cfg.lint().iter().any(|m| m.contains("ignores them")), "{:?}", cfg.lint());
+        // a clean two-process setup lints clean
+        let mut cfg = TrainConfig::default();
+        cfg.dist.transport = "tcp".into();
+        cfg.dist.peers = vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()];
         assert!(cfg.lint().is_empty(), "{:?}", cfg.lint());
     }
 

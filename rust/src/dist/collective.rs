@@ -1,4 +1,5 @@
-//! The [`Collective`] trait: communication primitives strategies speak.
+//! Collective communication: the per-rank [`CollectiveEndpoint`] trait
+//! (canonical) and the legacy buffer-matrix [`Collective`] trait (shimmed).
 //!
 //! Every operation carries a **bit contract** inherited from
 //! [`crate::dp::allreduce`]:
@@ -17,22 +18,204 @@
 //! These contracts are what let a [`super::Strategy`] change *where*
 //! state lives without changing a single bit of the training trajectory.
 //!
+//! ## The endpoint seam
+//!
+//! The legacy [`Collective`] methods take `Vec<Vec<f32>>` — every rank's
+//! buffer in one address space — which only a single-process simulation
+//! can provide. [`CollectiveEndpoint`] is the per-rank replacement: each
+//! rank holds one endpoint, contributes **its own** buffer, and the group
+//! (in-process [`LocalGroup`] rendezvous or the TCP backend in
+//! [`super::net`]) runs the *same* naive/tree/ring summation schedule over
+//! the rank-ordered contributions. Results are therefore bitwise identical
+//! to the matrix path by construction. The matrix-style methods are
+//! `#[deprecated]` with a one-release shim: [`AlgoCollective`] keeps
+//! working unchanged, and [`EndpointCollective`] adapts any endpoint back
+//! onto the old trait for the strategy machinery.
+//!
 //! [`reduce_scatter`]: Collective::reduce_scatter
 //! [`all_reduce`]: Collective::all_reduce
 //! [`all_gather`]: Collective::all_gather
 //! [`sq_sum_in_order`]: Collective::sq_sum_in_order
 //! [`broadcast`]: Collective::broadcast
 
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
 use crate::dp::Algorithm;
 
-/// Communication backend for the distributed strategies. Object-safe;
-/// implementations must be shareable across the pipeline's stage threads.
+/// What a collective operation does, independent of transport. Every rank
+/// of a group must issue the *same* descriptor for the same op index —
+/// the lockstep invariant both the in-process rendezvous and the TCP
+/// backend check and fail loudly on (a desync means ranks have diverged,
+/// and any result would be garbage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpDesc {
+    /// Elementwise mean of every rank's `len`-element buffer, replicated.
+    AllReduce { len: usize },
+    /// Mean returned as `parts` partition-ordered chunks (all chunks are
+    /// delivered to every rank — see [`CollectiveEndpoint::reduce_scatter`]).
+    ReduceScatter { len: usize, parts: usize },
+    /// Mean of one contiguous bucket `[lo, lo + len)` of a
+    /// `full_len`-element space.
+    ReduceBucket { len: usize, lo: usize, full_len: usize },
+    /// Concatenation fodder: every rank's buffer, rank-ordered. Lengths
+    /// may differ per rank (ragged partition tails), so none is pinned.
+    AllGather,
+    /// Rank `root`'s `len`-element buffer, replicated verbatim.
+    Broadcast { len: usize, root: usize },
+    /// Every rank's `n` f64 scalars, rank-ordered and bit-exact (the
+    /// loss/accuracy fold — f64 on the wire so no precision is lost).
+    Scalars { n: usize },
+    /// Rendezvous only; no data moves.
+    Barrier,
+}
+
+/// The result of one collective op, shape depending on the [`OpDesc`].
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum OpOut {
+    Full(Vec<f32>),
+    Chunks(Vec<Vec<f32>>),
+    Scalars(Vec<Vec<f64>>),
+    Unit,
+}
+
+/// Run one op over the rank-ordered contributions — the *single* place
+/// the summation schedule executes, shared by the in-process rendezvous
+/// and the TCP backend's root replay, so every transport produces the
+/// exact bits [`AlgoCollective`] would.
+pub(crate) fn compute_op(
+    alg: Algorithm,
+    desc: &OpDesc,
+    bufs: Vec<Vec<f32>>,
+    scalars: Vec<Vec<f64>>,
+) -> Result<OpOut> {
+    match *desc {
+        OpDesc::AllReduce { len } => {
+            for (r, b) in bufs.iter().enumerate() {
+                ensure!(b.len() == len, "rank {r} contributed {} elements, expected {len}", b.len());
+            }
+            crate::dp::reduce_owned(alg, bufs)
+                .map(OpOut::Full)
+                .ok_or_else(|| anyhow!("all_reduce over an empty contribution set"))
+        }
+        OpDesc::ReduceScatter { len, parts } => {
+            for (r, b) in bufs.iter().enumerate() {
+                ensure!(b.len() == len, "rank {r} contributed {} elements, expected {len}", b.len());
+            }
+            crate::dp::reduce_scatter(alg, bufs, parts)
+                .map(OpOut::Chunks)
+                .ok_or_else(|| anyhow!("reduce_scatter over an empty contribution set"))
+        }
+        OpDesc::ReduceBucket { len, lo, full_len } => {
+            for (r, b) in bufs.iter().enumerate() {
+                ensure!(b.len() == len, "rank {r} contributed {} elements, expected {len}", b.len());
+            }
+            crate::dp::reduce_bucket(alg, bufs, lo, full_len)
+                .map(OpOut::Full)
+                .ok_or_else(|| anyhow!("reduce_bucket over an empty contribution set"))
+        }
+        OpDesc::AllGather => Ok(OpOut::Chunks(bufs)),
+        OpDesc::Broadcast { len, root } => {
+            let b = bufs
+                .get(root)
+                .ok_or_else(|| anyhow!("broadcast root {root} outside the group"))?;
+            ensure!(b.len() == len, "broadcast root buffer is {} elements, expected {len}", b.len());
+            Ok(OpOut::Full(b.clone()))
+        }
+        OpDesc::Scalars { n } => {
+            for (r, s) in scalars.iter().enumerate() {
+                ensure!(s.len() == n, "rank {r} contributed {} scalars, expected {n}", s.len());
+            }
+            Ok(OpOut::Scalars(scalars))
+        }
+        OpDesc::Barrier => Ok(OpOut::Unit),
+    }
+}
+
+/// One rank's handle on a collective group — the canonical communication
+/// API. Each data-parallel rank (whether an in-process endpoint from a
+/// [`LocalGroup`] or a separate OS process behind [`super::net`]'s TCP
+/// backend) holds exactly one endpoint and contributes only its own
+/// buffers; the group executes the shared summation schedule over the
+/// rank-ordered contributions.
+///
+/// **Bit contract.** For identical per-rank inputs, every operation
+/// returns bits identical to the matrix-style [`AlgoCollective`] call
+/// with the same algorithm — all transports funnel through the one
+/// in-memory schedule (see [`compute_op`]), so there is no second
+/// summation order to audit.
+///
+/// **Lockstep contract.** All ranks must issue the same sequence of
+/// operations with matching [`OpDesc`]s. Divergence is detected (op
+/// descriptors and per-connection sequence numbers are compared) and
+/// surfaces as a loud error on every rank, never a hang or a silently
+/// wrong result.
+pub trait CollectiveEndpoint: Send + Sync {
+    /// This endpoint's data-parallel rank, `0 <= rank < world_size`.
+    fn rank(&self) -> usize;
+
+    /// Ranks in the group.
+    fn world_size(&self) -> usize;
+
+    /// Canonical transport name (`"local"` | `"tcp"`) for logs/config.
+    fn transport(&self) -> &'static str;
+
+    /// Elementwise mean of every rank's buffer, replicated in place.
+    fn all_reduce(&self, buf: &mut Vec<f32>) -> Result<()>;
+
+    /// Elementwise mean returned as `parts` partition-ordered chunks.
+    /// **All** chunks are returned to every rank (not just the caller's
+    /// own): the training simulation replicates full model state per rank
+    /// so ZeRO update arithmetic stays bitwise identical across
+    /// transports, and per-rank *accounting* (what a real rank would
+    /// retain) is handled by the strategy layer, not the wire.
+    fn reduce_scatter(&self, buf: Vec<f32>, parts: usize) -> Result<Vec<Vec<f32>>>;
+
+    /// Mean of one contiguous bucket `[lo, lo + buf.len())` of a
+    /// `full_len`-element gradient space; outputs concatenated in bucket
+    /// index order reproduce [`all_reduce`](Self::all_reduce) bitwise.
+    fn reduce_bucket(&self, buf: Vec<f32>, lo: usize, full_len: usize) -> Result<Vec<f32>>;
+
+    /// Every rank's buffer, rank-ordered (lengths may be ragged).
+    fn all_gather(&self, own: Vec<f32>) -> Result<Vec<Vec<f32>>>;
+
+    /// Overwrite `buf` with rank `root`'s buffer, bytes verbatim.
+    fn broadcast(&self, buf: &mut Vec<f32>, root: usize) -> Result<()>;
+
+    /// Every rank's f64 scalars, rank-ordered, bit-exact on the wire (the
+    /// per-step loss/accuracy exchange folds these in rank order, which
+    /// is bitwise the single-process fold over worker order).
+    fn gather_scalars(&self, vals: &[f64]) -> Result<Vec<Vec<f64>>>;
+
+    /// Block until every rank arrives.
+    fn barrier(&self) -> Result<()>;
+}
+
+/// Communication backend for the distributed strategies — the **legacy**
+/// buffer-matrix API. Object-safe; implementations must be shareable
+/// across the pipeline's stage threads.
+///
+/// The matrix-style methods (which take every rank's buffer in one call)
+/// are deprecated in favor of the per-rank [`CollectiveEndpoint`]; they
+/// remain for one release so `AlgoCollective` callers migrate without
+/// behavior change. The chunk-shaped helpers ([`all_gather`], `broadcast`
+/// replication, [`sq_sum_in_order`]) stay: they operate on
+/// partition-ordered chunks that exist on every rank under the
+/// replicated-state simulation.
+///
+/// [`all_gather`]: Self::all_gather
+/// [`sq_sum_in_order`]: Self::sq_sum_in_order
 pub trait Collective: Send + Sync {
     /// Human-readable backend name (logs, bench labels).
     fn name(&self) -> &'static str;
 
     /// Elementwise mean of same-length buffers, returned replicated (the
     /// classic DDP all-reduce). `None` for an empty buffer set.
+    #[deprecated(
+        note = "matrix-style collective: takes every rank's buffer in one address space; \
+                use CollectiveEndpoint::all_reduce (per-rank) — one-release shim"
+    )]
     fn all_reduce(&self, bufs: Vec<Vec<f32>>) -> Option<Vec<f32>>;
 
     /// Elementwise mean returned as `parts` owned contiguous chunks (the
@@ -40,6 +223,10 @@ pub trait Collective: Send + Sync {
     /// hot path: the input buffers are consumed and no replicated mean
     /// vector is materialized. The chunks concatenate **bitwise** to the
     /// [`all_reduce`](Self::all_reduce) output.
+    #[deprecated(
+        note = "matrix-style collective: takes every rank's buffer in one address space; \
+                use CollectiveEndpoint::reduce_scatter (per-rank) — one-release shim"
+    )]
     fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>>;
 
     /// Reduce one bucket — a contiguous slice `[lo, lo + bufs[0].len())`
@@ -49,6 +236,10 @@ pub trait Collective: Send + Sync {
     /// backend does not support bucketed reduction; callers must fall
     /// back to the whole-buffer path (the default, so custom backends
     /// keep today's behavior unchanged).
+    #[deprecated(
+        note = "matrix-style collective: takes every rank's buffer in one address space; \
+                use CollectiveEndpoint::reduce_bucket (per-rank) — one-release shim"
+    )]
     fn reduce_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
         let _ = (bufs, lo, full_len);
         None
@@ -61,6 +252,10 @@ pub trait Collective: Send + Sync {
     }
 
     /// Replicate one buffer onto `ranks` ranks verbatim.
+    #[deprecated(
+        note = "matrix-style collective: materializes every rank's copy in one address \
+                space; use CollectiveEndpoint::broadcast (per-rank) — one-release shim"
+    )]
     fn broadcast(&self, full: &[f32], ranks: usize) -> Vec<Vec<f32>> {
         vec![full.to_vec(); ranks]
     }
@@ -72,12 +267,32 @@ pub trait Collective: Send + Sync {
     fn sq_sum_in_order(&self, chunks: &[Vec<f32>]) -> f64 {
         crate::dp::sq_sum_in_order(chunks)
     }
+
+    /// The per-rank endpoint behind this collective, if it is backed by
+    /// one ([`EndpointCollective`]); `None` for purely in-memory backends.
+    /// The pipeline uses this to detect that the process is one rank of a
+    /// multi-process group (batch shard selection, scalar exchange,
+    /// rank-0-only checkpoint writes).
+    fn endpoint(&self) -> Option<Arc<dyn CollectiveEndpoint>> {
+        None
+    }
+
+    /// Take the first communication error recorded since the last call.
+    /// The legacy matrix signatures return `Option`, which cannot carry a
+    /// wire failure — endpoint-backed implementations record the error
+    /// here and return `None` from the op, and the strategy's `try_*`
+    /// wrappers surface it as a loud contextful `Err` instead of the
+    /// indistinguishable "empty buffer set" `None`.
+    fn take_error(&self) -> Option<anyhow::Error> {
+        None
+    }
 }
 
 /// The stock collective: the in-memory naive / tree / ring summation
 /// schedules of [`crate::dp::allreduce`], unchanged. A real multi-host
-/// backend would implement [`Collective`] over NCCL/RCCL instead; the
-/// trait is the seam (`docs/dist-api.md` § Adding a backend).
+/// backend implements [`CollectiveEndpoint`] instead (see [`super::net`]);
+/// this trait impl is the one-release shim for matrix-style callers
+/// (`docs/dist-api.md` § Adding a backend).
 pub struct AlgoCollective {
     alg: Algorithm,
 }
@@ -92,6 +307,7 @@ impl AlgoCollective {
     }
 }
 
+#[allow(deprecated)] // the one-release shim: the matrix methods live here
 impl Collective for AlgoCollective {
     fn name(&self) -> &'static str {
         self.alg.as_str()
@@ -110,7 +326,360 @@ impl Collective for AlgoCollective {
     }
 }
 
+/// Rendezvous state shared by a [`LocalGroup`]'s endpoints: one op slot
+/// that fills with per-rank contributions, computes once when the last
+/// rank arrives, and drains once every rank has taken the result.
+struct Rendezvous {
+    /// Per-rank f32 contribution of the op in flight.
+    bufs: Vec<Option<Vec<f32>>>,
+    /// Per-rank f64 contribution (scalar ops).
+    scalars: Vec<Option<Vec<f64>>>,
+    /// Descriptor set by the first arrival; later ranks must match it.
+    desc: Option<OpDesc>,
+    arrived: usize,
+    result: Option<Arc<OpOut>>,
+    consumed: usize,
+    /// First lockstep violation or compute failure; all later ops fail
+    /// fast with this message (the group is unrecoverable).
+    poisoned: Option<String>,
+}
+
+/// An in-process collective group: `world` per-rank endpoints over one
+/// shared rendezvous, executing the configured in-memory summation
+/// schedule once per op. This is the adapter that lets matrix-style
+/// [`AlgoCollective`] callers migrate to [`CollectiveEndpoint`] without
+/// behavior change — the rendezvous assembles exactly the rank-ordered
+/// buffer matrix the old API took as an argument, then runs the identical
+/// [`compute_op`] schedule. It also implements the legacy [`Collective`]
+/// trait directly (delegating to the same schedules), so it can stand in
+/// wherever an `AlgoCollective` is used today.
+pub struct LocalGroup {
+    alg: Algorithm,
+    world: usize,
+    shared: Mutex<Rendezvous>,
+    cv: Condvar,
+}
+
+impl LocalGroup {
+    pub fn new(alg: Algorithm, world: usize) -> Arc<Self> {
+        assert!(world >= 1, "a collective group needs at least one rank");
+        Arc::new(Self {
+            alg,
+            world,
+            shared: Mutex::new(Rendezvous {
+                bufs: (0..world).map(|_| None).collect(),
+                scalars: (0..world).map(|_| None).collect(),
+                desc: None,
+                arrived: 0,
+                result: None,
+                consumed: 0,
+                poisoned: None,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.alg
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world
+    }
+
+    /// The endpoint for one rank. Endpoints are cheap handles; each rank's
+    /// thread should hold its own.
+    pub fn endpoint(self: &Arc<Self>, rank: usize) -> Arc<LocalEndpoint> {
+        assert!(rank < self.world, "rank {rank} outside world of {}", self.world);
+        Arc::new(LocalEndpoint { rank, group: self.clone() })
+    }
+
+    /// One endpoint per rank, rank-ordered.
+    pub fn endpoints(self: &Arc<Self>) -> Vec<Arc<LocalEndpoint>> {
+        (0..self.world).map(|r| self.endpoint(r)).collect()
+    }
+
+    /// One rank's participation in one op: contribute, rendezvous,
+    /// compute-once, share the result.
+    fn run_op(
+        &self,
+        rank: usize,
+        desc: OpDesc,
+        buf: Vec<f32>,
+        scalars: Vec<f64>,
+    ) -> Result<Arc<OpOut>> {
+        let mut g = self.shared.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        // wait for the previous op to fully drain before starting a new one
+        while g.result.is_some() && g.poisoned.is_none() {
+            g = self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        if let Some(p) = &g.poisoned {
+            bail!("local collective group poisoned: {p}");
+        }
+        match &g.desc {
+            None => g.desc = Some(desc),
+            Some(d) if *d == desc => {}
+            Some(d) => {
+                let msg = format!("rank {rank} issued {desc:?} while the group is running {d:?}");
+                g.poisoned = Some(msg.clone());
+                self.cv.notify_all();
+                bail!("collective desync: {msg}");
+            }
+        }
+        if g.bufs[rank].is_some() {
+            let msg = format!("rank {rank} participated twice in {desc:?}");
+            g.poisoned = Some(msg.clone());
+            self.cv.notify_all();
+            bail!("collective desync: {msg}");
+        }
+        g.bufs[rank] = Some(buf);
+        g.scalars[rank] = Some(scalars);
+        g.arrived += 1;
+        if g.arrived == self.world {
+            // last arrival runs the schedule over rank-ordered contributions
+            let bufs: Vec<Vec<f32>> =
+                g.bufs.iter_mut().map(|b| b.take().unwrap_or_default()).collect();
+            let scs: Vec<Vec<f64>> =
+                g.scalars.iter_mut().map(|s| s.take().unwrap_or_default()).collect();
+            match compute_op(self.alg, &desc, bufs, scs) {
+                Ok(out) => {
+                    g.result = Some(Arc::new(out));
+                    g.consumed = 0;
+                }
+                Err(e) => {
+                    g.poisoned = Some(format!("{desc:?} failed: {e:#}"));
+                }
+            }
+            self.cv.notify_all();
+        } else {
+            while g.result.is_none() && g.poisoned.is_none() {
+                g = self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        }
+        if let Some(p) = &g.poisoned {
+            bail!("local collective group poisoned: {p}");
+        }
+        let Some(out) = g.result.clone() else {
+            bail!("rendezvous produced no result (prelora bug)");
+        };
+        g.consumed += 1;
+        if g.consumed == self.world {
+            // last consumer resets the slot for the next op
+            g.result = None;
+            g.desc = None;
+            g.arrived = 0;
+            self.cv.notify_all();
+        }
+        Ok(out)
+    }
+}
+
+#[allow(deprecated)] // the one-release shim: matrix callers keep working
+impl Collective for LocalGroup {
+    fn name(&self) -> &'static str {
+        self.alg.as_str()
+    }
+
+    fn all_reduce(&self, bufs: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+        crate::dp::reduce_owned(self.alg, bufs)
+    }
+
+    fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>> {
+        crate::dp::reduce_scatter(self.alg, bufs, parts)
+    }
+
+    fn reduce_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
+        crate::dp::reduce_bucket(self.alg, bufs, lo, full_len)
+    }
+}
+
+/// One rank of a [`LocalGroup`].
+pub struct LocalEndpoint {
+    rank: usize,
+    group: Arc<LocalGroup>,
+}
+
+impl CollectiveEndpoint for LocalEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.group.world
+    }
+
+    fn transport(&self) -> &'static str {
+        "local"
+    }
+
+    fn all_reduce(&self, buf: &mut Vec<f32>) -> Result<()> {
+        let desc = OpDesc::AllReduce { len: buf.len() };
+        let out = self.group.run_op(self.rank, desc, std::mem::take(buf), Vec::new())?;
+        match &*out {
+            OpOut::Full(v) => {
+                *buf = v.clone();
+                Ok(())
+            }
+            other => bail!("all_reduce returned {other:?} (prelora bug)"),
+        }
+    }
+
+    fn reduce_scatter(&self, buf: Vec<f32>, parts: usize) -> Result<Vec<Vec<f32>>> {
+        let desc = OpDesc::ReduceScatter { len: buf.len(), parts };
+        let out = self.group.run_op(self.rank, desc, buf, Vec::new())?;
+        match &*out {
+            OpOut::Chunks(c) => Ok(c.clone()),
+            other => bail!("reduce_scatter returned {other:?} (prelora bug)"),
+        }
+    }
+
+    fn reduce_bucket(&self, buf: Vec<f32>, lo: usize, full_len: usize) -> Result<Vec<f32>> {
+        let desc = OpDesc::ReduceBucket { len: buf.len(), lo, full_len };
+        let out = self.group.run_op(self.rank, desc, buf, Vec::new())?;
+        match &*out {
+            OpOut::Full(v) => Ok(v.clone()),
+            other => bail!("reduce_bucket returned {other:?} (prelora bug)"),
+        }
+    }
+
+    fn all_gather(&self, own: Vec<f32>) -> Result<Vec<Vec<f32>>> {
+        let out = self.group.run_op(self.rank, OpDesc::AllGather, own, Vec::new())?;
+        match &*out {
+            OpOut::Chunks(c) => Ok(c.clone()),
+            other => bail!("all_gather returned {other:?} (prelora bug)"),
+        }
+    }
+
+    fn broadcast(&self, buf: &mut Vec<f32>, root: usize) -> Result<()> {
+        let desc = OpDesc::Broadcast { len: buf.len(), root };
+        let out = self.group.run_op(self.rank, desc, std::mem::take(buf), Vec::new())?;
+        match &*out {
+            OpOut::Full(v) => {
+                *buf = v.clone();
+                Ok(())
+            }
+            other => bail!("broadcast returned {other:?} (prelora bug)"),
+        }
+    }
+
+    fn gather_scalars(&self, vals: &[f64]) -> Result<Vec<Vec<f64>>> {
+        let desc = OpDesc::Scalars { n: vals.len() };
+        let out = self.group.run_op(self.rank, desc, Vec::new(), vals.to_vec())?;
+        match &*out {
+            OpOut::Scalars(s) => Ok(s.clone()),
+            other => bail!("gather_scalars returned {other:?} (prelora bug)"),
+        }
+    }
+
+    fn barrier(&self) -> Result<()> {
+        let out = self.group.run_op(self.rank, OpDesc::Barrier, Vec::new(), Vec::new())?;
+        match &*out {
+            OpOut::Unit => Ok(()),
+            other => bail!("barrier returned {other:?} (prelora bug)"),
+        }
+    }
+}
+
+/// Adapts a per-rank [`CollectiveEndpoint`] back onto the legacy
+/// [`Collective`] trait so the strategy machinery runs unchanged when
+/// this process is one rank of a multi-process group.
+///
+/// In that mode the buffer "matrix" has exactly one row — this rank's
+/// local worker — and each matrix call becomes one wire op whose result
+/// (the mean over the *whole* group, in the group's schedule order) comes
+/// back bitwise identical to what the in-memory matrix call with every
+/// rank's buffer would have produced.
+///
+/// The legacy signatures return `Option`, which cannot carry an error:
+/// wire failures are recorded in a poison slot and surfaced through
+/// [`Collective::take_error`] (the strategies' `try_*` wrappers check it
+/// after every reduce, so a dead or stalled peer fails the epoch loudly).
+pub struct EndpointCollective {
+    ep: Arc<dyn CollectiveEndpoint>,
+    err: Mutex<Option<anyhow::Error>>,
+}
+
+impl EndpointCollective {
+    pub fn new(ep: Arc<dyn CollectiveEndpoint>) -> Self {
+        Self { ep, err: Mutex::new(None) }
+    }
+
+    fn record(&self, e: anyhow::Error) {
+        let mut slot = self.err.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        // keep the first error: it names the rank/op that actually failed
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+
+    fn one_local_row(&self, mut bufs: Vec<Vec<f32>>, what: &str) -> Option<Vec<f32>> {
+        if bufs.is_empty() {
+            // no local gradient for this space (e.g. no base grads after
+            // the freeze) — every rank agrees, so no wire op is issued
+            return None;
+        }
+        if bufs.len() != 1 {
+            self.record(anyhow!(
+                "endpoint-backed {what} expects exactly one local buffer (this process is a \
+                 single rank), got {}",
+                bufs.len()
+            ));
+            return None;
+        }
+        bufs.pop()
+    }
+}
+
+#[allow(deprecated)] // the one-release shim: matrix calls adapt to the endpoint
+impl Collective for EndpointCollective {
+    fn name(&self) -> &'static str {
+        self.ep.transport()
+    }
+
+    fn all_reduce(&self, bufs: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+        let mut buf = self.one_local_row(bufs, "all_reduce")?;
+        match self.ep.all_reduce(&mut buf) {
+            Ok(()) => Some(buf),
+            Err(e) => {
+                self.record(e);
+                None
+            }
+        }
+    }
+
+    fn reduce_scatter(&self, bufs: Vec<Vec<f32>>, parts: usize) -> Option<Vec<Vec<f32>>> {
+        let buf = self.one_local_row(bufs, "reduce_scatter")?;
+        match self.ep.reduce_scatter(buf, parts) {
+            Ok(chunks) => Some(chunks),
+            Err(e) => {
+                self.record(e);
+                None
+            }
+        }
+    }
+
+    fn reduce_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
+        let buf = self.one_local_row(bufs, "reduce_bucket")?;
+        match self.ep.reduce_bucket(buf, lo, full_len) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                self.record(e);
+                None
+            }
+        }
+    }
+
+    fn endpoint(&self) -> Option<Arc<dyn CollectiveEndpoint>> {
+        Some(self.ep.clone())
+    }
+
+    fn take_error(&self) -> Option<anyhow::Error> {
+        self.err.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take()
+    }
+}
+
 #[cfg(test)]
+#[allow(deprecated)] // tests cover the shimmed matrix methods on purpose
 mod tests {
     use super::*;
     use crate::dp::{reduce_owned, scatter};
@@ -166,6 +735,7 @@ mod tests {
     #[test]
     fn default_reduce_bucket_signals_unsupported() {
         struct Whole;
+        #[allow(deprecated)]
         impl Collective for Whole {
             fn name(&self) -> &'static str {
                 "whole"
@@ -178,6 +748,9 @@ mod tests {
             }
         }
         assert!(Whole.reduce_bucket(bufs(2, 8), 0, 8).is_none());
+        // custom backends are not endpoint-backed and carry no error slot
+        assert!(Whole.endpoint().is_none());
+        assert!(Whole.take_error().is_none());
     }
 
     #[test]
@@ -201,5 +774,151 @@ mod tests {
                 "parts={parts}"
             );
         }
+    }
+
+    /// Drive one op on every endpoint of a group concurrently, returning
+    /// the per-rank results rank-ordered.
+    fn on_all_ranks<T: Send + 'static>(
+        group: &Arc<LocalGroup>,
+        f: impl Fn(Arc<LocalEndpoint>) -> T + Send + Sync + Copy,
+    ) -> Vec<T> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .endpoints()
+                .into_iter()
+                .map(|ep| s.spawn(move || f(ep)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn local_endpoints_match_the_matrix_path_bitwise() {
+        for alg in [Algorithm::Naive, Algorithm::Tree, Algorithm::Ring] {
+            let world = 3;
+            let src = bufs(world, 101);
+            let matrix = AlgoCollective::new(alg);
+            let want_full = matrix.all_reduce(src.clone()).unwrap();
+            let want_chunks = matrix.reduce_scatter(src.clone(), world).unwrap();
+
+            let group = LocalGroup::new(alg, world);
+            let src_ref = &src;
+            let got = on_all_ranks(&group, move |ep| {
+                let mut b = src_ref[ep.rank()].clone();
+                ep.all_reduce(&mut b).unwrap();
+                b
+            });
+            for (r, g) in got.iter().enumerate() {
+                assert_eq!(g, &want_full, "{alg:?} rank {r}: endpoint all_reduce diverged");
+            }
+
+            let got = on_all_ranks(&group, move |ep| {
+                ep.reduce_scatter(src_ref[ep.rank()].clone(), 3).unwrap()
+            });
+            for (r, g) in got.iter().enumerate() {
+                assert_eq!(g, &want_chunks, "{alg:?} rank {r}: endpoint reduce_scatter diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn local_endpoints_bucket_gather_broadcast_scalars_and_barrier() {
+        let world = 3;
+        let len = 53;
+        let group = LocalGroup::new(Algorithm::Ring, world);
+        let src = bufs(world, len);
+        let matrix = AlgoCollective::new(Algorithm::Ring);
+        let want = matrix.reduce_bucket(src.clone(), 7, 101).unwrap();
+        let src_ref = &src;
+        let got = on_all_ranks(&group, move |ep| {
+            ep.reduce_bucket(src_ref[ep.rank()].clone(), 7, 101).unwrap()
+        });
+        assert!(got.iter().all(|g| g == &want), "bucket reduce diverged across ranks");
+
+        // all_gather returns every rank's (ragged) buffer rank-ordered
+        let got = on_all_ranks(&group, |ep| {
+            let own = vec![ep.rank() as f32; ep.rank() + 1];
+            ep.all_gather(own).unwrap()
+        });
+        for g in &got {
+            assert_eq!(g.len(), world);
+            for (r, chunk) in g.iter().enumerate() {
+                assert_eq!(chunk, &vec![r as f32; r + 1]);
+            }
+        }
+
+        // broadcast replicates the root's bytes verbatim
+        let got = on_all_ranks(&group, |ep| {
+            let mut b = vec![ep.rank() as f32 + 0.25; 9];
+            ep.broadcast(&mut b, 1).unwrap();
+            b
+        });
+        assert!(got.iter().all(|g| g == &vec![1.25f32; 9]));
+
+        // scalars come back rank-ordered and bit-exact
+        let got = on_all_ranks(&group, |ep| {
+            ep.gather_scalars(&[ep.rank() as f64 * 0.1, -1.0]).unwrap()
+        });
+        for g in &got {
+            for (r, s) in g.iter().enumerate() {
+                assert_eq!(s[0].to_bits(), (r as f64 * 0.1).to_bits());
+                assert_eq!(s[1], -1.0);
+            }
+        }
+
+        let got = on_all_ranks(&group, |ep| ep.barrier().is_ok());
+        assert!(got.iter().all(|ok| *ok));
+    }
+
+    #[test]
+    fn mismatched_ops_poison_the_group_loudly() {
+        let group = LocalGroup::new(Algorithm::Tree, 2);
+        let errs = std::thread::scope(|s| {
+            let g0 = group.endpoint(0);
+            let g1 = group.endpoint(1);
+            let a = s.spawn(move || {
+                let mut b = vec![1.0f32; 8];
+                g0.all_reduce(&mut b).err()
+            });
+            let b = s.spawn(move || g1.reduce_scatter(vec![1.0f32; 8], 2).err());
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        // exactly one of the two sees the desync first; the other sees the
+        // poisoned group — both fail loudly, neither hangs
+        let msgs = [errs.0, errs.1];
+        assert!(msgs.iter().flatten().count() >= 1, "at least one rank must error");
+        for e in msgs.iter().flatten() {
+            let s = format!("{e:#}");
+            assert!(
+                s.contains("desync") || s.contains("poisoned"),
+                "error must name the lockstep violation: {s}"
+            );
+        }
+        // the group stays poisoned for every later op
+        let ep = group.endpoint(0);
+        let e = ep.barrier().unwrap_err();
+        assert!(format!("{e:#}").contains("poisoned"), "{e:#}");
+    }
+
+    #[test]
+    fn endpoint_collective_adapts_the_matrix_api_per_rank() {
+        // a world-1 group: the adapter's one local row is the whole matrix
+        let group = LocalGroup::new(Algorithm::Tree, 1);
+        let c = EndpointCollective::new(group.endpoint(0));
+        assert_eq!(c.name(), "local");
+        assert!(c.endpoint().is_some());
+        let b = bufs(1, 19);
+        assert_eq!(c.all_reduce(b.clone()).unwrap(), b[0], "mean of one buffer is itself");
+        let chunks = c.reduce_scatter(b.clone(), 3).unwrap();
+        assert_eq!(c.all_gather(&chunks), b[0]);
+        assert_eq!(c.reduce_bucket(vec![b[0][2..7].to_vec()], 2, 19).unwrap(), &b[0][2..7]);
+        // empty buffer set: no local gradient, no wire op, no error
+        assert!(c.all_reduce(Vec::new()).is_none());
+        assert!(c.take_error().is_none());
+        // more than one local row is a prelora bug, recorded loudly
+        assert!(c.all_reduce(bufs(2, 4)).is_none());
+        let e = c.take_error().unwrap();
+        assert!(format!("{e:#}").contains("exactly one local buffer"), "{e:#}");
+        assert!(c.take_error().is_none(), "take_error drains the slot");
     }
 }

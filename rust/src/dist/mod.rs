@@ -37,11 +37,16 @@
 
 pub mod collective;
 pub mod model;
+pub mod net;
 pub mod strategy;
 pub mod zero3;
 
-pub use collective::{AlgoCollective, Collective};
+pub use collective::{
+    AlgoCollective, Collective, CollectiveEndpoint, EndpointCollective, LocalEndpoint, LocalGroup,
+    OpDesc,
+};
 pub use model::{ModelState, ParamStore, Repartition};
+pub use net::TcpEndpoint;
 pub use strategy::{
     clip_reduced, ParamSpace, ShardPlan, StateBytes, Strategy, Unsharded, Zero1, Zero2,
 };

@@ -1,0 +1,443 @@
+//! Length-prefixed, CRC-protected binary frames — the TCP backend's wire
+//! unit.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [len: u32]                        // bytes that follow, incl. the CRC
+//! [version: u8][kind: u8]           // FRAME_VERSION, FrameKind
+//! [rank: u32][seq: u64]             // sender rank, per-connection op seq
+//! [payload: len - 18 bytes]
+//! [crc: u32]                        // CRC-32 over version..payload
+//! ```
+//!
+//! The CRC ([`crate::util::crc`], the reflected 0xEDB88320 polynomial)
+//! covers everything after the length prefix, so any single flipped bit —
+//! header or payload — is rejected before the bytes can reach the reduce
+//! path. `seq` is the lockstep tripwire: both sides stamp a monotonically
+//! increasing op index on every frame, and a mismatch surfaces as a
+//! collective-desync error rather than silently pairing the wrong
+//! buffers. f32/f64 payloads travel as raw LE bit patterns — no text
+//! round-trip, so the wire is bit-exact by construction.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::crc::crc32;
+
+use super::super::collective::{OpDesc, OpOut};
+
+/// Wire protocol version; bumped on any layout change.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Upper bound on a frame body. A corrupt length prefix must not make the
+/// reader allocate gigabytes before the CRC can catch it.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Fixed header bytes inside the length-counted body:
+/// version + kind + rank + seq + crc.
+const HEADER_BYTES: usize = 1 + 1 + 4 + 8 + 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Connection handshake: payload carries the sender's world size.
+    Hello = 0,
+    /// A rank's contribution to collective op `seq`.
+    Op = 1,
+    /// The root's result for collective op `seq` (doubles as the ack: an
+    /// op is complete exactly when its result frame arrives).
+    Result = 2,
+}
+
+impl FrameKind {
+    fn from_u8(x: u8) -> Result<Self> {
+        match x {
+            0 => Ok(FrameKind::Hello),
+            1 => Ok(FrameKind::Op),
+            2 => Ok(FrameKind::Result),
+            other => bail!("unknown frame kind {other}"),
+        }
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// Sender's rank.
+    pub rank: u32,
+    /// Per-connection monotonic op index (desync tripwire).
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes([
+        b[at],
+        b[at + 1],
+        b[at + 2],
+        b[at + 3],
+        b[at + 4],
+        b[at + 5],
+        b[at + 6],
+        b[at + 7],
+    ])
+}
+
+impl Frame {
+    /// The full wire encoding, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let body_len = HEADER_BYTES - 4 + self.payload.len();
+        let mut out = Vec::with_capacity(4 + body_len + 4);
+        out.extend_from_slice(&((body_len + 4) as u32).to_le_bytes());
+        out.push(FRAME_VERSION);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&self.rank.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out[4..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.encode())
+    }
+
+    /// Read and validate one frame: length sanity, CRC, version, kind.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        ensure!(len >= HEADER_BYTES, "frame too short: {len} bytes");
+        ensure!(
+            len <= MAX_FRAME_BYTES,
+            "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap (corrupt length prefix?)"
+        );
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        let crc_got = le_u32(&body, len - 4);
+        let body = &body[..len - 4];
+        let crc_want = crc32(body);
+        ensure!(
+            crc_got == crc_want,
+            "frame CRC mismatch: wire {crc_got:#010x} vs computed {crc_want:#010x} — \
+             corrupted in transit"
+        );
+        ensure!(
+            body[0] == FRAME_VERSION,
+            "frame version {} but this build speaks {FRAME_VERSION}",
+            body[0]
+        );
+        let kind = FrameKind::from_u8(body[1])?;
+        let rank = le_u32(body, 2);
+        let seq = le_u64(body, 6);
+        Ok(Frame { kind, rank, seq, payload: body[14..].to_vec() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs: op contributions and results.
+//
+// Op payload:      [tag u8][three u64 args][n_f32 u32][f32 LE ...]
+//                  [n_f64 u32][f64 LE ...]
+// Result payload:  [tag u8] then Full: [n u32][f32 ...]
+//                            Chunks:  [k u32] k * ([n u32][f32 ...])
+//                            Scalars: [k u32] k * ([n u32][f64 ...])
+//                            Unit:    nothing
+// ---------------------------------------------------------------------------
+
+fn desc_code(desc: &OpDesc) -> (u8, u64, u64, u64) {
+    match *desc {
+        OpDesc::AllReduce { len } => (1, len as u64, 0, 0),
+        OpDesc::ReduceScatter { len, parts } => (2, len as u64, parts as u64, 0),
+        OpDesc::ReduceBucket { len, lo, full_len } => (3, len as u64, lo as u64, full_len as u64),
+        OpDesc::AllGather => (4, 0, 0, 0),
+        OpDesc::Broadcast { len, root } => (5, len as u64, root as u64, 0),
+        OpDesc::Scalars { n } => (6, n as u64, 0, 0),
+        OpDesc::Barrier => (7, 0, 0, 0),
+    }
+}
+
+fn desc_decode(tag: u8, a: u64, b: u64, c: u64) -> Result<OpDesc> {
+    Ok(match tag {
+        1 => OpDesc::AllReduce { len: a as usize },
+        2 => OpDesc::ReduceScatter { len: a as usize, parts: b as usize },
+        3 => OpDesc::ReduceBucket { len: a as usize, lo: b as usize, full_len: c as usize },
+        4 => OpDesc::AllGather,
+        5 => OpDesc::Broadcast { len: a as usize, root: b as usize },
+        6 => OpDesc::Scalars { n: a as usize },
+        7 => OpDesc::Barrier,
+        other => bail!("unknown collective op tag {other}"),
+    })
+}
+
+fn put_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, data: &[f64]) {
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, at: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        ensure!(self.at < self.b.len(), "payload truncated");
+        self.at += 1;
+        Ok(self.b[self.at - 1])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        ensure!(self.at + 4 <= self.b.len(), "payload truncated");
+        let v = le_u32(self.b, self.at);
+        self.at += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        ensure!(self.at + 8 <= self.b.len(), "payload truncated");
+        let v = le_u64(self.b, self.at);
+        self.at += 8;
+        Ok(v)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!(self.at + 4 * n <= self.b.len(), "payload truncated ({n} f32s declared)");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes([
+                self.b[self.at],
+                self.b[self.at + 1],
+                self.b[self.at + 2],
+                self.b[self.at + 3],
+            ]));
+            self.at += 4;
+        }
+        Ok(out)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        ensure!(self.at + 8 * n <= self.b.len(), "payload truncated ({n} f64s declared)");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f64::from_bits(le_u64(self.b, self.at)));
+            self.at += 8;
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.at == self.b.len(), "{} trailing payload bytes", self.b.len() - self.at);
+        Ok(())
+    }
+}
+
+/// Encode one rank's contribution to an op.
+pub(crate) fn encode_op(desc: &OpDesc, data: &[f32], scalars: &[f64]) -> Vec<u8> {
+    let (tag, a, b, c) = desc_code(desc);
+    let mut out = Vec::with_capacity(1 + 24 + 8 + 4 * data.len() + 8 * scalars.len());
+    out.push(tag);
+    out.extend_from_slice(&a.to_le_bytes());
+    out.extend_from_slice(&b.to_le_bytes());
+    out.extend_from_slice(&c.to_le_bytes());
+    put_f32s(&mut out, data);
+    put_f64s(&mut out, scalars);
+    out
+}
+
+/// Decode one rank's contribution: `(descriptor, f32 data, f64 scalars)`.
+pub(crate) fn decode_op(payload: &[u8]) -> Result<(OpDesc, Vec<f32>, Vec<f64>)> {
+    let mut c = Cursor::new(payload);
+    let tag = c.u8()?;
+    let (a, b, cc) = (c.u64()?, c.u64()?, c.u64()?);
+    let desc = desc_decode(tag, a, b, cc)?;
+    let data = c.f32s()?;
+    let scalars = c.f64s()?;
+    c.done()?;
+    Ok((desc, data, scalars))
+}
+
+/// Encode an op result for the result/ack frame.
+pub(crate) fn encode_out(out: &OpOut) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match out {
+        OpOut::Full(v) => {
+            buf.push(1);
+            put_f32s(&mut buf, v);
+        }
+        OpOut::Chunks(chunks) => {
+            buf.push(2);
+            buf.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
+            for ch in chunks {
+                put_f32s(&mut buf, ch);
+            }
+        }
+        OpOut::Scalars(rows) => {
+            buf.push(3);
+            buf.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+            for row in rows {
+                put_f64s(&mut buf, row);
+            }
+        }
+        OpOut::Unit => buf.push(4),
+    }
+    buf
+}
+
+/// Decode an op result.
+pub(crate) fn decode_out(payload: &[u8]) -> Result<OpOut> {
+    let mut c = Cursor::new(payload);
+    let out = match c.u8()? {
+        1 => OpOut::Full(c.f32s()?),
+        2 => {
+            let k = c.u32()? as usize;
+            let mut chunks = Vec::with_capacity(k);
+            for _ in 0..k {
+                chunks.push(c.f32s()?);
+            }
+            OpOut::Chunks(chunks)
+        }
+        3 => {
+            let k = c.u32()? as usize;
+            let mut rows = Vec::with_capacity(k);
+            for _ in 0..k {
+                rows.push(c.f64s()?);
+            }
+            OpOut::Scalars(rows)
+        }
+        4 => OpOut::Unit,
+        other => bail!("unknown result tag {other}"),
+    };
+    c.done()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        Frame::read_from(&mut bytes.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrips_bitwise() {
+        let f = Frame {
+            kind: FrameKind::Op,
+            rank: 3,
+            seq: 0xDEAD_BEEF_0123,
+            payload: (0..=255u8).collect(),
+        };
+        assert_eq!(roundtrip(&f), f);
+        let empty = Frame { kind: FrameKind::Hello, rank: 0, seq: 0, payload: Vec::new() };
+        assert_eq!(roundtrip(&empty), empty);
+    }
+
+    #[test]
+    fn any_single_flipped_bit_is_rejected() {
+        let f = Frame { kind: FrameKind::Result, rank: 1, seq: 7, payload: vec![9, 8, 7, 6, 5] };
+        let clean = f.encode();
+        // flip every bit after the length prefix in turn: the CRC (or a
+        // header check) must reject each one
+        for byte in 4..clean.len() {
+            for bit in 0..8 {
+                let mut bad = clean.clone();
+                bad[byte] ^= 1 << bit;
+                let got = Frame::read_from(&mut bad.as_slice());
+                assert!(got.is_err(), "flipped bit {bit} of byte {byte} went undetected");
+            }
+        }
+        // the pristine bytes still parse
+        assert_eq!(Frame::read_from(&mut clean.as_slice()).unwrap(), f);
+    }
+
+    #[test]
+    fn corrupt_length_prefix_cannot_demand_gigabytes() {
+        let mut bytes = (u32::MAX).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 32]);
+        let e = Frame::read_from(&mut bytes.as_slice()).unwrap_err();
+        assert!(format!("{e:#}").contains("cap"), "{e:#}");
+        let short = 3u32.to_le_bytes().to_vec();
+        assert!(Frame::read_from(&mut short.as_slice()).is_err());
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let f = Frame { kind: FrameKind::Op, rank: 0, seq: 0, payload: vec![1] };
+        let mut bytes = f.encode();
+        bytes[4] = FRAME_VERSION + 1;
+        // re-seal the CRC so only the version differs
+        let crc = crate::util::crc::crc32(&bytes[4..bytes.len() - 4]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let e = Frame::read_from(&mut bytes.as_slice()).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+    }
+
+    #[test]
+    fn op_payloads_roundtrip_every_descriptor() {
+        let data: Vec<f32> = (0..33).map(|i| (i as f32 - 16.0) * 0.125).collect();
+        let scalars = [1.5f64, -0.0, f64::MIN_POSITIVE];
+        for desc in [
+            OpDesc::AllReduce { len: 33 },
+            OpDesc::ReduceScatter { len: 33, parts: 5 },
+            OpDesc::ReduceBucket { len: 33, lo: 11, full_len: 97 },
+            OpDesc::AllGather,
+            OpDesc::Broadcast { len: 33, root: 2 },
+            OpDesc::Scalars { n: 3 },
+            OpDesc::Barrier,
+        ] {
+            let bytes = encode_op(&desc, &data, &scalars);
+            let (d2, data2, sc2) = decode_op(&bytes).unwrap();
+            assert_eq!(d2, desc);
+            assert_eq!(data2, data);
+            assert_eq!(sc2.len(), scalars.len());
+            for (a, b) in sc2.iter().zip(scalars.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "f64 transport must be bit-exact");
+            }
+        }
+        assert!(decode_op(&[42]).is_err(), "unknown tags are rejected");
+        assert!(decode_op(&[]).is_err(), "truncated payloads are rejected");
+    }
+
+    #[test]
+    fn out_payloads_roundtrip_every_shape() {
+        for out in [
+            OpOut::Full(vec![0.5, -1.0, 3.25]),
+            OpOut::Chunks(vec![vec![1.0; 4], vec![2.0; 3], Vec::new()]),
+            OpOut::Scalars(vec![vec![0.1, 0.2], vec![-0.0]]),
+            OpOut::Unit,
+        ] {
+            let got = decode_out(&encode_out(&out)).unwrap();
+            assert_eq!(got, out);
+        }
+        assert!(decode_out(&[9]).is_err());
+        // trailing garbage is rejected, not silently ignored
+        let mut bytes = encode_out(&OpOut::Unit);
+        bytes.push(0);
+        assert!(decode_out(&bytes).is_err());
+    }
+}

@@ -20,7 +20,7 @@ use crate::config::TrainConfig;
 use crate::dp::{partition, BucketPlan, GradResult, Reduced, StepOutputs};
 use crate::optim::ShardedOptimizer;
 
-use super::collective::Collective;
+use super::collective::{Collective, CollectiveEndpoint};
 use super::model::{ModelState, ParamStore, Repartition};
 use super::ZeroStage;
 
@@ -146,6 +146,16 @@ pub trait Strategy: Send + Sync {
     /// The communication backend.
     fn collective(&self) -> &dyn Collective;
 
+    /// The per-rank [`CollectiveEndpoint`] behind this strategy's
+    /// collective, if the backend exposes one (the
+    /// [`super::EndpointCollective`] adapter does; the in-memory
+    /// [`super::AlgoCollective`] does not). The pipeline uses this to
+    /// discover rank/world for per-process execution and to run the
+    /// per-step scalar exchange.
+    fn endpoint(&self) -> Option<Arc<dyn CollectiveEndpoint>> {
+        self.collective().endpoint()
+    }
+
     /// Optimizer-state partition count.
     fn opt_shards(&self) -> usize {
         self.stage().opt_shards(self.workers())
@@ -208,11 +218,24 @@ pub trait Strategy: Send + Sync {
     /// when gradients are sharded — a **terminal** reduce-scatter (the
     /// input buffers are consumed, one owned partition per rank survives,
     /// no replicated mean vector is ever materialized).
+    #[allow(deprecated)] // one-release shim: route through the matrix API
     fn grad_sync(&self, bufs: Vec<Vec<f32>>) -> Option<Reduced> {
         if self.grad_parts() <= 1 {
             self.collective().all_reduce(bufs).map(Reduced::Full)
         } else {
             self.collective().reduce_scatter(bufs, self.grad_parts()).map(Reduced::Sharded)
+        }
+    }
+
+    /// [`grad_sync`](Self::grad_sync) with wire-failure propagation: a
+    /// backend whose collective reports a transport error (peer death,
+    /// stall, desync — see [`Collective::take_error`]) turns `None` into
+    /// a loud contextful `Err` instead of a silent skipped sync.
+    fn try_grad_sync(&self, bufs: Vec<Vec<f32>>) -> Result<Option<Reduced>> {
+        let out = self.grad_sync(bufs);
+        match self.collective().take_error() {
+            Some(e) => Err(e.context("gradient sync failed")),
+            None => Ok(out),
         }
     }
 
@@ -240,8 +263,28 @@ pub trait Strategy: Send + Sync {
     /// outputs concatenated in index order are **bitwise** the
     /// [`grad_sync`](Self::grad_sync) of the whole buffers. `None` means
     /// unsupported; callers must fall back to the whole-buffer reduce.
+    #[allow(deprecated)] // one-release shim: route through the matrix API
     fn grad_sync_bucket(&self, bufs: Vec<Vec<f32>>, lo: usize, full_len: usize) -> Option<Vec<f32>> {
         self.collective().reduce_bucket(bufs, lo, full_len)
+    }
+
+    /// [`grad_sync_bucket`](Self::grad_sync_bucket) with wire-failure
+    /// propagation (see [`try_grad_sync`](Self::try_grad_sync)).
+    fn try_grad_sync_bucket(
+        &self,
+        bufs: Vec<Vec<f32>>,
+        lo: usize,
+        full_len: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let len = bufs.first().map_or(0, Vec::len);
+        let out = self.grad_sync_bucket(bufs, lo, full_len);
+        match self.collective().take_error() {
+            Some(e) => Err(e.context(format!(
+                "bucket [{lo}, {}) of {full_len} sync failed",
+                lo + len
+            ))),
+            None => Ok(out),
+        }
     }
 
     /// [`grad_sync`](Self::grad_sync) over both of a step's buffer sets
@@ -255,6 +298,16 @@ pub trait Strategy: Send + Sync {
             correct,
             samples,
             execute_seconds,
+        }
+    }
+
+    /// [`reduce_step`](Self::reduce_step) with wire-failure propagation
+    /// (see [`try_grad_sync`](Self::try_grad_sync)).
+    fn try_reduce_step(&self, outs: StepOutputs) -> Result<GradResult> {
+        let r = self.reduce_step(outs);
+        match self.collective().take_error() {
+            Some(e) => Err(e.context("gradient sync failed")),
+            None => Ok(r),
         }
     }
 

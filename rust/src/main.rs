@@ -36,6 +36,16 @@ fn train_flags() -> Args {
         .flag("warmup", "warmup window w (epochs)")
         .flag("workers", "data-parallel worker count")
         .flag("allreduce", "gradient all-reduce algorithm: naive|tree|ring")
+        .flag(
+            "dist",
+            "collective transport: local (in-memory workers) | tcp (one process per rank over --peers, bitwise-identical trajectories)",
+        )
+        .flag("rank", "this process's rank in the tcp group (0 hosts the rendezvous)")
+        .flag(
+            "peers",
+            "rank-ordered host:port list, comma-separated; its length is the tcp world size",
+        )
+        .flag("connect-timeout-ms", "tcp connect/accept retry budget and per-op stall timeout")
         .switch("no-pipeline", "run the serial reference loop instead of the step pipeline")
         .switch(
             "zero",
@@ -97,6 +107,22 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
     }
     if let Some(alg) = a.get_parsed::<prelora::dp::Algorithm>("allreduce")? {
         cfg.train.dp.allreduce = alg.to_string();
+    }
+    if let Some(t) = a.get("dist") {
+        cfg.train.dist.transport = t.to_string();
+    }
+    if let Some(r) = a.get_parsed::<usize>("rank")? {
+        cfg.train.dist.rank = r;
+    }
+    if let Some(p) = a.get("peers") {
+        cfg.train.dist.peers = p
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(ms) = a.get_parsed::<u64>("connect-timeout-ms")? {
+        cfg.train.dist.connect_timeout_ms = ms;
     }
     if a.get_switch("no-pipeline") {
         cfg.train.pipeline.enabled = false;

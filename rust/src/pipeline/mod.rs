@@ -31,7 +31,12 @@
 //! step through it, and each step begins by asking it to materialize the
 //! full parameter views (the ZeRO-3 per-step all-gather; a no-op for
 //! replicated storage). There is no stage-conditional branching here —
-//! the strategy *is* the layout.
+//! the strategy *is* the layout. When the strategy's collective exposes a
+//! per-rank [`CollectiveEndpoint`] (the multi-process TCP transport), the
+//! pipeline switches to per-process execution: one local compute worker
+//! runs this rank's batch slice, phase overlap is disabled so exactly one
+//! thread issues wire ops, and the step's loss/accuracy scalars are
+//! folded across ranks through the endpoint.
 //!
 //! **Determinism contract.** With a fixed seed the pipelined loop produces
 //! bit-identical per-step losses and parameters to the sequential path:
@@ -57,12 +62,12 @@ pub use crate::dist::ModelState;
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::PipelineConfig;
-use crate::data::{Dataset, EpochLoader};
-use crate::dist::Strategy;
-use crate::dp::{GradEngine, StepMode};
+use crate::data::{Batch, Dataset, EpochLoader};
+use crate::dist::{CollectiveEndpoint, Strategy};
+use crate::dp::{GradEngine, GradResult, StepMode};
 use crate::telemetry::GradNormStats;
 
 /// Aggregated results of one epoch of training steps (either path).
@@ -107,15 +112,74 @@ pub struct StepPipeline {
     cfg: PipelineConfig,
     strategy: Arc<dyn Strategy>,
     reduce: ReduceStage,
+    /// `Some` when this process is one rank of a multi-process group: the
+    /// strategy's collective drives a per-rank [`CollectiveEndpoint`]
+    /// (e.g. the TCP transport). The pipeline then computes only this
+    /// rank's shard of each step and exchanges step scalars on the wire.
+    endpoint: Option<Arc<dyn CollectiveEndpoint>>,
 }
 
 impl StepPipeline {
     pub fn new(cfg: &PipelineConfig, strategy: Arc<dyn Strategy>) -> Result<Self> {
-        let overlap = cfg.enabled && cfg.effective_overlap();
+        let endpoint = strategy.endpoint();
+        // A live endpoint serializes the group's collective ops in
+        // lockstep, so exactly one thread per process may issue them:
+        // phase overlap (which syncs base grads on the stage thread while
+        // the leader syncs LoRA grads) is forced off, and the local stage
+        // sizing is one worker — this process computes one rank only.
+        let multi = endpoint.as_ref().is_some_and(|ep| ep.world_size() > 1);
+        let overlap = cfg.enabled && cfg.effective_overlap() && !multi;
         let bucket_bytes = if cfg.enabled { cfg.effective_bucket_bytes() } else { 0 };
-        let workers = strategy.workers();
+        let workers = if multi { 1 } else { strategy.workers() };
         let reduce = ReduceStage::new(strategy.clone(), overlap, bucket_bytes, workers)?;
-        Ok(Self { cfg: cfg.clone(), strategy, reduce })
+        let endpoint = if multi { endpoint } else { None };
+        Ok(Self { cfg: cfg.clone(), strategy, reduce, endpoint })
+    }
+
+    /// Keep only this rank's batch when the process is one rank of a
+    /// multi-process group. The loader still shards each step over the
+    /// *global* worker count, so every rank derives the same global batch
+    /// order and picks its own slice — the data layout is identical to
+    /// the in-memory run.
+    fn local_batches(&self, batches: Vec<Batch>) -> Result<Vec<Batch>> {
+        let Some(ep) = &self.endpoint else { return Ok(batches) };
+        ensure!(
+            batches.len() == ep.world_size(),
+            "loader produced {} per-step batches for a {}-rank group",
+            batches.len(),
+            ep.world_size()
+        );
+        let mut batches = batches;
+        Ok(vec![batches.swap_remove(ep.rank())])
+    }
+
+    /// Fold the step's loss/accuracy scalars across the group. Each rank
+    /// contributes its single local worker's row; the fold runs in rank
+    /// order, so the result is bitwise-identical to the in-memory
+    /// worker-order fold in `GradEngine::collect` (a one-worker local
+    /// mean divides by 1.0, which is exact, and f64 scalars travel
+    /// bit-exact on the wire).
+    ///
+    /// Ordering matters: this issues wire ops on the leader thread and
+    /// therefore must run after `reduce` returns and *before* the next
+    /// `submit` — once step k+1 is in flight, the bucket accumulator
+    /// thread owns the endpoint.
+    fn exchange_step_scalars(&self, r: &mut GradResult) -> Result<()> {
+        let Some(ep) = &self.endpoint else { return Ok(()) };
+        let rows = ep.gather_scalars(&[r.loss, r.correct, r.samples as f64, r.execute_seconds])?;
+        let (mut loss, mut correct, mut samples, mut exec) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for row in &rows {
+            ensure!(row.len() == 4, "step-scalar row carries {} values, expected 4", row.len());
+            loss += row[0];
+            correct += row[1];
+            samples += row[2];
+            exec += row[3];
+        }
+        r.loss = loss / rows.len() as f64;
+        r.correct = correct;
+        r.samples = samples as usize;
+        r.execute_seconds = exec;
+        Ok(())
     }
 
     /// Run one epoch of `steps` training steps in mode `mode`, dispatching
@@ -163,17 +227,20 @@ impl StepPipeline {
         let run = (|| -> Result<()> {
             if steps > 0 {
                 self.strategy.materialize_params(model);
-                engine.submit(mode, model.base_view(), model.lora_pair(), prefetch.recv()?)?;
+                let batches = self.local_batches(prefetch.recv()?)?;
+                engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
             }
             for step in 0..steps {
                 let outs = engine.collect()?;
                 let wait = std::time::Instant::now();
                 let mut r = self.reduce.reduce(outs)?;
+                self.exchange_step_scalars(&mut r)?;
                 out.comm_wait_s += wait.elapsed().as_secs_f64();
                 let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
                 if step + 1 < steps {
                     self.strategy.materialize_params(model);
-                    engine.submit(mode, model.base_view(), model.lora_pair(), prefetch.recv()?)?;
+                    let batches = self.local_batches(prefetch.recv()?)?;
+                    engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
                 }
                 out.ingest(&r, norms);
             }
@@ -213,12 +280,13 @@ impl StepPipeline {
         let order = loader.epoch_order(data, epoch);
         let mut out = EpochRun::default();
         for step in 0..steps {
-            let batches = loader.step_batches_in(data, &order, step);
+            let batches = self.local_batches(loader.step_batches_in(data, &order, step))?;
             self.strategy.materialize_params(model);
             engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
             let outs = engine.collect()?;
             let wait = std::time::Instant::now();
-            let mut r = self.strategy.reduce_step(outs);
+            let mut r = self.strategy.try_reduce_step(outs)?;
+            self.exchange_step_scalars(&mut r)?;
             out.comm_wait_s += wait.elapsed().as_secs_f64();
             let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
             out.ingest(&r, norms);

@@ -135,13 +135,15 @@ fn accumulate_buckets(
         if slots.iter().all(Option::is_some) {
             let Some(slots) = pending.remove(&key) else { continue };
             let bufs: Vec<Vec<f32>> = slots.into_iter().flatten().collect();
-            let reduced = strategy.grad_sync_bucket(bufs, msg.lo, msg.full_len).ok_or_else(|| {
-                anyhow!(
+            let reduced = match strategy.try_grad_sync_bucket(bufs, msg.lo, msg.full_len) {
+                Err(e) => Err(e),
+                Ok(Some(r)) => Ok(r),
+                Ok(None) => Err(anyhow!(
                     "strategy stopped supporting bucketed sync for {:?}/{}",
                     msg.space,
                     msg.bucket
-                )
-            });
+                )),
+            };
             let failed = reduced.is_err();
             if rtx.send(reduced.map(|r| (msg.space, msg.bucket, r))).is_err() || failed {
                 return; // leader gone, or nothing left to accumulate for
@@ -264,7 +266,7 @@ impl ReduceStage {
             {
                 (tx, rx)
             }
-            _ => return Ok(self.strategy.reduce_step(outs)),
+            _ => return self.strategy.try_reduce_step(outs),
         };
         let StepOutputs {
             base_grads,
@@ -320,11 +322,11 @@ impl ReduceStage {
         }
         let d_base = match active.base.as_deref() {
             Some(plan) => Some(assemble(plan, base_slots)?),
-            None => self.strategy.grad_sync(base_grads),
+            None => self.strategy.try_grad_sync(base_grads)?,
         };
         let d_lora = match active.lora.as_deref() {
             Some(plan) => Some(assemble(plan, lora_slots)?),
-            None => self.strategy.grad_sync(lora_grads),
+            None => self.strategy.try_grad_sync(lora_grads)?,
         };
         Ok(GradResult { d_base, d_lora, loss, correct, samples, execute_seconds })
     }

@@ -71,23 +71,39 @@ impl Trainer {
             .allreduce
             .parse()
             .map_err(|e: String| anyhow!(e))?;
-        let engine = GradEngine::new(
-            manifest.clone(),
-            cfg.train.dp.workers,
-            cfg.train.dp.threaded,
-            algorithm,
-        )?;
+        // the data-parallel world: the tcp peer list when this process is
+        // one rank of a multi-process group, the simulated worker count
+        // otherwise. The loader and the strategy are always sized to the
+        // world, so batch order and shard layout are transport-invariant.
+        let world = cfg.train.world();
+        let endpoint = if cfg.train.dist.is_tcp() && world > 1 {
+            Some(dist::TcpEndpoint::connect(
+                algorithm,
+                cfg.train.dist.rank,
+                &cfg.train.dist.peers,
+                std::time::Duration::from_millis(cfg.train.dist.connect_timeout_ms),
+            )?)
+        } else {
+            None
+        };
+        // a tcp rank computes exactly one shard locally; the local mode
+        // simulates every rank in-process
+        let local_workers = if endpoint.is_some() { 1 } else { world };
+        let engine =
+            GradEngine::new(manifest.clone(), local_workers, cfg.train.dp.threaded, algorithm)?;
         // one strategy for the whole run, built over the same summation
         // schedule the engine reduces with (same collective => the
-        // bit-equivalence contract holds across every layout)
-        let strategy = dist::strategy_for(
-            cfg.train.zero.effective_stage(),
-            cfg.train.dp.workers,
-            dist::collective_for(algorithm),
-        );
+        // bit-equivalence contract holds across every layout). The tcp
+        // endpoint adapts onto the same Collective seam, running the
+        // identical schedule at the group's root.
+        let collective: Arc<dyn dist::Collective> = match &endpoint {
+            Some(ep) => Arc::new(dist::EndpointCollective::new(ep.clone())),
+            None => dist::collective_for(algorithm),
+        };
+        let strategy = dist::strategy_for(cfg.train.zero.effective_stage(), world, collective);
         let pipeline = StepPipeline::new(&cfg.train.pipeline, strategy.clone())?;
         let update = UpdateStage::new(cfg.train.grad_clip);
-        let loader = EpochLoader::new(c.batch_size, cfg.train.dp.workers, cfg.seed);
+        let loader = EpochLoader::new(c.batch_size, world, cfg.seed);
         let train_spec = SynthSpec {
             samples: cfg.train.data.train_samples,
             image_size: c.image_size,
@@ -411,7 +427,7 @@ impl Trainer {
                 s.images_per_sec,
             );
             let every = self.cfg.train.checkpoint_every;
-            if every > 0 && self.history.epochs() % every == 0 {
+            if every > 0 && self.history.epochs() % every == 0 && self.is_primary() {
                 let path = self.checkpoint_path();
                 self.checkpoint().save(&path)?;
                 eprintln!(
@@ -423,6 +439,15 @@ impl Trainer {
             }
         }
         Ok(self.summary())
+    }
+
+    /// Whether this process owns the run's file outputs: rank 0 of a tcp
+    /// group, or the only process of a local run. Every rank holds the
+    /// full (bitwise-identical) model state, so any one of them could
+    /// write the checkpoint — rank 0 does, and the rest skip it rather
+    /// than race on the same path.
+    pub fn is_primary(&self) -> bool {
+        !self.cfg.train.dist.is_tcp() || self.cfg.train.dist.rank == 0
     }
 
     /// Where periodic checkpoints land: `<results_dir>/<run_name>.ckpt`.

@@ -1,0 +1,175 @@
+//! Multi-process TCP parity: real `prelora` OS processes over loopback
+//! TCP must reproduce the in-memory run bit-for-bit.
+//!
+//! Each leg launches one `prelora train` subprocess per rank with
+//! `--dist tcp --rank N --peers ...` and compares rank 0's final
+//! checkpoint — per-epoch losses, grad norms, accuracies, phase-switch
+//! epochs, final base/LoRA parameters and gathered optimizer state —
+//! against a single-process run of the same config with the in-memory
+//! collective (`train.dist.transport = "local"`, two simulated workers).
+//! The run crosses both PreLoRA phase boundaries (Full -> Warmup ->
+//! LoraOnly), and the sweep covers ZeRO off and ZeRO-3 so the wire path
+//! is exercised under both the replicated all-reduce and the terminal
+//! reduce-scatter + parameter sharding.
+//!
+//! Requires `make artifacts` (vit-micro) to have run.
+
+use std::io::Write;
+use std::process::Command;
+
+use prelora::config::RunConfig;
+use prelora::trainer::{Checkpoint, Trainer};
+
+const EPOCHS: usize = 16;
+
+/// The shared run config, written to disk for the subprocesses and parsed
+/// back for the in-process reference leg — one source of truth per leg.
+/// Mirrors `tests/integration.rs::micro_config`: relaxed thresholds so the
+/// micro model crosses both phase boundaries within [`EPOCHS`].
+fn config_toml(results_dir: &std::path::Path, stage: u8) -> String {
+    format!(
+        r#"
+model = "vit-micro"
+artifacts_dir = "{artifacts}"
+results_dir = "{results}"
+run_name = "parity"
+seed = 0
+
+[train]
+epochs = {EPOCHS}
+eval_every = 4
+checkpoint_every = {EPOCHS}
+
+[train.data]
+train_samples = 192
+val_samples = 64
+
+[train.zero]
+stage = {stage}
+
+[prelora]
+tau = 6.0
+zeta = 25.0
+windows = 2
+window_epochs = 2
+warmup_epochs = 2
+"#,
+        artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        results = results_dir.display(),
+    )
+}
+
+/// Two free loopback ports; the probe listeners are dropped before the
+/// subprocesses bind, so a parallel port grab is theoretically possible —
+/// the startup timeout turns that into a loud failure, not a hang.
+fn free_peers() -> Vec<String> {
+    (0..2)
+        .map(|_| {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        })
+        .collect()
+}
+
+fn run_tcp_group(cfg_path: &std::path::Path, peers: &[String]) {
+    let children: Vec<_> = (0..peers.len())
+        .map(|rank| {
+            Command::new(env!("CARGO_BIN_EXE_prelora"))
+                .args([
+                    "train",
+                    "--config",
+                    cfg_path.to_str().unwrap(),
+                    "--run-name",
+                    "parity-tcp",
+                    "--dist",
+                    "tcp",
+                    "--rank",
+                    &rank.to_string(),
+                    "--peers",
+                    &peers.join(","),
+                    "--connect-timeout-ms",
+                    "30000",
+                ])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::piped())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawning rank {rank}: {e}"))
+        })
+        .collect();
+    for (rank, child) in children.into_iter().enumerate() {
+        let out = child.wait_with_output().unwrap();
+        assert!(
+            out.status.success(),
+            "rank {rank} exited with {}\n--- stderr ---\n{}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+/// Per-epoch observables compared bitwise between the two transports.
+fn epoch_bits(ck: &Checkpoint) -> Vec<(u64, u64, u64, u64)> {
+    let tr = ck.trajectory.as_ref().expect("v3 checkpoint must carry the trajectory");
+    tr.stats
+        .iter()
+        .map(|s| {
+            (
+                s.train_loss.to_bits(),
+                s.grad_norm.to_bits(),
+                s.train_acc.to_bits(),
+                // NaN on non-eval epochs: both legs skip the same epochs,
+                // and f64::NAN has one bit pattern here
+                s.val_loss.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn parity_leg(stage: u8) {
+    let tmp = std::env::temp_dir().join(format!("prelora_tcp_{}_{stage}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let cfg_path = tmp.join("parity.toml");
+    let mut f = std::fs::File::create(&cfg_path).unwrap();
+    f.write_all(config_toml(&tmp, stage).as_bytes()).unwrap();
+    drop(f);
+
+    // in-process reference: the same config, two simulated in-memory
+    // workers (the tcp group's world is the two ranks launched below)
+    let mut cfg = RunConfig::from_toml_file(&cfg_path).unwrap();
+    cfg.train.dp.workers = 2;
+    let mut reference = Trainer::new(cfg).unwrap();
+    reference.run().unwrap();
+    let want = reference.checkpoint();
+    let want_tr = want.trajectory.as_ref().unwrap();
+    assert!(
+        want_tr.switch_epoch.is_some() && want_tr.freeze_epoch.is_some(),
+        "reference run must cross both phase boundaries to make the parity meaningful"
+    );
+
+    // two real OS processes over loopback; rank 0 writes the checkpoint
+    run_tcp_group(&cfg_path, &free_peers());
+    let got = Checkpoint::load(tmp.join("parity-tcp.ckpt")).unwrap();
+    let got_tr = got.trajectory.as_ref().unwrap();
+
+    assert_eq!(epoch_bits(&got), epoch_bits(&want), "stage {stage}: per-epoch observables");
+    assert_eq!(got_tr.switch_epoch, want_tr.switch_epoch, "stage {stage}: switch epoch");
+    assert_eq!(got_tr.freeze_epoch, want_tr.freeze_epoch, "stage {stage}: freeze epoch");
+    assert_eq!(got.epoch, want.epoch);
+    assert_eq!(got.base, want.base, "stage {stage}: final base params must be bitwise equal");
+    assert_eq!(got.lora, want.lora, "stage {stage}: final LoRA params must be bitwise equal");
+    assert_eq!(got.ranks, want.ranks, "stage {stage}: adapter rank assignment");
+    assert_eq!(got.opt_base, want.opt_base, "stage {stage}: gathered base optimizer state");
+    assert_eq!(got.opt_lora, want.opt_lora, "stage {stage}: gathered LoRA optimizer state");
+
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn two_processes_over_loopback_match_the_in_memory_run_bitwise() {
+    parity_leg(0);
+}
+
+#[test]
+fn two_processes_over_loopback_match_the_in_memory_run_bitwise_under_zero3() {
+    parity_leg(3);
+}

@@ -50,7 +50,8 @@ fn data(m: &Manifest, samples: usize) -> Dataset {
 /// 15 bytes but every prefix below fits.
 #[cfg(target_os = "linux")]
 fn prelora_threads() -> usize {
-    let names = ["dp-worker", "bucket-reduce", "reduce-stage", "data-prefetch"];
+    let names =
+        ["dp-worker", "bucket-reduce", "reduce-stage", "data-prefetch", "net-tx-r", "net-rx-r"];
     std::fs::read_dir("/proc/self/task")
         .map(|it| {
             it.filter_map(|e| e.ok())
@@ -115,6 +116,40 @@ fn engine_drop_joins_its_worker_threads() {
     assert!(prelora_threads() >= before + 2, "threaded engine must spawn its workers");
     drop(eng);
     assert_threads_return_to(before, "GradEngine::drop must join its workers");
+}
+
+#[test]
+#[cfg(target_os = "linux")]
+fn tcp_endpoint_teardown_joins_its_per_peer_net_workers() {
+    use prelora::dist::{CollectiveEndpoint, TcpEndpoint};
+    let _g = lock();
+    let before = prelora_threads();
+    // grab a free loopback port for rank 0's rendezvous; rank 1's entry is
+    // identity only (leaves dial peers[0]), so any placeholder works
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let peers = vec![addr, "127.0.0.1:1".to_string()];
+    let timeout = std::time::Duration::from_secs(10);
+    let p0 = peers.clone();
+    let root = std::thread::spawn(move || TcpEndpoint::connect(Algorithm::Naive, 0, &p0, timeout));
+    let leaf = TcpEndpoint::connect(Algorithm::Naive, 1, &peers, timeout).unwrap();
+    let root = root.join().unwrap().unwrap();
+    // one live op proves the per-peer send/recv workers are up, then
+    // teardown must join every "net-tx-r*"/"net-rx-r*" thread
+    let l = std::thread::spawn(move || {
+        let mut buf = vec![1.0f32, 2.0];
+        leaf.all_reduce(&mut buf).unwrap();
+        buf
+    });
+    let mut buf = vec![3.0f32, 4.0];
+    root.all_reduce(&mut buf).unwrap();
+    assert!(prelora_threads() > before, "live tcp endpoints must run net worker threads");
+    assert_eq!(l.join().unwrap(), buf, "both ranks see the same reduced buffer");
+    assert_eq!(buf, vec![2.0, 3.0], "two-rank mean of [1,2] and [3,4]");
+    drop(root);
+    assert_threads_return_to(before, "TcpEndpoint teardown must join its net workers");
 }
 
 #[test]
