@@ -562,6 +562,13 @@ fn bench_tcp(b: &mut Bench, name: &str) -> Option<f64> {
 }
 
 fn main() {
+    // fault injection (train.faults) is an adversity-testing knob; a
+    // benched step must never carry an armed plan, or the gated numbers
+    // would measure the faults instead of the pipeline
+    assert!(
+        !TrainConfig::default().faults.is_enabled(),
+        "benches must run with train.faults disabled"
+    );
     let smoke = std::env::var("PRELORA_BENCH_SMOKE").is_ok_and(|v| v == "1");
     let mut b = if smoke { Bench::smoke() } else { Bench::heavy() };
     // PRELORA_BENCH_MODELS=vit-small,... restricts the sweep

@@ -610,6 +610,33 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Adversity-testing seam (`ckpt-torn@e.0.0:byte=b`): save normally,
+    /// then truncate the file at byte `byte` — simulating a crash that
+    /// left a torn write under the checkpoint's name, the failure mode
+    /// the atomic tmp+rename path prevents but a rename-free filesystem
+    /// (or a lost directory entry) can still produce. A cut inside the
+    /// header line fails the next load's header parse; a cut inside the
+    /// payload fails its strict length check — either way loudly, never
+    /// as silent corruption (asserted by `rust/tests/adversity.rs`).
+    pub fn save_torn(&self, path: impl AsRef<Path>, byte: u64) -> Result<()> {
+        let path = path.as_ref();
+        self.save(path)?;
+        let file = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening {} to tear it", path.display()))?;
+        let len = file.metadata()?.len();
+        ensure!(
+            byte < len,
+            "torn-write fault asks for a cut at byte {byte} but the checkpoint is only {len} \
+             bytes — the fault would be a no-op, which is never what an adversity cell means"
+        );
+        file.set_len(byte)
+            .with_context(|| format!("truncating {} at byte {byte}", path.display()))?;
+        file.sync_all().context("syncing the torn checkpoint")?;
+        Ok(())
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let file = std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;

@@ -110,6 +110,7 @@ impl RunConfig {
                     .collect();
             }
             "train.dist.connect_timeout_ms" => t.dist.connect_timeout_ms = v.as_u64()?,
+            "train.faults.plan" => t.faults.plan = v.as_str()?.to_string(),
             "train.pipeline.enabled" => t.pipeline.enabled = v.as_bool()?,
             "train.pipeline.prefetch_depth" => t.pipeline.prefetch_depth = v.as_usize()?,
             // deprecated shim (same treatment as train.zero.enabled below)
@@ -211,6 +212,13 @@ impl RunConfig {
         // into the stage it means, so re-emitted configs never carry it
         s.push_str("[train.zero]\n");
         s.push_str(&format!("stage = {}\n\n", t.zero.effective_stage().as_u8()));
+        // fault injection is off by default and stays out of the TOML
+        // when disabled (same treatment as `resume`); the plan re-emits
+        // in its canonical sorted spelling
+        if t.faults.is_enabled() {
+            s.push_str("[train.faults]\n");
+            s.push_str(&format!("plan = {}\n\n", escape_str(&t.faults.canonical_plan())));
+        }
         s.push_str("[prelora]\n");
         s.push_str(&format!("enabled = {}\n", p.enabled));
         s.push_str(&format!("windows = {}\n", p.windows));
@@ -453,6 +461,31 @@ mod tests {
         // absent by default, and absent keys stay out of the TOML
         assert!(RunConfig::default().train.resume.is_none());
         assert!(!RunConfig::default().to_toml().contains("resume"));
+    }
+
+    #[test]
+    fn faults_plan_key_parses_canonicalizes_and_roundtrips() {
+        let cfg = RunConfig::from_toml_str(
+            "[train.faults]\nplan = \" panic@2.0.1 ; straggle@1.0.0:ms=3 \"\n",
+        )
+        .unwrap();
+        assert!(cfg.train.faults.is_enabled());
+        // re-emission is canonical: trimmed, sorted by coordinate
+        let text = cfg.to_toml();
+        assert!(
+            text.contains("[train.faults]\nplan = \"straggle@1.0.0:ms=3;panic@2.0.1\""),
+            "{text}"
+        );
+        let back = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.train.faults.canonical_plan(), cfg.train.faults.canonical_plan());
+        // off by default, and the disabled block stays out of the TOML
+        assert!(!RunConfig::default().train.faults.is_enabled());
+        assert!(!RunConfig::default().to_toml().contains("[train.faults]"));
+        // malformed plans are rejected at validate, with the key named
+        let err = RunConfig::from_toml_str("[train.faults]\nplan = \"meteor@1.0.0\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("train.faults.plan"), "{err}");
     }
 
     #[test]

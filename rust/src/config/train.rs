@@ -237,6 +237,45 @@ impl PipelineConfig {
     }
 }
 
+/// Deterministic fault injection (`prelora::faults`). Off by default:
+/// with an empty plan no [`crate::faults::FaultInjector`] is built and
+/// every injection site reduces to a single `Option` check — the full
+/// parity and bench suites run bitwise-unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct FaultsConfig {
+    /// Fault plan spec: `;`-separated `kind@epoch.step.rank[:key=value]`
+    /// entries (see `prelora::faults::FaultPlan` for the grammar and the
+    /// kind catalog). Empty = no injection. Validated by
+    /// [`TrainConfig::validate`]; re-emitted canonically (sorted entries,
+    /// fixed parameter order) by `RunConfig::to_toml`.
+    pub plan: String,
+}
+
+impl FaultsConfig {
+    pub fn is_enabled(&self) -> bool {
+        !self.plan.trim().is_empty()
+    }
+
+    /// Build the run's injector: `None` when the plan is empty (the
+    /// zero-overhead default), an error when the spec is malformed.
+    pub fn injector(&self) -> Result<Option<std::sync::Arc<crate::faults::FaultInjector>>> {
+        if !self.is_enabled() {
+            return Ok(None);
+        }
+        let plan = crate::faults::FaultPlan::parse(&self.plan)?;
+        Ok(Some(std::sync::Arc::new(crate::faults::FaultInjector::new(plan))))
+    }
+
+    /// The canonical spelling of the plan for config re-emission. Falls
+    /// back to the raw string if the plan does not parse (validate()
+    /// rejects that on every load path, so the fallback is defensive).
+    pub fn canonical_plan(&self) -> String {
+        crate::faults::FaultPlan::parse(&self.plan)
+            .map(|p| p.to_spec())
+            .unwrap_or_else(|_| self.plan.trim().to_string())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Total training epochs (paper: 300 on ImageNet; scaled here).
@@ -271,6 +310,7 @@ pub struct TrainConfig {
     pub dist: DistConfig,
     pub pipeline: PipelineConfig,
     pub zero: ZeroConfig,
+    pub faults: FaultsConfig,
 }
 
 impl Default for TrainConfig {
@@ -295,6 +335,7 @@ impl Default for TrainConfig {
             dist: DistConfig::default(),
             pipeline: PipelineConfig::default(),
             zero: ZeroConfig::default(),
+            faults: FaultsConfig::default(),
         }
     }
 }
@@ -350,6 +391,10 @@ impl TrainConfig {
             );
         }
         ensure!(self.dist.connect_timeout_ms >= 1, "train.dist.connect_timeout_ms >= 1");
+        if self.faults.is_enabled() {
+            crate::faults::FaultPlan::parse(&self.faults.plan)
+                .map_err(|e| anyhow::anyhow!("train.faults.plan: {e:#}"))?;
+        }
         Ok(())
     }
 
@@ -496,6 +541,16 @@ impl TrainConfig {
                  (--dist tcp) if a multi-process group is what you mean",
                 self.dist.peers.len(),
                 self.dist.rank
+            ));
+        }
+        if self.faults.is_enabled() {
+            let entries = crate::faults::FaultPlan::parse(&self.faults.plan)
+                .map(|p| p.faults().len())
+                .unwrap_or(0);
+            warnings.push(format!(
+                "train.faults.plan is set ({entries} entries): fault injection is armed — \
+                 this run may stall, abort, drop peers or tear checkpoints by design \
+                 (adversity testing; see docs/testing.md)"
             ));
         }
         warnings
@@ -725,6 +780,29 @@ mod tests {
         cfg.dist.transport = "tcp".into();
         cfg.dist.peers = vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()];
         assert!(cfg.lint().is_empty(), "{:?}", cfg.lint());
+    }
+
+    #[test]
+    fn faults_plan_is_validated_linted_and_canonicalized() {
+        // the default is off: no injector, no lint noise, no emission
+        let cfg = TrainConfig::default();
+        assert!(!cfg.faults.is_enabled());
+        assert!(cfg.faults.injector().unwrap().is_none());
+        cfg.validate().unwrap();
+        // a valid plan validates, builds an injector, and lints loudly
+        let mut cfg = TrainConfig::default();
+        cfg.faults.plan = " panic@2.0.1 ; straggle@1.0.0:ms=3 ".into();
+        cfg.validate().unwrap();
+        assert!(cfg.faults.injector().unwrap().is_some());
+        assert!(cfg.lint().iter().any(|m| m.contains("fault injection is armed")), "{:?}", cfg.lint());
+        // canonical re-emission sorts entries and strips the whitespace
+        assert_eq!(cfg.faults.canonical_plan(), "straggle@1.0.0:ms=3;panic@2.0.1");
+        // a malformed plan is a hard validate error naming the key
+        let mut cfg = TrainConfig::default();
+        cfg.faults.plan = "meteor@1.0.0".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("train.faults.plan"), "{err}");
+        assert!(err.contains("unknown fault kind"), "{err}");
     }
 
     #[test]

@@ -248,6 +248,18 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
+    /// Guard an untrusted element count before reserving for it: `count`
+    /// elements of at least `min_bytes` each must still fit in the
+    /// remaining payload, so a corrupt count can never demand more
+    /// memory than the (already length-capped) frame itself carries.
+    fn claim(&self, count: usize, min_bytes: usize, what: &str) -> Result<()> {
+        ensure!(
+            self.at + count * min_bytes <= self.b.len(),
+            "payload truncated ({count} {what} declared)"
+        );
+        Ok(())
+    }
+
     fn done(&self) -> Result<()> {
         ensure!(self.at == self.b.len(), "{} trailing payload bytes", self.b.len() - self.at);
         Ok(())
@@ -313,6 +325,7 @@ pub(crate) fn decode_out(payload: &[u8]) -> Result<OpOut> {
         1 => OpOut::Full(c.f32s()?),
         2 => {
             let k = c.u32()? as usize;
+            c.claim(k, 4, "chunks")?; // each chunk carries at least its u32 length
             let mut chunks = Vec::with_capacity(k);
             for _ in 0..k {
                 chunks.push(c.f32s()?);
@@ -321,6 +334,7 @@ pub(crate) fn decode_out(payload: &[u8]) -> Result<OpOut> {
         }
         3 => {
             let k = c.u32()? as usize;
+            c.claim(k, 4, "rows")?; // each row carries at least its u32 length
             let mut rows = Vec::with_capacity(k);
             for _ in 0..k {
                 rows.push(c.f64s()?);
@@ -439,5 +453,94 @@ mod tests {
         let mut bytes = encode_out(&OpOut::Unit);
         bytes.push(0);
         assert!(decode_out(&bytes).is_err());
+    }
+
+    /// Deterministic xorshift64 — a seeded stand-in for a fuzzer's
+    /// corpus, so the "arbitrary bytes" sweep below replays bit-for-bit.
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    #[test]
+    fn arbitrary_byte_streams_never_panic_any_decoder() {
+        let mut rng = 0x9e37_79b9_7f4a_7c15u64;
+        for round in 0..2048u32 {
+            let len = (xorshift(&mut rng) % 96) as usize;
+            let mut bytes: Vec<u8> = (0..len).map(|_| xorshift(&mut rng) as u8).collect();
+            if bytes.len() >= 4 {
+                if round % 2 == 0 {
+                    // force a plausible length prefix so the decode
+                    // reaches the CRC/version/kind checks instead of
+                    // stopping at the length-cap gate
+                    let small = (xorshift(&mut rng) % 80) as u32;
+                    bytes[..4].copy_from_slice(&small.to_le_bytes());
+                } else {
+                    // force the prefix past the cap: the gate must fire
+                    // before the reader can allocate for the phantom body
+                    bytes[3] |= 0x80;
+                }
+            }
+            // Err is the expected outcome; a panic or runaway allocation
+            // is the failure mode under test
+            let _ = Frame::read_from(&mut bytes.as_slice());
+            let _ = decode_op(&bytes);
+            let _ = decode_out(&bytes);
+        }
+    }
+
+    #[test]
+    fn every_truncation_of_a_valid_frame_errors_cleanly() {
+        let frames = [
+            Frame { kind: FrameKind::Hello, rank: 2, seq: 0, payload: 4u32.to_le_bytes().into() },
+            Frame {
+                kind: FrameKind::Op,
+                rank: 1,
+                seq: 41,
+                payload: encode_op(&OpDesc::AllReduce { len: 3 }, &[1.0, 2.0, 3.0], &[]),
+            },
+            Frame {
+                kind: FrameKind::Result,
+                rank: 0,
+                seq: 41,
+                payload: encode_out(&OpOut::Full(vec![0.5; 3])),
+            },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Frame::read_from(&mut &bytes[..cut]).is_err(),
+                    "a frame cut to {cut} of {} bytes must not decode",
+                    bytes.len()
+                );
+            }
+            assert_eq!(Frame::read_from(&mut bytes.as_slice()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn corrupt_element_counts_are_rejected_before_any_allocation() {
+        // a Chunks result claiming u32::MAX chunks in a 9-byte payload:
+        // the count gate must fire before Vec::with_capacity can reserve
+        // gigabytes for the phantom chunk table
+        let mut bytes = vec![2u8];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 4]);
+        let e = decode_out(&bytes).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // same for a Scalars result's row count
+        bytes[0] = 3;
+        assert!(decode_out(&bytes).is_err());
+        // and for a declared f32 run inside an op contribution
+        let mut op = vec![1u8]; // AllReduce tag
+        op.extend_from_slice(&[0u8; 24]); // three u64 args
+        op.extend_from_slice(&u32::MAX.to_le_bytes()); // n_f32
+        let e = decode_op(&op).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
     }
 }

@@ -48,6 +48,7 @@
 //! worker thread — no leaked `net-*` threads, which
 //! `rust/tests/shutdown.rs` asserts.
 
+use std::io::Write as _;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -57,6 +58,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::dp::Algorithm;
+use crate::faults::{FaultInjector, NetFault};
 
 use super::collective::{compute_op, CollectiveEndpoint, OpDesc, OpOut};
 
@@ -90,6 +92,10 @@ struct PeerLink {
     stream: TcpStream,
     tx_join: Option<thread::JoinHandle<()>>,
     rx_join: Option<thread::JoinHandle<()>>,
+    /// Armed by the `net-corrupt` fault: the tx worker flips one bit of
+    /// the next outbound frame's CRC trailer, then disarms. Always false
+    /// outside adversity testing.
+    corrupt_next: Arc<AtomicBool>,
 }
 
 impl PeerLink {
@@ -101,13 +107,24 @@ impl PeerLink {
         let mut rd = stream.try_clone().context("cloning the stream for the recv worker")?;
 
         let (tx, outbound) = mpsc::channel::<Frame>();
+        let corrupt_next = Arc::new(AtomicBool::new(false));
+        let corrupt = corrupt_next.clone();
         // lint: thread: joined — PeerLink::close drops the sender (ending
         // this loop) and joins the handle; TcpEndpoint::drop calls close.
         let tx_join = thread::Builder::new()
             .name(format!("net-tx-r{peer}"))
             .spawn(move || {
                 while let Ok(f) = outbound.recv() {
-                    if f.write_to(&mut wr).is_err() {
+                    let mut bytes = f.encode();
+                    if corrupt.swap(false, Ordering::SeqCst) {
+                        // net-corrupt fault: flip one bit of the CRC
+                        // trailer (every frame ends in it), so the peer's
+                        // Frame::read_from rejects the frame exactly like
+                        // real wire corruption
+                        let n = bytes.len();
+                        bytes[n - 1] ^= 0x01;
+                    }
+                    if wr.write_all(&bytes).is_err() {
                         // The rx side surfaces the dead connection with
                         // context; nothing useful to add from here.
                         break;
@@ -142,7 +159,21 @@ impl PeerLink {
             })
             .context("spawning the recv worker")?;
 
-        Ok(Self { peer, tx: Some(tx), rx, stream, tx_join: Some(tx_join), rx_join: Some(rx_join) })
+        Ok(Self {
+            peer,
+            tx: Some(tx),
+            rx,
+            stream,
+            tx_join: Some(tx_join),
+            rx_join: Some(rx_join),
+            corrupt_next,
+        })
+    }
+
+    /// Arm the `net-corrupt` fault: the next outbound frame on this link
+    /// goes out with a flipped CRC bit.
+    fn arm_corrupt(&self) {
+        self.corrupt_next.store(true, Ordering::SeqCst);
     }
 
     fn send(&self, f: Frame) -> Result<()> {
@@ -213,6 +244,10 @@ pub struct TcpEndpoint {
     timeout: Duration,
     shutdown: Arc<AtomicBool>,
     inner: Mutex<Inner>,
+    /// Deterministic fault injection (`train.faults.plan`): consulted
+    /// once per op against the pipeline-driven (epoch, step) clock.
+    /// `None` outside adversity testing.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl TcpEndpoint {
@@ -226,6 +261,20 @@ impl TcpEndpoint {
         rank: usize,
         peers: &[String],
         timeout: Duration,
+    ) -> Result<Arc<Self>> {
+        Self::connect_with_faults(alg, rank, peers, timeout, None)
+    }
+
+    /// [`connect`](Self::connect) plus a fault injector (adversity
+    /// testing): the endpoint consults the injector's (epoch, step)
+    /// clock once per collective op and applies any `net-*` fault
+    /// scheduled for this rank at that coordinate.
+    pub fn connect_with_faults(
+        alg: Algorithm,
+        rank: usize,
+        peers: &[String],
+        timeout: Duration,
+        faults: Option<Arc<FaultInjector>>,
     ) -> Result<Arc<Self>> {
         let world = peers.len();
         ensure!(world >= 1, "tcp transport needs at least one peer address");
@@ -245,6 +294,7 @@ impl TcpEndpoint {
             timeout,
             shutdown,
             inner: Mutex::new(Inner { seq: 1, failed: None, links }),
+            faults,
         }))
     }
 
@@ -259,6 +309,13 @@ impl TcpEndpoint {
         if let Some(f) = &g.failed {
             bail!("collective endpoint already failed: {f}");
         }
+        // adversity testing: one injection point guards every wire op —
+        // the first-class generalization of the ad-hoc per-test fakes
+        // (silent sockets, hand-corrupted frames) this replaces. A plain
+        // `None` check outside adversity runs.
+        if let Some(fault) = self.faults.as_ref().and_then(|i| i.net_fault(self.rank)) {
+            self.apply_net_fault(fault, &mut g)?;
+        }
         let seq = g.seq;
         g.seq += 1;
         let out = drive(self.alg, self.rank, self.timeout, &g.links, seq, desc, data, scalars);
@@ -266,6 +323,74 @@ impl TcpEndpoint {
             g.failed = Some(format!("{e:#}"));
         }
         out.with_context(|| format!("collective op {desc:?} (seq {seq}) at rank {}", self.rank))
+    }
+
+    /// Apply one scheduled wire fault. Called with the endpoint lock held,
+    /// before the op's seq is stamped.
+    ///
+    /// * `net-delay` sleeps and proceeds — pure scheduling, so the run's
+    ///   trajectory must not change by a bit (the adversity suite asserts
+    ///   exactly that).
+    /// * `net-stall` holds the socket open past the peers' stall budget
+    ///   without contributing, then abandons the op: the peers' watchdog
+    ///   (`recv_timeout`) fires their "rank N stalled" error while this
+    ///   rank fails with its own injection notice.
+    /// * `net-drop` closes the connections outright: peers observe the
+    ///   dead socket as an IO error naming this rank.
+    /// * `net-corrupt` arms a one-shot CRC-bit flip on the next outbound
+    ///   frame of every link: receivers reject it as wire corruption.
+    fn apply_net_fault(&self, fault: NetFault, g: &mut Inner) -> Result<()> {
+        let (epoch, step) = match &self.faults {
+            Some(i) => i.position(),
+            None => (0, 0),
+        };
+        match fault {
+            NetFault::Delay { ms } => {
+                thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            NetFault::Stall { ms } => {
+                thread::sleep(Duration::from_millis(ms));
+                let msg = format!(
+                    "fault injected: rank {} stalled {ms} ms and abandoned the collective op \
+                     (epoch {epoch}, step {step})",
+                    self.rank
+                );
+                g.failed = Some(msg.clone());
+                bail!(msg);
+            }
+            NetFault::Drop => {
+                // quiet-on-shutdown for our own rx workers; the peers'
+                // (whose flag is untouched) surface the dead socket loudly
+                self.shutdown.store(true, Ordering::SeqCst);
+                match &mut g.links {
+                    Links::Root(peers) => {
+                        for p in peers.iter_mut() {
+                            p.close();
+                        }
+                    }
+                    Links::Leaf(p) => p.close(),
+                }
+                let msg = format!(
+                    "fault injected: rank {} dropped its connections (epoch {epoch}, \
+                     step {step})",
+                    self.rank
+                );
+                g.failed = Some(msg.clone());
+                bail!(msg);
+            }
+            NetFault::Corrupt => {
+                match &g.links {
+                    Links::Root(peers) => {
+                        for p in peers {
+                            p.arm_corrupt();
+                        }
+                    }
+                    Links::Leaf(p) => p.arm_corrupt(),
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -366,6 +491,7 @@ fn accept_peers(
     shutdown: &Arc<AtomicBool>,
 ) -> Result<Vec<PeerLink>> {
     let listener = TcpListener::bind(addr).with_context(|| format!("rank 0: binding {addr}"))?;
+    advertise_addr(&listener)?;
     listener.set_nonblocking(true).context("rank 0: making the listener pollable")?;
     // lint: allow(PL003): connection deadline bookkeeping — wall time
     // gates accept retry/abort and never flows into reduced values.
@@ -411,6 +537,28 @@ fn accept_peers(
         link.send(Frame { kind: FrameKind::Hello, rank: 0, seq: 0, payload: world_payload(world) })?;
     }
     Ok(links)
+}
+
+/// Port-0 rendezvous: when `PRELORA_TCP_ADVERTISE` names a file, rank 0
+/// publishes the address it actually bound there (write-to-temp + atomic
+/// rename, so a polling reader never sees a partial write). This lets a
+/// launcher pass `peers[0] = "127.0.0.1:0"`, have the kernel pick a free
+/// port, and hand the discovered address to the leaf ranks — instead of
+/// racing to re-bind a probed-then-released fixed port.
+fn advertise_addr(listener: &TcpListener) -> Result<()> {
+    let Ok(path) = std::env::var("PRELORA_TCP_ADVERTISE") else {
+        return Ok(());
+    };
+    if path.is_empty() {
+        return Ok(());
+    }
+    let addr = listener.local_addr().context("rank 0: reading the bound address")?;
+    let tmp = format!("{path}.{}.tmp", std::process::id());
+    std::fs::write(&tmp, addr.to_string())
+        .with_context(|| format!("rank 0: writing the advertised address to {tmp}"))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("rank 0: publishing the advertised address at {path}"))?;
+    Ok(())
 }
 
 /// Read one accepted connection's hello and spin up its workers.
@@ -1008,5 +1156,358 @@ mod tests {
         let v = explore(FrameProtocol::new(2, 1, false)).unwrap_err();
         assert_eq!(v.kind, ViolationKind::Invariant);
         assert!(v.message.contains("duplicate"), "{}", v.message);
+    }
+
+    // -----------------------------------------------------------------
+    // First-class fault injection (`crate::faults`): the same wire
+    // failures the ad-hoc fakes above hand-craft, driven through the
+    // production seam a `train.faults` plan uses. An injector left at
+    // its initial (epoch 0, step 0) position arms every `@0.0.r` entry
+    // on the first op.
+    // -----------------------------------------------------------------
+
+    fn armed(plan: &str) -> Option<Arc<FaultInjector>> {
+        Some(Arc::new(FaultInjector::new(crate::faults::FaultPlan::parse(plan).unwrap())))
+    }
+
+    #[test]
+    fn injected_delays_shift_time_but_never_the_numbers() {
+        const N: usize = 17;
+        let run = |f0: Option<Arc<FaultInjector>>, f1: Option<Arc<FaultInjector>>| {
+            let peers = peer_list(2);
+            thread::scope(|s| {
+                let p2 = peers.clone();
+                let leaf = s.spawn(move || {
+                    let ep = TcpEndpoint::connect_with_faults(
+                        Algorithm::Ring,
+                        1,
+                        &p2,
+                        Duration::from_secs(10),
+                        f1,
+                    )
+                    .unwrap();
+                    let mut v = rank_data(1, N);
+                    ep.all_reduce(&mut v).unwrap();
+                    v
+                });
+                let ep = TcpEndpoint::connect_with_faults(
+                    Algorithm::Ring,
+                    0,
+                    &peers,
+                    Duration::from_secs(10),
+                    f0,
+                )
+                .unwrap();
+                let mut v = rank_data(0, N);
+                ep.all_reduce(&mut v).unwrap();
+                (v, leaf.join().unwrap())
+            })
+        };
+        let clean = run(None, None);
+        let slow = run(armed("net-delay@0.0.0:ms=40"), armed("net-delay@0.0.1:ms=25"));
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&clean.0), bits(&clean.1), "all_reduce must agree across ranks");
+        assert_eq!(bits(&clean.0), bits(&slow.0), "a delayed root must not change results");
+        assert_eq!(bits(&clean.1), bits(&slow.1), "a delayed leaf must not change results");
+    }
+
+    #[test]
+    fn an_injected_corrupt_fault_surfaces_as_a_crc_error_at_the_peer() {
+        let peers = peer_list(2);
+        thread::scope(|s| {
+            let p2 = peers.clone();
+            let leaf = s.spawn(move || {
+                let ep = TcpEndpoint::connect_with_faults(
+                    Algorithm::Naive,
+                    1,
+                    &p2,
+                    Duration::from_secs(10),
+                    armed("net-corrupt@0.0.1"),
+                )
+                .unwrap();
+                ep.all_reduce(&mut vec![1.0f32; 4])
+            });
+            let ep = TcpEndpoint::connect(Algorithm::Naive, 0, &peers, Duration::from_secs(10))
+                .unwrap();
+            let e = ep.all_reduce(&mut vec![1.0f32; 4]).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(msg.contains("CRC"), "injected corruption must trip the CRC: {msg}");
+            drop(ep); // closes the sockets, unblocking the waiting leaf
+            assert!(leaf.join().unwrap().is_err(), "the corrupting rank must fail too");
+        });
+        assert_eq!(live_net_threads(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn an_injected_drop_fault_is_loud_on_both_sides() {
+        let peers = peer_list(2);
+        thread::scope(|s| {
+            let p2 = peers.clone();
+            let leaf = s.spawn(move || {
+                let ep = TcpEndpoint::connect_with_faults(
+                    Algorithm::Naive,
+                    1,
+                    &p2,
+                    Duration::from_secs(10),
+                    armed("net-drop@0.0.1"),
+                )
+                .unwrap();
+                ep.all_reduce(&mut vec![2.0f32; 6])
+            });
+            let ep = TcpEndpoint::connect(Algorithm::Naive, 0, &peers, Duration::from_secs(10))
+                .unwrap();
+            let e = ep.all_reduce(&mut vec![2.0f32; 6]).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(msg.contains("rank 1"), "the survivor must name the dead rank: {msg}");
+            let e2 = leaf.join().unwrap().unwrap_err();
+            let m2 = format!("{e2:#}");
+            assert!(
+                m2.contains("fault injected") && m2.contains("dropped"),
+                "the dropped rank must say the fault was deliberate: {m2}"
+            );
+        });
+        assert_eq!(live_net_threads(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn an_injected_stall_trips_the_peer_watchdog() {
+        let peers = peer_list(2);
+        thread::scope(|s| {
+            let p2 = peers.clone();
+            let leaf = s.spawn(move || {
+                let ep = TcpEndpoint::connect_with_faults(
+                    Algorithm::Naive,
+                    1,
+                    &p2,
+                    Duration::from_secs(10),
+                    armed("net-stall@0.0.1:ms=1500"),
+                )
+                .unwrap();
+                ep.all_reduce(&mut vec![0.25f32; 4])
+            });
+            // a short timeout so the root's watchdog fires well before the
+            // stalled rank wakes up
+            let ep = TcpEndpoint::connect(Algorithm::Naive, 0, &peers, Duration::from_millis(500))
+                .unwrap();
+            let e = ep.all_reduce(&mut vec![0.25f32; 4]).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("stalled") && msg.contains("rank 1"),
+                "the stall must be loud and name the rank: {msg}"
+            );
+            let e2 = leaf.join().unwrap().unwrap_err();
+            assert!(format!("{e2:#}").contains("fault injected"), "{e2:#}");
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Exhaustive model of a PeerLink's shutdown protocol (`crate::mc`):
+    // the closer (PeerLink::close via TcpEndpoint::drop), the tx worker
+    // draining its outbound channel, the rx worker blocked on the
+    // socket, and an adversary peer that may sever the remote end at
+    // any moment. Every interleaving must terminate with both workers
+    // joined (no thread leak, no join deadlock), a real peer failure
+    // must surface as a delivered error (an in-flight op is never lost
+    // in silence: the rx worker either delivers `Err` or exits, which
+    // disconnects the inbound channel and unblocks any waiter), and a
+    // graceful close must never masquerade as a peer failure.
+    // -----------------------------------------------------------------
+
+    const CLOSER: usize = 0;
+    const LINK_TX: usize = 1;
+    const LINK_RX: usize = 2;
+    const PEER: usize = 3;
+
+    #[derive(Clone, PartialEq, Eq, Hash)]
+    struct LinkShutdown {
+        /// Real protocol: set the shutdown flag *before* shutting the
+        /// socket down, so the rx worker can tell "our close" from "peer
+        /// died". `false` is the negative control.
+        flag_before_close: bool,
+        /// Real protocol: drop the outbound sender *before* joining the
+        /// tx worker (the drop is what ends its recv loop). `false` is
+        /// the join-deadlock negative control.
+        drop_sender_before_join: bool,
+        shutdown_flag: bool,
+        socket_open: bool,
+        peer_open: bool,
+        /// Frames queued on the outbound channel (in-flight op traffic).
+        queued: u8,
+        sender_alive: bool,
+        /// How many times the adversary may still sever the remote end.
+        peer_drop_budget: u8,
+        tx_done: bool,
+        rx_done: bool,
+        /// The rx worker pushed an `Err` into the inbound channel.
+        err_delivered: bool,
+        /// Closer program counter.
+        pc: u8,
+    }
+
+    impl LinkShutdown {
+        fn new(
+            flag_before_close: bool,
+            drop_sender_before_join: bool,
+            queued: u8,
+            peer_drop_budget: u8,
+        ) -> Self {
+            Self {
+                flag_before_close,
+                drop_sender_before_join,
+                shutdown_flag: false,
+                socket_open: true,
+                peer_open: true,
+                queued,
+                sender_alive: true,
+                peer_drop_budget,
+                tx_done: false,
+                rx_done: false,
+                err_delivered: false,
+                pc: 0,
+            }
+        }
+    }
+
+    impl Model for LinkShutdown {
+        fn threads(&self) -> usize {
+            4
+        }
+
+        fn step(&mut self, tid: usize) -> Step {
+            match tid {
+                CLOSER => match self.pc {
+                    // steps 0–1: shutdown flag and socket shutdown, in
+                    // the order under test
+                    0 | 1 => {
+                        if (self.pc == 0) == self.flag_before_close {
+                            self.shutdown_flag = true;
+                        } else {
+                            self.socket_open = false;
+                        }
+                        self.pc += 1;
+                        Step::Progress
+                    }
+                    // steps 2–3: drop the outbound sender and join the
+                    // tx worker, in the order under test
+                    2 | 3 => {
+                        if (self.pc == 2) == self.drop_sender_before_join {
+                            self.sender_alive = false;
+                            self.pc += 1;
+                            Step::Progress
+                        } else if self.tx_done {
+                            self.pc += 1;
+                            Step::Progress
+                        } else {
+                            Step::Blocked
+                        }
+                    }
+                    4 => {
+                        // join the rx worker
+                        if self.rx_done {
+                            self.pc += 1;
+                            Step::Progress
+                        } else {
+                            Step::Blocked
+                        }
+                    }
+                    _ => Step::Done,
+                },
+                LINK_TX => {
+                    if self.tx_done {
+                        Step::Done
+                    } else if self.queued > 0 {
+                        // pop a frame and write it; a dead socket on
+                        // either end is a write error that ends the loop
+                        self.queued -= 1;
+                        if !self.socket_open || !self.peer_open {
+                            self.tx_done = true;
+                        }
+                        Step::Progress
+                    } else if !self.sender_alive {
+                        // recv on a closed, drained channel: loop ends
+                        self.tx_done = true;
+                        Step::Progress
+                    } else {
+                        Step::Blocked // recv on an empty, open channel
+                    }
+                }
+                LINK_RX => {
+                    if self.rx_done {
+                        Step::Done
+                    } else if self.socket_open && self.peer_open {
+                        // blocked in read_from; the peer never speaks in
+                        // this model, so only a dead socket unblocks us
+                        Step::Blocked
+                    } else {
+                        // read error: quiet exit if we are shutting down,
+                        // otherwise surface the failure to the op waiter
+                        if !self.shutdown_flag {
+                            self.err_delivered = true;
+                        }
+                        self.rx_done = true;
+                        Step::Progress
+                    }
+                }
+                PEER => {
+                    if self.peer_drop_budget == 0 {
+                        Step::Done
+                    } else {
+                        self.peer_drop_budget -= 1;
+                        self.peer_open = false;
+                        Step::Progress
+                    }
+                }
+                _ => Step::Done,
+            }
+        }
+
+        fn check(&self) -> Result<(), String> {
+            // an error with the peer still connected can only have come
+            // from our own socket shutdown: a graceful close leaked out
+            // as a fake peer failure
+            if self.err_delivered && self.peer_open {
+                return Err(
+                    "graceful close delivered a spurious error: the rx worker saw its \
+                     own socket shut down and reported it as a peer failure"
+                        .into(),
+                );
+            }
+            Ok(())
+        }
+
+        fn accept(&self) -> Result<(), String> {
+            if !self.tx_done || !self.rx_done || self.pc < 5 {
+                return Err("a link worker outlived close(): thread leak".into());
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn link_close_is_quiet_and_leak_free_in_every_interleaving() {
+        // sweep in-flight traffic × whether the peer drops mid-close
+        for queued in 0..=2u8 {
+            for budget in 0..=1u8 {
+                let r = explore(LinkShutdown::new(true, true, queued, budget))
+                    .unwrap_or_else(|v| {
+                        panic!("queued={queued} budget={budget}: {v}");
+                    });
+                assert!(r.terminals >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn closing_the_socket_before_the_shutdown_flag_leaks_a_spurious_error() {
+        let v = explore(LinkShutdown::new(false, true, 0, 0)).unwrap_err();
+        assert_eq!(v.kind, ViolationKind::Invariant);
+        assert!(v.message.contains("spurious"), "{}", v.message);
+    }
+
+    #[test]
+    fn joining_the_tx_worker_before_dropping_its_sender_deadlocks() {
+        let v = explore(LinkShutdown::new(true, false, 0, 0)).unwrap_err();
+        assert_eq!(v.kind, ViolationKind::Deadlock);
+        assert!(!v.schedule.is_empty(), "counterexample schedule must replay");
     }
 }

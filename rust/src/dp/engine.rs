@@ -8,6 +8,7 @@ use crate::sync::{mpsc, thread, Arc};
 
 use super::allreduce::{reduce_owned, reduce_scatter, Algorithm, BucketPlan, Reduced};
 use crate::data::Batch;
+use crate::faults::ComputeFault;
 use crate::manifest::Manifest;
 use crate::runtime::{Input, Runtime};
 
@@ -277,6 +278,9 @@ struct Job {
     /// Bucketed-sync route for this step (cloned per job; `None` =
     /// whole-buffer gradients flow back through the results channel).
     route: Option<BucketRoute>,
+    /// Injected fault for this worker's slice of the step (`None` on
+    /// every job outside adversity testing).
+    fault: Option<ComputeFault>,
 }
 
 struct WorkerOut {
@@ -385,6 +389,10 @@ pub struct GradEngine {
     parked: Option<Vec<WorkerOut>>,
     /// Bucketed-sync route for training steps (`None` = whole-buffer).
     route: Option<BucketRoute>,
+    /// Per-worker injected faults armed for the NEXT submitted training
+    /// step, then consumed by it (empty outside adversity testing — the
+    /// hot path pays one `Vec::is_empty`-grade check per step).
+    step_faults: Vec<Option<ComputeFault>>,
 }
 
 impl GradEngine {
@@ -410,6 +418,7 @@ impl GradEngine {
             in_flight: 0,
             parked: None,
             route: None,
+            step_faults: Vec::new(),
         };
         if engine.threaded {
             for w in 0..workers {
@@ -455,6 +464,14 @@ impl GradEngine {
                             // error ever arrives (model-checked in
                             // tests/loom_bucket.rs).
                             let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                // injected fault fires first: a straggler
+                                // sleeps (then computes normally), an abort
+                                // errors out, a panic unwinds into the catch
+                                // above — all surface exactly like the real
+                                // failure they model
+                                if let Some(f) = &job.fault {
+                                    f.fire()?;
+                                }
                                 let lora = match (&job.lora, &job.acfg) {
                                     (Some(l), Some(a)) => Some((l.as_slice(), a.as_slice())),
                                     _ => None,
@@ -539,6 +556,15 @@ impl GradEngine {
         self.route = route;
     }
 
+    /// Arm per-worker injected faults for the next training step (index =
+    /// worker id; consumed by that step's submit). Called by the pipeline
+    /// before each submit when a fault plan is active; outside adversity
+    /// testing the list stays empty and the step path is unchanged.
+    pub fn set_step_faults(&mut self, faults: Vec<Option<ComputeFault>>) {
+        debug_assert_eq!(self.in_flight, 0, "fault change with a step in flight");
+        self.step_faults = faults;
+    }
+
     /// Threaded fan-out: snapshot the parameters once, send one job per
     /// worker. Every successful send increments `in_flight`, so an error
     /// mid-loop leaves an exact count for [`drain`](Self::drain) /
@@ -558,8 +584,14 @@ impl GradEngine {
             Some((l, a)) => (Some(Arc::new(l.to_vec())), Some(Arc::new(a.to_vec()))),
             None => (None, None),
         };
-        // eval jobs produce no gradients, so they never publish buckets
+        // eval jobs produce no gradients, so they never publish buckets —
+        // and injected faults target training steps only
         let route = if mode.is_some() { self.route.clone() } else { None };
+        let mut faults = if mode.is_some() {
+            std::mem::take(&mut self.step_faults)
+        } else {
+            Vec::new()
+        };
         for (w, batch) in batches.into_iter().enumerate() {
             let job = Job {
                 mode,
@@ -569,6 +601,7 @@ impl GradEngine {
                 acfg: acfg_arc.clone(),
                 batch,
                 route: route.clone(),
+                fault: faults.get_mut(w).and_then(Option::take),
             };
             self.workers[w]
                 .tx
@@ -631,12 +664,21 @@ impl GradEngine {
         } else {
             // sequential path: zero-copy borrows straight into the runtime,
             // executed eagerly (there is no background thread to defer to)
+            let mut faults = std::mem::take(&mut self.step_faults);
             let rt = self
                 .local
                 .as_mut()
                 .ok_or_else(|| anyhow!("sequential engine has no local runtime"))?;
             let mut outs = Vec::with_capacity(n);
             for (w, batch) in batches.iter().enumerate() {
+                // the same fault surface as the threaded path: a panic
+                // fault unwinds into the catch and comes back as the
+                // worker-panicked error instead of crashing the leader
+                if let Some(f) = faults.get_mut(w).and_then(Option::take) {
+                    std::panic::catch_unwind(AssertUnwindSafe(|| f.fire())).unwrap_or_else(
+                        |p| Err(anyhow!("worker {w} panicked: {}", panic_message(&*p))),
+                    )?;
+                }
                 let mut o = run_job(rt, &self.manifest, Some(mode), false, base, lora, batch)?;
                 o.worker = w;
                 if let Some(route) = self.route.as_ref() {
@@ -921,6 +963,56 @@ mod tests {
         assert_eq!(got, plan.count() * workers);
         let r2 = reduce_owned(Algorithm::Tree, per_worker).unwrap();
         assert_eq!(r2, want, "bucketed slices must reduce bitwise to the whole buffer");
+    }
+
+    #[test]
+    fn injected_faults_fire_on_the_armed_step_only() {
+        use crate::faults::ComputeFaultKind;
+        let m = micro();
+        let d = data(&m, 64);
+        let workers = 2;
+        let loader = EpochLoader::new(m.config.batch_size, workers, 0);
+        let base = m.load_init_base().unwrap();
+        let batches = loader.step_batches(&d, 0, 0);
+        let mut eng = GradEngine::new(m.clone(), workers, false, Algorithm::Tree).unwrap();
+        let clean = eng.compute(StepMode::Full, &base, None, batches.clone()).unwrap();
+
+        // a straggler sleeps but must not change a bit of the step
+        eng.set_step_faults(vec![Some(ComputeFault {
+            kind: ComputeFaultKind::Straggle { ms: 5 },
+            epoch: 0,
+            step: 0,
+        })]);
+        let slow = eng.compute(StepMode::Full, &base, None, batches.clone()).unwrap();
+        assert_eq!(clean.d_base, slow.d_base, "straggler changed the gradients");
+        assert_eq!(clean.loss, slow.loss);
+
+        // an abort is a loud contextful error naming the coordinate
+        eng.set_step_faults(vec![
+            None,
+            Some(ComputeFault { kind: ComputeFaultKind::Abort, epoch: 3, step: 1 }),
+        ]);
+        let err =
+            format!("{:#}", eng.compute(StepMode::Full, &base, None, batches.clone()).unwrap_err());
+        assert!(err.contains("fault injected"), "{err}");
+        assert!(err.contains("epoch 3, step 1"), "{err}");
+        eng.drain();
+
+        // a panic fault surfaces as the worker-panicked error, not a crash
+        eng.set_step_faults(vec![Some(ComputeFault {
+            kind: ComputeFaultKind::Panic,
+            epoch: 0,
+            step: 0,
+        })]);
+        let err =
+            format!("{:#}", eng.compute(StepMode::Full, &base, None, batches.clone()).unwrap_err());
+        assert!(err.contains("worker 0 panicked"), "{err}");
+        assert!(err.contains("fault injected"), "{err}");
+        eng.drain();
+
+        // the armed faults are consumed: the next step runs clean
+        let again = eng.compute(StepMode::Full, &base, None, batches).unwrap();
+        assert_eq!(clean.d_base, again.d_base);
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! `faults` — deterministic, seed-driven fault injection.
+//!
+//! A [`FaultPlan`] schedules named faults at exact `(epoch, step, rank)`
+//! coordinates, parsed from a compact spec string (config key
+//! `train.faults.plan`, CLI `--faults`). The plan is pure data: the same
+//! spec against the same seed produces the same faults at the same
+//! trajectory positions on every run — adversity tests are as
+//! reproducible as the happy path (`rust/tests/adversity.rs` asserts
+//! byte-identical outcomes for repeated runs of one seed + plan).
+//!
+//! Spec grammar, `;`-separated entries:
+//!
+//! ```text
+//! kind@epoch.step.rank[:key=value[,key=value]*]
+//! ```
+//!
+//! | kind          | coordinate `rank` means | effect at the coordinate                                  |
+//! |---------------|-------------------------|-----------------------------------------------------------|
+//! | `straggle`    | local compute worker id | worker sleeps `ms` before computing (trajectory-neutral)  |
+//! | `panic`       | local compute worker id | worker panics (must surface as a loud epoch error)        |
+//! | `abort`       | local compute worker id | worker fails its job mid-step (contextful `Err`)          |
+//! | `net-delay`   | process (dist) rank     | rank sleeps `ms` before its collective ops (neutral)      |
+//! | `net-stall`   | process (dist) rank     | rank sleeps `ms`, then fails — peers see a stall timeout  |
+//! | `net-drop`    | process (dist) rank     | rank drops every TCP connection — peers see the loss      |
+//! | `net-corrupt` | process (dist) rank     | rank's next outgoing frame gets one bit flipped (CRC)     |
+//! | `ckpt-torn`   | unused (write `0`)      | the rolling checkpoint written once `epoch` epochs have completed is truncated at byte `byte` |
+//!
+//! `epoch`/`step` are the trainer's 0-based counters (epoch = completed
+//! epochs when the faulted epoch starts). Entries whose coordinates are
+//! never reached simply never fire. Compute-fault ranks are *local*
+//! worker ids, so every process of a `--dist tcp` group can share one
+//! plan: each entry fires only on the process/worker its coordinate
+//! names.
+//!
+//! Canonical re-emission: [`FaultPlan::to_spec`] emits entries sorted by
+//! coordinate with parameters in fixed order, and `parse(to_spec(p)) ==
+//! p` — a config round-trip through `prelora gen-config` is stable.
+//!
+//! Runtime side: [`FaultInjector`] wraps a plan plus the trainer's
+//! current `(epoch, step)` position (advanced by the step pipeline).
+//! Injection sites hold an `Option<Arc<FaultInjector>>` that is `None`
+//! unless `train.faults.plan` is set, so the disabled hot path is a
+//! single pointer check — the full parity and bench suites run
+//! bitwise-unchanged with faults absent.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// One scheduled fault: what happens, and where in the trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub epoch: usize,
+    pub step: usize,
+    /// Local compute-worker id for compute faults, distributed process
+    /// rank for `net-*` faults, unused (0) for `ckpt-torn`.
+    pub rank: usize,
+    pub kind: FaultKind,
+}
+
+/// The fault catalog. See the module docs for per-kind semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Deterministic sleep in one compute worker — must not change bits.
+    Straggle { ms: u64 },
+    /// One compute worker panics mid-job.
+    PanicWorker,
+    /// One compute worker fails its job with a contextful error.
+    Abort,
+    /// Deterministic sleep before a rank's collective ops — neutral.
+    NetDelay { ms: u64 },
+    /// Sleep past the peers' recv deadline, then fail loudly.
+    NetStall { ms: u64 },
+    /// Drop every TCP connection this rank holds.
+    NetDrop,
+    /// Flip one bit in this rank's next outgoing frame (CRC rejection).
+    NetCorrupt,
+    /// Truncate the rolling checkpoint at `byte` after the atomic save —
+    /// a torn write, as a crash on a rename-free filesystem would leave.
+    CkptTorn { byte: u64 },
+}
+
+impl FaultKind {
+    /// Canonical spec name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Straggle { .. } => "straggle",
+            FaultKind::PanicWorker => "panic",
+            FaultKind::Abort => "abort",
+            FaultKind::NetDelay { .. } => "net-delay",
+            FaultKind::NetStall { .. } => "net-stall",
+            FaultKind::NetDrop => "net-drop",
+            FaultKind::NetCorrupt => "net-corrupt",
+            FaultKind::CkptTorn { .. } => "ckpt-torn",
+        }
+    }
+}
+
+/// A parsed, canonically ordered fault schedule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the module docs for the grammar). Empty
+    /// and whitespace-only specs parse to the empty plan; malformed
+    /// entries are contextful errors naming the entry.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut faults = Vec::new();
+        for raw in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            faults.push(
+                parse_entry(raw).with_context(|| format!("fault spec entry {raw:?}"))?,
+            );
+        }
+        // canonical order: by coordinate, then kind name — to_spec()
+        // re-emits this order, so parse/emit round-trips are stable
+        faults.sort_by_key(|f| (f.epoch, f.step, f.rank, f.kind.name()));
+        Ok(Self { faults })
+    }
+
+    /// Canonical re-emission: sorted entries, fixed parameter order.
+    /// `parse(p.to_spec())` reproduces `p` exactly.
+    pub fn to_spec(&self) -> String {
+        self.faults.iter().map(entry_spec).collect::<Vec<_>>().join(";")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+}
+
+fn parse_entry(s: &str) -> Result<Fault> {
+    let (head, params) = match s.split_once(':') {
+        Some((h, p)) => (h, p),
+        None => (s, ""),
+    };
+    let Some((name, at)) = head.split_once('@') else {
+        bail!("expected kind@epoch.step.rank, got no '@'");
+    };
+    let coords: Vec<&str> = at.split('.').collect();
+    ensure!(
+        coords.len() == 3,
+        "coordinates must be epoch.step.rank (three '.'-separated integers), got {at:?}"
+    );
+    let coord = |i: usize, what: &str| -> Result<usize> {
+        coords[i]
+            .parse::<usize>()
+            .map_err(|_| anyhow!("{what} coordinate {:?} is not an integer", coords[i]))
+    };
+    let (epoch, step, rank) = (coord(0, "epoch")?, coord(1, "step")?, coord(2, "rank")?);
+
+    let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+    for p in params.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let Some((k, v)) = p.split_once('=') else {
+            bail!("parameter {p:?} is not key=value");
+        };
+        ensure!(kv.insert(k.trim(), v.trim()).is_none(), "duplicate parameter {:?}", k.trim());
+    }
+    let req_u64 = |kv: &BTreeMap<&str, &str>, key: &str| -> Result<u64> {
+        kv.get(key)
+            .with_context(|| format!("missing required parameter {key}=<integer>"))?
+            .parse::<u64>()
+            .map_err(|_| anyhow!("parameter {key} must be an integer"))
+    };
+    let only = |kv: &BTreeMap<&str, &str>, allowed: &[&str]| -> Result<()> {
+        for k in kv.keys() {
+            ensure!(allowed.contains(k), "unknown parameter {k:?} (allowed: {allowed:?})");
+        }
+        Ok(())
+    };
+
+    let kind = match name {
+        "straggle" => {
+            only(&kv, &["ms"])?;
+            FaultKind::Straggle { ms: req_u64(&kv, "ms")? }
+        }
+        "panic" => {
+            only(&kv, &[])?;
+            FaultKind::PanicWorker
+        }
+        "abort" => {
+            only(&kv, &[])?;
+            FaultKind::Abort
+        }
+        "net-delay" => {
+            only(&kv, &["ms"])?;
+            FaultKind::NetDelay { ms: req_u64(&kv, "ms")? }
+        }
+        "net-stall" => {
+            only(&kv, &["ms"])?;
+            FaultKind::NetStall { ms: req_u64(&kv, "ms")? }
+        }
+        "net-drop" => {
+            only(&kv, &[])?;
+            FaultKind::NetDrop
+        }
+        "net-corrupt" => {
+            only(&kv, &[])?;
+            FaultKind::NetCorrupt
+        }
+        "ckpt-torn" => {
+            only(&kv, &["byte"])?;
+            FaultKind::CkptTorn { byte: req_u64(&kv, "byte")? }
+        }
+        other => bail!(
+            "unknown fault kind {other:?} (expected straggle, panic, abort, net-delay, \
+             net-stall, net-drop, net-corrupt or ckpt-torn)"
+        ),
+    };
+    Ok(Fault { epoch, step, rank, kind })
+}
+
+fn entry_spec(f: &Fault) -> String {
+    let head = format!("{}@{}.{}.{}", f.kind.name(), f.epoch, f.step, f.rank);
+    match f.kind {
+        FaultKind::Straggle { ms }
+        | FaultKind::NetDelay { ms }
+        | FaultKind::NetStall { ms } => format!("{head}:ms={ms}"),
+        FaultKind::CkptTorn { byte } => format!("{head}:byte={byte}"),
+        FaultKind::PanicWorker | FaultKind::Abort | FaultKind::NetDrop | FaultKind::NetCorrupt => {
+            head
+        }
+    }
+}
+
+/// A compute-fault decision, resolved leader-side at submit time and
+/// carried into the worker's job. The worker calls [`ComputeFault::fire`]
+/// before running the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ComputeFault {
+    pub kind: ComputeFaultKind,
+    pub epoch: usize,
+    pub step: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeFaultKind {
+    Straggle { ms: u64 },
+    Panic,
+    Abort,
+}
+
+impl ComputeFault {
+    /// Execute the fault. `Straggle` sleeps and returns `Ok` (the job
+    /// proceeds, bits unchanged); `Panic` panics (the engine's
+    /// `catch_unwind` turns it into a loud epoch error); `Abort` returns
+    /// a contextful error that fails the step through the normal drain
+    /// path.
+    pub fn fire(&self) -> Result<()> {
+        match self.kind {
+            ComputeFaultKind::Straggle { ms } => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            ComputeFaultKind::Panic => panic!(
+                "fault injected: compute worker panic (epoch {}, step {})",
+                self.epoch, self.step
+            ),
+            ComputeFaultKind::Abort => bail!(
+                "fault injected: compute worker abort mid-step (epoch {}, step {})",
+                self.epoch, self.step
+            ),
+        }
+    }
+}
+
+/// A network-fault decision for one rank at the current position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFault {
+    Delay { ms: u64 },
+    Stall { ms: u64 },
+    Drop,
+    Corrupt,
+}
+
+/// The runtime half: a parsed plan plus the trainer's current
+/// `(epoch, step)` position. The step pipeline advances the position;
+/// injection sites query it. Held as `Option<Arc<FaultInjector>>`
+/// everywhere, `None` unless `train.faults.plan` is non-empty — the
+/// disabled hot path is one pointer check.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    epoch: AtomicUsize,
+    step: AtomicUsize,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan, epoch: AtomicUsize::new(0), step: AtomicUsize::new(0) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Advance the trajectory clock. Called by the step pipeline at the
+    /// top of every step, before any collective op of that step runs.
+    pub fn set_position(&self, epoch: usize, step: usize) {
+        self.epoch.store(epoch, Ordering::SeqCst);
+        self.step.store(step, Ordering::SeqCst);
+    }
+
+    pub fn position(&self) -> (usize, usize) {
+        (self.epoch.load(Ordering::SeqCst), self.step.load(Ordering::SeqCst))
+    }
+
+    /// Per-worker compute-fault decisions for one step, resolved on the
+    /// leader before submit so workers never consult shared state. First
+    /// matching entry per worker wins.
+    pub fn step_faults(&self, epoch: usize, step: usize, workers: usize) -> Vec<Option<ComputeFault>> {
+        (0..workers)
+            .map(|w| {
+                self.plan.faults.iter().find_map(|f| {
+                    if f.epoch != epoch || f.step != step || f.rank != w {
+                        return None;
+                    }
+                    let kind = match f.kind {
+                        FaultKind::Straggle { ms } => ComputeFaultKind::Straggle { ms },
+                        FaultKind::PanicWorker => ComputeFaultKind::Panic,
+                        FaultKind::Abort => ComputeFaultKind::Abort,
+                        _ => return None,
+                    };
+                    Some(ComputeFault { kind, epoch, step })
+                })
+            })
+            .collect()
+    }
+
+    /// The network fault (if any) scheduled for `rank` at the current
+    /// position. Queried by the TCP endpoint before driving an op.
+    pub fn net_fault(&self, rank: usize) -> Option<NetFault> {
+        let (epoch, step) = self.position();
+        self.plan.faults.iter().find_map(|f| {
+            if f.epoch != epoch || f.step != step || f.rank != rank {
+                return None;
+            }
+            match f.kind {
+                FaultKind::NetDelay { ms } => Some(NetFault::Delay { ms }),
+                FaultKind::NetStall { ms } => Some(NetFault::Stall { ms }),
+                FaultKind::NetDrop => Some(NetFault::Drop),
+                FaultKind::NetCorrupt => Some(NetFault::Corrupt),
+                _ => None,
+            }
+        })
+    }
+
+    /// The torn-write byte (if any) scheduled for the rolling checkpoint
+    /// written once `epochs_completed` epochs have finished.
+    pub fn ckpt_fault(&self, epochs_completed: usize) -> Option<u64> {
+        self.plan.faults.iter().find_map(|f| match f.kind {
+            FaultKind::CkptTorn { byte } if f.epoch == epochs_completed => Some(byte),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_canonical_reemission_round_trip() {
+        // deliberately unsorted, ragged whitespace, trailing semicolon
+        let spec = " net-stall@2.0.1:ms=5000; straggle@1.3.0:ms=7 ;;panic@1.0.1; \
+                     ckpt-torn@4.0.0:byte=64;";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.faults().len(), 4);
+        let canon = plan.to_spec();
+        assert_eq!(
+            canon,
+            "panic@1.0.1;straggle@1.3.0:ms=7;net-stall@2.0.1:ms=5000;ckpt-torn@4.0.0:byte=64"
+        );
+        // idempotent: parse(emit(p)) == p, emit(parse(emit(p))) == emit(p)
+        let back = FaultPlan::parse(&canon).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.to_spec(), canon);
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_parse_to_the_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ; ;; ").unwrap().is_empty());
+        assert_eq!(FaultPlan::parse("").unwrap().to_spec(), "");
+    }
+
+    #[test]
+    fn malformed_entries_are_contextful_errors() {
+        for (spec, needle) in [
+            ("nope@1.2.3", "unknown fault kind"),
+            ("straggle@1.2", "epoch.step.rank"),
+            ("straggle@1.2.x:ms=5", "rank coordinate"),
+            ("straggle@1.2.3", "missing required parameter ms"),
+            ("straggle@1.2.3:ms=abc", "must be an integer"),
+            ("straggle@1.2.3:ms=5,ms=6", "duplicate parameter"),
+            ("straggle@1.2.3:ms=5,color=red", "unknown parameter"),
+            ("panic@1.2.3:ms=5", "unknown parameter"),
+            ("ckpt-torn@4.0.0", "missing required parameter byte"),
+            ("straggle 1.2.3", "no '@'"),
+            ("net-delay@1.2.3:ms", "not key=value"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            let text = format!("{err:#}");
+            assert!(text.contains(needle), "{spec}: expected {needle:?} in {text}");
+            assert!(text.contains("fault spec entry"), "{spec}: no entry context in {text}");
+        }
+    }
+
+    #[test]
+    fn step_faults_resolve_per_worker_at_the_exact_coordinate() {
+        let inj = FaultInjector::new(
+            FaultPlan::parse("straggle@1.2.0:ms=3;abort@1.2.1;panic@2.0.0").unwrap(),
+        );
+        // wrong epoch/step: nothing fires
+        assert_eq!(inj.step_faults(0, 2, 2), vec![None, None]);
+        assert_eq!(inj.step_faults(1, 1, 2), vec![None, None]);
+        // exact coordinate: per-worker decisions
+        let faults = inj.step_faults(1, 2, 2);
+        assert_eq!(
+            faults[0],
+            Some(ComputeFault { kind: ComputeFaultKind::Straggle { ms: 3 }, epoch: 1, step: 2 })
+        );
+        assert_eq!(
+            faults[1],
+            Some(ComputeFault { kind: ComputeFaultKind::Abort, epoch: 1, step: 2 })
+        );
+        // net faults never leak into compute decisions
+        let inj = FaultInjector::new(FaultPlan::parse("net-drop@1.2.0").unwrap());
+        assert_eq!(inj.step_faults(1, 2, 1), vec![None]);
+    }
+
+    #[test]
+    fn net_faults_follow_the_position_clock_and_the_rank() {
+        let inj =
+            FaultInjector::new(FaultPlan::parse("net-corrupt@1.0.1;net-delay@2.1.0:ms=4").unwrap());
+        assert_eq!(inj.position(), (0, 0));
+        assert_eq!(inj.net_fault(1), None, "clock at (0,0): nothing scheduled");
+        inj.set_position(1, 0);
+        assert_eq!(inj.net_fault(1), Some(NetFault::Corrupt));
+        assert_eq!(inj.net_fault(0), None, "rank 0 has no entry at (1,0)");
+        inj.set_position(2, 1);
+        assert_eq!(inj.net_fault(0), Some(NetFault::Delay { ms: 4 }));
+        // compute faults never leak into net decisions
+        let inj = FaultInjector::new(FaultPlan::parse("abort@0.0.0").unwrap());
+        assert_eq!(inj.net_fault(0), None);
+    }
+
+    #[test]
+    fn ckpt_fault_keys_on_completed_epochs_only() {
+        let inj = FaultInjector::new(FaultPlan::parse("ckpt-torn@4.0.0:byte=100").unwrap());
+        assert_eq!(inj.ckpt_fault(3), None);
+        assert_eq!(inj.ckpt_fault(4), Some(100));
+        assert_eq!(inj.ckpt_fault(5), None);
+    }
+
+    #[test]
+    fn abort_fires_a_contextful_error_and_straggle_is_ok() {
+        let abort =
+            ComputeFault { kind: ComputeFaultKind::Abort, epoch: 3, step: 1 };
+        let err = abort.fire().unwrap_err().to_string();
+        assert!(err.contains("fault injected"), "{err}");
+        assert!(err.contains("epoch 3, step 1"), "{err}");
+        let straggle =
+            ComputeFault { kind: ComputeFaultKind::Straggle { ms: 1 }, epoch: 0, step: 0 };
+        straggle.fire().unwrap();
+    }
+}

@@ -92,6 +92,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dist;
 pub mod dp;
+pub mod faults;
 pub mod manifest;
 pub mod mc;
 pub mod optim;

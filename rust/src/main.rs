@@ -59,6 +59,11 @@ fn train_flags() -> Args {
             "bucket-bytes",
             "gradient-sync bucket size in bytes (0 = whole-buffer sync); buckets overlap the reduce with backward compute, bit-identically",
         )
+        .flag(
+            "faults",
+            "deterministic fault-injection plan, kind@epoch.step.rank[:k=v,..] entries joined \
+             by ';' (e.g. \"straggle@1.0.0:ms=50;net-drop@2.1.1\"); adversity testing only",
+        )
         .flag("seed", "run seed")
         .flag(
             "resume",
@@ -147,6 +152,9 @@ fn build_config(a: &Args, prelora_enabled: bool) -> Result<RunConfig> {
         // false` knob that would otherwise force whole-buffer sync
         cfg.train.pipeline.overlap_reduce = None;
         cfg.train.pipeline.bucket_bytes = bytes;
+    }
+    if let Some(spec) = a.get("faults") {
+        cfg.train.faults.plan = spec.to_string();
     }
     if let Some(s) = a.get_parsed::<u64>("seed")? {
         cfg.seed = s;

@@ -68,6 +68,7 @@ use crate::config::PipelineConfig;
 use crate::data::{Batch, Dataset, EpochLoader};
 use crate::dist::{CollectiveEndpoint, Strategy};
 use crate::dp::{GradEngine, GradResult, StepMode};
+use crate::faults::FaultInjector;
 use crate::telemetry::GradNormStats;
 
 /// Aggregated results of one epoch of training steps (either path).
@@ -117,6 +118,10 @@ pub struct StepPipeline {
     /// (e.g. the TCP transport). The pipeline then computes only this
     /// rank's shard of each step and exchanges step scalars on the wire.
     endpoint: Option<Arc<dyn CollectiveEndpoint>>,
+    /// Deterministic fault injection (`train.faults.plan`): `None` outside
+    /// adversity testing, leaving the step loop's only overhead a single
+    /// `Option` check per step.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl StepPipeline {
@@ -133,7 +138,25 @@ impl StepPipeline {
         let workers = if multi { 1 } else { strategy.workers() };
         let reduce = ReduceStage::new(strategy.clone(), overlap, bucket_bytes, workers)?;
         let endpoint = if multi { endpoint } else { None };
-        Ok(Self { cfg: cfg.clone(), strategy, reduce, endpoint })
+        Ok(Self { cfg: cfg.clone(), strategy, reduce, endpoint, faults: None })
+    }
+
+    /// Install the run's fault injector (adversity testing only). The
+    /// pipeline advances the injector's (epoch, step) clock as steps are
+    /// dispatched and arms the engine's per-worker compute faults; the
+    /// collective endpoint consults the same injector for wire faults.
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultInjector>>) {
+        self.faults = faults;
+    }
+
+    /// Advance the fault clock to (epoch, step) and arm that coordinate's
+    /// compute faults on the engine — called right before each submit so
+    /// every wire op a step issues observes its own coordinate.
+    fn arm_step_faults(&self, engine: &mut GradEngine, epoch: usize, step: usize) {
+        if let Some(inj) = &self.faults {
+            inj.set_position(epoch, step);
+            engine.set_step_faults(inj.step_faults(epoch, step, engine.worker_count()));
+        }
     }
 
     /// Keep only this rank's batch when the process is one rank of a
@@ -226,6 +249,7 @@ impl StepPipeline {
         // sharded, free otherwise.
         let run = (|| -> Result<()> {
             if steps > 0 {
+                self.arm_step_faults(engine, epoch, 0);
                 self.strategy.materialize_params(model);
                 let batches = self.local_batches(prefetch.recv()?)?;
                 engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
@@ -238,6 +262,7 @@ impl StepPipeline {
                 out.comm_wait_s += wait.elapsed().as_secs_f64();
                 let norms = update.apply(&*self.strategy, model, &mut r, lr)?;
                 if step + 1 < steps {
+                    self.arm_step_faults(engine, epoch, step + 1);
                     self.strategy.materialize_params(model);
                     let batches = self.local_batches(prefetch.recv()?)?;
                     engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;
@@ -280,6 +305,7 @@ impl StepPipeline {
         let order = loader.epoch_order(data, epoch);
         let mut out = EpochRun::default();
         for step in 0..steps {
+            self.arm_step_faults(engine, epoch, step);
             let batches = self.local_batches(loader.step_batches_in(data, &order, step))?;
             self.strategy.materialize_params(model);
             engine.submit(mode, model.base_view(), model.lora_pair(), batches)?;

@@ -53,6 +53,10 @@ pub struct Trainer {
     controller: PreLoraController,
     history: NormHistory,
     model: ModelState,
+    /// Deterministic fault injection (`train.faults.plan`): `None` outside
+    /// adversity testing. The pipeline drives its (epoch, step) clock; the
+    /// trainer only consults it for scheduled checkpoint tearing.
+    faults: Option<Arc<crate::faults::FaultInjector>>,
     /// Epoch a v3 checkpoint was restored at, if this run resumed one
     /// (surfaces as the summary's provenance note).
     resumed_from: Option<usize>,
@@ -76,12 +80,18 @@ impl Trainer {
         // otherwise. The loader and the strategy are always sized to the
         // world, so batch order and shard layout are transport-invariant.
         let world = cfg.train.world();
+        // fault injection (adversity testing): one injector shared by the
+        // pipeline (compute faults + the step clock), the endpoint (wire
+        // faults) and the checkpoint path (torn writes). None when
+        // train.faults is absent — the default hot path is untouched.
+        let faults = cfg.train.faults.injector()?;
         let endpoint = if cfg.train.dist.is_tcp() && world > 1 {
-            Some(dist::TcpEndpoint::connect(
+            Some(dist::TcpEndpoint::connect_with_faults(
                 algorithm,
                 cfg.train.dist.rank,
                 &cfg.train.dist.peers,
                 std::time::Duration::from_millis(cfg.train.dist.connect_timeout_ms),
+                faults.clone(),
             )?)
         } else {
             None
@@ -101,7 +111,8 @@ impl Trainer {
             None => dist::collective_for(algorithm),
         };
         let strategy = dist::strategy_for(cfg.train.zero.effective_stage(), world, collective);
-        let pipeline = StepPipeline::new(&cfg.train.pipeline, strategy.clone())?;
+        let mut pipeline = StepPipeline::new(&cfg.train.pipeline, strategy.clone())?;
+        pipeline.set_faults(faults.clone());
         let update = UpdateStage::new(cfg.train.grad_clip);
         let loader = EpochLoader::new(c.batch_size, world, cfg.seed);
         let train_spec = SynthSpec {
@@ -143,6 +154,7 @@ impl Trainer {
             controller,
             history: NormHistory::new(),
             model,
+            faults,
             resumed_from: None,
             stats: Vec::new(),
         })
@@ -429,7 +441,14 @@ impl Trainer {
             let every = self.cfg.train.checkpoint_every;
             if every > 0 && self.history.epochs() % every == 0 && self.is_primary() {
                 let path = self.checkpoint_path();
-                self.checkpoint().save(&path)?;
+                // scheduled tearing (ckpt-torn@<epochs_completed>.0.0):
+                // models a crash that left a truncated file on disk —
+                // written through save_torn so the cut is exact and the
+                // next load fails loudly, never silently
+                match self.faults.as_ref().and_then(|i| i.ckpt_fault(self.history.epochs())) {
+                    Some(byte) => self.checkpoint().save_torn(&path, byte)?,
+                    None => self.checkpoint().save(&path)?,
+                }
                 eprintln!(
                     "[{}] checkpoint saved to {} (epoch {})",
                     self.cfg.run_name,

@@ -1,0 +1,635 @@
+//! The adversity matrix: deterministic fault injection
+//! (`train.faults.*`, `prelora::faults`) swept across scenario × ZeRO
+//! stage × PreLoRA phase. Every cell asserts one of exactly two
+//! outcomes, always under a per-cell watchdog:
+//!
+//! * **bitwise-identical recovery** — scheduling faults (compute
+//!   stragglers, wire delays) and kill-then-resume must reproduce the
+//!   uninterrupted reference trajectory bit for bit; or
+//! * **a loud, contextful error** — panics, mid-step aborts, dropped
+//!   peers, corrupted frames and torn checkpoint writes must fail with
+//!   the fault's coordinates in the message. Never a hang, never silent
+//!   corruption.
+//!
+//! Cell map (stage Off is the replicated baseline; Zero3 adds parameter
+//! sharding — the ZeRO contract makes all stages bitwise-equal, so one
+//! reference fingerprint serves both):
+//!
+//! | cell                                   | scenario      | stage | phase  | outcome            |
+//! |----------------------------------------|---------------|-------|--------|--------------------|
+//! | straggler_in_full_phase_is_invisible   | straggle      | Off   | Full   | bitwise            |
+//! | straggler_in_warmup_is_invisible       | straggle      | Off   | Warmup | bitwise            |
+//! | straggler_in_lora_phase_is_invisible   | straggle      | Off   | Lora   | bitwise            |
+//! | straggler_under_zero3_full             | straggle      | Zero3 | Full   | bitwise            |
+//! | straggler_under_zero3_warmup           | straggle      | Zero3 | Warmup | bitwise            |
+//! | straggler_under_zero3_lora             | straggle      | Zero3 | Lora   | bitwise            |
+//! | worker_panic_in_full_phase_is_loud     | panic         | Off   | Full   | contextful error   |
+//! | worker_panic_in_warmup_is_loud         | panic         | Off   | Warmup | contextful error   |
+//! | worker_panic_under_zero3_lora_is_loud  | panic         | Zero3 | Lora   | contextful error   |
+//! | midstep_abort_in_warmup_is_loud        | abort         | Off   | Warmup | contextful error   |
+//! | midstep_abort_under_zero3_is_loud      | abort         | Zero3 | Warmup | contextful error   |
+//! | torn_header_write_fails_loud_on_load   | ckpt-torn     | Off   | —      | contextful error   |
+//! | torn_payload_write_fails_loud_on_load  | ckpt-torn     | Off   | —      | contextful error   |
+//! | kill_then_resume_in_warmup             | abort+resume  | Off   | Warmup | bitwise            |
+//! | kill_then_resume_under_zero3_lora      | abort+resume  | Zero3 | Lora   | bitwise            |
+//! | same_plan_same_bits                    | straggle ×2   | Off   | Warmup | identical outcomes |
+//! | same_plan_same_error                   | panic ×2      | Off   | Warmup | identical errors   |
+//! | tcp_stall_trips_the_watchdog           | net-stall     | Off   | Full   | contextful error   |
+//! | tcp_peer_drop_is_loud_on_both_ranks    | net-drop      | Off   | Full   | contextful error   |
+//! | tcp_corrupt_frame_is_rejected          | net-corrupt   | Off   | Full   | contextful error   |
+//! | tcp_delays_keep_bitwise_parity         | net-delay     | Off   | Full   | bitwise            |
+//!
+//! Requires `make artifacts` (vit-micro) to have run; the tcp cells also
+//! need the `prelora` binary (cargo builds it for integration tests).
+
+use std::io::Write;
+use std::process::Command;
+use std::sync::{mpsc, OnceLock};
+use std::thread;
+use std::time::Duration;
+
+use prelora::config::RunConfig;
+use prelora::dist::ZeroStage;
+use prelora::trainer::{Checkpoint, Trainer};
+
+const EPOCHS: usize = 16;
+
+/// Per-cell watchdog: a fault scenario may fail, but it may never hang.
+/// The cell body runs on its own thread; blowing the deadline panics the
+/// test with the cell's name instead of letting the harness sit forever.
+fn cell<T: Send + 'static>(
+    name: &'static str,
+    deadline: Duration,
+    body: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let worker = thread::Builder::new()
+        .name(format!("cell-{name}"))
+        .spawn(move || {
+            let _ = tx.send(body());
+        })
+        .unwrap();
+    match rx.recv_timeout(deadline) {
+        Ok(v) => {
+            let _ = worker.join();
+            v
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => match worker.join() {
+            Err(p) => std::panic::resume_unwind(p),
+            Ok(()) => panic!("cell '{name}' worker exited without a result"),
+        },
+        Err(mpsc::RecvTimeoutError::Timeout) => panic!(
+            "adversity cell '{name}' hung past {deadline:?} — a fault must fail \
+             loudly, never hang"
+        ),
+    }
+}
+
+const DEADLINE: Duration = Duration::from_secs(300);
+
+/// Mirrors `tests/resume.rs::micro_config`: relaxed thresholds so the
+/// micro model crosses both phase boundaries within [`EPOCHS`].
+fn micro_config(stage: ZeroStage, run_name: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "vit-micro".into();
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    cfg.run_name = run_name.into();
+    cfg.train.epochs = EPOCHS;
+    cfg.train.data.train_samples = 192;
+    cfg.train.data.val_samples = 64;
+    cfg.train.eval_every = 4;
+    cfg.train.dp.workers = 2;
+    cfg.train.pipeline.enabled = true;
+    // explicit, so the trajectory is stable against the integration
+    // suite's PRELORA_TEST_ZERO_STAGE env knob
+    cfg.train.zero.stage = Some(stage);
+    cfg.prelora.tau = 6.0;
+    cfg.prelora.zeta = 25.0;
+    cfg.prelora.windows = 2;
+    cfg.prelora.window_epochs = 2;
+    cfg.prelora.warmup_epochs = 2;
+    cfg
+}
+
+/// Floats as raw bits so equality is exact and NaN-proof.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Fingerprint {
+    losses: Vec<u64>,
+    grad_norms: Vec<u64>,
+    lrs: Vec<u64>,
+    phases: Vec<&'static str>,
+    switch_epoch: Option<usize>,
+    freeze_epoch: Option<usize>,
+    base: Vec<u32>,
+}
+
+fn fingerprint(t: &Trainer) -> Fingerprint {
+    Fingerprint {
+        losses: t.stats.iter().map(|s| s.train_loss.to_bits()).collect(),
+        grad_norms: t.stats.iter().map(|s| s.grad_norm.to_bits()).collect(),
+        lrs: t.stats.iter().map(|s| s.lr.to_bits()).collect(),
+        phases: t.stats.iter().map(|s| s.phase).collect(),
+        switch_epoch: t.controller().switch_epoch(),
+        freeze_epoch: t.controller().freeze_epoch(),
+        base: t.base_params().iter().map(|x| x.to_bits()).collect(),
+    }
+}
+
+fn drive(t: &mut Trainer, upto: usize) {
+    while t.history().epochs() < upto {
+        t.run_epoch().expect("epoch failed");
+    }
+}
+
+struct Reference {
+    fp: Fingerprint,
+    /// An epoch strictly inside each phase, each a fault coordinate.
+    k_full: usize,
+    k_warm: usize,
+    k_lora: usize,
+}
+
+/// The uninterrupted, fault-free reference (computed once, shared by
+/// every bitwise cell — including the ZeRO-3 ones, which the stage
+/// contract pins to the same bits).
+fn reference() -> &'static Reference {
+    static REF: OnceLock<Reference> = OnceLock::new();
+    REF.get_or_init(|| {
+        let mut t = Trainer::new(micro_config(ZeroStage::Off, "adv-ref")).unwrap();
+        drive(&mut t, EPOCHS);
+        let fp = fingerprint(&t);
+        let (Some(switch), Some(freeze)) = (fp.switch_epoch, fp.freeze_epoch) else {
+            panic!("reference run must cross both phase boundaries; got {fp:?}");
+        };
+        assert!(switch + 1 < freeze, "need an epoch strictly inside warmup");
+        assert!(freeze + 1 < EPOCHS, "need epochs after the freeze");
+        Reference { fp, k_full: 1, k_warm: switch + 1, k_lora: freeze + 1 }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// stragglers: deterministic compute delays must be bitwise invisible
+// ---------------------------------------------------------------------------
+
+fn assert_straggler_invisible(stage: ZeroStage, k: usize, tag: &'static str) {
+    // two stragglers: worker 0 at step 0, worker 1 at step 1 of epoch k
+    let mut cfg = micro_config(stage, "adv-straggle");
+    cfg.train.faults.plan = format!("straggle@{k}.0.0:ms=20;straggle@{k}.1.1:ms=12");
+    let mut t = Trainer::new(cfg).unwrap();
+    drive(&mut t, EPOCHS);
+    assert_eq!(
+        fingerprint(&t),
+        reference().fp,
+        "{tag}: a straggling worker must not change the trajectory"
+    );
+}
+
+#[test]
+fn straggler_in_full_phase_is_invisible() {
+    cell("straggler_in_full_phase_is_invisible", DEADLINE, || {
+        let k = reference().k_full;
+        assert_straggler_invisible(ZeroStage::Off, k, "full/off");
+    });
+}
+
+#[test]
+fn straggler_in_warmup_is_invisible() {
+    cell("straggler_in_warmup_is_invisible", DEADLINE, || {
+        let k = reference().k_warm;
+        assert_straggler_invisible(ZeroStage::Off, k, "warmup/off");
+    });
+}
+
+#[test]
+fn straggler_in_lora_phase_is_invisible() {
+    cell("straggler_in_lora_phase_is_invisible", DEADLINE, || {
+        let k = reference().k_lora;
+        assert_straggler_invisible(ZeroStage::Off, k, "lora/off");
+    });
+}
+
+#[test]
+fn straggler_under_zero3_full() {
+    cell("straggler_under_zero3_full", DEADLINE, || {
+        let k = reference().k_full;
+        assert_straggler_invisible(ZeroStage::Zero3, k, "full/zero3");
+    });
+}
+
+#[test]
+fn straggler_under_zero3_warmup() {
+    cell("straggler_under_zero3_warmup", DEADLINE, || {
+        let k = reference().k_warm;
+        assert_straggler_invisible(ZeroStage::Zero3, k, "warmup/zero3");
+    });
+}
+
+#[test]
+fn straggler_under_zero3_lora() {
+    cell("straggler_under_zero3_lora", DEADLINE, || {
+        let k = reference().k_lora;
+        assert_straggler_invisible(ZeroStage::Zero3, k, "lora/zero3");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// worker panic / mid-step abort: loud, contextful, bounded
+// ---------------------------------------------------------------------------
+
+/// Drive to epoch `k`, then run the faulted epoch and return its error.
+fn faulted_epoch_error(stage: ZeroStage, k: usize, plan: String) -> String {
+    let mut cfg = micro_config(stage, "adv-loud");
+    cfg.train.faults.plan = plan;
+    let mut t = Trainer::new(cfg).unwrap();
+    drive(&mut t, k);
+    let e = t.run_epoch().expect_err("the armed epoch must fail");
+    format!("{e:#}")
+}
+
+fn assert_panic_is_loud(stage: ZeroStage, k: usize, tag: &'static str) {
+    let msg = faulted_epoch_error(stage, k, format!("panic@{k}.1.1"));
+    assert!(msg.contains("worker 1 panicked"), "{tag}: must name the worker: {msg}");
+    assert!(msg.contains("fault injected"), "{tag}: must say it was deliberate: {msg}");
+    assert!(msg.contains(&format!("epoch {k}, step 1")), "{tag}: must carry coordinates: {msg}");
+}
+
+#[test]
+fn worker_panic_in_full_phase_is_loud() {
+    cell("worker_panic_in_full_phase_is_loud", DEADLINE, || {
+        let k = reference().k_full;
+        assert_panic_is_loud(ZeroStage::Off, k, "full/off");
+    });
+}
+
+#[test]
+fn worker_panic_in_warmup_is_loud() {
+    cell("worker_panic_in_warmup_is_loud", DEADLINE, || {
+        let k = reference().k_warm;
+        assert_panic_is_loud(ZeroStage::Off, k, "warmup/off");
+    });
+}
+
+#[test]
+fn worker_panic_under_zero3_lora_is_loud() {
+    cell("worker_panic_under_zero3_lora_is_loud", DEADLINE, || {
+        let k = reference().k_lora;
+        assert_panic_is_loud(ZeroStage::Zero3, k, "lora/zero3");
+    });
+}
+
+fn assert_abort_is_loud(stage: ZeroStage, k: usize, tag: &'static str) {
+    let msg = faulted_epoch_error(stage, k, format!("abort@{k}.1.0"));
+    assert!(msg.contains("fault injected"), "{tag}: must say it was deliberate: {msg}");
+    assert!(msg.contains("abort"), "{tag}: must name the scenario: {msg}");
+    assert!(msg.contains(&format!("epoch {k}, step 1")), "{tag}: must carry coordinates: {msg}");
+}
+
+#[test]
+fn midstep_abort_in_warmup_is_loud() {
+    cell("midstep_abort_in_warmup_is_loud", DEADLINE, || {
+        let k = reference().k_warm;
+        assert_abort_is_loud(ZeroStage::Off, k, "warmup/off");
+    });
+}
+
+#[test]
+fn midstep_abort_under_zero3_is_loud() {
+    cell("midstep_abort_under_zero3_is_loud", DEADLINE, || {
+        let k = reference().k_warm;
+        assert_abort_is_loud(ZeroStage::Zero3, k, "warmup/zero3");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// torn checkpoint writes: the next load must fail loudly, never parse junk
+// ---------------------------------------------------------------------------
+
+/// Run 4 epochs twice into the same rolling checkpoint path: once clean
+/// (to learn the deterministic on-disk size and prove the file loads),
+/// once with a `ckpt-torn` fault cutting the file at `byte_of(size)`.
+fn torn_cell(tag: &str, byte_of: impl Fn(u64) -> u64, expect: &str) {
+    let tmp = std::env::temp_dir().join(format!("prelora_adv_torn_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut cfg = micro_config(ZeroStage::Off, "adv-torn");
+    cfg.results_dir = tmp.to_str().unwrap().to_string();
+    cfg.train.epochs = 4;
+    cfg.train.checkpoint_every = 4;
+    let mut clean = Trainer::new(cfg.clone()).unwrap();
+    clean.run().unwrap();
+    let path = clean.checkpoint_path();
+    let len = std::fs::metadata(&path).unwrap().len();
+    Checkpoint::load(&path).unwrap_or_else(|e| panic!("{tag}: clean file must load: {e:#}"));
+
+    let cut = byte_of(len);
+    cfg.train.faults.plan = format!("ckpt-torn@4.0.0:byte={cut}");
+    let mut torn = Trainer::new(cfg).unwrap();
+    torn.run().unwrap(); // the tear happens at save time; training is clean
+    assert_eq!(std::fs::metadata(&path).unwrap().len(), cut, "{tag}: the cut must be exact");
+    let e = Checkpoint::load(&path).expect_err("a torn checkpoint must not load");
+    let msg = format!("{e:#}");
+    assert!(msg.contains(expect), "{tag}: load error must have context: {msg}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn torn_header_write_fails_loud_on_load() {
+    cell("torn_header_write_fails_loud_on_load", DEADLINE, || {
+        torn_cell("header", |_| 3, "header");
+    });
+}
+
+#[test]
+fn torn_payload_write_fails_loud_on_load() {
+    cell("torn_payload_write_fails_loud_on_load", DEADLINE, || {
+        torn_cell("payload", |len| len - 8, "truncated");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// kill-then-resume: abort a run mid-flight, resume the rolling
+// checkpoint, and land on the reference trajectory bit for bit
+// ---------------------------------------------------------------------------
+
+fn assert_kill_resume_matches(stage: ZeroStage, k: usize, tag: &str) {
+    let tmp = std::env::temp_dir().join(format!(
+        "prelora_adv_resume_{}_{tag}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut cfg = micro_config(stage, "adv-kill");
+    cfg.results_dir = tmp.to_str().unwrap().to_string();
+    cfg.train.checkpoint_every = 2;
+    cfg.train.faults.plan = format!("abort@{k}.1.0");
+    let mut a = Trainer::new(cfg.clone()).unwrap();
+    let e = a.run().expect_err("the armed run must die");
+    assert!(format!("{e:#}").contains("fault injected"), "{tag}: {e:#}");
+    assert_eq!(a.history().epochs(), k, "{tag}: the run must die inside epoch {k}");
+
+    // the rolling file holds the last even-epoch save before the kill
+    let back = Checkpoint::load(a.checkpoint_path()).unwrap();
+    assert_eq!(back.epoch, k - (k % 2), "{tag}: rolling save cadence");
+    cfg.train.faults.plan = String::new();
+    cfg.train.checkpoint_every = 0;
+    let mut b = Trainer::new(cfg).unwrap();
+    b.restore(&back).unwrap();
+    drive(&mut b, EPOCHS);
+    assert_eq!(
+        fingerprint(&b),
+        reference().fp,
+        "{tag}: kill-then-resume must equal the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn kill_then_resume_in_warmup() {
+    cell("kill_then_resume_in_warmup", DEADLINE, || {
+        let k = reference().k_warm;
+        assert_kill_resume_matches(ZeroStage::Off, k, "warmup-off");
+    });
+}
+
+#[test]
+fn kill_then_resume_under_zero3_lora() {
+    cell("kill_then_resume_under_zero3_lora", DEADLINE, || {
+        let k = reference().k_lora;
+        assert_kill_resume_matches(ZeroStage::Zero3, k, "lora-zero3");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// determinism of the faults themselves: same seed + same plan twice
+// must yield byte-identical outcomes — trajectories AND error text
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_plan_same_bits() {
+    cell("same_plan_same_bits", DEADLINE, || {
+        let k = reference().k_warm;
+        let run = || {
+            let mut cfg = micro_config(ZeroStage::Off, "adv-repro");
+            cfg.train.faults.plan = format!("straggle@{k}.0.0:ms=15;straggle@{k}.0.1:ms=5");
+            let mut t = Trainer::new(cfg).unwrap();
+            drive(&mut t, EPOCHS);
+            fingerprint(&t)
+        };
+        assert_eq!(run(), run(), "one plan, one seed, one trajectory");
+    });
+}
+
+#[test]
+fn same_plan_same_error() {
+    cell("same_plan_same_error", DEADLINE, || {
+        let k = reference().k_warm;
+        let run = || faulted_epoch_error(ZeroStage::Off, k, format!("panic@{k}.1.1"));
+        assert_eq!(run(), run(), "one plan, one seed, one error message");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tcp cells: real OS processes over loopback, faults in the wire layer
+// ---------------------------------------------------------------------------
+
+fn tcp_config_toml(results_dir: &std::path::Path, epochs: usize, plan: &str) -> String {
+    format!(
+        r#"
+model = "vit-micro"
+artifacts_dir = "{artifacts}"
+results_dir = "{results}"
+run_name = "adv"
+seed = 0
+
+[train]
+epochs = {epochs}
+eval_every = 4
+checkpoint_every = {epochs}
+
+[train.data]
+train_samples = 192
+val_samples = 64
+
+[train.zero]
+stage = 0
+
+[train.faults]
+plan = "{plan}"
+
+[prelora]
+tau = 6.0
+zeta = 25.0
+windows = 2
+window_epochs = 2
+warmup_epochs = 2
+"#,
+        artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        results = results_dir.display(),
+    )
+}
+
+fn wait_for_advert(path: &std::path::Path) -> String {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rank 0 never advertised its address at {}",
+            path.display()
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Launch a 2-rank group (port-0 rendezvous via `PRELORA_TCP_ADVERTISE`)
+/// and return each rank's `(success, stderr)` without asserting — fault
+/// cells expect failures and inspect the error text.
+fn run_tcp_pair(
+    cfg_path: &std::path::Path,
+    tmp: &std::path::Path,
+    run_name: &str,
+    timeout_ms: u32,
+) -> Vec<(bool, String)> {
+    let advert = tmp.join("root.addr");
+    let spawn = |rank: usize, peers: &str| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_prelora"));
+        cmd.args([
+            "train",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--run-name",
+            run_name,
+            "--dist",
+            "tcp",
+            "--rank",
+            &rank.to_string(),
+            "--peers",
+            peers,
+            "--connect-timeout-ms",
+            &timeout_ms.to_string(),
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped());
+        if rank == 0 {
+            cmd.env("PRELORA_TCP_ADVERTISE", &advert);
+        }
+        cmd.spawn().unwrap_or_else(|e| panic!("spawning rank {rank}: {e}"))
+    };
+    let mut children = vec![spawn(0, "127.0.0.1:0,127.0.0.1:0")];
+    let root = wait_for_advert(&advert);
+    children.push(spawn(1, &format!("{root},127.0.0.1:0")));
+    children
+        .into_iter()
+        .map(|c| {
+            let out = c.wait_with_output().unwrap();
+            (out.status.success(), String::from_utf8_lossy(&out.stderr).into_owned())
+        })
+        .collect()
+}
+
+fn tcp_cell_dir(tag: &str) -> std::path::PathBuf {
+    let tmp = std::env::temp_dir().join(format!("prelora_adv_tcp_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    tmp
+}
+
+fn write_cfg(tmp: &std::path::Path, toml: &str) -> std::path::PathBuf {
+    let cfg_path = tmp.join("adv.toml");
+    let mut f = std::fs::File::create(&cfg_path).unwrap();
+    f.write_all(toml.as_bytes()).unwrap();
+    cfg_path
+}
+
+#[test]
+fn tcp_stall_trips_the_watchdog() {
+    cell("tcp_stall_trips_the_watchdog", DEADLINE, || {
+        let tmp = tcp_cell_dir("stall");
+        // rank 1 stalls 8s mid-collective; rank 0's 5s recv watchdog
+        // must fire first and name the silent rank
+        let cfg = write_cfg(&tmp, &tcp_config_toml(&tmp, 2, "net-stall@1.0.1:ms=8000"));
+        let out = run_tcp_pair(&cfg, &tmp, "adv-stall", 5000);
+        assert!(!out[0].0, "rank 0 must fail: {}", out[0].1);
+        assert!(
+            out[0].1.contains("stalled") && out[0].1.contains("rank 1"),
+            "rank 0 must name the stalled rank: {}",
+            out[0].1
+        );
+        assert!(!out[1].0, "rank 1 must fail: {}", out[1].1);
+        assert!(out[1].1.contains("fault injected"), "{}", out[1].1);
+        std::fs::remove_dir_all(&tmp).ok();
+    });
+}
+
+#[test]
+fn tcp_peer_drop_is_loud_on_both_ranks() {
+    cell("tcp_peer_drop_is_loud_on_both_ranks", DEADLINE, || {
+        let tmp = tcp_cell_dir("drop");
+        let cfg = write_cfg(&tmp, &tcp_config_toml(&tmp, 2, "net-drop@1.0.1"));
+        let out = run_tcp_pair(&cfg, &tmp, "adv-drop", 30000);
+        assert!(!out[0].0, "rank 0 must fail: {}", out[0].1);
+        assert!(out[0].1.contains("rank 1"), "rank 0 must name the dead rank: {}", out[0].1);
+        assert!(!out[1].0, "rank 1 must fail: {}", out[1].1);
+        assert!(
+            out[1].1.contains("fault injected") && out[1].1.contains("dropped"),
+            "{}",
+            out[1].1
+        );
+        std::fs::remove_dir_all(&tmp).ok();
+    });
+}
+
+#[test]
+fn tcp_corrupt_frame_is_rejected() {
+    cell("tcp_corrupt_frame_is_rejected", DEADLINE, || {
+        let tmp = tcp_cell_dir("corrupt");
+        let cfg = write_cfg(&tmp, &tcp_config_toml(&tmp, 2, "net-corrupt@1.0.1"));
+        let out = run_tcp_pair(&cfg, &tmp, "adv-corrupt", 30000);
+        assert!(!out[0].0, "rank 0 must fail: {}", out[0].1);
+        assert!(out[0].1.contains("CRC"), "rank 0 must reject the frame by CRC: {}", out[0].1);
+        assert!(!out[1].0, "rank 1 must fail too: {}", out[1].1);
+        std::fs::remove_dir_all(&tmp).ok();
+    });
+}
+
+#[test]
+fn tcp_delays_keep_bitwise_parity() {
+    cell("tcp_delays_keep_bitwise_parity", DEADLINE, || {
+        let tmp = tcp_cell_dir("delay");
+        // one delay per rank, different steps; the run must still match
+        // the in-process reference bit for bit. The same config drives
+        // both legs: net faults are wire-layer, so the local-transport
+        // reference is untouched by the plan.
+        let toml = tcp_config_toml(&tmp, 6, "net-delay@1.0.0:ms=30;net-delay@2.0.1:ms=30");
+        let cfg_path = write_cfg(&tmp, &toml);
+        let mut cfg = RunConfig::from_toml_file(&cfg_path).unwrap();
+        cfg.train.dp.workers = 2; // the tcp group's world is two ranks
+        let mut reference = Trainer::new(cfg).unwrap();
+        reference.run().unwrap();
+        let want = reference.checkpoint();
+
+        let out = run_tcp_pair(&cfg_path, &tmp, "adv-delay", 30000);
+        for (rank, (ok, stderr)) in out.iter().enumerate() {
+            assert!(ok, "rank {rank} must survive a delay:\n{stderr}");
+        }
+        let got = Checkpoint::load(tmp.join("adv-delay.ckpt")).unwrap();
+        assert_eq!(got.epoch, want.epoch);
+        assert_eq!(got.base, want.base, "delayed run must keep bitwise parity");
+        assert_eq!(got.lora, want.lora);
+        assert_eq!(got.opt_base, want.opt_base);
+        assert_eq!(got.opt_lora, want.opt_lora);
+        let bits = |ck: &Checkpoint| {
+            ck.trajectory
+                .as_ref()
+                .expect("v3 checkpoint carries the trajectory")
+                .stats
+                .iter()
+                .map(|s| (s.train_loss.to_bits(), s.grad_norm.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&got), bits(&want), "per-epoch observables must be bitwise equal");
+        std::fs::remove_dir_all(&tmp).ok();
+    });
+}

@@ -59,43 +59,63 @@ warmup_epochs = 2
     )
 }
 
-/// Two free loopback ports; the probe listeners are dropped before the
-/// subprocesses bind, so a parallel port grab is theoretically possible —
-/// the startup timeout turns that into a loud failure, not a hang.
-fn free_peers() -> Vec<String> {
-    (0..2)
-        .map(|_| {
-            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-            l.local_addr().unwrap().to_string()
-        })
-        .collect()
+/// Wait for rank 0's advertised listen address (written atomically via
+/// `PRELORA_TCP_ADVERTISE` once its port-0 bind resolves).
+fn wait_for_advert(path: &std::path::Path) -> String {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rank 0 never advertised its address at {}",
+            path.display()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
 }
 
-fn run_tcp_group(cfg_path: &std::path::Path, peers: &[String]) {
-    let children: Vec<_> = (0..peers.len())
-        .map(|rank| {
-            Command::new(env!("CARGO_BIN_EXE_prelora"))
-                .args([
-                    "train",
-                    "--config",
-                    cfg_path.to_str().unwrap(),
-                    "--run-name",
-                    "parity-tcp",
-                    "--dist",
-                    "tcp",
-                    "--rank",
-                    &rank.to_string(),
-                    "--peers",
-                    &peers.join(","),
-                    "--connect-timeout-ms",
-                    "30000",
-                ])
-                .stdout(std::process::Stdio::piped())
-                .stderr(std::process::Stdio::piped())
-                .spawn()
-                .unwrap_or_else(|e| panic!("spawning rank {rank}: {e}"))
-        })
-        .collect();
+/// Launch `world` ranks with a port-0 rendezvous: rank 0 binds
+/// `127.0.0.1:0`, advertises the OS-assigned address through
+/// `PRELORA_TCP_ADVERTISE`, and the remaining ranks are spawned with the
+/// discovered address. No port is ever guessed, so parallel test runs
+/// cannot race each other for a fixed port.
+fn run_tcp_group(cfg_path: &std::path::Path, tmp: &std::path::Path, world: usize) {
+    let advert = tmp.join("root.addr");
+    let spawn = |rank: usize, peers: &str| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_prelora"));
+        cmd.args([
+            "train",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--run-name",
+            "parity-tcp",
+            "--dist",
+            "tcp",
+            "--rank",
+            &rank.to_string(),
+            "--peers",
+            peers,
+            "--connect-timeout-ms",
+            "30000",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped());
+        if rank == 0 {
+            cmd.env("PRELORA_TCP_ADVERTISE", &advert);
+        }
+        cmd.spawn().unwrap_or_else(|e| panic!("spawning rank {rank}: {e}"))
+    };
+    // rank 0 binds port 0; the placeholder entries only size the world
+    let unbound = vec!["127.0.0.1:0".to_string(); world];
+    let mut children = vec![spawn(0, &unbound.join(","))];
+    let mut peers = unbound;
+    peers[0] = wait_for_advert(&advert);
+    children.extend((1..world).map(|r| spawn(r, &peers.join(","))));
     for (rank, child) in children.into_iter().enumerate() {
         let out = child.wait_with_output().unwrap();
         assert!(
@@ -147,7 +167,7 @@ fn parity_leg(stage: u8) {
     );
 
     // two real OS processes over loopback; rank 0 writes the checkpoint
-    run_tcp_group(&cfg_path, &free_peers());
+    run_tcp_group(&cfg_path, &tmp, 2);
     let got = Checkpoint::load(tmp.join("parity-tcp.ckpt")).unwrap();
     let got_tr = got.trajectory.as_ref().unwrap();
 
