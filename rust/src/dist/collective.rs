@@ -441,6 +441,11 @@ impl LocalGroup {
                 g.bufs.iter_mut().map(|b| b.take().unwrap_or_default()).collect();
             let scs: Vec<Vec<f64>> =
                 g.scalars.iter_mut().map(|s| s.take().unwrap_or_default()).collect();
+            // lint: allow(PL007): compute_op is pure array math (it
+            // dispatches to crate::dp::reduce_*); the lint's name-merged
+            // call graph conflates it with the endpoint trait impls.
+            // Running it under the lock is the rendezvous design: the
+            // last arrival computes once while everyone else waits.
             match compute_op(self.alg, &desc, bufs, scs) {
                 Ok(out) => {
                     g.result = Some(Arc::new(out));

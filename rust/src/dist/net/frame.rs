@@ -56,6 +56,8 @@ impl FrameKind {
             0 => Ok(FrameKind::Hello),
             1 => Ok(FrameKind::Op),
             2 => Ok(FrameKind::Result),
+            // lint: allow(PL009): decoder-local — PeerLink::recv and the
+            // handshake wrap this with rank/seq context at the call site.
             other => bail!("unknown frame kind {other}"),
         }
     }
@@ -114,7 +116,10 @@ impl Frame {
         let mut len4 = [0u8; 4];
         r.read_exact(&mut len4)?;
         let len = u32::from_le_bytes(len4) as usize;
+        // lint: allow(PL009): length prefix precedes the header, so no
+        // rank/seq exists yet — callers wrap with link context.
         ensure!(len >= HEADER_BYTES, "frame too short: {len} bytes");
+        // lint: allow(PL009): same pre-header position as above.
         ensure!(
             len <= MAX_FRAME_BYTES,
             "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap (corrupt length prefix?)"
@@ -124,11 +129,15 @@ impl Frame {
         let crc_got = le_u32(&body, len - 4);
         let body = &body[..len - 4];
         let crc_want = crc32(body);
+        // lint: allow(PL009): a corrupt frame's header fields are not
+        // trustworthy enough to print — callers wrap with link context.
         ensure!(
             crc_got == crc_want,
             "frame CRC mismatch: wire {crc_got:#010x} vs computed {crc_want:#010x} — \
              corrupted in transit"
         );
+        // lint: allow(PL009): version gate fires before the header is
+        // trusted — callers wrap with link context.
         ensure!(
             body[0] == FRAME_VERSION,
             "frame version {} but this build speaks {FRAME_VERSION}",
@@ -173,6 +182,8 @@ fn desc_decode(tag: u8, a: u64, b: u64, c: u64) -> Result<OpDesc> {
         5 => OpDesc::Broadcast { len: a as usize, root: b as usize },
         6 => OpDesc::Scalars { n: a as usize },
         7 => OpDesc::Barrier,
+        // lint: allow(PL009): payload codec — drive() reports which rank's
+        // contribution failed to decode, with the op's seq.
         other => bail!("unknown collective op tag {other}"),
     })
 }
@@ -202,12 +213,15 @@ impl<'a> Cursor<'a> {
     }
 
     fn u8(&mut self) -> Result<u8> {
+        // lint: allow(PL009): cursor primitive — the decode entry points
+        // are wrapped with rank/seq context by their callers in net/mod.
         ensure!(self.at < self.b.len(), "payload truncated");
         self.at += 1;
         Ok(self.b[self.at - 1])
     }
 
     fn u32(&mut self) -> Result<u32> {
+        // lint: allow(PL009): cursor primitive — see u8() above.
         ensure!(self.at + 4 <= self.b.len(), "payload truncated");
         let v = le_u32(self.b, self.at);
         self.at += 4;
@@ -215,6 +229,7 @@ impl<'a> Cursor<'a> {
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // lint: allow(PL009): cursor primitive — see u8() above.
         ensure!(self.at + 8 <= self.b.len(), "payload truncated");
         let v = le_u64(self.b, self.at);
         self.at += 8;
@@ -223,6 +238,7 @@ impl<'a> Cursor<'a> {
 
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
+        // lint: allow(PL009): cursor primitive — see u8() above.
         ensure!(self.at + 4 * n <= self.b.len(), "payload truncated ({n} f32s declared)");
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
@@ -239,6 +255,7 @@ impl<'a> Cursor<'a> {
 
     fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.u32()? as usize;
+        // lint: allow(PL009): cursor primitive — see u8() above.
         ensure!(self.at + 8 * n <= self.b.len(), "payload truncated ({n} f64s declared)");
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
@@ -253,6 +270,7 @@ impl<'a> Cursor<'a> {
     /// remaining payload, so a corrupt count can never demand more
     /// memory than the (already length-capped) frame itself carries.
     fn claim(&self, count: usize, min_bytes: usize, what: &str) -> Result<()> {
+        // lint: allow(PL009): cursor primitive — see u8() above.
         ensure!(
             self.at + count * min_bytes <= self.b.len(),
             "payload truncated ({count} {what} declared)"
@@ -261,6 +279,7 @@ impl<'a> Cursor<'a> {
     }
 
     fn done(&self) -> Result<()> {
+        // lint: allow(PL009): cursor primitive — see u8() above.
         ensure!(self.at == self.b.len(), "{} trailing payload bytes", self.b.len() - self.at);
         Ok(())
     }
@@ -342,6 +361,8 @@ pub(crate) fn decode_out(payload: &[u8]) -> Result<OpOut> {
             OpOut::Scalars(rows)
         }
         4 => OpOut::Unit,
+        // lint: allow(PL009): payload codec — drive() wraps the result
+        // decode with the op's seq and the link's rank.
         other => bail!("unknown result tag {other}"),
     };
     c.done()?;

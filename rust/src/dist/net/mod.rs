@@ -71,7 +71,11 @@ fn world_payload(world: usize) -> Vec<u8> {
 }
 
 fn decode_world(payload: &[u8]) -> Result<usize> {
-    ensure!(payload.len() == 4, "hello payload is {} bytes, expected 4", payload.len());
+    ensure!(
+        payload.len() == 4,
+        "hello payload is {} bytes, expected 4 — cannot learn the peer rank",
+        payload.len()
+    );
     Ok(u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize)
 }
 
@@ -103,9 +107,16 @@ impl PeerLink {
         // Collective frames are latency-bound request/response pairs;
         // Nagle buys nothing here.
         let _ = stream.set_nodelay(true);
-        let mut wr = stream.try_clone().context("cloning the stream for the send worker")?;
-        let mut rd = stream.try_clone().context("cloning the stream for the recv worker")?;
+        let mut wr = stream
+            .try_clone()
+            .with_context(|| format!("cloning the stream for the send worker to rank {peer}"))?;
+        let mut rd = stream
+            .try_clone()
+            .with_context(|| format!("cloning the stream for the recv worker to rank {peer}"))?;
 
+        // lint: allow(PL008): the op protocol is stop-and-wait — at most
+        // one request and one response frame are in flight per link, so
+        // this queue is bounded by the protocol itself.
         let (tx, outbound) = mpsc::channel::<Frame>();
         let corrupt_next = Arc::new(AtomicBool::new(false));
         let corrupt = corrupt_next.clone();
@@ -131,8 +142,11 @@ impl PeerLink {
                     }
                 }
             })
-            .context("spawning the send worker")?;
+            .with_context(|| format!("spawning the send worker for rank {peer}"))?;
 
+        // lint: allow(PL008): inbound mirror of the stop-and-wait link —
+        // the peer sends at most one frame per outstanding op, so depth
+        // is protocol-bounded.
         let (inbound_tx, rx) = mpsc::channel::<Result<Frame>>();
         let sd = shutdown.clone();
         // lint: thread: joined — PeerLink::close shuts the socket down
@@ -157,7 +171,7 @@ impl PeerLink {
                     }
                 }
             })
-            .context("spawning the recv worker")?;
+            .with_context(|| format!("spawning the recv worker for rank {peer}"))?;
 
         Ok(Self {
             peer,
@@ -307,17 +321,22 @@ impl TcpEndpoint {
     fn run_op(&self, desc: OpDesc, data: Vec<f32>, scalars: Vec<f64>) -> Result<OpOut> {
         let mut g = lock_inner(&self.inner);
         if let Some(f) = &g.failed {
-            bail!("collective endpoint already failed: {f}");
+            bail!("collective endpoint already failed at rank {}: {f}", self.rank);
         }
         // adversity testing: one injection point guards every wire op —
         // the first-class generalization of the ad-hoc per-test fakes
         // (silent sockets, hand-corrupted frames) this replaces. A plain
         // `None` check outside adversity runs.
         if let Some(fault) = self.faults.as_ref().and_then(|i| i.net_fault(self.rank)) {
+            // lint: allow(PL007): fault injection sleeps/stalls on purpose
+            // while the op lock is held — the stall must block the op.
             self.apply_net_fault(fault, &mut g)?;
         }
         let seq = g.seq;
         g.seq += 1;
+        // lint: allow(PL007): the endpoint lock *is* the op serializer —
+        // one collective at a time per endpoint is the wire protocol's
+        // correctness condition, so drive() blocking under it is by design.
         let out = drive(self.alg, self.rank, self.timeout, &g.links, seq, desc, data, scalars);
         if let Err(e) = &out {
             g.failed = Some(format!("{e:#}"));
@@ -357,6 +376,8 @@ impl TcpEndpoint {
                     self.rank
                 );
                 g.failed = Some(msg.clone());
+                // lint: allow(PL009): msg interpolates rank/epoch/step —
+                // built three lines up so it can also poison the endpoint.
                 bail!(msg);
             }
             NetFault::Drop => {
@@ -377,6 +398,8 @@ impl TcpEndpoint {
                     self.rank
                 );
                 g.failed = Some(msg.clone());
+                // lint: allow(PL009): msg interpolates rank/epoch/step —
+                // built above so it can also poison the endpoint.
                 bail!(msg);
             }
             NetFault::Corrupt => {
@@ -464,7 +487,11 @@ fn drive(
                 payload: frame::encode_op(&desc, &data, &scalars),
             })?;
             let f = link.recv(timeout, seq, "the op result")?;
-            ensure!(f.kind == FrameKind::Result, "expected a result frame, got {:?}", f.kind);
+            ensure!(
+                f.kind == FrameKind::Result,
+                "expected a result frame for op seq {seq}, got {:?}",
+                f.kind
+            );
             ensure!(
                 f.seq == seq,
                 "collective desync: result for op seq {} arrived while waiting for {seq}",
@@ -574,7 +601,7 @@ fn handshake_accept(
         deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
     stream.set_read_timeout(Some(remaining)).context("rank 0: arming the handshake timeout")?;
     let hello = Frame::read_from(&mut stream).context("rank 0: reading a peer's hello")?;
-    ensure!(hello.kind == FrameKind::Hello, "expected a hello frame, got {:?}", hello.kind);
+    ensure!(hello.kind == FrameKind::Hello, "expected a peer's hello frame, got {:?}", hello.kind);
     let their_world = decode_world(&hello.payload)?;
     ensure!(
         their_world == world,
@@ -660,7 +687,7 @@ impl CollectiveEndpoint for TcpEndpoint {
                 *buf = v;
                 Ok(())
             }
-            other => bail!("all_reduce returned {other:?} (prelora bug)"),
+            other => bail!("all_reduce at rank {} returned {other:?} (prelora bug)", self.rank),
         }
     }
 
@@ -668,7 +695,9 @@ impl CollectiveEndpoint for TcpEndpoint {
         let desc = OpDesc::ReduceScatter { len: buf.len(), parts };
         match self.run_op(desc, buf, Vec::new())? {
             OpOut::Chunks(chunks) => Ok(chunks),
-            other => bail!("reduce_scatter returned {other:?} (prelora bug)"),
+            other => {
+                bail!("reduce_scatter at rank {} returned {other:?} (prelora bug)", self.rank)
+            }
         }
     }
 
@@ -676,14 +705,16 @@ impl CollectiveEndpoint for TcpEndpoint {
         let desc = OpDesc::ReduceBucket { len: buf.len(), lo, full_len };
         match self.run_op(desc, buf, Vec::new())? {
             OpOut::Full(v) => Ok(v),
-            other => bail!("reduce_bucket returned {other:?} (prelora bug)"),
+            other => {
+                bail!("reduce_bucket at rank {} returned {other:?} (prelora bug)", self.rank)
+            }
         }
     }
 
     fn all_gather(&self, own: Vec<f32>) -> Result<Vec<Vec<f32>>> {
         match self.run_op(OpDesc::AllGather, own, Vec::new())? {
             OpOut::Chunks(chunks) => Ok(chunks),
-            other => bail!("all_gather returned {other:?} (prelora bug)"),
+            other => bail!("all_gather at rank {} returned {other:?} (prelora bug)", self.rank),
         }
     }
 
@@ -694,7 +725,7 @@ impl CollectiveEndpoint for TcpEndpoint {
                 *buf = v;
                 Ok(())
             }
-            other => bail!("broadcast returned {other:?} (prelora bug)"),
+            other => bail!("broadcast at rank {} returned {other:?} (prelora bug)", self.rank),
         }
     }
 
@@ -702,14 +733,16 @@ impl CollectiveEndpoint for TcpEndpoint {
         let desc = OpDesc::Scalars { n: vals.len() };
         match self.run_op(desc, Vec::new(), vals.to_vec())? {
             OpOut::Scalars(rows) => Ok(rows),
-            other => bail!("gather_scalars returned {other:?} (prelora bug)"),
+            other => {
+                bail!("gather_scalars at rank {} returned {other:?} (prelora bug)", self.rank)
+            }
         }
     }
 
     fn barrier(&self) -> Result<()> {
         match self.run_op(OpDesc::Barrier, Vec::new(), Vec::new())? {
             OpOut::Unit => Ok(()),
-            other => bail!("barrier returned {other:?} (prelora bug)"),
+            other => bail!("barrier at rank {} returned {other:?} (prelora bug)", self.rank),
         }
     }
 }
@@ -721,9 +754,14 @@ impl Drop for TcpEndpoint {
         match &mut g.links {
             Links::Root(peers) => {
                 for p in peers.iter_mut() {
+                    // lint: allow(PL007): teardown — close() joins the
+                    // workers under the lock on purpose, so no op can
+                    // race the links while they die.
                     p.close();
                 }
             }
+            // lint: allow(PL007): teardown — same join-under-lock story
+            // as the root branch above.
             Links::Leaf(p) => p.close(),
         }
     }

@@ -405,6 +405,9 @@ impl GradEngine {
         algorithm: Algorithm,
     ) -> Result<Self> {
         ensure!(workers >= 1, "need at least one worker");
+        // lint: allow(PL008): depth is capped by in_flight accounting —
+        // the leader never has more than one outstanding job per worker,
+        // so at most n_workers results queue here.
         let (results_tx, results_rx) = mpsc::channel();
         let mut engine = Self {
             manifest: manifest.clone(),
@@ -435,6 +438,8 @@ impl GradEngine {
     }
 
     fn spawn_worker(&mut self, id: usize) -> Result<()> {
+        // lint: allow(PL008): worker inbox — the leader sends at most one
+        // job per in-flight slot plus a final Shutdown, so depth ≤ 2.
         let (tx, rx) = mpsc::channel::<WorkerMsg>();
         let results = self.results_tx.clone();
         let manifest = self.manifest.clone();

@@ -54,6 +54,12 @@ use crate::dp::{
 };
 use crate::sync::{mpsc, thread, Arc};
 
+/// Depth of the bucket job queue, per publishing worker: enough slack
+/// that a worker publishing its whole backward output in one burst never
+/// stalls on the accumulator, while still bounding memory to a few
+/// buckets per worker.
+const BUCKET_QUEUE_JOBS_PER_WORKER: usize = 4;
+
 /// One reduced bucket — or the accumulator's report of a broken protocol
 /// (duplicate/out-of-range publish, strategy refusal), which the leader
 /// surfaces as a step error instead of waiting on a bucket that can never
@@ -173,7 +179,10 @@ impl ReduceStage {
         if bucket_bytes > 0 && stage.strategy.bucketed_sync() {
             // bounded job queue: throttles publishers without ever filling
             // faster than the accumulator drains
-            let (btx, brx) = BucketTx::channel(4 * n_workers.max(1));
+            let (btx, brx) = BucketTx::channel(BUCKET_QUEUE_JOBS_PER_WORKER * n_workers.max(1));
+            // lint: allow(PL008): at most one ReducedMsg is ever in flight
+            // per published bucket, and publishing is throttled by the
+            // bounded job queue above — depth is structurally capped.
             let (rtx, rrx) = mpsc::channel::<ReducedMsg>();
             let n = n_workers.max(1);
             let acc_strategy = stage.strategy.clone();
@@ -192,7 +201,12 @@ impl ReduceStage {
         if !overlap {
             return Ok(stage);
         }
+        // lint: allow(PL008): strict request/response — the leader sends
+        // one grad_sync job, then blocks on the result before sending the
+        // next; at most one message sits in either queue.
         let (tx, job_rx) = mpsc::channel::<Vec<Vec<f32>>>();
+        // lint: allow(PL008): response half of the pair above — depth ≤ 1
+        // by the same alternation.
         let (out_tx, rx) = mpsc::channel::<Option<Reduced>>();
         let stage_strategy = stage.strategy.clone();
         // lint: thread: joined — Drop closes the job channel and joins.

@@ -1,0 +1,177 @@
+//! Dot-format rendering of the concurrency topology extracted by
+//! [`crate::model`]: one box per spawned thread (named per PL005), one
+//! ellipse per function that owns a thread or channel endpoint, dotted
+//! spawn edges, and one edge per channel from the sender's owner to the
+//! receiver's owner (dashed when the channel is unbounded).
+//!
+//! Output is deterministic: the model records spawns, channels, and
+//! functions in sorted-file, top-to-bottom source order, and rendering
+//! walks them in that order.
+
+use crate::model::Model;
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Node id for the owner of a source location: the capturing spawn's
+/// thread node when the endpoint lives inside a spawn body, else the
+/// enclosing function's node, else a per-file fallback node.
+fn owner_id(spawn: Option<usize>, func: Option<usize>, file: usize) -> String {
+    match (spawn, func) {
+        (Some(s), _) => format!("t{s}"),
+        (None, Some(f)) => format!("f{f}"),
+        (None, None) => format!("file{file}"),
+    }
+}
+
+pub fn render(model: &Model) -> String {
+    let mut out = String::new();
+    out.push_str("digraph prelora_topology {\n");
+    out.push_str("    rankdir=LR;\n");
+    out.push_str("    node [fontsize=10];\n");
+
+    // Function nodes referenced by any spawn site or channel endpoint.
+    let mut fn_nodes: Vec<usize> = Vec::new();
+    let mut file_nodes: Vec<usize> = Vec::new();
+    let mut want_fn = |idx: Option<usize>, file: usize, fns: &mut Vec<usize>, fls: &mut Vec<usize>| match idx {
+        Some(i) => {
+            if !fns.contains(&i) {
+                fns.push(i);
+            }
+        }
+        None => {
+            if !fls.contains(&file) {
+                fls.push(file);
+            }
+        }
+    };
+    for sp in &model.spawns {
+        want_fn(sp.func, sp.file, &mut fn_nodes, &mut file_nodes);
+    }
+    for ch in &model.channels {
+        if ch.tx_spawn.is_none() {
+            want_fn(ch.func, ch.file, &mut fn_nodes, &mut file_nodes);
+        }
+        if ch.rx_spawn.is_none() {
+            want_fn(ch.func, ch.file, &mut fn_nodes, &mut file_nodes);
+        }
+    }
+    fn_nodes.sort_unstable();
+    file_nodes.sort_unstable();
+
+    for &i in &fn_nodes {
+        let f = &model.functions[i];
+        out.push_str(&format!(
+            "    f{i} [shape=ellipse, label=\"fn {}\\n{}\"];\n",
+            esc(&f.name),
+            esc(&model.files[f.file])
+        ));
+    }
+    for &fl in &file_nodes {
+        out.push_str(&format!(
+            "    file{fl} [shape=ellipse, style=dashed, label=\"{}\"];\n",
+            esc(&model.files[fl])
+        ));
+    }
+
+    // Thread nodes + spawn edges.
+    for (si, sp) in model.spawns.iter().enumerate() {
+        let name = sp.thread_name.as_deref().unwrap_or("unnamed");
+        let marker = if sp.marked { "joined" } else { "UNMARKED" };
+        out.push_str(&format!(
+            "    t{si} [shape=box, label=\"{}\\n{}:{}\\n[{}]\"];\n",
+            esc(name),
+            esc(&model.files[sp.file]),
+            sp.line,
+            marker
+        ));
+        let from = owner_id(None, sp.func, sp.file);
+        out.push_str(&format!("    {from} -> t{si} [style=dotted, label=\"spawn\"];\n"));
+    }
+
+    // Channel edges: sender owner -> receiver owner.
+    for ch in &model.channels {
+        let tx = ch.tx.as_deref().unwrap_or("_");
+        let rx = ch.rx.as_deref().unwrap_or("_");
+        let cap = match (&ch.bounded, &ch.capacity) {
+            (true, Some(c)) => format!("cap={}", c),
+            (true, None) => "bounded".to_string(),
+            (false, _) => "unbounded".to_string(),
+        };
+        let style = if ch.bounded { "solid" } else { "dashed" };
+        let from = owner_id(ch.tx_spawn, ch.func, ch.file);
+        let to = owner_id(ch.rx_spawn, ch.func, ch.file);
+        out.push_str(&format!(
+            "    {from} -> {to} [style={style}, label=\"{} to {}\\n{}\\n{}:{}\"];\n",
+            esc(tx),
+            esc(rx),
+            esc(&cap),
+            esc(&model.files[ch.file]),
+            ch.line
+        ));
+    }
+
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn model_of(files: &[(&str, &str)]) -> Model {
+        let lexed: Vec<(String, crate::lexer::SourceFile)> =
+            files.iter().map(|(r, s)| (r.to_string(), lex(s))).collect();
+        Model::build(&lexed)
+    }
+
+    #[test]
+    fn threads_channels_and_owners_all_appear() {
+        let m = model_of(&[(
+            "dist/worker.rs",
+            "const CAP: usize = 4;\n\
+             fn start(&self) {\n\
+                 let (tx, rx) = mpsc::sync_channel::<u8>(CAP);\n\
+                 // lint: thread: joined — Drop joins.\n\
+                 let j = thread::Builder::new()\n\
+                     .name(\"pump-1\".into())\n\
+                     .spawn(move || {\n\
+                         while let Ok(v) = rx.recv() {\n\
+                             handle(v);\n\
+                         }\n\
+                     })\n\
+                     .unwrap();\n\
+             }\n",
+        )]);
+        let dot = render(&m);
+        assert!(dot.contains("digraph prelora_topology"));
+        assert!(dot.contains("pump-1"), "thread name missing:\n{dot}");
+        assert!(dot.contains("[joined]"));
+        assert!(dot.contains("fn start"), "owner function missing:\n{dot}");
+        assert!(dot.contains("tx to rx"), "channel endpoints missing:\n{dot}");
+        assert!(dot.contains("cap=CAP"));
+        // the receiver is drained inside the spawn body: edge must target t0
+        assert!(dot.contains("-> t0 [style=solid"), "rx owner should be the thread:\n{dot}");
+    }
+
+    #[test]
+    fn unbounded_channels_render_dashed() {
+        let m = model_of(&[(
+            "runtime.rs",
+            "fn wire(&self) {\n    let (tx, rx) = mpsc::channel::<u8>();\n    keep(tx, rx);\n}\n",
+        )]);
+        let dot = render(&m);
+        assert!(dot.contains("style=dashed"));
+        assert!(dot.contains("unbounded"));
+    }
+
+    #[test]
+    fn unmarked_spawns_are_called_out() {
+        let m = model_of(&[("runtime.rs", "fn go() {\n    std::thread::spawn(|| work());\n}\n")]);
+        let dot = render(&m);
+        assert!(dot.contains("[UNMARKED]"));
+        assert!(dot.contains("unnamed"));
+    }
+}

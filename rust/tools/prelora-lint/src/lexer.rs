@@ -21,6 +21,11 @@ pub struct Line {
     pub code: String,
     /// Comment text carried by this line (line and block comments).
     pub comment: String,
+    /// The original line, verbatim. Rules that must see *into* string
+    /// literals (PL009's interpolated error context, the topology
+    /// graph's `.name("...")` thread labels) read this instead of
+    /// `code` — never for pattern bans, which stay prose-proof.
+    pub raw: String,
 }
 
 /// A lexed file plus its test-region map.
@@ -71,8 +76,7 @@ pub fn lex(src: &str) -> SourceFile {
                     cur.code.push('"');
                     state = State::Str;
                     i += 1;
-                } else if c == 'r' && raw_str_hashes(&chars, i).is_some() {
-                    let hashes = raw_str_hashes(&chars, i).unwrap();
+                } else if let Some(hashes) = (c == 'r').then(|| raw_str_hashes(&chars, i)).flatten() {
                     cur.code.push_str("r\"");
                     state = State::RawStr(hashes);
                     i += 2 + hashes as usize;
@@ -147,6 +151,13 @@ pub fn lex(src: &str) -> SourceFile {
     }
     if !cur.code.is_empty() || !cur.comment.is_empty() {
         lines.push(cur);
+    }
+    // Attach the verbatim text per line. `lines` was built by splitting on
+    // the same `\n`s, so the indices agree; `get` keeps a (hypothetical)
+    // miscount from ever panicking on a truncated input.
+    let raws: Vec<&str> = src.split('\n').collect();
+    for (i, line) in lines.iter_mut().enumerate() {
+        line.raw = raws.get(i).copied().unwrap_or("").to_string();
     }
     let in_test = mark_tests(&lines);
     SourceFile { lines, in_test }
@@ -259,5 +270,138 @@ mod tests {
     fn nested_block_comments_terminate_correctly() {
         let got = code_of("/* outer /* inner */ still */ let z = 1;\n");
         assert_eq!(got[0].trim(), "let z = 1;");
+    }
+
+    #[test]
+    fn raw_lines_match_the_input_verbatim() {
+        let src = "let s = \"HashMap\"; // prose\nlet t = 1;\n";
+        let f = lex(src);
+        assert_eq!(f.lines[0].raw, "let s = \"HashMap\"; // prose");
+        assert_eq!(f.lines[1].raw, "let t = 1;");
+    }
+
+    // ---- hardening: the lexer is fed untrusted shapes below ----------
+    //
+    // The properties every input must satisfy, panics aside:
+    //  * one lexed line per `\n` in the input; the final unterminated
+    //    line may be dropped only when it carries no code or comment
+    //    text (empty, or wholly inside a string literal — zero rule
+    //    surface either way), so rule line numbers stay honest;
+    //  * `in_test` is index-aligned with `lines`;
+    //  * `raw` round-trips the input text for every line.
+    fn assert_lex_invariants(src: &str) {
+        let f = lex(src);
+        let raws: Vec<&str> = src.split('\n').collect();
+        assert!(
+            f.lines.len() == raws.len() || f.lines.len() + 1 == raws.len(),
+            "line count drifted: {} lexed vs {} input",
+            f.lines.len(),
+            raws.len()
+        );
+        assert_eq!(f.in_test.len(), f.lines.len());
+        for (i, line) in f.lines.iter().enumerate() {
+            assert_eq!(line.raw, raws[i], "raw text drifted at line {}", i + 1);
+        }
+    }
+
+    /// Same xorshift generator the frame fuzzer uses — deterministic, no
+    /// deps, and seeds are printed by the assert message on failure.
+    struct XorShift64(u64);
+    impl XorShift64 {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+    }
+
+    #[test]
+    fn arbitrary_byte_strings_never_panic_the_lexer() {
+        let mut rng = XorShift64(0x5eed_1e4e_a11_f00d);
+        // Bias the alphabet toward the lexer's state-machine triggers so
+        // the walk actually exercises string/comment/raw transitions.
+        let spice = [b'"', b'\'', b'/', b'*', b'\\', b'r', b'#', b'\n', b'{', b'}'];
+        for _ in 0..512 {
+            let len = (rng.next() % 300) as usize;
+            let bytes: Vec<u8> = (0..len)
+                .map(|_| {
+                    let r = rng.next();
+                    if r % 3 == 0 {
+                        spice[(r / 3) as usize % spice.len()]
+                    } else {
+                        (r >> 16) as u8
+                    }
+                })
+                .collect();
+            let src = String::from_utf8_lossy(&bytes);
+            assert_lex_invariants(&src);
+        }
+    }
+
+    #[test]
+    fn every_prefix_truncation_of_real_sources_lexes_cleanly() {
+        // The lint's own sources are real Rust with raw strings, nested
+        // comments, lifetimes and char literals. Every byte-prefix of the
+        // leading window must lex without panicking, and the full file
+        // must too at a byte stride (full quadratic cost is pointless).
+        for src in [include_str!("lexer.rs"), include_str!("rules.rs"), include_str!("model.rs")] {
+            let bytes = src.as_bytes();
+            let window = bytes.len().min(2048);
+            for cut in 0..=window {
+                assert_lex_invariants(&String::from_utf8_lossy(&bytes[..cut]));
+            }
+            let mut cut = window;
+            while cut < bytes.len() {
+                assert_lex_invariants(&String::from_utf8_lossy(&bytes[..cut]));
+                cut += 97;
+            }
+            assert_lex_invariants(src);
+        }
+    }
+
+    #[test]
+    fn truncation_inside_every_state_is_harmless() {
+        for src in [
+            "let s = \"unterminated",
+            "let s = \"escape at eof \\",
+            "let r = r#\"raw unterminated",
+            "let r = r##\"raw with short close\"#",
+            "/* block /* nested and unterminated",
+            "// line comment at eof",
+            "let c = '",
+            "let c = '\\",
+            "let l = &'",
+            "r",
+            "r#",
+            "r#\"",
+        ] {
+            assert_lex_invariants(src);
+        }
+    }
+
+    #[test]
+    fn lifetime_char_ambiguity_is_resolved_by_lookahead() {
+        // lifetimes stay code (visible to rules) …
+        let got = code_of("impl<'a, 'b: 'a> Foo<'a> for &'b mut T {}\n");
+        assert_eq!(got[0], "impl<'a, 'b: 'a> Foo<'a> for &'b mut T {}");
+        // … single-char and escaped literals are blanked …
+        let got = code_of("let v = ['r', '\\'', '_', 'y'];\n");
+        assert_eq!(got[0], "let v = ['', '', '', ''];");
+        // … and a lifetime bound hard against a shippable token parses on.
+        let got = code_of("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert_eq!(got[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+    }
+
+    #[test]
+    fn raw_string_hash_depths_nest_and_close_exactly() {
+        let got = code_of("let a = r##\"has \"# inside\"##; let b = r\"plain\";\n");
+        assert_eq!(got[0], "let a = r\"\"; let b = r\"\";");
+        // multi-line raw strings keep line alignment
+        let f = lex("let a = r#\"one\ntwo\"#; let b = 2;\n");
+        assert_eq!(f.lines.len(), 2);
+        assert_eq!(f.lines[1].code, "\"; let b = 2;");
     }
 }

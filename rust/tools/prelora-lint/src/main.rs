@@ -1,24 +1,49 @@
-//! prelora-lint: determinism-invariant checker for the prelora tree.
+//! prelora-lint: determinism and concurrency invariant checker for the
+//! prelora tree.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```text
-//! cargo run -p prelora-lint                # lint rust/src, exit 1 on findings
+//! cargo run -p prelora-lint                      # lint rust/src, exit 1 on findings
 //! cargo run -p prelora-lint -- --list-rules
 //! cargo run -p prelora-lint -- --root other/src
+//! cargo run -p prelora-lint -- --format json     # machine-readable diagnostics
+//! cargo run -p prelora-lint -- --format github   # ::error annotations for CI
+//! cargo run -p prelora-lint -- --graph           # thread/channel topology as dot
 //! ```
 //!
-//! Output is one line per finding, `RULE src/path.rs:line message`, in
-//! deterministic (path, line) order — the lint practices what it preaches.
+//! Text output is one line per finding, `RULE src/path.rs:line message`,
+//! in deterministic (path, line, rule) order — the lint practices what it
+//! preaches. `--format json` emits the same findings under the stable
+//! `prelora-lint/1` schema; `--format github` emits workflow-command
+//! annotations with paths rebased by `--path-prefix` (default `rust/`)
+//! so they land on the right files in a PR. `--graph` prints the
+//! extracted thread/channel topology as graphviz dot and exits 0.
+//!
+//! PL001–PL005 run per file; PL006–PL010 run on the crate-wide program
+//! model (see `model`). PL010 additionally reads `tests/adversity.rs`
+//! next to the source root, when present.
 
+mod graph;
 mod lexer;
+mod model;
 mod rules;
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+#[derive(Clone, Copy, PartialEq)]
+enum Format {
+    Text,
+    Json,
+    Github,
+}
+
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
+    let mut format = Format::Text;
+    let mut want_graph = false;
+    let mut path_prefix = "rust/".to_string();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -35,8 +60,28 @@ fn main() -> ExitCode {
                     return ExitCode::from(2);
                 }
             },
+            "--format" => match args.next().as_deref() {
+                Some("text") => format = Format::Text,
+                Some("json") => format = Format::Json,
+                Some("github") => format = Format::Github,
+                other => {
+                    eprintln!("--format needs one of text|json|github, got {other:?}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--path-prefix" => match args.next() {
+                Some(p) => path_prefix = p,
+                None => {
+                    eprintln!("--path-prefix needs a value (may be empty via --path-prefix \"\")");
+                    return ExitCode::from(2);
+                }
+            },
+            "--graph" => want_graph = true,
             other => {
-                eprintln!("unknown argument: {other} (try --list-rules or --root <dir>)");
+                eprintln!(
+                    "unknown argument: {other} (try --list-rules, --root <dir>, \
+                     --format text|json|github, --path-prefix <p>, --graph)"
+                );
                 return ExitCode::from(2);
             }
         }
@@ -46,15 +91,15 @@ fn main() -> ExitCode {
     let default_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
     let root = root.unwrap_or(default_root);
 
-    let mut files = Vec::new();
-    if let Err(e) = walk(&root, &mut files) {
+    let mut paths = Vec::new();
+    if let Err(e) = walk(&root, &mut paths) {
         eprintln!("prelora-lint: cannot scan {}: {e}", root.display());
         return ExitCode::from(2);
     }
-    files.sort();
+    paths.sort();
 
-    let mut total = 0usize;
-    for path in &files {
+    let mut files: Vec<(String, lexer::SourceFile)> = Vec::new();
+    for path in &paths {
         let src = match std::fs::read_to_string(path) {
             Ok(s) => s,
             Err(e) => {
@@ -69,20 +114,111 @@ fn main() -> ExitCode {
             .map(|c| c.as_os_str().to_string_lossy())
             .collect::<Vec<_>>()
             .join("/");
-        let lexed = lexer::lex(&src);
-        for f in rules::check_file(&rel, &lexed) {
-            println!("{} src/{}:{} {}", f.rule, rel, f.line, f.message);
-            total += 1;
-        }
+        files.push((rel, lexer::lex(&src)));
     }
 
-    if total == 0 {
-        println!("prelora-lint: clean ({} files)", files.len());
+    let model = model::Model::build(&files);
+
+    if want_graph {
+        print!("{}", graph::render(&model));
+        return ExitCode::SUCCESS;
+    }
+
+    // The adversity matrix lives at <root>/../tests/adversity.rs in the
+    // repo layout (rust/src -> rust/tests); PL010 degrades gracefully
+    // when it is absent.
+    let adversity = std::fs::read_to_string(root.join("../tests/adversity.rs")).ok();
+
+    let mut findings: Vec<(String, rules::Finding)> = Vec::new();
+    for (rel, sf) in &files {
+        for f in rules::check_file(rel, sf) {
+            findings.push((rel.clone(), f));
+        }
+    }
+    for (fi, f) in rules::check_crate(&files, &model, adversity.as_deref()) {
+        findings.push((files[fi].0.clone(), f));
+    }
+    findings.sort_by(|a, b| (a.0.as_str(), a.1.line, a.1.rule).cmp(&(b.0.as_str(), b.1.line, b.1.rule)));
+
+    emit(format, &findings, files.len(), &path_prefix);
+    if findings.is_empty() {
         ExitCode::SUCCESS
     } else {
-        println!("prelora-lint: {total} finding(s) — rule catalog: docs/static-analysis.md");
         ExitCode::FAILURE
     }
+}
+
+fn emit(format: Format, findings: &[(String, rules::Finding)], n_files: usize, prefix: &str) {
+    match format {
+        Format::Text => {
+            for (rel, f) in findings {
+                println!("{} src/{}:{} {}", f.rule, rel, f.line, f.message);
+            }
+            if findings.is_empty() {
+                println!("prelora-lint: clean ({n_files} files)");
+            } else {
+                println!(
+                    "prelora-lint: {} finding(s) — rule catalog: docs/static-analysis.md",
+                    findings.len()
+                );
+            }
+        }
+        Format::Json => {
+            // Hand-rolled serialization: the tool is dependency-free by
+            // design, and the schema is pinned by an integration test.
+            let mut out = String::from("{\"schema\":\"prelora-lint/1\",\"findings\":[");
+            for (i, (rel, f)) in findings.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"rule\":{},\"file\":{},\"line\":{},\"message\":{}}}",
+                    json_str(f.rule),
+                    json_str(&format!("src/{rel}")),
+                    f.line,
+                    json_str(&f.message)
+                ));
+            }
+            out.push_str(&format!("],\"count\":{}}}", findings.len()));
+            println!("{out}");
+        }
+        Format::Github => {
+            for (rel, f) in findings {
+                println!(
+                    "::error file={prefix}src/{rel},line={},title={}::{}",
+                    f.line,
+                    f.rule,
+                    gh_escape(&f.message)
+                );
+            }
+            if findings.is_empty() {
+                println!("prelora-lint: clean ({n_files} files)");
+            }
+        }
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Workflow-command message escaping (the data portion of `::error`).
+fn gh_escape(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
 }
 
 /// Collect `.rs` files under `dir`. Directory entries are sorted so the

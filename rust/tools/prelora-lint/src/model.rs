@@ -1,0 +1,939 @@
+//! A lightweight per-crate program model, built by brace-matching the
+//! lexer's token stream.
+//!
+//! This is what turns the lint from a token scanner into a structure-aware
+//! analysis: for every file it extracts **functions** (name + line span +
+//! call sites), **lock acquisitions** (which lock, where, and how long the
+//! guard lives), **blocking operations** (`recv`/`join`/`sleep`/wire IO),
+//! **spawn sites** (thread name, `lint: thread:` marker, closure body) and
+//! **channel constructions** (bounded/unbounded, capacity expression,
+//! sender/receiver bindings, which spawn captures which endpoint). The
+//! interprocedural rules PL006–PL010 and the `--graph` topology dump all
+//! run over this model.
+//!
+//! Name resolution is deliberately *lite*: calls are resolved by bare
+//! function name across the crate (same-named functions merge, which
+//! over-approximates — safe for a lint), locks are identified by the last
+//! path segment of their receiver (`self.inner.lock()` → `inner`), and
+//! closures passed to `.spawn(` are attributed to the spawned thread, not
+//! the enclosing function. Test regions (`#[cfg(test)]`) are excluded
+//! from the model entirely.
+
+use crate::lexer::SourceFile;
+
+/// What kind of potentially-blocking operation a line performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// `.recv(` / `.recv_timeout(` — channel receive.
+    Recv,
+    /// `.join()` — thread join.
+    Join,
+    /// `thread::sleep` — timed block.
+    Sleep,
+    /// `write_to(` / `read_from(` — synchronous wire IO on a socket.
+    Wire,
+}
+
+impl BlockKind {
+    pub fn describe(self) -> &'static str {
+        match self {
+            BlockKind::Recv => "channel recv",
+            BlockKind::Join => "thread join",
+            BlockKind::Sleep => "sleep",
+            BlockKind::Wire => "wire IO",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Blocking {
+    pub kind: BlockKind,
+    /// 1-based line.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Call {
+    /// Bare callee name (`lock_inner`, `drive`, `close`, …).
+    pub name: String,
+    pub line: usize,
+}
+
+#[derive(Debug)]
+pub struct Acquisition {
+    /// Lock identity: last path segment of the receiver
+    /// (`self.shared.lock()` → `shared`), or of the helper's argument
+    /// (`lock_inner(&self.inner)` → `inner`).
+    pub lock: String,
+    pub line: usize,
+    /// `Some` when the guard is `let`-bound and therefore outlives the
+    /// statement; `None` for a temporary that dies on its own line.
+    pub binding: Option<String>,
+    /// Last line (inclusive) on which the guard is still live: the end of
+    /// the enclosing block, an explicit `drop(binding)`, or `line` itself
+    /// for a temporary.
+    pub live_to: usize,
+}
+
+#[derive(Debug)]
+pub struct Function {
+    pub name: String,
+    /// Index into `Model::files`.
+    pub file: usize,
+    /// 1-based line of the `fn` keyword.
+    pub start: usize,
+    /// 1-based line of the body's closing brace.
+    pub end: usize,
+    /// Declares a `-> …Guard` return: calling it acquires a lock that
+    /// lives on in the caller (`lock_inner`-style helpers).
+    pub returns_guard: bool,
+    pub calls: Vec<Call>,
+    pub acquisitions: Vec<Acquisition>,
+    pub blocking: Vec<Blocking>,
+}
+
+#[derive(Debug)]
+pub struct Spawn {
+    pub file: usize,
+    /// 1-based line of the `.spawn(` itself.
+    pub line: usize,
+    /// Thread name from the builder's `.name("…")`, read from raw text
+    /// (format-string pieces survive: `net-tx-r{peer}`).
+    pub thread_name: Option<String>,
+    /// Carries a `lint: thread:` marker within the PL005 window.
+    pub marked: bool,
+    /// Enclosing function index, if any.
+    pub func: Option<usize>,
+    /// Last line (inclusive) of the `.spawn(…)` argument list — the
+    /// closure body is attributed here, not to the enclosing function.
+    pub body_end: usize,
+    pub calls: Vec<Call>,
+    pub blocking: Vec<Blocking>,
+    /// Identifiers used inside the closure (for channel-endpoint capture
+    /// resolution).
+    idents: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Channel {
+    pub file: usize,
+    pub line: usize,
+    /// `false` for `mpsc::channel()` (unbounded).
+    pub bounded: bool,
+    /// The capacity expression, verbatim, for bounded channels.
+    pub capacity: Option<String>,
+    /// Sender / receiver binding names; `None` when bound to `_`.
+    pub tx: Option<String>,
+    pub rx: Option<String>,
+    pub func: Option<usize>,
+    /// Spawn (index into `Model::spawns`) whose closure captures the
+    /// sender / receiver, when one does.
+    pub tx_spawn: Option<usize>,
+    pub rx_spawn: Option<usize>,
+}
+
+#[derive(Debug, Default)]
+pub struct Model {
+    /// Relative paths, in scan order (sorted — the report order).
+    pub files: Vec<String>,
+    pub functions: Vec<Function>,
+    pub spawns: Vec<Spawn>,
+    pub channels: Vec<Channel>,
+}
+
+impl Model {
+    pub fn build(files: &[(String, SourceFile)]) -> Model {
+        let mut m = Model::default();
+        let mut helper_calls: Vec<(usize, String, usize, usize)> = Vec::new();
+        for (rel, sf) in files {
+            let file_idx = m.files.len();
+            m.files.push(rel.clone());
+            scan_file(&mut m, file_idx, sf, &mut helper_calls);
+        }
+        // Spawns and channels get their enclosing function attached once
+        // the whole function table exists.
+        for si in 0..m.spawns.len() {
+            m.spawns[si].func = m.enclosing_index(m.spawns[si].file, m.spawns[si].line);
+        }
+        for ci in 0..m.channels.len() {
+            m.channels[ci].func = m.enclosing_index(m.channels[ci].file, m.channels[ci].line);
+        }
+        m.resolve_guard_helpers(files, helper_calls);
+        m.resolve_channel_captures();
+        m
+    }
+
+    /// Functions matching a bare name (same-named functions merge — the
+    /// over-approximation the module docs call out).
+    pub fn functions_named<'a>(&'a self, name: &str) -> impl Iterator<Item = &'a Function> {
+        self.functions.iter().filter(move |f| f.name == name)
+    }
+
+    /// The function whose span contains `line` of `file`, innermost wins.
+    pub fn enclosing_index(&self, file: usize, line: usize) -> Option<usize> {
+        self.functions
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.file == file && f.start <= line && line <= f.end)
+            .min_by_key(|(_, f)| f.end - f.start)
+            .map(|(i, _)| i)
+    }
+
+    /// Second pass: a `let g = helper(&self.x)` call to a
+    /// `-> …Guard`-returning helper is a lock acquisition of `x` in the
+    /// *caller*. Needs the full function table, hence post-build.
+    fn resolve_guard_helpers(
+        &mut self,
+        files: &[(String, SourceFile)],
+        calls: Vec<(usize, String, usize, usize)>,
+    ) {
+        let guard_fns: Vec<String> = self
+            .functions
+            .iter()
+            .filter(|f| f.returns_guard)
+            .map(|f| f.name.clone())
+            .collect();
+        for (fn_idx, callee, file_idx, line) in calls {
+            if !guard_fns.iter().any(|g| g == &callee) {
+                continue;
+            }
+            let sf = &files[file_idx].1;
+            let code = &sf.lines[line - 1].code;
+            let Some(binding) = let_binding(code) else { continue };
+            let Some(lock) = helper_lock_arg(code, &callee) else { continue };
+            let fn_end = self.functions[fn_idx].end;
+            // Approximation: a helper-acquired guard lives to an explicit
+            // `drop(binding)` or to the end of the function (helper
+            // acquisitions in this tree sit at function-body top level).
+            let live_to = drop_line(sf, line - 1, fn_end, &binding).unwrap_or(fn_end);
+            self.functions[fn_idx].acquisitions.push(Acquisition {
+                lock,
+                line,
+                binding: Some(binding),
+                live_to,
+            });
+        }
+        for f in &mut self.functions {
+            f.acquisitions.sort_by_key(|a| a.line);
+        }
+    }
+
+    /// Match channel endpoint bindings against spawn-closure identifier
+    /// sets, within the same enclosing function.
+    fn resolve_channel_captures(&mut self) {
+        for ch in &mut self.channels {
+            for (si, sp) in self.spawns.iter().enumerate() {
+                if sp.file != ch.file || sp.func != ch.func || sp.func.is_none() {
+                    continue;
+                }
+                if let Some(tx) = &ch.tx {
+                    if sp.idents.iter().any(|i| i == tx) {
+                        ch.tx_spawn.get_or_insert(si);
+                    }
+                }
+                if let Some(rx) = &ch.rx {
+                    if sp.idents.iter().any(|i| i == rx) {
+                        ch.rx_spawn.get_or_insert(si);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-file extraction. Guard-helper candidate calls are appended to
+/// `helper_calls` as `(function index, callee, file index, line)` for the
+/// post-build resolution pass.
+fn scan_file(
+    m: &mut Model,
+    file_idx: usize,
+    sf: &SourceFile,
+    helper_calls: &mut Vec<(usize, String, usize, usize)>,
+) {
+    // Pass 1: spawn sites and their `( … )` argument spans, so closure
+    // bodies can be attributed to the thread rather than the function.
+    let spawn_spans = find_spawns(m, file_idx, sf);
+    let in_spawn_body = |lineno: usize| {
+        spawn_spans.iter().find(|&&(s, e, _)| lineno > s && lineno <= e).map(|&(_, _, si)| si)
+    };
+    let is_spawn_line =
+        |lineno: usize| spawn_spans.iter().find(|&&(s, _, _)| s == lineno).map(|&(_, _, si)| si);
+
+    // Pass 2: brace-matched function scan. `end_depth[i]` records the
+    // brace depth after line `i`, for guard live-range computation.
+    struct OpenFn {
+        idx: usize,
+        decl_depth: i64,
+        opened: bool,
+    }
+    let mut stack: Vec<OpenFn> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut end_depth = vec![0i64; sf.lines.len()];
+    let mut owner_of = vec![usize::MAX; sf.lines.len()];
+
+    for (i, line) in sf.lines.iter().enumerate() {
+        let lineno = i + 1;
+        if sf.in_test[i] {
+            end_depth[i] = depth;
+            continue;
+        }
+        let code = line.code.as_str();
+
+        if let Some(name) = fn_decl_name(code) {
+            m.functions.push(Function {
+                name,
+                file: file_idx,
+                start: lineno,
+                end: lineno,
+                returns_guard: code.contains("Guard"),
+                calls: Vec::new(),
+                acquisitions: Vec::new(),
+                blocking: Vec::new(),
+            });
+            stack.push(OpenFn { idx: m.functions.len() - 1, decl_depth: depth, opened: false });
+        }
+        if let Some(top) = stack.last() {
+            owner_of[i] = top.idx;
+        }
+
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if let Some(top) = stack.last_mut() {
+                        if !top.opened && depth == top.decl_depth + 1 {
+                            top.opened = true;
+                        }
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(top) = stack.last() {
+                        if top.opened && depth == top.decl_depth {
+                            m.functions[top.idx].end = lineno;
+                            stack.pop();
+                        }
+                    }
+                }
+                ';' => {
+                    // A bodyless trait-method declaration: un-register it.
+                    if let Some(top) = stack.last() {
+                        if !top.opened && depth == top.decl_depth {
+                            let idx = top.idx;
+                            stack.pop();
+                            m.functions.remove(idx);
+                            let fallback = stack.last().map(|t| t.idx).unwrap_or(usize::MAX);
+                            for f in owner_of.iter_mut() {
+                                if *f == idx {
+                                    *f = fallback;
+                                } else if *f != usize::MAX && *f > idx {
+                                    *f -= 1;
+                                }
+                            }
+                            for f in stack.iter_mut() {
+                                if f.idx > idx {
+                                    f.idx -= 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        end_depth[i] = depth;
+    }
+    while let Some(top) = stack.pop() {
+        m.functions[top.idx].end = sf.lines.len().max(m.functions[top.idx].start);
+    }
+
+    // Pass 3: feature collection, with complete spans and depths.
+    for (i, line) in sf.lines.iter().enumerate() {
+        let lineno = i + 1;
+        if sf.in_test[i] {
+            continue;
+        }
+        let code = line.code.as_str();
+        let calls = collect_calls(code, lineno);
+        let blocking = collect_blocking(code, lineno);
+
+        if let Some(si) = in_spawn_body(lineno) {
+            let sp = &mut m.spawns[si];
+            sp.calls.extend(calls);
+            sp.blocking.extend(blocking);
+            sp.idents.extend(collect_idents(code));
+            continue;
+        }
+        if let Some(si) = is_spawn_line(lineno) {
+            // The spawn line itself: the closure head. Its identifiers
+            // count as captures; its calls are the builder chain — noise
+            // either way, so they are not attributed to the function.
+            m.spawns[si].idents.extend(collect_idents(code));
+            continue;
+        }
+        let fn_idx = owner_of[i];
+        if fn_idx == usize::MAX {
+            continue;
+        }
+
+        for c in &calls {
+            helper_calls.push((fn_idx, c.name.clone(), file_idx, lineno));
+        }
+        m.functions[fn_idx].calls.extend(calls);
+        m.functions[fn_idx].blocking.extend(blocking);
+
+        if let Some((bounded, capacity)) = channel_on_line(code) {
+            let (tx, rx) = tuple_bindings(code).unwrap_or((None, None));
+            m.channels.push(Channel {
+                file: file_idx,
+                line: lineno,
+                bounded,
+                capacity,
+                tx,
+                rx,
+                func: None,
+                tx_spawn: None,
+                rx_spawn: None,
+            });
+        }
+
+        for lock in lock_receivers(code) {
+            let binding = let_binding(code);
+            let live_to = match &binding {
+                Some(b) => {
+                    let block = block_end(&end_depth, i, end_depth[i]);
+                    drop_line(sf, i, block, b).unwrap_or(block)
+                }
+                None => lineno,
+            };
+            m.functions[fn_idx].acquisitions.push(Acquisition {
+                lock,
+                line: lineno,
+                binding,
+                live_to,
+            });
+        }
+    }
+}
+
+/// Locate `.spawn(` sites, compute their argument spans, and register the
+/// spawn records. Returns `(spawn_line, span_end_line, spawn_index)`.
+fn find_spawns(m: &mut Model, file_idx: usize, sf: &SourceFile) -> Vec<(usize, usize, usize)> {
+    let mut spans = Vec::new();
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.in_test[i] {
+            continue;
+        }
+        let code = line.code.as_str();
+        let pos = match code
+            .find(".spawn(")
+            .map(|p| p + 1)
+            .or_else(|| code.find("thread::spawn(").map(|p| p + "thread::".len()))
+        {
+            Some(p) => p,
+            None => continue,
+        };
+        if code.contains("scope.spawn") || code.contains("s.spawn(") {
+            continue; // scoped: the scope joins; not a topology node
+        }
+        let open = pos + "spawn".len();
+        let body_end = balance_parens(sf, i, open);
+        let name_hi = (body_end - 1).min(sf.lines.len().saturating_sub(1));
+        let thread_name =
+            (i.saturating_sub(6)..=name_hi).find_map(|j| name_literal(&sf.lines[j].raw));
+        let marked =
+            (i.saturating_sub(6)..=i).any(|j| sf.lines[j].comment.contains("lint: thread:"));
+        m.spawns.push(Spawn {
+            file: file_idx,
+            line: i + 1,
+            thread_name,
+            marked,
+            func: None,
+            body_end,
+            calls: Vec::new(),
+            blocking: Vec::new(),
+            idents: Vec::new(),
+        });
+        spans.push((i + 1, body_end, m.spawns.len() - 1));
+    }
+    spans
+}
+
+/// First line (1-based, inclusive) at or after `from` (0-based) where the
+/// paren nesting opened at char `col` of line `from` closes.
+pub(crate) fn balance_parens(sf: &SourceFile, from: usize, col: usize) -> usize {
+    let mut depth = 0i64;
+    for (i, line) in sf.lines.iter().enumerate().skip(from) {
+        let start = if i == from { col } else { 0 };
+        for c in line.code.chars().skip(start) {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    sf.lines.len().max(from + 1)
+}
+
+/// `fn name` from a declaration line, if the line declares one.
+fn fn_decl_name(code: &str) -> Option<String> {
+    let mut search = 0;
+    while let Some(p) = code[search..].find("fn ") {
+        let at = search + p;
+        let bounded = at == 0
+            || !code[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if bounded {
+            let name: String = code[at + 3..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        search = at + 3;
+    }
+    None
+}
+
+/// Bare callee names for every `ident(` on the line (macros and control
+/// keywords excluded).
+fn collect_calls(code: &str, line: usize) -> Vec<Call> {
+    const KEYWORDS: [&str; 8] = ["if", "while", "for", "match", "return", "loop", "fn", "impl"];
+    let chars: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    for (p, &c) in chars.iter().enumerate() {
+        if c != '(' || p == 0 {
+            continue;
+        }
+        let mut s = p;
+        while s > 0 && (chars[s - 1].is_alphanumeric() || chars[s - 1] == '_') {
+            s -= 1;
+        }
+        if s == p {
+            continue;
+        }
+        if s > 0 && chars[s - 1] == '!' {
+            continue; // macro
+        }
+        let name: String = chars[s..p].iter().collect();
+        if KEYWORDS.contains(&name.as_str()) || name.chars().next().is_some_and(char::is_numeric) {
+            continue;
+        }
+        out.push(Call { name, line });
+    }
+    out
+}
+
+fn collect_blocking(code: &str, line: usize) -> Vec<Blocking> {
+    let mut out = Vec::new();
+    if code.contains(".recv(") || code.contains(".recv_timeout(") {
+        out.push(Blocking { kind: BlockKind::Recv, line });
+    }
+    if code.contains(".join()") {
+        out.push(Blocking { kind: BlockKind::Join, line });
+    }
+    if code.contains("thread::sleep") {
+        out.push(Blocking { kind: BlockKind::Sleep, line });
+    }
+    if code.contains("write_to(") || code.contains("read_from(") {
+        out.push(Blocking { kind: BlockKind::Wire, line });
+    }
+    out
+}
+
+/// All identifiers on a line (capture resolution for spawn closures).
+fn collect_idents(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in code.chars() {
+        if c.is_alphanumeric() || c == '_' {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Receiver identities for `.lock()` (and RwLock `.read()`/`.write()`)
+/// acquisitions on this line.
+fn lock_receivers(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for pat in [".lock()", ".read()", ".write()"] {
+        if pat != ".lock()" && !code.contains("RwLock") {
+            // `.read()`/`.write()` are only lock acquisitions when the
+            // line is visibly about an RwLock — IO traits share the
+            // names. (No RwLock exists in the tree today; fixtures do.)
+            continue;
+        }
+        let mut search = 0;
+        while let Some(p) = code[search..].find(pat) {
+            let at = search + p;
+            if let Some(recv) = receiver_segment(&code[..at]) {
+                out.push(recv);
+            }
+            search = at + pat.len();
+        }
+    }
+    out
+}
+
+/// Last path segment of the receiver expression ending at `prefix`'s end:
+/// `…self.shared` → `shared`.
+fn receiver_segment(prefix: &str) -> Option<String> {
+    let chars: Vec<char> = prefix.chars().collect();
+    let mut s = chars.len();
+    while s > 0 && (chars[s - 1].is_alphanumeric() || chars[s - 1] == '_' || chars[s - 1] == '.') {
+        s -= 1;
+    }
+    let path: String = chars[s..].iter().collect();
+    path.split('.').filter(|seg| !seg.is_empty()).next_back().map(str::to_string)
+}
+
+/// `let [mut] name = …` binding name, if the line is one.
+fn let_binding(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name: String = rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    (!name.is_empty()).then_some(name)
+}
+
+/// `let (a, b) = …` tuple binding names; `_` maps to `None`.
+fn tuple_bindings(code: &str) -> Option<(Option<String>, Option<String>)> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let inner = &rest[..rest.find(')')?];
+    let mut parts = inner.split(',');
+    let clean = |s: &str| {
+        let s = s.trim();
+        let s = s.strip_prefix("mut ").unwrap_or(s).trim();
+        let name: String = s.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        (!name.is_empty() && name != "_").then_some(name)
+    };
+    let a = clean(parts.next()?);
+    let b = clean(parts.next()?);
+    Some((a, b))
+}
+
+/// Channel construction on this line: `Some((bounded, capacity))`.
+///
+/// Recognizes `mpsc::channel()` / `channel::<T>()` (unbounded),
+/// `sync_channel(expr)` (bounded, capacity extracted) and bounded wrapper
+/// constructors like `BucketTx::channel(expr)` (any `…::channel(` with a
+/// non-empty argument list). Capacity expressions are line-local — every
+/// construction in this tree fits one line, and the fixtures pin that.
+fn channel_on_line(code: &str) -> Option<(bool, Option<String>)> {
+    for (pat, sync) in [("sync_channel", true), ("channel", false)] {
+        let mut search = 0;
+        while let Some(p) = code[search..].find(pat) {
+            let at = search + p;
+            search = at + pat.len();
+            let before_ok = at == 0
+                || !code[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+            if !before_ok {
+                continue;
+            }
+            let mut rest = &code[at + pat.len()..];
+            if let Some(generic) = rest.strip_prefix("::<") {
+                let Some(close) = generic.find('>') else { continue };
+                rest = &generic[close + 1..];
+            }
+            let Some(args) = rest.strip_prefix('(') else { continue };
+            let Some(close) = find_balanced_close(args) else { continue };
+            let cap = args[..close].trim();
+            if sync || !cap.is_empty() {
+                return Some((true, Some(cap.to_string()).filter(|c| !c.is_empty())));
+            }
+            return Some((false, None));
+        }
+    }
+    None
+}
+
+/// Index of the `)` closing the paren group whose contents start `s`.
+fn find_balanced_close(s: &str) -> Option<usize> {
+    let mut depth = 1i64;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// For `let g = helper(&self.inner)…`: the last path segment of the
+/// helper's first argument.
+fn helper_lock_arg(code: &str, helper: &str) -> Option<String> {
+    let p = code.find(&format!("{helper}("))?;
+    let args = &code[p + helper.len() + 1..];
+    let end = args.find([',', ')'])?;
+    let first = args[..end].trim().trim_start_matches('&');
+    first.split('.').filter(|s| !s.is_empty()).next_back().map(str::to_string)
+}
+
+/// `.name("…")` string literal from raw text (format pieces survive).
+fn name_literal(raw: &str) -> Option<String> {
+    let p = raw.find(".name(")?;
+    let rest = &raw[p + ".name(".len()..];
+    let lit = &rest[rest.find('"')? + 1..];
+    Some(lit[..lit.find('"')?].to_string())
+}
+
+/// First `drop(binding)` after 0-based line `after`, up to 1-based line
+/// `hi` inclusive, as a 1-based line.
+fn drop_line(sf: &SourceFile, after: usize, hi: usize, binding: &str) -> Option<usize> {
+    let needle = format!("drop({binding})");
+    ((after + 1)..hi.min(sf.lines.len()))
+        .find(|&j| sf.lines[j].code.contains(&needle))
+        .map(|j| j + 1)
+}
+
+/// Last 1-based line of the block open at 0-based line `i` with end-depth
+/// `d`: the first later line whose end depth drops below `d`.
+fn block_end(end_depth: &[i64], i: usize, d: i64) -> usize {
+    for (j, &ed) in end_depth.iter().enumerate().skip(i + 1) {
+        if ed < d {
+            return j + 1;
+        }
+    }
+    end_depth.len()
+}
+
+/// Resolve a bare callee name from `from_file`'s point of view: functions
+/// of the same name in the same file win (trait impls of the same method
+/// name in *other* files are almost never the callee); only when the file
+/// defines none does resolution widen to the whole crate.
+pub fn callees(model: &Model, from_file: usize, name: &str) -> Vec<usize> {
+    let mut same = Vec::new();
+    let mut all = Vec::new();
+    for (i, f) in model.functions.iter().enumerate() {
+        if f.name == name {
+            all.push(i);
+            if f.file == from_file {
+                same.push(i);
+            }
+        }
+    }
+    if same.is_empty() {
+        all
+    } else {
+        same
+    }
+}
+
+/// Transitive may-block analysis over the call graph (bare-name edges
+/// with same-file preference — see [`callees`]). Returns, per function
+/// index, the function-and-primitive that makes it blocking, if any.
+pub fn may_block(model: &Model) -> Vec<Option<(String, BlockKind)>> {
+    let n = model.functions.len();
+    let mut out: Vec<Option<(String, BlockKind)>> = vec![None; n];
+    for (i, f) in model.functions.iter().enumerate() {
+        if let Some(b) = f.blocking.first() {
+            out[i] = Some((f.name.clone(), b.kind));
+        }
+    }
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            if out[i].is_some() {
+                continue;
+            }
+            let file = model.functions[i].file;
+            let hit = model.functions[i]
+                .calls
+                .iter()
+                .find_map(|c| callees(model, file, &c.name).into_iter().find_map(|j| out[j].clone()));
+            if let Some(h) = hit {
+                out[i] = Some(h);
+                changed = true;
+            }
+        }
+        if !changed {
+            return out;
+        }
+    }
+}
+
+/// Transitive set of locks a call into function `idx` can acquire.
+/// Guard-returning helpers are excluded: their acquisition surfaces in
+/// the caller via `resolve_guard_helpers`, so counting their internals
+/// would double it under the helper's private parameter name.
+pub fn transitive_locks(model: &Model, idx: usize, seen: &mut Vec<usize>) -> Vec<String> {
+    if seen.contains(&idx) {
+        return Vec::new();
+    }
+    seen.push(idx);
+    let f = &model.functions[idx];
+    if f.returns_guard {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for a in &f.acquisitions {
+        if !out.contains(&a.lock) {
+            out.push(a.lock.clone());
+        }
+    }
+    for c in &f.calls {
+        for j in callees(model, f.file, &c.name) {
+            for l in transitive_locks(model, j, seen) {
+                if !out.contains(&l) {
+                    out.push(l);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn build(src: &str) -> Model {
+        Model::build(&[("m.rs".to_string(), lex(src))])
+    }
+
+    #[test]
+    fn functions_are_brace_matched_with_spans() {
+        let src = "fn a() {\n    let x = 1;\n}\n\npub fn b(v: u8) -> u8 {\n    v\n}\n";
+        let m = build(src);
+        let names: Vec<_> =
+            m.functions.iter().map(|f| (f.name.as_str(), f.start, f.end)).collect();
+        assert_eq!(names, vec![("a", 1, 3), ("b", 5, 7)]);
+    }
+
+    #[test]
+    fn trait_method_declarations_without_bodies_are_skipped() {
+        let src = "trait T {\n    fn sig(&self) -> u8;\n    fn has_body(&self) -> u8 { 1 }\n}\n";
+        let m = build(src);
+        let names: Vec<_> = m.functions.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["has_body"]);
+    }
+
+    #[test]
+    fn lock_acquisitions_carry_identity_binding_and_live_range() {
+        let src = "fn f(&self) {\n    let mut g = self.shared.lock().unwrap();\n    \
+                   g.x += 1;\n    drop(g);\n    self.other();\n}\n";
+        let m = build(src);
+        let a = &m.functions[0].acquisitions[0];
+        assert_eq!((a.lock.as_str(), a.line, a.live_to), ("shared", 2, 4));
+        assert_eq!(a.binding.as_deref(), Some("g"));
+    }
+
+    #[test]
+    fn temporary_guards_die_on_their_own_line() {
+        let src = "fn f(&self) {\n    self.err.lock().unwrap().take();\n    self.rest();\n}\n";
+        let m = build(src);
+        let a = &m.functions[0].acquisitions[0];
+        assert_eq!((a.lock.as_str(), a.line, a.live_to), ("err", 2, 2));
+        assert_eq!(a.binding, None);
+    }
+
+    #[test]
+    fn guards_die_at_the_end_of_their_block_not_the_function() {
+        let src = "fn f(&self) {\n    if cond {\n        let g = self.a.lock().unwrap();\n        \
+                   g.touch();\n    }\n    self.after();\n}\n";
+        let m = build(src);
+        let a = &m.functions[0].acquisitions[0];
+        assert_eq!((a.line, a.live_to), (3, 5));
+    }
+
+    #[test]
+    fn guard_returning_helpers_acquire_in_the_caller() {
+        let src = "fn lock_inner(m: &Mutex<u8>) -> std::sync::MutexGuard<'_, u8> {\n    \
+                   m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n}\n\
+                   fn f(&self) {\n    let g = lock_inner(&self.inner);\n    use_it(&g);\n}\n";
+        let m = build(src);
+        let f = m.functions.iter().find(|f| f.name == "f").unwrap();
+        let a = f.acquisitions.iter().find(|a| a.lock == "inner").unwrap();
+        assert_eq!((a.line, a.live_to), (5, 7));
+        // and the helper's own internals do not pollute transitive locks
+        let fi = m.functions.iter().position(|f| f.name == "f").unwrap();
+        assert!(transitive_locks(&m, fi, &mut Vec::new()).contains(&"inner".to_string()));
+        assert!(!transitive_locks(&m, fi, &mut Vec::new()).contains(&"m".to_string()));
+    }
+
+    #[test]
+    fn spawn_closures_are_attributed_to_the_thread_not_the_function() {
+        let src = "fn start(rx: Receiver<u8>) {\n    \
+                   // lint: thread: joined — Drop joins.\n    \
+                   let j = thread::Builder::new()\n        .name(\"worker-1\".into())\n        \
+                   .spawn(move || {\n            while let Ok(v) = rx.recv() {\n                \
+                   handle(v);\n            }\n        })\n        .unwrap();\n}\n";
+        let m = build(src);
+        let f = m.functions.iter().find(|f| f.name == "start").unwrap();
+        assert!(f.blocking.is_empty(), "closure recv must not leak into the function");
+        let sp = &m.spawns[0];
+        assert_eq!(sp.thread_name.as_deref(), Some("worker-1"));
+        assert!(sp.marked);
+        assert!(sp.blocking.iter().any(|b| b.kind == BlockKind::Recv));
+        assert_eq!(sp.func, Some(0));
+    }
+
+    #[test]
+    fn channels_record_kind_capacity_bindings_and_captures() {
+        let src = "fn wire(workers: usize) {\n    \
+                   let (tx, rx) = mpsc::sync_channel(DEPTH * workers);\n    \
+                   let (utx, _) = mpsc::channel::<u8>();\n    \
+                   // lint: thread: joined — close() joins.\n    \
+                   let j = thread::Builder::new().name(\"rx-worker\".into())\n        \
+                   .spawn(move || drain(rx)).unwrap();\n}\n";
+        let m = build(src);
+        assert_eq!(m.channels.len(), 2);
+        let b = &m.channels[0];
+        assert!(b.bounded);
+        assert_eq!(b.capacity.as_deref(), Some("DEPTH * workers"));
+        assert_eq!((b.tx.as_deref(), b.rx.as_deref()), (Some("tx"), Some("rx")));
+        assert_eq!(b.rx_spawn, Some(0));
+        let u = &m.channels[1];
+        assert!(!u.bounded);
+        assert_eq!((u.tx.as_deref(), u.rx.as_deref()), (Some("utx"), None));
+    }
+
+    #[test]
+    fn may_block_propagates_through_the_call_graph() {
+        let src = "fn leaf(rx: &Receiver<u8>) {\n    let v = rx.recv().unwrap();\n}\n\
+                   fn mid(rx: &Receiver<u8>) {\n    leaf(rx);\n}\n\
+                   fn top(rx: &Receiver<u8>) {\n    mid(rx);\n}\n\
+                   fn pure() {\n    let x = 1 + 2;\n}\n";
+        let m = build(src);
+        let mb = may_block(&m);
+        let by_name =
+            |n: &str| m.functions.iter().position(|f| f.name == n).map(|i| mb[i].clone()).unwrap();
+        assert_eq!(by_name("leaf").unwrap().1, BlockKind::Recv);
+        assert!(by_name("top").is_some());
+        assert!(by_name("pure").is_none());
+    }
+
+    #[test]
+    fn transitive_locks_cross_function_boundaries() {
+        let src = "fn inner_take(&self) {\n    let g = self.b.lock().unwrap();\n}\n\
+                   fn outer(&self) {\n    let g = self.a.lock().unwrap();\n    \
+                   self.inner_take();\n}\n";
+        let m = build(src);
+        let fi = m.functions.iter().position(|f| f.name == "outer").unwrap();
+        let locks = transitive_locks(&m, fi, &mut Vec::new());
+        assert!(locks.contains(&"a".to_string()) && locks.contains(&"b".to_string()));
+    }
+}

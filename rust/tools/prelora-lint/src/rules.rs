@@ -1,9 +1,11 @@
-//! The determinism rule set (PL001–PL005).
+//! The determinism and concurrency rule set (PL001–PL010).
 //!
-//! Each rule is a per-line substring check over lexed code (comments
+//! PL001–PL005 are per-line substring checks over lexed code (comments
 //! stripped, string contents blanked — see `lexer`), scoped to the paths
-//! where the invariant is load-bearing. Suppressions are comment
-//! annotations and must carry a reason:
+//! where the invariant is load-bearing. PL006–PL010 are crate-wide rules
+//! over the program model built in `model` (functions, lock
+//! acquisitions, spawns, channels, call graph) — see [`check_crate`].
+//! Suppressions are comment annotations and must carry a reason:
 //!
 //! ```text
 //! // lint: allow(PL004): documented invariant panic — <why it cannot fire>
@@ -14,6 +16,7 @@
 //! The full catalog with rationale lives in docs/static-analysis.md.
 
 use crate::lexer::SourceFile;
+use crate::model::{self, Model};
 
 pub struct Finding {
     pub rule: &'static str,
@@ -38,7 +41,7 @@ const DETERMINISTIC_DIRS: [&str; 4] = ["dist", "dp", "pipeline", "runtime"];
 /// PL002 is scoped tighter: float reductions only happen in these.
 const REDUCE_DIRS: [&str; 3] = ["dist", "dp", "pipeline"];
 
-pub const RULES: [(&str, &str); 5] = [
+pub const RULES: [(&str, &str); 10] = [
     (
         "PL001",
         "no HashMap/HashSet in deterministic paths (dist/, dp/, pipeline/, runtime/) — \
@@ -63,6 +66,32 @@ pub const RULES: [(&str, &str); 5] = [
         "PL005",
         "every spawned thread needs a `lint: thread:` marker naming who joins it (or its \
          detach story); scoped threads are exempt",
+    ),
+    (
+        "PL006",
+        "one global lock-acquisition order — two functions nesting the same pair of locks \
+         in opposite orders is a deadlock in waiting; both witness paths are printed",
+    ),
+    (
+        "PL007",
+        "no blocking call (recv/join/sleep/wire IO, or taking another lock) while a lock \
+         guard is live, in dist/, dp/, pipeline/",
+    ),
+    (
+        "PL008",
+        "channel topology audit: every sender has a named owning receiver, unbounded \
+         channel() is banned on hot paths, sync_channel capacities are named constants, \
+         and drained receivers belong to marker-carrying (PL005) threads",
+    ),
+    (
+        "PL009",
+        "every error constructed on the wire path (dist/net/) must interpolate at least \
+         one of rank/peer/epoch/step/seq — context-free errors are undebuggable at 64 ranks",
+    ),
+    (
+        "PL010",
+        "fault-catalog closure: every FaultKind variant needs an injection consult site \
+         in rust/src and a matching cell in rust/tests/adversity.rs",
     ),
 ];
 
@@ -118,7 +147,9 @@ pub fn check_file(rel: &str, file: &SourceFile) -> Vec<Finding> {
             ));
         }
 
-        if (in_dirs(rel, &REDUCE_DIRS) || rel == "checkpoint.rs")
+        // faults.rs runs on worker/wire threads; dist/net/frame.rs is
+        // already covered by the dist/ prefix.
+        if (in_dirs(rel, &REDUCE_DIRS) || rel == "checkpoint.rs" || rel == "faults.rs")
             && (code.contains(".unwrap()") || code.contains(".expect("))
             && !allowed(&ann, idx, "PL004")
         {
@@ -189,6 +220,564 @@ fn allowed(ann: &[Annotations], idx: usize, rule: &str) -> bool {
 fn thread_marked(ann: &[Annotations], idx: usize) -> bool {
     let lo = idx.saturating_sub(THREAD_WINDOW);
     ann[lo..=idx].iter().any(|a| a.thread_marker)
+}
+
+// ---------------------------------------------------------------------------
+// Crate-wide rules (PL006–PL010) over the program model.
+// ---------------------------------------------------------------------------
+
+/// Tokens that count as wire-path error context for PL009. Matched
+/// against raw line text so `{rank}` interpolations inside format
+/// strings are seen.
+const WIRE_CONTEXT_TOKENS: [&str; 5] = ["rank", "peer", "epoch", "step", "seq"];
+/// Error-construction triggers for PL009. `.context(` never matches a
+/// `.with_context(` call: the preceding character there is `_`, not `.`.
+const ERROR_TRIGGERS: [&str; 6] =
+    ["bail!(", "ensure!(", "anyhow!(", "format_err!(", ".context(", ".with_context("];
+/// Functions in faults.rs that merely *spell* variants (parse/print) —
+/// appearing there is not an injection consult site for PL010.
+const FAULT_PARSER_FNS: [&str; 5] = ["name", "parse", "parse_entry", "entry_spec", "to_spec"];
+
+/// Run PL006–PL010 across the whole crate. `files` must be the same
+/// slice (same order) the `Model` was built from; `adversity` is the
+/// text of `tests/adversity.rs` when present. Returns `(file_index,
+/// finding)` pairs sorted by (file, line, rule).
+pub fn check_crate(
+    files: &[(String, SourceFile)],
+    model: &Model,
+    adversity: Option<&str>,
+) -> Vec<(usize, Finding)> {
+    let ann: Vec<Vec<Annotations>> = files
+        .iter()
+        .map(|(_, sf)| sf.lines.iter().map(|l| parse_annotations(&l.comment)).collect())
+        .collect();
+    let mut out = Vec::new();
+    pl006_lock_order(model, &ann, &mut out);
+    pl007_blocking_under_lock(model, &ann, &mut out);
+    pl008_channel_topology(model, &ann, &mut out);
+    pl009_wire_error_context(files, &ann, &mut out);
+    pl010_fault_catalog(files, model, adversity, &ann, &mut out);
+    out.sort_by(|a, b| (a.0, a.1.line, a.1.rule).cmp(&(b.0, b.1.line, b.1.rule)));
+    out
+}
+
+/// Push unless a reasoned `allow(rule)` sits within the window above.
+fn push_crate(
+    ann: &[Vec<Annotations>],
+    out: &mut Vec<(usize, Finding)>,
+    file: usize,
+    rule: &'static str,
+    line: usize,
+    message: String,
+) {
+    if !allowed(&ann[file], line - 1, rule) {
+        out.push((file, Finding { rule, line, message }));
+    }
+}
+
+struct OrderWitness {
+    file: usize,
+    line: usize,
+    detail: String,
+}
+
+/// PL006 — collect every ordered pair (outer, inner) witnessed anywhere:
+/// directly nested acquisitions, or a call made under a live guard into a
+/// function that transitively acquires. Any pair witnessed in both
+/// directions is a deadlock in waiting; report it once, anchored at the
+/// lexically-first direction's witness, printing both paths.
+fn pl006_lock_order(model: &Model, ann: &[Vec<Annotations>], out: &mut Vec<(usize, Finding)>) {
+    let mut pairs: Vec<((String, String), OrderWitness)> = Vec::new();
+    let mut record = |pairs: &mut Vec<((String, String), OrderWitness)>,
+                      outer: &str,
+                      inner: &str,
+                      w: OrderWitness| {
+        let key = (outer.to_string(), inner.to_string());
+        if !pairs.iter().any(|(k, _)| *k == key) {
+            pairs.push((key, w));
+        }
+    };
+    for f in &model.functions {
+        for a in &f.acquisitions {
+            for b in &f.acquisitions {
+                if b.line > a.line && b.line <= a.live_to && b.lock != a.lock {
+                    let w = OrderWitness {
+                        file: f.file,
+                        line: b.line,
+                        detail: format!(
+                            "`{}` takes `{}` (line {}) then `{}` (line {})",
+                            f.name, a.lock, a.line, b.lock, b.line
+                        ),
+                    };
+                    record(&mut pairs, &a.lock, &b.lock, w);
+                }
+            }
+            for c in &f.calls {
+                if c.line <= a.line || c.line > a.live_to {
+                    continue;
+                }
+                for j in model::callees(model, f.file, &c.name) {
+                    for l in model::transitive_locks(model, j, &mut Vec::new()) {
+                        if l == a.lock {
+                            continue;
+                        }
+                        let w = OrderWitness {
+                            file: f.file,
+                            line: c.line,
+                            detail: format!(
+                                "`{}` holds `{}` (line {}) across a call to `{}` (line {}), \
+                                 which acquires `{}`",
+                                f.name, a.lock, a.line, c.name, c.line, l
+                            ),
+                        };
+                        record(&mut pairs, &a.lock, &l, w);
+                    }
+                }
+            }
+        }
+    }
+    for (key, w) in &pairs {
+        if key.0 >= key.1 {
+            continue;
+        }
+        let rev = (key.1.clone(), key.0.clone());
+        if let Some((_, wr)) = pairs.iter().find(|(k, _)| *k == rev) {
+            push_crate(
+                ann,
+                out,
+                w.file,
+                "PL006",
+                w.line,
+                format!(
+                    "inconsistent lock order on `{}`/`{}`: {} [src/{}], but {} [src/{}]",
+                    key.0, key.1, w.detail, model.files[w.file], wr.detail, model.files[wr.file]
+                ),
+            );
+        }
+    }
+}
+
+/// PL007 — inside dist/, dp/, pipeline/: while a guard is live, flag
+/// direct blocking primitives, nested lock acquisitions, and calls that
+/// (transitively, same-file-preferring resolution) block or acquire.
+fn pl007_blocking_under_lock(
+    model: &Model,
+    ann: &[Vec<Annotations>],
+    out: &mut Vec<(usize, Finding)>,
+) {
+    let mb = model::may_block(model);
+    for f in &model.functions {
+        if !in_dirs(&model.files[f.file], &REDUCE_DIRS) {
+            continue;
+        }
+        for a in &f.acquisitions {
+            for b in &f.blocking {
+                if b.line > a.line && b.line <= a.live_to {
+                    push_crate(
+                        ann,
+                        out,
+                        f.file,
+                        "PL007",
+                        b.line,
+                        format!(
+                            "{} in `{}` while the `{}` guard (line {}) is live",
+                            b.kind.describe(),
+                            f.name,
+                            a.lock,
+                            a.line
+                        ),
+                    );
+                }
+            }
+            for b in &f.acquisitions {
+                if b.line > a.line && b.line <= a.live_to {
+                    push_crate(
+                        ann,
+                        out,
+                        f.file,
+                        "PL007",
+                        b.line,
+                        format!(
+                            "`{}` acquires `{}` while the `{}` guard (line {}) is live — \
+                             nested locking blocks under contention",
+                            f.name, b.lock, a.lock, a.line
+                        ),
+                    );
+                }
+            }
+            for c in &f.calls {
+                if c.line <= a.line || c.line > a.live_to {
+                    continue;
+                }
+                let resolved = model::callees(model, f.file, &c.name);
+                if let Some((via, kind)) = resolved.iter().find_map(|&j| mb[j].clone()) {
+                    push_crate(
+                        ann,
+                        out,
+                        f.file,
+                        "PL007",
+                        c.line,
+                        format!(
+                            "`{}` calls `{}` — which can block ({} in `{}`) — while the `{}` \
+                             guard (line {}) is live",
+                            f.name,
+                            c.name,
+                            kind.describe(),
+                            via,
+                            a.lock,
+                            a.line
+                        ),
+                    );
+                } else {
+                    let mut locks: Vec<String> = Vec::new();
+                    for &j in &resolved {
+                        for l in model::transitive_locks(model, j, &mut Vec::new()) {
+                            if !locks.contains(&l) {
+                                locks.push(l);
+                            }
+                        }
+                    }
+                    if !locks.is_empty() {
+                        push_crate(
+                            ann,
+                            out,
+                            f.file,
+                            "PL007",
+                            c.line,
+                            format!(
+                                "`{}` calls `{}` — which acquires `{}` — while the `{}` guard \
+                                 (line {}) is live",
+                                f.name,
+                                c.name,
+                                locks.join("`, `"),
+                                a.lock,
+                                a.line
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// PL008 — channel topology: orphaned senders anywhere; unbounded or
+/// magic-capacity channels on the hot paths; receivers drained by
+/// marker-less threads.
+fn pl008_channel_topology(
+    model: &Model,
+    ann: &[Vec<Annotations>],
+    out: &mut Vec<(usize, Finding)>,
+) {
+    for ch in &model.channels {
+        let hot = in_dirs(&model.files[ch.file], &REDUCE_DIRS);
+        if ch.tx.is_some() && ch.rx.is_none() {
+            push_crate(
+                ann,
+                out,
+                ch.file,
+                "PL008",
+                ch.line,
+                format!(
+                    "channel sender `{}` has no named owning receiver — bind the receiving \
+                     end and route it",
+                    ch.tx.as_deref().unwrap_or("_")
+                ),
+            );
+        }
+        if hot && !ch.bounded {
+            push_crate(
+                ann,
+                out,
+                ch.file,
+                "PL008",
+                ch.line,
+                "unbounded channel() on a hot path — use sync_channel with a named-constant \
+                 bound"
+                    .to_string(),
+            );
+        }
+        if hot && ch.bounded {
+            if let Some(cap) = &ch.capacity {
+                if let Some(n) = magic_number(cap) {
+                    push_crate(
+                        ann,
+                        out,
+                        ch.file,
+                        "PL008",
+                        ch.line,
+                        format!(
+                            "sync_channel capacity `{cap}` hard-codes {n} — name the bound as \
+                             a constant"
+                        ),
+                    );
+                }
+            }
+        }
+        if let Some(rsi) = ch.rx_spawn {
+            let sp = &model.spawns[rsi];
+            if !sp.marked {
+                push_crate(
+                    ann,
+                    out,
+                    ch.file,
+                    "PL008",
+                    ch.line,
+                    format!(
+                        "receiver `{}` is drained by the thread spawned at line {}, which has \
+                         no `lint: thread:` marker",
+                        ch.rx.as_deref().unwrap_or("_"),
+                        sp.line
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// First integer literal > 1 in a capacity expression. 0/1 floors
+/// (`depth.max(1)`) are structural, not tuning constants; digits inside
+/// identifiers don't count.
+fn magic_number(expr: &str) -> Option<u64> {
+    let bytes = expr.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i].is_ascii_digit() {
+            let start = i;
+            while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == b'_') {
+                i += 1;
+            }
+            let prev_ident = start > 0
+                && (bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_');
+            if !prev_ident {
+                if let Ok(v) = expr[start..i].replace('_', "").parse::<u64>() {
+                    if v > 1 {
+                        return Some(v);
+                    }
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    None
+}
+
+/// PL009 — every error constructed under dist/net/ must carry at least
+/// one of rank/peer/epoch/step/seq somewhere in its argument span
+/// (paren-balanced from the trigger, so multi-line `ensure!` bodies
+/// count).
+fn pl009_wire_error_context(
+    files: &[(String, SourceFile)],
+    ann: &[Vec<Annotations>],
+    out: &mut Vec<(usize, Finding)>,
+) {
+    for (fi, (rel, sf)) in files.iter().enumerate() {
+        if !rel.starts_with("dist/net") {
+            continue;
+        }
+        for i in 0..sf.lines.len() {
+            if sf.in_test[i] {
+                continue;
+            }
+            let code = sf.lines[i].code.as_str();
+            let Some((trigger, pos)) = ERROR_TRIGGERS
+                .iter()
+                .filter_map(|t| code.find(t).map(|p| (*t, p)))
+                .min_by_key(|&(_, p)| p)
+            else {
+                continue;
+            };
+            let open = pos + trigger.len() - 1;
+            let end = model::balance_parens(sf, i, open); // 1-based inclusive last line
+            let has_context = (i..end.max(i + 1)).any(|j| {
+                sf.lines
+                    .get(j)
+                    .is_some_and(|l| WIRE_CONTEXT_TOKENS.iter().any(|t| l.raw.contains(t)))
+            });
+            if !has_context {
+                push_crate(
+                    ann,
+                    out,
+                    fi,
+                    "PL009",
+                    i + 1,
+                    format!(
+                        "error constructed on the wire path without rank/peer/epoch/step/seq \
+                         context ({})",
+                        trigger.trim_end_matches('(')
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// PL010 — fault-catalog closure. Variants come from `enum FaultKind` in
+/// faults.rs; the canonical token for each comes from the `FaultKind::V
+/// => "tok"` arms of `fn name()`. A consult site is any word-bounded
+/// `FaultKind::V` in non-test code outside the enum itself and outside
+/// the parse/print helpers; a matrix cell is the token appearing in
+/// tests/adversity.rs.
+fn pl010_fault_catalog(
+    files: &[(String, SourceFile)],
+    model: &Model,
+    adversity: Option<&str>,
+    ann: &[Vec<Annotations>],
+    out: &mut Vec<(usize, Finding)>,
+) {
+    let Some(fi) = files.iter().position(|(r, _)| r == "faults.rs") else {
+        return;
+    };
+    let sf = &files[fi].1;
+    let Some(start) = sf.lines.iter().position(|l| l.code.contains("enum FaultKind")) else {
+        return;
+    };
+    let mut depth = 0i64;
+    let mut opened = false;
+    let mut end = start;
+    'outer: for j in start..sf.lines.len() {
+        for c in sf.lines[j].code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        end = j;
+                        break 'outer;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    for j in (start + 1)..end {
+        let t = sf.lines[j].code.trim();
+        let name: String = t.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        if !name.is_empty() && name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            variants.push((name, j));
+        }
+    }
+
+    // Spans (0-based, inclusive) that never count as consult sites.
+    let model_fi = model.files.iter().position(|r| r == "faults.rs");
+    let mut excluded: Vec<(usize, usize)> = vec![(start, end)];
+    let mut name_span: Option<(usize, usize)> = None;
+    if let Some(mfi) = model_fi {
+        for f in &model.functions {
+            if f.file == mfi && FAULT_PARSER_FNS.contains(&f.name.as_str()) {
+                excluded.push((f.start - 1, f.end - 1));
+                if f.name == "name" {
+                    name_span = Some((f.start - 1, f.end - 1));
+                }
+            }
+        }
+    }
+
+    // Canonical token: the string after `FaultKind::V … => "` inside
+    // fn name() (fall back to the whole file when the span is unknown).
+    let (tlo, thi) = name_span.unwrap_or((0, sf.lines.len().saturating_sub(1)));
+    let token_of = |v: &str| -> Option<String> {
+        let needle = format!("FaultKind::{v}");
+        for l in &sf.lines[tlo..=thi.min(sf.lines.len() - 1)] {
+            if let Some(p) = l.raw.find(&needle) {
+                let after = &l.raw[p + needle.len()..];
+                if let Some(q) = after.find('"') {
+                    if after[..q].contains("=>") {
+                        let rest = &after[q + 1..];
+                        if let Some(q2) = rest.find('"') {
+                            return Some(rest[..q2].to_string());
+                        }
+                    }
+                }
+            }
+        }
+        None
+    };
+
+    if adversity.is_none() {
+        push_crate(
+            ann,
+            out,
+            fi,
+            "PL010",
+            start + 1,
+            "tests/adversity.rs not found next to src/ — cannot verify the adversity matrix \
+             covers the fault catalog"
+                .to_string(),
+        );
+    }
+
+    for (v, jline) in &variants {
+        let needle = format!("FaultKind::{v}");
+        let mut consulted = false;
+        'scan: for (gi, (_, gsf)) in files.iter().enumerate() {
+            for (j, l) in gsf.lines.iter().enumerate() {
+                if gsf.in_test[j] {
+                    continue;
+                }
+                if gi == fi && excluded.iter().any(|&(s, e)| j >= s && j <= e) {
+                    continue;
+                }
+                let mut from = 0;
+                while let Some(p) = l.code[from..].find(&needle) {
+                    let after = from + p + needle.len();
+                    let next = l.code[after..].chars().next();
+                    let boundary = !next.is_some_and(|c| c.is_alphanumeric() || c == '_');
+                    if boundary {
+                        consulted = true;
+                        break 'scan;
+                    }
+                    from = after;
+                }
+            }
+        }
+        if !consulted {
+            push_crate(
+                ann,
+                out,
+                fi,
+                "PL010",
+                jline + 1,
+                format!(
+                    "FaultKind::{v} has no injection consult site in src/ — wire it into a \
+                     step/net/ckpt dispatcher"
+                ),
+            );
+        }
+        match token_of(v) {
+            None => push_crate(
+                ann,
+                out,
+                fi,
+                "PL010",
+                jline + 1,
+                format!("FaultKind::{v} has no canonical token in FaultKind::name()"),
+            ),
+            Some(tok) => {
+                if let Some(text) = adversity {
+                    if !text.contains(&tok) {
+                        push_crate(
+                            ann,
+                            out,
+                            fi,
+                            "PL010",
+                            jline + 1,
+                            format!(
+                                "FaultKind::{v} (`{tok}`) has no cell in tests/adversity.rs — \
+                                 extend the adversity matrix"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// True when any line of the function enclosing `idx` mentions one of
@@ -283,5 +872,196 @@ mod tests {
                       .spawn(move || {})?;\n";
         assert_eq!(run("model.rs", marked), vec![]);
         assert_eq!(run("model.rs", "scope.spawn(|| {});\n"), vec![]);
+    }
+
+    #[test]
+    fn pl004_covers_faults_rs() {
+        assert_eq!(
+            run("faults.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n"),
+            vec![("PL004".into(), 1)]
+        );
+    }
+
+    // -- crate-wide rules -------------------------------------------------
+
+    fn run_crate(files: &[(&str, &str)], adversity: Option<&str>) -> Vec<(String, String, usize)> {
+        let lexed: Vec<(String, SourceFile)> =
+            files.iter().map(|(r, s)| (r.to_string(), lex(s))).collect();
+        let model = Model::build(&lexed);
+        check_crate(&lexed, &model, adversity)
+            .into_iter()
+            .map(|(fi, f)| (f.rule.to_string(), lexed[fi].0.clone(), f.line))
+            .collect()
+    }
+
+    #[test]
+    fn pl006_fires_once_on_inverted_lock_order_with_both_witnesses() {
+        let src = "fn ab(&self) {\n    let g = self.alpha.lock().unwrap();\n    \
+                   let h = self.beta.lock().unwrap();\n}\n\
+                   fn ba(&self) {\n    let g = self.beta.lock().unwrap();\n    \
+                   let h = self.alpha.lock().unwrap();\n}\n";
+        let got = run_crate(&[("locks.rs", src)], None);
+        assert_eq!(got, vec![("PL006".into(), "locks.rs".into(), 3)]);
+        let lexed = vec![("locks.rs".to_string(), lex(src))];
+        let model = Model::build(&lexed);
+        let msg = &check_crate(&lexed, &model, None)[0].1.message;
+        assert!(msg.contains("`ab`") && msg.contains("`ba`"), "both witness paths: {msg}");
+    }
+
+    #[test]
+    fn pl006_consistent_order_and_allow_are_silent() {
+        let consistent = "fn ab(&self) {\n    let g = self.alpha.lock().unwrap();\n    \
+                          let h = self.beta.lock().unwrap();\n}\n\
+                          fn ab2(&self) {\n    let g = self.alpha.lock().unwrap();\n    \
+                          let h = self.beta.lock().unwrap();\n}\n";
+        assert_eq!(run_crate(&[("locks.rs", consistent)], None), vec![]);
+        let allowed = "fn ab(&self) {\n    let g = self.alpha.lock().unwrap();\n    \
+                       // lint: allow(PL006): shutdown path, beta uncontended by then\n    \
+                       let h = self.beta.lock().unwrap();\n}\n\
+                       fn ba(&self) {\n    let g = self.beta.lock().unwrap();\n    \
+                       let h = self.alpha.lock().unwrap();\n}\n";
+        assert_eq!(run_crate(&[("locks.rs", allowed)], None), vec![]);
+    }
+
+    #[test]
+    fn pl006_sees_order_through_the_call_graph() {
+        let src = "fn take_beta(&self) {\n    let g = self.beta.lock().unwrap();\n}\n\
+                   fn ab(&self) {\n    let g = self.alpha.lock().unwrap();\n    \
+                   self.take_beta();\n}\n\
+                   fn ba(&self) {\n    let g = self.beta.lock().unwrap();\n    \
+                   let h = self.alpha.lock().unwrap();\n}\n";
+        let got = run_crate(&[("locks.rs", src)], None);
+        assert_eq!(got, vec![("PL006".into(), "locks.rs".into(), 6)]);
+    }
+
+    #[test]
+    fn pl007_flags_blocking_under_a_live_guard_in_scope_only() {
+        let src = "fn pump(&self) {\n    let g = self.state.lock().unwrap();\n    \
+                   let v = self.rx.recv();\n}\n";
+        assert_eq!(run_crate(&[("dp/exec.rs", src)], None), vec![(
+            "PL007".into(),
+            "dp/exec.rs".into(),
+            3
+        )]);
+        // outside dist/dp/pipeline the same shape is fine
+        assert_eq!(run_crate(&[("runtime/exec.rs", src)], None), vec![]);
+        // a guard confined to an inner block frees the recv
+        let scoped = "fn pump(&self) {\n    {\n        let g = self.state.lock().unwrap();\n        \
+                      g.touch();\n    }\n    let v = self.rx.recv();\n}\n";
+        assert_eq!(run_crate(&[("dp/exec.rs", scoped)], None), vec![]);
+    }
+
+    #[test]
+    fn pl007_follows_calls_that_transitively_block() {
+        let src = "fn wait_one(rx: &Receiver<u8>) -> u8 {\n    rx.recv().unwrap()\n}\n\
+                   fn pump(&self) {\n    let g = self.state.lock().unwrap();\n    \
+                   let v = wait_one(&self.rx);\n}\n";
+        let lexed = vec![("dp/exec.rs".to_string(), lex(src))];
+        let model = Model::build(&lexed);
+        let got = check_crate(&lexed, &model, None);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1.line, 6);
+        assert!(got[0].1.message.contains("wait_one"), "{}", got[0].1.message);
+        assert!(got[0].1.message.contains("channel recv"), "{}", got[0].1.message);
+    }
+
+    #[test]
+    fn pl008_flags_orphans_unbounded_and_magic_capacities() {
+        let orphan = "fn f() {\n    let (tx, _) = mpsc::channel::<u8>();\n    keep(tx);\n}\n";
+        assert_eq!(run_crate(&[("io.rs", orphan)], None), vec![(
+            "PL008".into(),
+            "io.rs".into(),
+            2
+        )]);
+        let unbounded = "fn f() {\n    let (tx, rx) = mpsc::channel::<u8>();\n    keep(tx, rx);\n}\n";
+        assert_eq!(run_crate(&[("dist/x.rs", unbounded)], None), vec![(
+            "PL008".into(),
+            "dist/x.rs".into(),
+            2
+        )]);
+        // the same unbounded channel off the hot path is fine
+        assert_eq!(run_crate(&[("telemetry.rs", unbounded)], None), vec![]);
+        let magic = "fn f() {\n    let (tx, rx) = mpsc::sync_channel::<u8>(8);\n    keep(tx, rx);\n}\n";
+        assert_eq!(run_crate(&[("dist/x.rs", magic)], None), vec![(
+            "PL008".into(),
+            "dist/x.rs".into(),
+            2
+        )]);
+        let named = "const DEPTH: usize = 8;\n\
+                     fn f(n: usize) {\n    let (tx, rx) = mpsc::sync_channel::<u8>(DEPTH);\n    \
+                     let (jx, jr) = mpsc::sync_channel::<u8>(n.max(1));\n    keep(tx, rx, jx, jr);\n}\n";
+        assert_eq!(run_crate(&[("dist/x.rs", named)], None), vec![]);
+    }
+
+    #[test]
+    fn pl008_requires_markers_on_draining_threads() {
+        let bad = "fn f(&self) {\n    let (tx, rx) = mpsc::sync_channel::<u8>(self.depth.max(1));\n    \
+                   std::thread::spawn(move || {\n        while let Ok(v) = rx.recv() {\n            \
+                   handle(v);\n        }\n    });\n    keep(tx);\n}\n";
+        assert_eq!(run_crate(&[("dist/x.rs", bad)], None), vec![(
+            "PL008".into(),
+            "dist/x.rs".into(),
+            2
+        )]);
+        let good = "fn f(&self) {\n    let (tx, rx) = mpsc::sync_channel::<u8>(self.depth.max(1));\n    \
+                    // lint: thread: joined — Drop joins via handle.\n    \
+                    std::thread::spawn(move || {\n        while let Ok(v) = rx.recv() {\n            \
+                    handle(v);\n        }\n    });\n    keep(tx);\n}\n";
+        assert_eq!(run_crate(&[("dist/x.rs", good)], None), vec![]);
+    }
+
+    #[test]
+    fn pl009_wants_wire_context_in_dist_net_only() {
+        let bad = "fn send(&self) -> Result<()> {\n    bail!(\"connection refused\")\n}\n";
+        assert_eq!(run_crate(&[("dist/net/wire.rs", bad)], None), vec![(
+            "PL009".into(),
+            "dist/net/wire.rs".into(),
+            2
+        )]);
+        assert_eq!(run_crate(&[("dist/other.rs", bad)], None), vec![]);
+        let good = "fn send(&self) -> Result<()> {\n    \
+                    bail!(\"rank {} lost peer {}\", self.rank, peer)\n}\n";
+        assert_eq!(run_crate(&[("dist/net/wire.rs", good)], None), vec![]);
+        // multi-line spans count: the context may sit on a later line
+        let multi = "fn send(&self) -> Result<()> {\n    ensure!(\n        ok,\n        \
+                     \"bad frame from peer {peer}\"\n    );\n    Ok(())\n}\n";
+        assert_eq!(run_crate(&[("dist/net/wire.rs", multi)], None), vec![]);
+        let allowed = "fn send(&self) -> Result<()> {\n    \
+                       // lint: allow(PL009): decoder-local; run_op attaches rank+seq\n    \
+                       bail!(\"connection refused\")\n}\n";
+        assert_eq!(run_crate(&[("dist/net/wire.rs", allowed)], None), vec![]);
+    }
+
+    const FAULTS_FIXTURE: &str = "pub enum FaultKind {\n    Straggle,\n    Abort,\n}\n\
+        impl FaultKind {\n    pub fn name(&self) -> &'static str {\n        match self {\n            \
+        FaultKind::Straggle => \"straggle\",\n            \
+        FaultKind::Abort => \"abort\",\n        }\n    }\n}\n";
+
+    #[test]
+    fn pl010_wants_a_consult_site_outside_the_parser() {
+        // only Straggle is consulted; name()'s own arms must not count
+        let consult = "fn fire(k: &FaultKind) {\n    if let FaultKind::Straggle = k {\n        \
+                       slow();\n    }\n}\n";
+        let got = run_crate(
+            &[("faults.rs", FAULTS_FIXTURE), ("runtime.rs", consult)],
+            Some("straggle abort"),
+        );
+        assert_eq!(got, vec![("PL010".into(), "faults.rs".into(), 3)]);
+    }
+
+    #[test]
+    fn pl010_wants_an_adversity_cell_per_variant() {
+        let consult = "fn fire(k: &FaultKind) {\n    match k {\n        \
+                       FaultKind::Straggle => slow(),\n        \
+                       FaultKind::Abort => die(),\n    }\n}\n";
+        let files = [("faults.rs", FAULTS_FIXTURE), ("runtime.rs", consult)];
+        assert_eq!(run_crate(&files, Some("straggle abort")), vec![]);
+        assert_eq!(run_crate(&files, Some("straggle only")), vec![(
+            "PL010".into(),
+            "faults.rs".into(),
+            3
+        )]);
+        // no adversity file at all: one finding at the enum
+        assert_eq!(run_crate(&files, None), vec![("PL010".into(), "faults.rs".into(), 1)]);
     }
 }

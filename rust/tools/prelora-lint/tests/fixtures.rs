@@ -1,0 +1,215 @@
+//! End-to-end fixtures for the crate-level rules (PL006–PL010), the
+//! output formats, and the topology graph — each case is a tiny source
+//! tree under `tests/fixtures/<case>/src` that the real binary lints.
+//!
+//! The `real_tree_*` tests at the bottom are the acceptance gate: the
+//! shipped `rust/src` must stay clean under the full rule set, and the
+//! emitted topology graph must name every marker-carrying thread.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture(case: &str) -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(case)
+        .join("src")
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Run the binary; returns (stdout, stderr, exit code).
+fn lint(args: &[&str]) -> (String, String, Option<i32>) {
+    let out = Command::new(env!("CARGO_BIN_EXE_prelora-lint"))
+        .args(args)
+        .output()
+        .expect("spawn prelora-lint");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.code(),
+    )
+}
+
+fn run_case(case: &str) -> (String, Option<i32>) {
+    let (out, err, code) = lint(&["--root", &fixture(case)]);
+    assert!(err.is_empty(), "unexpected stderr for {case}:\n{err}");
+    (out, code)
+}
+
+fn assert_clean(case: &str) {
+    let (out, code) = run_case(case);
+    assert_eq!(code, Some(0), "{case} should be clean:\n{out}");
+    assert!(out.contains("prelora-lint: clean"), "{out}");
+}
+
+#[test]
+fn pl006_fires_once_with_both_witness_paths() {
+    let (out, code) = run_case("pl006_bad");
+    assert_eq!(code, Some(1), "{out}");
+    assert!(out.contains("PL006 src/locks.rs:3"), "{out}");
+    assert!(out.contains("alpha_then_beta"), "{out}");
+    assert!(out.contains("beta_then_alpha"), "{out}");
+    assert_eq!(out.matches("PL006").count(), 1, "one finding per pair:\n{out}");
+}
+
+#[test]
+fn pl006_consistent_order_is_silent() {
+    assert_clean("pl006_good");
+}
+
+#[test]
+fn pl006_reasoned_allow_suppresses() {
+    assert_clean("pl006_allowed");
+}
+
+#[test]
+fn pl007_flags_recv_under_a_live_guard() {
+    let (out, code) = run_case("pl007_bad");
+    assert_eq!(code, Some(1), "{out}");
+    assert!(out.contains("PL007 src/dp/exec.rs:3"), "{out}");
+    assert!(out.contains("channel recv"), "{out}");
+}
+
+#[test]
+fn pl007_scoped_guard_is_silent() {
+    assert_clean("pl007_good");
+}
+
+#[test]
+fn pl008_flags_orphans_unbounded_and_magic_capacities() {
+    let (out, code) = run_case("pl008_bad");
+    assert_eq!(code, Some(1), "{out}");
+    assert!(out.contains("PL008 src/dist/chan.rs:2"), "{out}");
+    assert!(out.contains("no named owning receiver"), "{out}");
+    assert!(out.contains("PL008 src/dist/chan.rs:3"), "{out}");
+    assert!(out.contains("unbounded channel()"), "{out}");
+    assert!(out.contains("PL008 src/dist/chan.rs:4"), "{out}");
+    assert!(out.contains("name the bound as a constant"), "{out}");
+}
+
+#[test]
+fn pl008_named_constant_bound_is_silent() {
+    assert_clean("pl008_good");
+}
+
+#[test]
+fn pl009_flags_context_free_wire_errors() {
+    let (out, code) = run_case("pl009_bad");
+    assert_eq!(code, Some(1), "{out}");
+    assert!(out.contains("PL009 src/dist/net/wire.rs:2"), "{out}");
+}
+
+#[test]
+fn pl009_multi_line_ensure_with_peer_is_silent() {
+    assert_clean("pl009_good");
+}
+
+#[test]
+fn pl010_flags_unconsulted_and_untested_variants() {
+    let (out, code) = run_case("pl010_bad");
+    assert_eq!(code, Some(1), "{out}");
+    assert!(out.contains("PL010 src/faults.rs:3"), "{out}");
+    assert!(out.contains("no injection consult site"), "{out}");
+    assert!(out.contains("has no cell in tests/adversity.rs"), "{out}");
+    assert!(!out.contains("FaultKind::Straggle has"), "covered variant flagged:\n{out}");
+}
+
+#[test]
+fn pl010_closed_catalog_is_silent() {
+    assert_clean("pl010_good");
+}
+
+#[test]
+fn pl000_bare_allow_is_a_finding() {
+    let (out, code) = run_case("pl000_bare");
+    assert_eq!(code, Some(1), "{out}");
+    assert!(out.contains("PL000 src/lib.rs:1"), "{out}");
+    assert!(out.contains("without a reason"), "{out}");
+}
+
+#[test]
+fn json_schema_is_stable() {
+    let (out, _, code) = lint(&["--format", "json", "--root", &fixture("pl009_bad")]);
+    assert_eq!(code, Some(1), "{out}");
+    assert!(
+        out.starts_with("{\"schema\":\"prelora-lint/1\",\"findings\":["),
+        "schema header drifted:\n{out}"
+    );
+    assert!(out.contains("\"rule\":\"PL009\",\"file\":\"src/dist/net/wire.rs\""), "{out}");
+    assert!(out.contains("\"line\":2,\"message\":\""), "{out}");
+    assert!(out.trim_end().ends_with("\"count\":1}"), "{out}");
+
+    let (out, _, code) = lint(&["--format", "json", "--root", &fixture("pl009_good")]);
+    assert_eq!(code, Some(0), "{out}");
+    assert!(out.trim_end().ends_with("\"count\":0}"), "{out}");
+}
+
+#[test]
+fn github_format_emits_error_annotations() {
+    let (out, _, code) = lint(&["--format", "github", "--root", &fixture("pl009_bad")]);
+    assert_eq!(code, Some(1), "{out}");
+    assert!(
+        out.contains("::error file=rust/src/dist/net/wire.rs,line=2,title=PL009::"),
+        "{out}"
+    );
+
+    let (out, _, _) =
+        lint(&["--format", "github", "--path-prefix", "", "--root", &fixture("pl009_bad")]);
+    assert!(
+        out.contains("::error file=src/dist/net/wire.rs,line=2,title=PL009::"),
+        "{out}"
+    );
+}
+
+#[test]
+fn graph_names_threads_channels_and_owners() {
+    let (out, err, code) = lint(&["--graph", "--root", &fixture("graph")]);
+    assert_eq!(code, Some(0), "{err}");
+    for needle in
+        ["digraph prelora_topology", "pump-worker", "[joined]", "fn start", "cap=DEPTH", "tx to rx"]
+    {
+        assert!(out.contains(needle), "missing {needle:?} in graph:\n{out}");
+    }
+    // The graph fixture is also a lint-clean tree: marked drain, named bound.
+    assert_clean("graph");
+}
+
+#[test]
+fn list_rules_covers_the_catalog() {
+    let (out, _, code) = lint(&["--list-rules"]);
+    assert_eq!(code, Some(0));
+    for n in 1..=10 {
+        let id = format!("PL{n:03}");
+        assert!(out.contains(&id), "missing {id} in --list-rules:\n{out}");
+    }
+}
+
+#[test]
+fn usage_errors_exit_2() {
+    let (_, err, code) = lint(&["--format", "yaml"]);
+    assert_eq!(code, Some(2), "{err}");
+    assert!(err.contains("--format"), "{err}");
+
+    let (_, err, code) = lint(&["--bogus"]);
+    assert_eq!(code, Some(2), "{err}");
+    assert!(err.contains("unknown argument"), "{err}");
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let (out, err, code) = lint(&[]);
+    assert_eq!(code, Some(0), "rust/src has findings:\n{out}\n{err}");
+    assert!(out.contains("prelora-lint: clean"), "{out}");
+}
+
+#[test]
+fn real_tree_graph_names_every_marked_thread() {
+    let (out, err, code) = lint(&["--graph"]);
+    assert_eq!(code, Some(0), "{err}");
+    for name in
+        ["net-tx-r", "net-rx-r", "bucket-reduce", "reduce-stage", "data-prefetch", "dp-worker-"]
+    {
+        assert!(out.contains(name), "thread {name:?} missing from the topology graph:\n{out}");
+    }
+}

@@ -1,0 +1,14 @@
+const DEPTH: usize = 2;
+
+pub fn start(&self) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(DEPTH);
+    // lint: thread: joined — Pump::stop joins pump-worker
+    let h = std::thread::Builder::new()
+        .name("pump-worker".into())
+        .spawn(move || {
+            while let Ok(v) = rx.recv() {
+                consume(v);
+            }
+        });
+    keep(tx, h);
+}

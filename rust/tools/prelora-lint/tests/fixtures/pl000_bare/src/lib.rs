@@ -1,0 +1,2 @@
+// lint: allow(PL004)
+pub fn noop() {}

@@ -1,0 +1,11 @@
+pub fn alpha_then_beta(&self) {
+    let g = self.alpha.lock().unwrap();
+    let h = self.beta.lock().unwrap();
+    use_both(&g, &h);
+}
+
+pub fn beta_then_alpha(&self) {
+    let g = self.beta.lock().unwrap();
+    let h = self.alpha.lock().unwrap();
+    use_both(&h, &g);
+}

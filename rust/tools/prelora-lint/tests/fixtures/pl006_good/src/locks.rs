@@ -1,0 +1,11 @@
+pub fn alpha_then_beta(&self) {
+    let g = self.alpha.lock().unwrap();
+    let h = self.beta.lock().unwrap();
+    use_both(&g, &h);
+}
+
+pub fn also_alpha_then_beta(&self) {
+    let g = self.alpha.lock().unwrap();
+    let h = self.beta.lock().unwrap();
+    use_both(&h, &g);
+}

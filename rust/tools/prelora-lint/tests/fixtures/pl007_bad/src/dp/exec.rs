@@ -1,0 +1,5 @@
+pub fn pump(&self) {
+    let g = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let v = self.rx.recv();
+    consume(&g, v);
+}

@@ -1,0 +1,8 @@
+pub fn pump(&self) {
+    {
+        let g = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        touch(&g);
+    }
+    let v = self.rx.recv();
+    consume(v);
+}

@@ -1,0 +1,6 @@
+pub fn build() {
+    let (job_tx, _) = std::sync::mpsc::sync_channel(JOB_DEPTH);
+    let (msg_tx, msg_rx) = std::sync::mpsc::channel();
+    let (out_tx, out_rx) = std::sync::mpsc::sync_channel(8);
+    route(job_tx, msg_tx, msg_rx, out_tx, out_rx);
+}

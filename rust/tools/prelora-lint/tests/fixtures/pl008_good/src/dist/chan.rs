@@ -1,0 +1,6 @@
+const JOB_DEPTH: usize = 4;
+
+pub fn build() {
+    let (job_tx, job_rx) = std::sync::mpsc::sync_channel(JOB_DEPTH);
+    route(job_tx, job_rx);
+}

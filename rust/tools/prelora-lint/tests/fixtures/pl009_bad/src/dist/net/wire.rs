@@ -1,0 +1,3 @@
+pub fn decode(buf: &[u8]) -> Result<Frame> {
+    bail!("short frame");
+}

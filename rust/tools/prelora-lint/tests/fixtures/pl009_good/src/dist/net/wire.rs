@@ -1,0 +1,8 @@
+pub fn decode(buf: &[u8], peer: u32) -> Result<Frame> {
+    ensure!(
+        buf.len() >= 4,
+        "short frame from peer {peer}: {} bytes",
+        buf.len()
+    );
+    parse(buf)
+}

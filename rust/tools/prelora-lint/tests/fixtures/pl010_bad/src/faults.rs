@@ -1,0 +1,13 @@
+pub enum FaultKind {
+    Straggle,
+    Abort,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Straggle => "straggle",
+            FaultKind::Abort => "abort",
+        }
+    }
+}

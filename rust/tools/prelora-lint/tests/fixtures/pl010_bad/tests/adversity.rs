@@ -1,0 +1,3 @@
+// Adversity matrix (fixture): covers straggle only.
+#[test]
+fn straggle_cell() {}

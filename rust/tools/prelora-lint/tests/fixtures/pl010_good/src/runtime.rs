@@ -1,0 +1,3 @@
+pub fn consult(k: &FaultKind) -> bool {
+    matches!(k, FaultKind::Straggle | FaultKind::Abort)
+}

@@ -1,0 +1,6 @@
+// Adversity matrix (fixture): one cell per fault token.
+#[test]
+fn straggle_cell() {}
+
+#[test]
+fn abort_cell() {}
